@@ -1,0 +1,51 @@
+//! The LITE memory/accuracy trade-off (paper §5.3): sweep |H| on the
+//! Simple CNAPs sweep artifacts and print, for each setting, the
+//! analytic peak training memory next to a short-run accuracy probe —
+//! the dial the paper exposes between GPU memory and gradient quality.
+//!
+//! Run with: `cargo run --release --example h_sweep`
+
+use anyhow::Result;
+use lite::coordinator::{meta_train, pretrained_backbone, MetaLearner, TrainConfig};
+use lite::data::{md_suite, EpisodeConfig};
+use lite::eval::{eval_dataset, Predictor};
+use lite::memory::{mib, peak_bytes, Mode};
+use lite::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Engine::load(Engine::default_dir())?;
+    let size = 32;
+    let n = 80;
+    let episodes: usize = std::env::var("SWEEP_EPISODES").ok().and_then(|v| v.parse().ok()).unwrap_or(60);
+
+    println!("LITE |H| sweep — Simple CNAPs, {size}px, support pool N={n}");
+    println!("{:>5} {:>14} {:>12}", "|H|", "peak mem (MiB)", "probe acc");
+    for h in [40usize, 80] {
+        let mut learner = MetaLearner::new(&engine, "simple_cnaps", size, Some(h), Some(n), 200)?;
+        let bb = pretrained_backbone(&engine, size, 150, 0)?;
+        learner.install_backbone(&bb);
+        let cfg = TrainConfig {
+            episodes,
+            accum_period: 4,
+            lr: 1e-3,
+            seed: 0,
+            log_every: 0,
+            episode_cfg: EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: n, query_per_class: 1 },
+            ..Default::default()
+        };
+        meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
+        let mut accs = Vec::new();
+        for ds in md_suite() {
+            let s = eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &EpisodeConfig::test_large(200), size, 2, 5)?;
+            accs.push(s.frame_acc.0);
+        }
+        let mem = if h >= n {
+            peak_bytes(Mode::Full, size, n, 10)
+        } else {
+            peak_bytes(Mode::Lite { h, chunk: 8 }, size, n, 10)
+        };
+        println!("{:>5} {:>14.1} {:>12.3}", h, mib(mem), lite::util::mean(&accs));
+    }
+    println!("\n(64px rows of Table 2 regenerate via `lite bench-hsweep`.)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! END-TO-END driver (DESIGN.md deliverable): exercises the full stack
+//! on a real small workload —
+//!   1. supervised-pretrain the shared backbone on the synthetic corpus,
+//!   2. meta-train ProtoNets with LITE for a few hundred episodes on the
+//!      synthetic MD suite, logging the loss curve,
+//!   3. meta-test on held-out episodes of every dataset and report the
+//!      before/after accuracy.
+//!
+//! The run recorded in EXPERIMENTS.md §E2E used:
+//!   cargo run --release --example train_protonet_e2e
+
+use anyhow::Result;
+use lite::coordinator::{meta_train, pretrained_backbone, MetaLearner, TrainConfig};
+use lite::data::{md_suite, EpisodeConfig};
+use lite::eval::{eval_dataset, Predictor};
+use lite::runtime::Engine;
+
+fn main() -> Result<()> {
+    let episodes: usize = std::env::var("E2E_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let engine = Engine::load(Engine::default_dir())?;
+    let size = 32;
+
+    // --- 1. backbone pretraining (ImageNet stand-in) ------------------
+    let bb = pretrained_backbone(&engine, size, 150, 0)?;
+
+    // --- 2. meta-train ProtoNets + LITE -------------------------------
+    let mut learner = MetaLearner::new(&engine, "protonet", size, None, Some(40), 200)?;
+    learner.install_backbone(&bb);
+
+    // Before-training accuracy snapshot.
+    let suite = md_suite();
+    let test_cfg = EpisodeConfig::test_large(200);
+    let before = mean_acc(&engine, &learner, &suite, &test_cfg, size)?;
+
+    let cfg = TrainConfig {
+        episodes,
+        accum_period: 8,
+        lr: 1e-3,
+        seed: 0,
+        log_every: 25,
+        episode_cfg: EpisodeConfig::train_default(),
+        ..Default::default()
+    };
+    let logs = meta_train(&engine, &mut learner, &suite, &cfg)?;
+
+    // Loss curve (bucketed means so the trend is obvious in a terminal).
+    println!("\nloss curve (25-episode buckets):");
+    for chunk in logs.chunks(25) {
+        let m: f64 = chunk.iter().map(|l| l.loss as f64).sum::<f64>() / chunk.len() as f64;
+        let bar = "#".repeat((m * 20.0).min(60.0) as usize);
+        println!("  ep {:>4}..{:>4}  loss {m:.4}  {bar}", chunk[0].step, chunk.last().unwrap().step);
+    }
+
+    // --- 3. meta-test -------------------------------------------------
+    let after = mean_acc(&engine, &learner, &suite, &test_cfg, size)?;
+    println!("\nper-dataset accuracy (200-image support tasks):");
+    println!("{:<20} {:>8} {:>8}", "dataset", "before", "after");
+    for (name, b, a) in before.1.iter().zip(&after.1).map(|((n, b), (_, a))| (n, b, a)) {
+        println!("{name:<20} {b:>8.3} {a:>8.3}");
+    }
+    println!("{:<20} {:>8.3} {:>8.3}", "MEAN", before.0, after.0);
+
+    let ckpt = Engine::default_dir().join("protonet_32_e2e.ckpt");
+    learner.params.save(&ckpt)?;
+    println!("\ncheckpoint: {}", ckpt.display());
+    Ok(())
+}
+
+#[allow(clippy::type_complexity)]
+fn mean_acc(
+    engine: &Engine,
+    learner: &MetaLearner,
+    suite: &[lite::data::Dataset],
+    cfg: &EpisodeConfig,
+    size: usize,
+) -> Result<(f64, Vec<(String, f64)>)> {
+    let mut rows = Vec::new();
+    for ds in suite {
+        let s = eval_dataset(engine, &Predictor::Meta(learner), ds, cfg, size, 3, 123)?;
+        rows.push((ds.name().to_string(), s.frame_acc.0));
+    }
+    let mean = rows.iter().map(|(_, a)| *a).sum::<f64>() / rows.len() as f64;
+    Ok((mean, rows))
+}

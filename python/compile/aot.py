@@ -1,0 +1,221 @@
+"""AOT compiler: lower every registry artifact to HLO text + params.
+
+This is the ONLY build-time entry point; python never runs on the request
+path. For each ``ArtifactSpec`` it
+
+  1. initializes parameters (seeded per (model, image_size) so train /
+     adapt / classify artifacts of one model share one tensor set),
+  2. lowers the model fn with ``jax.jit(..., keep_unused=True).lower`` and
+     converts the StableHLO module to **HLO text** — the interchange
+     format the rust ``xla`` crate (xla_extension 0.5.1) can parse; jax's
+     native serialized protos use 64-bit instruction ids it rejects (see
+     /opt/xla-example/README.md),
+  3. appends the artifact's I/O contract to ``artifacts/manifest.json``
+     and writes each param group once to ``artifacts/params_<group>.bin``
+     (concatenated little-endian f32, tensors in manifest order).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--only prefix]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import specs as specs_mod
+from .models import module_for
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (gen_hlo.py recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_seed(model: str, size: int) -> int:
+    digest = hashlib.sha256(f"{model}:{size}".encode()).digest()
+    return int.from_bytes(digest[:4], "little")
+
+
+def param_group(spec) -> str | None:
+    if spec.kind in ("head_step", "head_predict"):
+        return None
+    return f"{spec.model}_{spec.image_size}"
+
+
+def lower_spec(spec):
+    """-> (hlo_text, manifest_entry, params_dict_or_None)."""
+    module = module_for(spec.model)
+    key = jax.random.PRNGKey(param_seed(spec.model, spec.image_size))
+    params, learnable = module.init_params(key, spec)
+    names = list(params.keys())
+    fn, data_specs = module.build(spec)
+
+    params_shapes = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params.values()]
+    data_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for (_, s, _) in data_specs]
+    lowered = jax.jit(fn, keep_unused=True).lower(params_shapes, *data_shapes)
+    hlo = to_hlo_text(lowered)
+
+    out_shapes = jax.eval_shape(fn, params_shapes, *data_shapes)
+    out_names = module.output_names(spec)
+    assert len(out_names) == len(out_shapes), (
+        f"{spec.name}: {len(out_names)} output names vs {len(out_shapes)} outputs"
+    )
+
+    entry = {
+        "name": spec.name,
+        "path": f"{spec.name}.hlo.txt",
+        "model": spec.model,
+        "kind": spec.kind,
+        "image_size": spec.image_size,
+        "geom": None
+        if spec.geom is None
+        else {
+            "way": spec.geom.way,
+            "n_support": spec.geom.n_support,
+            "h": spec.geom.h,
+            "mb": spec.geom.mb,
+        },
+        "test_geom": None
+        if spec.test_geom is None
+        else {
+            "way": spec.test_geom.way,
+            "n_support": spec.test_geom.n_support,
+            "mq": spec.test_geom.mq,
+        },
+        "extra": spec.extra,
+        "param_group": param_group(spec),
+        "param_names": names,
+        "param_shapes": [list(p.shape) for p in params.values()],
+        "learnable": learnable,
+        "inputs": [
+            {"name": n, "shape": list(s)} for (n, s, _) in data_specs
+        ],
+        "outputs": [
+            {"name": n, "shape": list(o.shape)} for n, o in zip(out_names, out_shapes)
+        ],
+    }
+    return hlo, entry, params
+
+
+def write_manifest_txt(out_dir: str, manifest: dict) -> None:
+    """Also emit a line-oriented manifest (the rust side has no JSON
+    dependency offline; this format is trivially token-parseable).
+
+    Grammar (one record per line, whitespace-separated):
+      artifact <name> <path> <model> <kind> <image_size>
+      geom <way> <n_support> <h> <mb>            (0 or 1 per artifact)
+      testgeom <way> <n_support> <mq>            (0 or 1 per artifact)
+      extra <key> <value>                        (repeated)
+      pgroup <group>                             (0 or 1)
+      param <name> <learnable:0|1> <dims...>     (repeated, ordered)
+      input <name> <dims...>                     (repeated, ordered)
+      output <name> <dims...>                    (repeated, ordered)
+      end
+      group <group> <file>
+      tensor <name> <offset> <len> <dims...>     (repeated, ordered)
+      end
+    """
+    lines = []
+    for e in manifest["artifacts"]:
+        lines.append(
+            f"artifact {e['name']} {e['path']} {e['model']} {e['kind']} {e['image_size']}"
+        )
+        if e["geom"]:
+            g = e["geom"]
+            lines.append(f"geom {g['way']} {g['n_support']} {g['h']} {g['mb']}")
+        if e["test_geom"]:
+            g = e["test_geom"]
+            lines.append(f"testgeom {g['way']} {g['n_support']} {g['mq']}")
+        for k, v in (e["extra"] or {}).items():
+            lines.append(f"extra {k} {v}")
+        if e["param_group"]:
+            lines.append(f"pgroup {e['param_group']}")
+        learn = set(e["learnable"])
+        for n, s in zip(e["param_names"], e["param_shapes"]):
+            dims = " ".join(str(d) for d in s)
+            lines.append(f"param {n} {1 if n in learn else 0} {dims}".rstrip())
+        for inp in e["inputs"]:
+            dims = " ".join(str(d) for d in inp["shape"])
+            lines.append(f"input {inp['name']} {dims}".rstrip())
+        for out in e["outputs"]:
+            dims = " ".join(str(d) for d in out["shape"])
+            lines.append(f"output {out['name']} {dims}".rstrip())
+        lines.append("end")
+    for group, info in manifest["param_groups"].items():
+        lines.append(f"group {group} {info['file']}")
+        for t in info["tensors"]:
+            dims = " ".join(str(d) for d in t["shape"])
+            lines.append(f"tensor {t['name']} {t['offset']} {t['len']} {dims}".rstrip())
+        lines.append("end")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def write_param_group(out_dir: str, group: str, params: dict) -> dict:
+    tensors = []
+    offset = 0
+    path = os.path.join(out_dir, f"params_{group}.bin")
+    with open(path, "wb") as f:
+        for name, arr in params.items():
+            a = np.asarray(arr, dtype="<f4")
+            f.write(a.tobytes(order="C"))
+            tensors.append(
+                {"name": name, "shape": list(a.shape), "offset": offset, "len": int(a.size)}
+            )
+            offset += int(a.size)
+    return {"file": f"params_{group}.bin", "tensors": tensors}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="only lower artifacts whose name starts with this prefix")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    all_specs = specs_mod.registry()
+    todo = [s for s in all_specs if args.only is None or s.name.startswith(args.only)]
+    # --only merges into the existing manifest rather than clobbering it.
+    manifest = {"artifacts": [], "param_groups": {}}
+    prev_path = os.path.join(args.out_dir, "manifest.json")
+    if args.only is not None and os.path.exists(prev_path):
+        with open(prev_path) as f:
+            prev = json.load(f)
+        names = {s.name for s in todo}
+        manifest["artifacts"] = [a for a in prev["artifacts"] if a["name"] not in names]
+        manifest["param_groups"] = prev["param_groups"]
+    t_all = time.time()
+    for i, spec in enumerate(todo):
+        t0 = time.time()
+        hlo, entry, params = lower_spec(spec)
+        with open(os.path.join(args.out_dir, entry["path"]), "w") as f:
+            f.write(hlo)
+        group = entry["param_group"]
+        if group is not None and group not in manifest["param_groups"]:
+            manifest["param_groups"][group] = write_param_group(args.out_dir, group, params)
+        manifest["artifacts"].append(entry)
+        print(
+            f"[{i + 1}/{len(todo)}] {spec.name}: {len(hlo) / 1e6:.2f} MB HLO"
+            f" in {time.time() - t0:.1f}s",
+            flush=True,
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_manifest_txt(args.out_dir, manifest)
+    print(f"lowered {len(todo)} artifacts in {time.time() - t_all:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""MicroConv: the FiLM-able convolutional feature extractor.
+
+Stand-in for the paper's ResNet-18 / EfficientNet-B0 (see DESIGN.md
+substitution table): 4 conv blocks, each conv3x3 -> FiLM -> ReLU ->
+avg-pool-2, then global average pool to a D=128 feature vector. FiLM
+parameters are either learnable per-layer constants (ProtoNets / MAML /
+pretraining: gamma init 1, beta init 0 — a normalization-free scale) or
+generated per-task by the CNAPs hyper-networks, in which case they are
+passed in explicitly and the stored constants are unused.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+CHANNELS = (16, 32, 64, 128)
+FEATURE_DIM = CHANNELS[-1]
+
+
+def init(key, params: nn.Params, prefix: str = "bb", in_ch: int = 3) -> None:
+    """Add backbone parameters (convs + learnable FiLM constants)."""
+    cin = in_ch
+    keys = jax.random.split(key, len(CHANNELS))
+    for i, cout in enumerate(CHANNELS):
+        params[f"{prefix}.conv{i}.w"] = nn.he_init(
+            keys[i], (3, 3, cin, cout), 9 * cin
+        )
+        params[f"{prefix}.film{i}.gamma"] = jnp.ones((cout,), jnp.float32)
+        params[f"{prefix}.film{i}.beta"] = jnp.zeros((cout,), jnp.float32)
+        cin = cout
+
+
+def param_names(prefix: str = "bb") -> list:
+    names = []
+    for i in range(len(CHANNELS)):
+        names += [
+            f"{prefix}.conv{i}.w",
+            f"{prefix}.film{i}.gamma",
+            f"{prefix}.film{i}.beta",
+        ]
+    return names
+
+
+def apply(
+    params: nn.Params,
+    x: jnp.ndarray,
+    film_params=None,
+    prefix: str = "bb",
+    pallas: bool = True,
+) -> jnp.ndarray:
+    """x [B, S, S, 3] -> features [B, FEATURE_DIM].
+
+    ``film_params``: optional list of (gamma, beta) per block (the CNAPs
+    path); defaults to the learnable constants stored in ``params``.
+    ``pallas=False`` routes FiLM through jnp (needed by MAML's
+    second-order-free inner loop; see nn.film_apply).
+    """
+    for i in range(len(CHANNELS)):
+        x = nn.conv2d(x, params[f"{prefix}.conv{i}.w"])
+        if film_params is not None:
+            gamma, beta = film_params[i]
+        else:
+            gamma = params[f"{prefix}.film{i}.gamma"]
+            beta = params[f"{prefix}.film{i}.beta"]
+        x = nn.film_apply(x, gamma, beta, pallas=pallas)
+        x = nn.relu(x)
+        x = nn.avg_pool2(x)
+    return nn.global_avg_pool(x)
+
+
+def macs_per_image(image_size: int, in_ch: int = 3) -> int:
+    """Analytic multiply-accumulate count for one forward pass of one
+    image — mirrored by rust/src/eval/macs.rs (kept in sync by a test)."""
+    total = 0
+    s = image_size
+    cin = in_ch
+    for cout in CHANNELS:
+        total += s * s * 9 * cin * cout  # conv
+        total += s * s * cout  # film
+        s //= 2
+        cin = cout
+    return total

@@ -1,0 +1,92 @@
+"""CNAPs-family task encoder and FiLM hyper-networks.
+
+The deep-set encoder ``e_phi1`` maps each support image to a low-dim
+embedding; the PER-ELEMENT embeddings are SUMMED (the permutation
+invariant aggregation LITE exploits, paper Eq. 2) and the mean feeds a
+bank of per-block MLP generators that emit FiLM (gamma, beta) for the
+frozen backbone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import backbone, nn
+
+EMB_DIM = 64
+ENC_CHANNELS = (16, 32, 64)
+GEN_HIDDEN = 32
+
+
+def init(key, params: nn.Params, prefix: str = "enc", in_ch: int = 3) -> None:
+    keys = jax.random.split(key, len(ENC_CHANNELS) + 1 + 2 * len(backbone.CHANNELS))
+    cin = in_ch
+    for i, cout in enumerate(ENC_CHANNELS):
+        params[f"{prefix}.conv{i}.w"] = nn.he_init(
+            keys[i], (3, 3, cin, cout), 9 * cin
+        )
+        cin = cout
+    nn.dense_init(keys[len(ENC_CHANNELS)], f"{prefix}.proj", cin, EMB_DIM, params)
+    # FiLM generators: one 2-layer MLP per backbone block. The OUTPUT
+    # layer starts near zero (standard hyper-network practice, as in
+    # CNAPs): modulation begins at identity, which both stabilizes
+    # meta-training of a frozen pretrained backbone and keeps the
+    # film->features->stats product path subdominant at init (where the
+    # paper's single-N/H-scale estimator is least accurate; see
+    # models/cnaps_family.py docstring).
+    k = len(ENC_CHANNELS) + 1
+    for i, ch in enumerate(backbone.CHANNELS):
+        nn.dense_init(keys[k + 2 * i], f"{prefix}.gen{i}.fc1", EMB_DIM, GEN_HIDDEN, params)
+        nn.dense_init(keys[k + 2 * i + 1], f"{prefix}.gen{i}.fc2", GEN_HIDDEN, 2 * ch, params)
+        params[f"{prefix}.gen{i}.fc2.w"] = 0.05 * params[f"{prefix}.gen{i}.fc2.w"]
+
+
+def param_names(prefix: str = "enc") -> list:
+    names = [f"{prefix}.conv{i}.w" for i in range(len(ENC_CHANNELS))]
+    names += [f"{prefix}.proj.w", f"{prefix}.proj.b"]
+    for i in range(len(backbone.CHANNELS)):
+        names += [
+            f"{prefix}.gen{i}.fc1.w",
+            f"{prefix}.gen{i}.fc1.b",
+            f"{prefix}.gen{i}.fc2.w",
+            f"{prefix}.gen{i}.fc2.b",
+        ]
+    return names
+
+
+def embed(params: nn.Params, x: jnp.ndarray, prefix: str = "enc") -> jnp.ndarray:
+    """Per-element set-encoder embeddings. x [B, S, S, 3] -> [B, EMB_DIM]."""
+    for i in range(len(ENC_CHANNELS)):
+        x = nn.conv2d(x, params[f"{prefix}.conv{i}.w"], stride=2)
+        x = nn.relu(x)
+    x = nn.global_avg_pool(x)
+    return nn.dense_apply(params, f"{prefix}.proj", x)
+
+
+def generate_film(params: nn.Params, task_emb: jnp.ndarray, prefix: str = "enc"):
+    """task_emb [EMB_DIM] -> list of (gamma [ch], beta [ch]) per block.
+
+    gamma = 1 + delta so an untrained generator starts at identity
+    modulation (the standard CNAPs parameterization).
+    """
+    out = []
+    e = task_emb[None, :]  # [1, EMB_DIM]
+    for i, ch in enumerate(backbone.CHANNELS):
+        h = nn.relu(nn.dense_apply(params, f"{prefix}.gen{i}.fc1", e))
+        gb = nn.dense_apply(params, f"{prefix}.gen{i}.fc2", h)[0]  # [2*ch]
+        out.append((1.0 + gb[:ch], gb[ch:]))
+    return out
+
+
+def macs_per_image(image_size: int, in_ch: int = 3) -> int:
+    """Analytic MACs for one set-encoder forward of one image."""
+    total = 0
+    s = image_size
+    cin = in_ch
+    for cout in ENC_CHANNELS:
+        s //= 2  # stride-2 conv output
+        total += s * s * 9 * cin * cout
+        cin = cout
+    total += cin * EMB_DIM
+    return total

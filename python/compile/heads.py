@@ -1,0 +1,154 @@
+"""Task-adapted classifier heads with LITE-aware support aggregation.
+
+Every head consumes *class-wise sums* of support statistics. During LITE
+training each sum is assembled from a back-prop partial (over the H
+sampled elements) and a stop-gradient partial (over the remaining N-H),
+combined by ``lite.lite_combine`` so the forward value is exact while the
+backward pass is the scaled-H estimator (paper Eq. 8).
+
+All matrix inverses (Simple CNAPs precision matrices) use a matmul-only
+Newton–Schulz iteration: ``jnp.linalg.inv`` lowers to LAPACK custom-calls
+on CPU which the rust-side xla_extension 0.5.1 runtime cannot execute, and
+on TPU a matmul-only inverse is MXU-friendly anyway.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels import distances as kdist
+from .kernels import mahalanobis as kmaha
+from .kernels import protoagg
+from .kernels.dense import dense as pallas_dense
+from .kernels.dense import matmul as pallas_matmul
+from .lite import lite_combine
+
+# Shrinkage ridge added to every class covariance (Simple CNAPs uses +I in
+# the original; we scale it down because MicroConv features are O(1)).
+COV_RIDGE = 0.1
+NEWTON_SCHULZ_ITERS = 22
+
+
+def class_stats_lite(feat_bp, oh_bp, feat_nbp, oh_nbp, scale):
+    """Class-wise feature sums and counts with the LITE split.
+
+    feat_bp [H, D], oh_bp [H, C]; feat_nbp/oh_nbp may be None (exact mode).
+    Returns (sums [C, D], counts [C]). Counts are exact (they carry no
+    gradient); sums carry the LITE estimator.
+    """
+    s_bp = protoagg.proto_sums(feat_bp, oh_bp)
+    counts = oh_bp.sum(axis=0)
+    s_nbp = None
+    if feat_nbp is not None:
+        s_nbp = protoagg.proto_sums(feat_nbp, oh_nbp)
+        counts = counts + oh_nbp.sum(axis=0)
+    sums = lite_combine(s_bp, s_nbp, scale)
+    return sums, counts
+
+
+def outer_sums_lite(feat_bp, oh_bp, feat_nbp, oh_nbp, scale):
+    """Class-wise sums of feature outer products, via the Pallas
+    segment-sum over flattened f f^T rows. Returns [C, D, D]."""
+    d = feat_bp.shape[1]
+
+    def outer_flat(f):
+        return (f[:, :, None] * f[:, None, :]).reshape(f.shape[0], d * d)
+
+    s_bp = protoagg.proto_sums(outer_flat(feat_bp), oh_bp)
+    s_nbp = None
+    if feat_nbp is not None:
+        s_nbp = protoagg.proto_sums(outer_flat(feat_nbp), oh_nbp)
+    c = oh_bp.shape[1]
+    return lite_combine(s_bp, s_nbp, scale).reshape(c, d, d)
+
+
+def newton_schulz_inverse(a: jnp.ndarray, iters: int = NEWTON_SCHULZ_ITERS):
+    """Batched matmul-only matrix inverse: X <- X (2I - A X).
+
+    ``a`` [C, D, D] symmetric positive definite. Initialized at
+    X0 = A^T / (||A||_1 ||A||_inf), the classic globally convergent
+    starting point. Quadratic convergence; ``iters``=22 reaches f32
+    round-off for condition numbers up to ~1e3 (covered by tests).
+    """
+    d = a.shape[-1]
+    eye = jnp.eye(d, dtype=a.dtype)[None, :, :]
+    norm1 = jnp.max(jnp.sum(jnp.abs(a), axis=-2), axis=-1)  # [C]
+    norminf = jnp.max(jnp.sum(jnp.abs(a), axis=-1), axis=-1)  # [C]
+    x = jnp.swapaxes(a, -1, -2) / (norm1 * norminf)[:, None, None]
+    for _ in range(iters):
+        x = jnp.matmul(x, 2.0 * eye - jnp.matmul(a, x))
+    return x
+
+
+# ------------------------------------------------------------- ProtoNets
+def protonet_logits(sums, counts, q_feat):
+    """Prototypes from class sums; logits = -squared Euclidean distance."""
+    protos = sums / jnp.maximum(counts, 1.0)[:, None]
+    return -kdist.sq_euclidean(q_feat, protos)
+
+
+# ---------------------------------------------------------- Simple CNAPs
+def simple_cnaps_state(sums, outer, counts):
+    """Class means + regularized precision matrices (Bateni et al. [5]).
+
+    Sigma_c = lam_c * S_c + (1 - lam_c) * S_task + ridge * I with
+    lam_c = k_c / (k_c + 1); returns (mu [C, D], prec [C, D, D]).
+    """
+    c, d = sums.shape
+    k = jnp.maximum(counts, 1.0)[:, None]  # [C, 1]
+    mu = sums / k  # [C, D]
+    # Class scatter: E[ff^T] - mu mu^T.
+    s_class = outer / k[:, :, None] - mu[:, :, None] * mu[:, None, :]
+    # Task-level scatter pooled over classes.
+    n = jnp.maximum(counts.sum(), 1.0)
+    mu_t = sums.sum(axis=0) / n
+    s_task = outer.sum(axis=0) / n - mu_t[:, None] * mu_t[None, :]
+    lam = (counts / (counts + 1.0))[:, None, None]  # [C, 1, 1]
+    eye = jnp.eye(d, dtype=sums.dtype)[None, :, :]
+    sigma = lam * s_class + (1.0 - lam) * s_task[None, :, :] + COV_RIDGE * eye
+    # Symmetrize against fp drift before inverting.
+    sigma = 0.5 * (sigma + jnp.swapaxes(sigma, -1, -2))
+    prec = newton_schulz_inverse(sigma)
+    return mu, prec
+
+
+def simple_cnaps_logits(mu, prec, q_feat):
+    return -kmaha.mahalanobis(q_feat, mu, prec)
+
+
+# ------------------------------------------------------------------ CNAPs
+def cnaps_head_init(key, params: nn.Params, feat_dim: int, prefix: str = "head"):
+    k1, k2 = jax.random.split(key)
+    nn.dense_init(k1, f"{prefix}.fc1", feat_dim, feat_dim, params)
+    nn.dense_init(k2, f"{prefix}.fc2", feat_dim, feat_dim + 1, params)
+
+
+def cnaps_head_param_names(prefix: str = "head") -> list:
+    return [f"{prefix}.fc1.w", f"{prefix}.fc1.b", f"{prefix}.fc2.w", f"{prefix}.fc2.b"]
+
+
+COSINE_TEMP = 10.0
+
+
+def _unit_rows(f):
+    # Smooth-norm form: NaN-free VJP at zero rows (see nn.normalize_rows).
+    return f * jax.lax.rsqrt(jnp.sum(f * f, axis=-1, keepdims=True) + 1e-8)
+
+
+def cnaps_logits(params: nn.Params, sums, counts, q_feat, prefix: str = "head"):
+    """Classifier weights generated from class-pooled support features
+    by a 2-layer MLP (CNAPs [4]). The head is a temperature-scaled
+    COSINE classifier between unit query features and unit generated
+    weight rows: raw generated weights at init have O(10) norms and the
+    resulting saturated softmax NaNs meta-training; bounding logits to
+    [-T, T] is the standard stabilization (cf. MD-Transfer's cosine
+    head)."""
+    mu = sums / jnp.maximum(counts, 1.0)[:, None]  # [C, D]
+    h = nn.relu(nn.dense_apply(params, f"{prefix}.fc1", _unit_rows(mu)))
+    wb = nn.dense_apply(params, f"{prefix}.fc2", h)  # [C, D+1]
+    w, b = wb[:, :-1], wb[:, -1]
+    # dense (custom-vjp Pallas matmul) — this path is differentiated.
+    cos = pallas_dense(_unit_rows(q_feat), _unit_rows(w).T, b)
+    return COSINE_TEMP * cos

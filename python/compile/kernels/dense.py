@@ -1,0 +1,76 @@
+"""Tiled matmul / affine map as Pallas kernels.
+
+y = x @ w (+ b) with the M (row) axis tiled by the grid. Used by the task
+encoder MLPs and the FiLM-generator hyper-networks, and as the backward
+workhorse for the other kernels' custom VJPs. K and N in this system are
+<= a few hundred, so w stays VMEM-resident across grid steps
+([K_p, N_p] f32 <= 256x256x4 = 256 KiB) while x streams through in
+TILE_M-row blocks — the classic weight-stationary MXU schedule.
+
+Pallas interpret-mode kernels are not reverse-mode differentiable, so the
+public entry points carry ``jax.custom_vjp`` definitions whose backward
+passes are themselves expressed with the same tiled matmul kernel
+(dx = g @ w.T, dw = x.T @ g) — the whole train graph stays on the Pallas
+path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import LANE, ceil_to, pad_axis, pick_tile
+
+# TPU tile (see util.pick_tile for the interpret-mode growth rule).
+TILE_M = 32
+MAX_TILE_M = 4096
+
+
+def _matmul_kernel(x_ref, w_ref, out_ref):
+    out_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Raw tiled matmul. x [M, K], w [K, N] -> [M, N]. Not differentiable —
+    used inside forward/backward rules of the differentiable wrappers."""
+    m, k = x.shape
+    _, n = w.shape
+    tile_m, m_p = pick_tile(m, TILE_M, MAX_TILE_M)
+    k_p = ceil_to(k, LANE)
+    n_p = ceil_to(n, LANE)
+    x_p = pad_axis(pad_axis(x, 0, m_p), 1, k_p)
+    w_p = pad_axis(pad_axis(w, 0, k_p), 1, n_p)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_p, n_p), jnp.float32),
+        grid=(m_p // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, k_p), lambda i: (i, 0)),
+            pl.BlockSpec((k_p, n_p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n_p), lambda i: (i, 0)),
+        interpret=True,
+    )(x_p, w_p)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Affine map. x [M, K], w [K, N], b [N] -> [M, N]."""
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

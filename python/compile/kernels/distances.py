@@ -1,0 +1,73 @@
+"""Pairwise squared-Euclidean distance as a Pallas kernel (ProtoNets head).
+
+Computes ||x_m - p_c||^2 via the expansion x2 + p2 - 2 x.p so the dominant
+cost is a single MXU matmul. The query dimension M is tiled by the grid
+(block rows of TILE_M) so arbitrarily large query batches stream through
+VMEM; C and D stay resident (C <= ~16 padded, D = 128 -> one lane tile).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import LANE, SUBLANE, ceil_to, pad_axis, pick_tile
+
+# TPU tile: 32x128 f32 = 16 KiB VMEM per block; interpret mode grows it
+# (see util.pick_tile).
+TILE_M = 32
+MAX_TILE_M = 4096
+
+
+def _sqdist_kernel(x_ref, pt_ref, p2_ref, out_ref):
+    x = x_ref[...]  # [TILE_M, D]
+    cross = jnp.dot(x, pt_ref[...], preferred_element_type=jnp.float32)  # [TILE_M, C]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [TILE_M, 1]
+    out_ref[...] = x2 + p2_ref[...] - 2.0 * cross
+
+
+@jax.custom_vjp
+def sq_euclidean(x: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """x [M, D], p [C, D] -> [M, C] of squared Euclidean distances."""
+    m, d = x.shape
+    c, _ = p.shape
+    tile_m, m_p = pick_tile(m, TILE_M, MAX_TILE_M)
+    d_p = ceil_to(d, LANE)
+    c_p = ceil_to(c, SUBLANE)
+    x_p = pad_axis(pad_axis(x, 0, m_p), 1, d_p)
+    pt = pad_axis(pad_axis(p.T, 0, d_p), 1, c_p)  # [D_p, C_p]
+    p2 = pad_axis(jnp.sum(p * p, axis=1)[None, :], 1, c_p)  # [1, C_p]
+    grid = (m_p // tile_m,)
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_p, c_p), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d_p), lambda i: (i, 0)),
+            pl.BlockSpec((d_p, c_p), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, c_p), lambda i: (i, 0)),
+        interpret=True,
+    )(x_p, pt, p2)
+    return out[:m, :c]
+
+
+def _sq_euclidean_fwd(x, p):
+    return sq_euclidean(x, p), (x, p)
+
+
+def _sq_euclidean_bwd(res, g):
+    # d out[m,c] / d x[m,d] = 2 (x[m,d] - p[c,d])
+    #   => dx = 2 (x * rowsum(g) - g @ p),  dp = 2 (p * colsum(g) - g.T @ x)
+    # The cross terms are MXU matmuls — routed through the Pallas matmul.
+    x, p = res
+    from .dense import matmul
+
+    dx = 2.0 * (x * jnp.sum(g, axis=1, keepdims=True) - matmul(g, p))
+    dp = 2.0 * (p * jnp.sum(g, axis=0)[:, None] - matmul(g.T, x))
+    return dx, dp
+
+
+sq_euclidean.defvjp(_sq_euclidean_fwd, _sq_euclidean_bwd)

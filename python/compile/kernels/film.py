@@ -1,0 +1,73 @@
+"""FiLM feature modulation as a Pallas kernel.
+
+y = gamma * x + beta, broadcast over the channel (trailing) axis of a
+[B, H, W, C] activation map. This is the op the CNAPs hyper-networks
+drive; it sits inside every backbone block, so on TPU it must stream
+HBM->VMEM efficiently: the kernel flattens the map to [B*H*W, C] rows and
+tiles the row axis, with gamma/beta resident across grid steps. Pure VPU
+(element-wise) work — no MXU involvement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import LANE, ceil_to, pad_axis, pick_tile
+
+# TPU tile: 64 rows x 128 lanes keeps the block within one VMEM window
+# while streaming HBM; interpret mode grows it via pick_tile (see util).
+TILE_R = 64
+MAX_TILE_R = 1 << 18
+
+
+def _film_kernel(x_ref, g_ref, b_ref, out_ref):
+    out_ref[...] = x_ref[...] * g_ref[...] + b_ref[...]
+
+
+@jax.custom_vjp
+def film(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """x [..., C], gamma/beta [C] -> gamma*x + beta (same shape as x)."""
+    orig_shape = x.shape
+    ch = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, ch)
+    tile_r, r_p = pick_tile(rows, TILE_R, MAX_TILE_R)
+    c_p = ceil_to(ch, LANE)
+    x_p = pad_axis(pad_axis(x2, 0, r_p), 1, c_p)
+    g_p = pad_axis(gamma[None, :], 1, c_p)
+    b_p = pad_axis(beta[None, :], 1, c_p)
+    out = pl.pallas_call(
+        _film_kernel,
+        out_shape=jax.ShapeDtypeStruct((r_p, c_p), jnp.float32),
+        grid=(r_p // tile_r,),
+        in_specs=[
+            pl.BlockSpec((tile_r, c_p), lambda i: (i, 0)),
+            pl.BlockSpec((1, c_p), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, c_p), lambda i: (i, 0)),
+        interpret=True,
+    )(x_p, g_p, b_p)
+    return out[:rows, :ch].reshape(orig_shape)
+
+
+def _film_fwd(x, gamma, beta):
+    return film(x, gamma, beta), (x, gamma)
+
+
+def _film_bwd(res, g):
+    # dx = g * gamma (another FiLM application with beta = 0);
+    # dgamma / dbeta reduce over all non-channel axes.
+    x, gamma = res
+    reduce_axes = tuple(range(x.ndim - 1))
+    dx = film(g, gamma, jnp.zeros_like(gamma))
+    dgamma = jnp.sum(g * x, axis=reduce_axes)
+    dbeta = jnp.sum(g, axis=reduce_axes)
+    return dx, dgamma, dbeta
+
+
+film.defvjp(_film_fwd, _film_bwd)

@@ -1,0 +1,75 @@
+"""Masked class-prototype aggregation as a Pallas kernel.
+
+This is the permutation-invariant SUM at the heart of LITE's unbiasedness
+argument (paper Eq. 4): prototypes are class-wise means of support
+features, computed here as ``onehot.T @ features`` so that padded /
+invalid support slots (all-zero one-hot rows) contribute nothing.
+
+TPU mapping: the kernel is a single-block MXU matmul over a [C_pad, N_pad]
+x [N_pad, D_pad] contraction. C (way) is tiny (<=10 padded to 8-multiple),
+N <= a few hundred, D = 128 — the whole contraction fits one VMEM tile
+(~N_pad * D_pad * 4 bytes ≈ 128 KiB at N=256, D=128), so no grid is needed
+and the MXU sees a well-shaped [*,128] operand.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import LANE, SUBLANE, ceil_to, pad_axis
+
+
+def _sums_kernel(onehot_t_ref, feat_ref, out_ref):
+    # out[c, d] = sum_n onehot[n, c] * feat[n, d]  — one MXU matmul.
+    out_ref[...] = jnp.dot(
+        onehot_t_ref[...], feat_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.custom_vjp
+def proto_sums(features: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Class-wise segment sum. features [N, D], onehot [N, C] -> [C, D]."""
+    n, d = features.shape
+    _, c = onehot.shape
+    n_p = ceil_to(n, SUBLANE)
+    d_p = ceil_to(d, LANE)
+    c_p = ceil_to(c, SUBLANE)
+    feat_p = pad_axis(pad_axis(features, 0, n_p), 1, d_p)
+    oh_t_p = pad_axis(pad_axis(onehot.T, 0, c_p), 1, n_p)
+    out = pl.pallas_call(
+        _sums_kernel,
+        out_shape=jax.ShapeDtypeStruct((c_p, d_p), jnp.float32),
+        interpret=True,
+    )(oh_t_p, feat_p)
+    return out[:c, :d]
+
+
+def _proto_sums_fwd(features, onehot):
+    return proto_sums(features, onehot), (features, onehot)
+
+
+def _proto_sums_bwd(res, g):
+    # Pallas interpret kernels don't support reverse-mode AD, so the VJP
+    # is spelled out with the tiled Pallas matmul (see dense.py):
+    #   d/d feat[n, d] = sum_c onehot[n, c] g[c, d]       = onehot @ g
+    #   d/d onehot[n, c] = sum_d feat[n, d] g[c, d]       = feat @ g.T
+    features, onehot = res
+    from .dense import matmul
+
+    return matmul(onehot, g), matmul(features, g.T)
+
+
+proto_sums.defvjp(_proto_sums_fwd, _proto_sums_bwd)
+
+
+def prototypes(features: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Masked class means. [N, D], [N, C] -> [C, D].
+
+    Empty classes (count 0, only possible for padded way slots) get a zero
+    prototype rather than NaN.
+    """
+    sums = proto_sums(features, onehot)
+    counts = onehot.sum(axis=0)
+    return sums / jnp.maximum(counts, 1.0)[:, None]

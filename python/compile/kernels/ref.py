@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest (with hypothesis shape/dtype
+sweeps) asserts each Pallas kernel (interpret=True) matches its oracle to
+float32 tolerance. The oracles are also used directly by the L2 model code
+when ``use_pallas=False`` (a debugging escape hatch; AOT always uses the
+Pallas path).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def proto_sums(features: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Class-wise segment sum. features [N, D], onehot [N, C] -> [C, D].
+
+    Rows whose onehot is all-zero (padding / invalid slots) contribute
+    nothing, which is how task padding is masked out.
+    """
+    return onehot.T @ features
+
+
+def proto_counts(onehot: jnp.ndarray) -> jnp.ndarray:
+    """Per-class valid-example counts. onehot [N, C] -> [C]."""
+    return onehot.sum(axis=0)
+
+
+def prototypes(features: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Masked class means (ProtoNets prototypes). [N,D],[N,C] -> [C,D]."""
+    sums = proto_sums(features, onehot)
+    counts = proto_counts(onehot)
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def sq_euclidean(x: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared Euclidean distance. x [M, D], p [C, D] -> [M, C]."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # [M, 1]
+    p2 = jnp.sum(p * p, axis=1)[None, :]  # [1, C]
+    cross = x @ p.T  # [M, C]
+    return x2 + p2 - 2.0 * cross
+
+
+def mahalanobis(x: jnp.ndarray, mu: jnp.ndarray, prec: jnp.ndarray) -> jnp.ndarray:
+    """Batched Mahalanobis quadratic form.
+
+    x [M, D] queries, mu [C, D] class means, prec [C, D, D] class precision
+    matrices -> [M, C] with out[m, c] = (x_m - mu_c)^T prec_c (x_m - mu_c).
+    """
+    diff = x[:, None, :] - mu[None, :, :]  # [M, C, D]
+    t = jnp.einsum("mcd,cde->mce", diff, prec)
+    return jnp.einsum("mce,mce->mc", t, diff)
+
+
+def film(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """FiLM modulation. x [..., C], gamma/beta [C] -> gamma*x + beta."""
+    return x * gamma + beta
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Affine map. x [M, K], w [K, N], b [N] -> [M, N]."""
+    return x @ w + b

@@ -1,0 +1,56 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package run with ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls; see DESIGN.md §Hardware
+adaptation). Tile shapes are nevertheless chosen for the TPU memory
+hierarchy: the lane dimension is padded to 128 (VREG lane width) and the
+sublane dimension to 8, so the same BlockSpecs would map onto real VMEM
+tiles unchanged.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# TPU vector-register geometry: kernels tile the trailing dim to LANE and
+# the second-to-last dim to SUBLANE multiples.
+LANE = 128
+SUBLANE = 8
+
+
+def ceil_to(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n``."""
+    return ((n + m - 1) // m) * m
+
+
+def pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to length ``target`` (no-op if equal)."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths)
+
+
+def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad the last two axes of ``x`` up to (rows, cols)."""
+    x = pad_axis(x, x.ndim - 2, rows)
+    return pad_axis(x, x.ndim - 1, cols)
+
+
+def pick_tile(n: int, preferred: int, max_tile: int) -> tuple:
+    """Choose a leading-axis tile for interpret-mode execution.
+
+    On a real TPU the `preferred` tile (sized for VMEM residency) is the
+    right block; under interpret=True every grid step lowers to one
+    iteration of an XLA while-loop with dynamic slices, so fine grids
+    serialize catastrophically on CPU. We therefore grow the tile up to
+    `max_tile` so typical shapes need only a handful of grid steps,
+    keeping the same BlockSpec structure. Returns (tile, padded_n).
+    """
+    if n <= max_tile:
+        tile = ceil_to(n, preferred)
+        return tile, tile
+    tile = max_tile
+    return tile, ceil_to(n, tile)

@@ -1,0 +1,59 @@
+"""The LITE estimator (paper §3, Eq. 8) as graph combinators.
+
+LITE's identity: for any support-set aggregate that is a SUM of
+per-element contributions, the forward value must use the FULL support
+set while the backward pass touches only the H back-propagated elements,
+scaled by N/H:
+
+    d/dphi L(e(D_S)) ≈ (N/H) * L'(e(D_S)) * sum_{h} d e^(h)/dphi
+
+``lite_combine`` implements this with a stop_gradient identity:
+
+    out = stop_gradient(a_bp + a_nbp) + scale * (a_bp - stop_gradient(a_bp))
+
+- forward value == a_bp + a_nbp exactly (the full-support aggregate);
+- backward == scale * d(a_bp)/dphi, and the a_nbp branch carries no
+  gradient at all, so XLA dead-code-eliminates its entire backward graph
+  — this is the in-graph equivalent of the paper's
+  ``torch.grad.enabled=False`` trick and the source of the memory saving.
+
+Note on Algorithm 1 line 11: the paper describes the N/H weighting as a
+step-time factor; per Eq. 8 the factor belongs on the *support-path*
+gradient term only (the query-path gradient through the feature extractor
+is exact and mini-batched). Applying the scale inside the combinator is
+the faithful implementation of Eq. 8; the two coincide for models whose
+learnable parameters only touch the support path (CNAPs variants).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lite_combine(a_bp: jnp.ndarray, a_nbp, scale: jnp.ndarray) -> jnp.ndarray:
+    """Combine back-prop and no-back-prop partial aggregates.
+
+    ``a_bp``: aggregate (already summed) over the H back-propagated
+    elements. ``a_nbp``: aggregate over the remaining N-H elements, or
+    ``None`` when the geometry has no nbp split (H == N, i.e. exact
+    training). ``scale``: the N/H factor (a traced scalar so that padded
+    tasks with fewer than N_max valid elements scale correctly).
+    """
+    if a_nbp is None:
+        return a_bp
+    full = a_bp + jax.lax.stop_gradient(a_nbp)
+    return jax.lax.stop_gradient(full) + scale * (
+        a_bp - jax.lax.stop_gradient(a_bp)
+    )
+
+
+def lite_scale(n_valid: jnp.ndarray, n_bp_valid: jnp.ndarray) -> jnp.ndarray:
+    """The N/H importance weight, computed from traced VALID counts so
+    padded buffers stay unbiased: ``n_valid`` is the number of real
+    support elements in the episode and ``n_bp_valid`` the number of real
+    elements in the back-prop buffer (padding rows have all-zero one-hot
+    and contribute to neither). When an episode is smaller than the
+    static H buffer, every element is back-propagated and the scale
+    correctly collapses to 1 (exact gradient)."""
+    return n_valid / jnp.maximum(n_bp_valid, 1.0)

@@ -1,0 +1,24 @@
+"""Model zoo: each module exposes
+
+    init_params(key, spec)  -> (params: dict[str, Array], learnable: [str])
+    build(spec)             -> (fn, data_specs)
+
+where ``fn(params_list, *data)`` is the function AOT-lowered by aot.py and
+``data_specs`` is the ordered list of (name, shape, dtype-str) non-param
+inputs. Output names come from ``output_names(spec)``.
+"""
+
+from . import cnaps_family, finetuner, maml, pretrain, protonet
+
+MODULES = {
+    "protonet": protonet,
+    "cnaps": cnaps_family,
+    "simple_cnaps": cnaps_family,
+    "maml": maml,
+    "finetuner": finetuner,
+    "pretrain": pretrain,
+}
+
+
+def module_for(model: str):
+    return MODULES[model]

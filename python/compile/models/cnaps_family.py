@@ -1,0 +1,217 @@
+"""CNAPs [4] and Simple CNAPs [5] with LITE (amortization-based).
+
+Both share the frozen pretrained backbone + deep-set task encoder + FiLM
+hyper-networks; they differ in the head: CNAPs generates a linear
+classifier from class-pooled features, Simple CNAPs classifies by
+Mahalanobis distance to class-conditional Gaussians (no head params).
+
+LITE processing flow (paper Appendix A.1): the H split passes through the
+set encoder and the FiLM-configured backbone with gradients; the
+complement passes through both with gradients disabled (stop_gradient =>
+XLA DCEs its backward). Learnable params are the encoder + generators
+(+ CNAPs head MLP); the backbone is frozen.
+
+Scaling note: CNAPs models NEST subset sums (encoder sum -> FiLM ->
+features -> class sums). Scaling each sum by N/H — the plug-in estimator —
+compounds to (N/H)^2 along the film->class path and its variance explodes
+at small H. The paper instead back-propagates the H subset UNSCALED and
+multiplies the final gradient by N/H once (Algorithm 1 line 11); we
+reproduce exactly that here (``lite_combine`` with scale=1 + a single
+in-graph N/H factor on the output grads). ProtoNets (single-sum) keeps
+the per-sum scaled combinator, which there is exactly unbiased.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import backbone, encoders, heads, nn
+from ..lite import lite_combine, lite_scale
+from . import common
+
+
+def _is_simple(spec) -> bool:
+    return spec.model == "simple_cnaps"
+
+
+def init_params(key, spec):
+    params: nn.Params = {}
+    k1, k2, k3 = jax.random.split(key, 3)
+    backbone.init(k1, params)
+    encoders.init(k2, params)
+    learnable = encoders.param_names()
+    if not _is_simple(spec):
+        heads.cnaps_head_init(k3, params, backbone.FEATURE_DIM)
+        learnable = learnable + heads.cnaps_head_param_names()
+    return params, learnable
+
+
+def _film_from_support(params, bp_x, nbp_x, n_valid):
+    """Task embedding (forward-exact deep-set sum; backward touches only
+    the bp branch, unscaled — see module docstring) -> FiLM parameters."""
+    e_bp = encoders.embed(params, bp_x).sum(axis=0) if bp_x is not None else None
+    e_nbp = (
+        jax.lax.stop_gradient(encoders.embed(params, nbp_x).sum(axis=0))
+        if nbp_x is not None
+        else None
+    )
+    if e_bp is None:
+        e_sum = e_nbp
+    else:
+        e_sum = e_bp + e_nbp if e_nbp is not None else e_bp
+    task_emb = e_sum / jnp.maximum(n_valid, 1.0)
+    return encoders.generate_film(params, task_emb)
+
+
+def _episode_loss(spec):
+    simple = _is_simple(spec)
+    one = jnp.float32(1.0)
+
+    def loss(params, *data):
+        """Returns (loss, (acc, grad_scale)) — grad_scale is the single
+        N/H factor applied to the final gradients (Algorithm 1 l.11)."""
+        bp_x, bp_oh, nbp_x, nbp_oh, q_x, q_oh = common.unpack_train_data(spec, data)
+        n_bp = bp_oh.sum() if bp_oh is not None else jnp.float32(0.0)
+        n_valid = n_bp + (nbp_oh.sum() if nbp_oh is not None else jnp.float32(0.0))
+        gscale = lite_scale(n_valid, n_bp) if bp_oh is not None else one
+
+        film = _film_from_support(params, bp_x, nbp_x, n_valid)
+        f_bp = backbone.apply(params, bp_x, film) if bp_x is not None else None
+        f_nbp = (
+            jax.lax.stop_gradient(backbone.apply(params, nbp_x, film))
+            if nbp_x is not None
+            else None
+        )
+        oh_bp = bp_oh
+        if f_bp is None:
+            f_bp, oh_bp, f_nbp, nbp_oh_eff = f_nbp, nbp_oh, None, None
+        else:
+            nbp_oh_eff = nbp_oh if f_nbp is not None else None
+        sums, counts = heads.class_stats_lite(f_bp, oh_bp, f_nbp, nbp_oh_eff, one)
+        q_feat = backbone.apply(params, q_x, film)
+        if simple:
+            outer = heads.outer_sums_lite(f_bp, oh_bp, f_nbp, nbp_oh_eff, one)
+            mu, prec = heads.simple_cnaps_state(sums, outer, counts)
+            logits = heads.simple_cnaps_logits(mu, prec, q_feat)
+        else:
+            logits = heads.cnaps_logits(params, sums, counts, q_feat)
+        ce, acc = nn.masked_softmax_ce(logits, q_oh, (counts > 0).astype(jnp.float32))
+        return ce, (acc, gscale)
+
+    return loss
+
+
+def _make_train_fn(names, learn_names, episode_loss):
+    """value_and_grad wrapper applying the single final N/H factor."""
+
+    def fn(params_list, *data):
+        params = dict(zip(names, params_list))
+
+        def loss_fn(learn_list):
+            p = dict(params)
+            p.update(zip(learn_names, learn_list))
+            return episode_loss(p, *data)
+
+        (loss, (acc, gscale)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            [params[n] for n in learn_names]
+        )
+        scaled = [gscale * g for g in grads]
+        return (loss, acc, *scaled)
+
+    return fn
+
+
+def _film_state_specs():
+    out = []
+    for i, ch in enumerate(backbone.CHANNELS):
+        out += [(f"state.gamma{i}", (ch,), "f32"), (f"state.beta{i}", (ch,), "f32")]
+    return out
+
+
+def build(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+    simple = _is_simple(spec)
+    if spec.kind == "train":
+        learn = init_params(jax.random.PRNGKey(0), spec)[1]
+        fn = _make_train_fn(names, learn, _episode_loss(spec))
+        return fn, common.train_data_specs(spec)
+
+    if spec.kind == "adapt":
+        tg = spec.test_geom
+
+        def adapt(params_list, sup_x, sup_oh):
+            params = dict(zip(names, params_list))
+            n_valid = sup_oh.sum()
+            emb = encoders.embed(params, sup_x)
+            task_emb = emb.sum(axis=0) / jnp.maximum(n_valid, 1.0)
+            film = encoders.generate_film(params, task_emb)
+            f = backbone.apply(params, sup_x, film)
+            sums, counts = heads.class_stats_lite(f, sup_oh, None, None, 1.0)
+            film_flat = [t for gb in film for t in gb]
+            if simple:
+                outer = heads.outer_sums_lite(f, sup_oh, None, None, 1.0)
+                mu, prec = heads.simple_cnaps_state(sums, outer, counts)
+                return (*film_flat, mu, prec, counts)
+            mu = sums / jnp.maximum(counts, 1.0)[:, None]
+            h = nn.relu(nn.dense_apply(params, "head.fc1", mu))
+            wb = nn.dense_apply(params, "head.fc2", h)
+            return (*film_flat, wb[:, :-1], wb[:, -1], counts)
+
+        return adapt, [
+            ("sup_x", common.img_shape(spec, tg.n_support), "f32"),
+            ("sup_oh", (tg.n_support, tg.way), "f32"),
+        ]
+
+    if spec.kind == "classify":
+        tg = spec.test_geom
+        d = backbone.FEATURE_DIM
+        n_blocks = len(backbone.CHANNELS)
+
+        def classify(params_list, *args):
+            params = dict(zip(names, params_list))
+            film_flat = args[: 2 * n_blocks]
+            film = [
+                (film_flat[2 * i], film_flat[2 * i + 1]) for i in range(n_blocks)
+            ]
+            rest = args[2 * n_blocks :]
+            q_x = rest[-1]
+            q_feat = backbone.apply(params, q_x, film)
+            neg = jnp.float32(-1e9)
+            if simple:
+                mu, prec, counts = rest[0], rest[1], rest[2]
+                logits = heads.simple_cnaps_logits(mu, prec, q_feat)
+            else:
+                w, b, counts = rest[0], rest[1], rest[2]
+                from ..kernels.dense import matmul as pallas_matmul
+
+                logits = pallas_matmul(q_feat, w.T) + b[None, :]
+            return (jnp.where(counts[None, :] > 0, logits, neg),)
+
+        state = _film_state_specs()
+        if simple:
+            state += [
+                ("state.mu", (tg.way, d), "f32"),
+                ("state.prec", (tg.way, d, d), "f32"),
+                ("state.counts", (tg.way,), "f32"),
+            ]
+        else:
+            state += [
+                ("state.w", (tg.way, d), "f32"),
+                ("state.b", (tg.way,), "f32"),
+                ("state.counts", (tg.way,), "f32"),
+            ]
+        return classify, state + [("q_x", common.img_shape(spec, tg.mq), "f32")]
+    raise ValueError(spec.kind)
+
+
+def output_names(spec):
+    if spec.kind == "train":
+        learn = init_params(jax.random.PRNGKey(0), spec)[1]
+        return common.train_output_names(learn)
+    if spec.kind == "adapt":
+        film = [n for i in range(len(backbone.CHANNELS)) for n in (f"state.gamma{i}", f"state.beta{i}")]
+        if _is_simple(spec):
+            return film + ["state.mu", "state.prec", "state.counts"]
+        return film + ["state.w", "state.b", "state.counts"]
+    return ["logits"]

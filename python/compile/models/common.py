@@ -1,0 +1,78 @@
+"""Shared episodic-graph plumbing for the model zoo."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+
+
+def img_shape(spec, n: int):
+    s = spec.image_size
+    return (n, s, s, 3)
+
+
+def train_data_specs(spec) -> list:
+    """Ordered non-param inputs of a LITE train step (Algorithm 1)."""
+    g = spec.geom
+    h = max(g.h, 1) if g.h > 0 else 0
+    specs = []
+    if h > 0:
+        specs += [
+            ("sup_bp_x", img_shape(spec, h), "f32"),
+            ("sup_bp_oh", (h, g.way), "f32"),
+        ]
+    if g.n_nbp > 0 or g.h == 0:
+        n_nbp = g.n_support if g.h == 0 else g.n_nbp
+        specs += [
+            ("sup_nbp_x", img_shape(spec, n_nbp), "f32"),
+            ("sup_nbp_oh", (n_nbp, g.way), "f32"),
+        ]
+    specs += [
+        ("q_x", img_shape(spec, g.mb), "f32"),
+        ("q_oh", (g.mb, g.way), "f32"),
+    ]
+    return specs
+
+
+def unpack_train_data(spec, data):
+    """-> (bp_x, bp_oh, nbp_x, nbp_oh, q_x, q_oh); nbp_* may be None."""
+    g = spec.geom
+    i = 0
+    bp_x = bp_oh = nbp_x = nbp_oh = None
+    if g.h > 0:
+        bp_x, bp_oh = data[i], data[i + 1]
+        i += 2
+    if g.n_nbp > 0 or g.h == 0:
+        nbp_x, nbp_oh = data[i], data[i + 1]
+        i += 2
+    return bp_x, bp_oh, nbp_x, nbp_oh, data[i], data[i + 1]
+
+
+def make_value_and_grad(names, learn_names, episode_loss):
+    """Wrap an episodic loss into the AOT train-step callable.
+
+    ``episode_loss(params_dict, *data) -> (loss, acc)``; the returned fn
+    computes grads w.r.t. the ``learn_names`` subset only and emits
+    ``(loss, acc, *grads)`` in ``learn_names`` order.
+    """
+
+    def fn(params_list, *data):
+        params = dict(zip(names, params_list))
+
+        def loss_fn(learn_list):
+            p = dict(params)
+            p.update(zip(learn_names, learn_list))
+            return episode_loss(p, *data)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            [params[n] for n in learn_names]
+        )
+        return (loss, acc, *grads)
+
+    return fn
+
+
+def train_output_names(learn_names) -> list:
+    return ["loss", "acc"] + [f"grad.{n}" for n in learn_names]

@@ -1,0 +1,96 @@
+"""FineTuner [28] transfer-learning baseline.
+
+Frozen pretrained backbone; at test time the L3 coordinator extracts
+features once (``features`` artifact) and runs 50 SGD steps on a linear
+head (``head_step`` artifact), then classifies (``head_predict``). There
+is no meta-training. This is the expensive-to-adapt / cheap-to-train
+corner of the paper's Fig. 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import backbone, nn
+from ..kernels.dense import dense as pallas_dense
+from . import common
+
+
+def init_params(key, spec):
+    params: nn.Params = {}
+    if spec.kind == "features":
+        backbone.init(key, params)
+        return params, []
+    return params, []  # head artifacts are parameterless graphs
+
+
+def build(spec):
+    if spec.kind == "features":
+        names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+        b = spec.extra.get("batch", 16)
+
+        def features(params_list, x):
+            params = dict(zip(names, params_list))
+            return (backbone.apply(params, x),)
+
+        return features, [("x", common.img_shape(spec, b), "f32")]
+
+    way = spec.extra["way"]
+    batch = spec.extra["batch"]
+    d = backbone.FEATURE_DIM
+
+    def normalize(f):
+        # Row-normalized features x sqrt(D): the scaled-cosine-style
+        # input the ORBIT FineTuner baseline uses; without it the raw
+        # MicroConv feature magnitudes (~1e-2) make SGD at lr=0.1
+        # ineffective in 50 steps. rsqrt form: NaN-free VJP at zero rows.
+        return f * jax.lax.rsqrt(
+            jnp.sum(f * f, axis=1, keepdims=True) + 1e-8
+        ) * jnp.sqrt(jnp.float32(d))
+
+    if spec.kind == "head_step":
+        lr = spec.extra.get("lr", 0.1)
+
+        def head_step(params_list, w, b, feats, oh, class_mask):
+            fn_ = normalize(feats)
+
+            def loss_fn(wb):
+                w_, b_ = wb
+                logits = pallas_dense(fn_, w_, b_)
+                loss, _ = nn.masked_softmax_ce(logits, oh, class_mask)
+                return loss
+
+            loss, (gw, gb) = jax.value_and_grad(loss_fn)((w, b))
+            return (loss, w - lr * gw, b - lr * gb)
+
+        return head_step, [
+            ("w", (d, way), "f32"),
+            ("b", (way,), "f32"),
+            ("feats", (batch, d), "f32"),
+            ("oh", (batch, way), "f32"),
+            ("class_mask", (way,), "f32"),
+        ]
+
+    if spec.kind == "head_predict":
+
+        def head_predict(params_list, w, b, feats, class_mask):
+            logits = pallas_dense(normalize(feats), w, b)
+            neg = jnp.float32(-1e9)
+            return (jnp.where(class_mask[None, :] > 0, logits, neg),)
+
+        return head_predict, [
+            ("w", (d, way), "f32"),
+            ("b", (way,), "f32"),
+            ("feats", (batch, d), "f32"),
+            ("class_mask", (way,), "f32"),
+        ]
+    raise ValueError(spec.kind)
+
+
+def output_names(spec):
+    if spec.kind == "features":
+        return ["feats"]
+    if spec.kind == "head_step":
+        return ["loss", "w", "b"]
+    return ["logits"]

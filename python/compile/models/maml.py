@@ -1,0 +1,130 @@
+"""First-order MAML [1] baseline (no LITE — matches the paper, which
+trains FO-MAML with reduced batch sizes instead).
+
+The inner loop (a few SGD steps on the support cross-entropy over ALL
+learnable parameters, backbone + FiLM constants + linear head) is unrolled
+inside the graph. First-order trick: the inner gradients are wrapped in
+stop_gradient, so d(theta')/d(phi) = I and the outer backward evaluates
+grad L_query at the adapted parameters — exactly FO-MAML.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import backbone, nn
+from ..kernels.dense import dense as pallas_dense
+from . import common
+
+
+def init_params(key, spec):
+    from .. import specs as _specs
+
+    params: nn.Params = {}
+    k1, k2 = jax.random.split(key)
+    backbone.init(k1, params)
+    # Head width = the global padded WAY so the learned initialization is
+    # shape-stable between train and test artifacts.
+    params["head.w"] = jnp.zeros((backbone.FEATURE_DIM, _specs.WAY), jnp.float32)
+    params["head.b"] = jnp.zeros((_specs.WAY,), jnp.float32)
+    return params, list(params.keys())
+
+
+def _logits(p, x):
+    # Pure-jnp path: MAML's grad-of-grad structure is incompatible with
+    # the custom_vjp Pallas wrappers (no forward-mode rule), so this
+    # baseline — which the paper also trains without LITE — runs on
+    # XLA-native ops end to end. Features are row-normalized (see
+    # nn.normalize_rows) so the inner SGD steps act on O(1) logits.
+    f = backbone.apply(p, x, pallas=False)
+    f = f * jax.lax.rsqrt(
+        jnp.sum(f * f, axis=-1, keepdims=True) + 1e-8
+    ) * jnp.sqrt(jnp.float32(f.shape[-1]))
+    return f @ p["head.w"] + p["head.b"][None, :]
+
+
+def _support_loss(p, sup_x, sup_oh, class_mask):
+    logits = _logits(p, sup_x)
+    loss, _ = nn.masked_softmax_ce(logits, sup_oh, class_mask)
+    return loss
+
+
+def _inner_adapt(params, names, sup_x, sup_oh, steps, lr):
+    class_mask = (sup_oh.sum(axis=0) > 0).astype(jnp.float32)
+    p = dict(params)
+    for _ in range(steps):
+        g = jax.grad(
+            lambda lst: _support_loss(dict(zip(names, lst)), sup_x, sup_oh, class_mask)
+        )([p[n] for n in names])
+        # stop_gradient => first-order MAML.
+        p = {
+            n: p[n] - lr * jax.lax.stop_gradient(gi)
+            for n, gi in zip(names, g)
+        }
+    return p, class_mask
+
+
+def build(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+
+    if spec.kind == "train":
+        g = spec.geom
+        assert g.h == 0, "MAML trains without a LITE split (h=0 geometry)"
+        steps = spec.extra.get("inner_steps", 3)
+        lr = spec.extra.get("inner_lr", 0.05)
+
+        def episode_loss(params, sup_x, sup_oh, q_x, q_oh):
+            adapted, class_mask = _inner_adapt(params, names, sup_x, sup_oh, steps, lr)
+            logits = _logits(adapted, q_x)
+            return nn.masked_softmax_ce(logits, q_oh, class_mask)
+
+        fn = common.make_value_and_grad(names, names, episode_loss)
+        data_specs = [
+            ("sup_x", common.img_shape(spec, g.n_support), "f32"),
+            ("sup_oh", (g.n_support, g.way), "f32"),
+            ("q_x", common.img_shape(spec, g.mb), "f32"),
+            ("q_oh", (g.mb, g.way), "f32"),
+        ]
+        return fn, data_specs
+
+    if spec.kind == "adapt":
+        tg = spec.test_geom
+        steps = spec.extra.get("inner_steps", 5)
+        lr = spec.extra.get("inner_lr", 0.05)
+
+        def adapt(params_list, sup_x, sup_oh):
+            params = dict(zip(names, params_list))
+            adapted, class_mask = _inner_adapt(params, names, sup_x, sup_oh, steps, lr)
+            return tuple(adapted[n] for n in names) + (class_mask,)
+
+        return adapt, [
+            ("sup_x", common.img_shape(spec, tg.n_support), "f32"),
+            ("sup_oh", (tg.n_support, tg.way), "f32"),
+        ]
+
+    if spec.kind == "classify":
+        tg = spec.test_geom
+
+        def classify(params_list, *args):
+            # args: adapted params (same order as names) + class_mask + q_x
+            adapted = dict(zip(names, args[: len(names)]))
+            class_mask, q_x = args[len(names)], args[len(names) + 1]
+            logits = _logits(adapted, q_x)
+            neg = jnp.float32(-1e9)
+            return (jnp.where(class_mask[None, :] > 0, logits, neg),)
+
+        dummy, _ = init_params(jax.random.PRNGKey(0), spec)
+        state = [(f"state.{n}", tuple(dummy[n].shape), "f32") for n in names]
+        state.append(("state.class_mask", (tg.way,), "f32"))
+        return classify, state + [("q_x", common.img_shape(spec, tg.mq), "f32")]
+    raise ValueError(spec.kind)
+
+
+def output_names(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+    if spec.kind == "train":
+        return common.train_output_names(names)
+    if spec.kind == "adapt":
+        return [f"state.{n}" for n in names] + ["state.class_mask"]
+    return ["logits"]

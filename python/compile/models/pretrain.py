@@ -1,0 +1,49 @@
+"""Supervised pretraining of the shared MicroConv backbone.
+
+Substitute for the paper's ImageNet pretraining (DESIGN.md §3): a plain
+classification step (backbone + linear head over the synthetic base
+corpus' classes). The L3 coordinator runs this for a few hundred steps;
+the resulting backbone tensors are overlaid by name onto the CNAPs
+variants' frozen backbone slots and the FineTuner's extractor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import backbone, nn
+from ..kernels.dense import dense as pallas_dense
+from . import common
+
+
+def init_params(key, spec):
+    params: nn.Params = {}
+    k1, k2 = jax.random.split(key)
+    backbone.init(k1, params)
+    classes = spec.extra.get("classes", 20)
+    params["cls.w"] = nn.he_init(k2, (backbone.FEATURE_DIM, classes), backbone.FEATURE_DIM)
+    params["cls.b"] = jnp.zeros((classes,), jnp.float32)
+    return params, list(params.keys())
+
+
+def build(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+    classes = spec.extra.get("classes", 20)
+    batch = spec.extra.get("batch", 32)
+
+    def episode_loss(params, x, oh):
+        f = backbone.apply(params, x)
+        logits = pallas_dense(f, params["cls.w"], params["cls.b"])
+        return nn.masked_softmax_ce(logits, oh, jnp.ones((classes,), jnp.float32))
+
+    fn = common.make_value_and_grad(names, names, episode_loss)
+    return fn, [
+        ("x", common.img_shape(spec, batch), "f32"),
+        ("oh", (batch, classes), "f32"),
+    ]
+
+
+def output_names(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+    return common.train_output_names(names)

@@ -1,0 +1,98 @@
+"""ProtoNets [3] with LITE.
+
+Metric-based: the whole backbone is learnable (meta-trained end-to-end);
+the head is the parameter-free nearest-prototype classifier. Under LITE,
+the H back-prop support elements flow through the backbone with gradients
+while the complement is wrapped in stop_gradient (paper Appendix A.2);
+both contribute to the prototypes' forward value via the LITE combinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import backbone, heads, nn
+from ..lite import lite_combine, lite_scale
+from . import common
+
+
+def init_params(key, spec):
+    params: nn.Params = {}
+    backbone.init(key, params)
+    return params, list(params.keys())
+
+
+def _episode_loss(spec):
+    g = spec.geom
+
+    def loss(params, *data):
+        bp_x, bp_oh, nbp_x, nbp_oh, q_x, q_oh = common.unpack_train_data(spec, data)
+        n_bp = bp_oh.sum() if bp_oh is not None else jnp.float32(0.0)
+        n_valid = n_bp + (nbp_oh.sum() if nbp_oh is not None else jnp.float32(0.0))
+        scale = lite_scale(n_valid, n_bp)
+
+        if bp_x is not None:
+            f_bp, oh_bp = backbone.apply(params, bp_x), bp_oh
+        f_nbp = None
+        if nbp_x is not None:
+            f_nbp = jax.lax.stop_gradient(backbone.apply(params, nbp_x))
+        if bp_x is None:
+            # |H| = 0: no support gradients at all; the backbone still
+            # learns through the query path (Table 2's ProtoNets column).
+            f_bp, oh_bp = f_nbp, nbp_oh
+            f_nbp = None
+        sums, counts = heads.class_stats_lite(f_bp, oh_bp, f_nbp, nbp_oh if f_nbp is not None else None, scale)
+        q_feat = backbone.apply(params, q_x)
+        logits = heads.protonet_logits(sums, counts, q_feat)
+        return nn.masked_softmax_ce(logits, q_oh, (counts > 0).astype(jnp.float32))
+
+    return loss
+
+
+def build(spec):
+    names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+    if spec.kind == "train":
+        fn = common.make_value_and_grad(names, names, _episode_loss(spec))
+        return fn, common.train_data_specs(spec)
+    if spec.kind == "adapt":
+        tg = spec.test_geom
+
+        def adapt(params_list, sup_x, sup_oh):
+            params = dict(zip(names, params_list))
+            f = backbone.apply(params, sup_x)
+            sums, counts = heads.class_stats_lite(f, sup_oh, None, None, 1.0)
+            protos = sums / jnp.maximum(counts, 1.0)[:, None]
+            return (protos, counts)
+
+        return adapt, [
+            ("sup_x", common.img_shape(spec, tg.n_support), "f32"),
+            ("sup_oh", (tg.n_support, tg.way), "f32"),
+        ]
+    if spec.kind == "classify":
+        tg = spec.test_geom
+
+        def classify(params_list, protos, counts, q_x):
+            params = dict(zip(names, params_list))
+            q_feat = backbone.apply(params, q_x)
+            from ..kernels import distances as kdist
+
+            logits = -kdist.sq_euclidean(q_feat, protos)
+            neg = jnp.float32(-1e9)
+            return (jnp.where(counts[None, :] > 0, logits, neg),)
+
+        return classify, [
+            ("state.protos", (tg.way, backbone.FEATURE_DIM), "f32"),
+            ("state.counts", (tg.way,), "f32"),
+            ("q_x", common.img_shape(spec, tg.mq), "f32"),
+        ]
+    raise ValueError(spec.kind)
+
+
+def output_names(spec):
+    if spec.kind == "train":
+        names = list(init_params(jax.random.PRNGKey(0), spec)[0].keys())
+        return common.train_output_names(names)
+    if spec.kind == "adapt":
+        return ["state.protos", "state.counts"]
+    return ["logits"]

@@ -1,0 +1,119 @@
+"""Minimal functional NN layer zoo for the L2 JAX models.
+
+Parameters live in ordered ``dict[str, jnp.ndarray]`` maps (python dicts
+preserve insertion order, and the AOT manifest records that order so the
+rust side can feed/read positional literals deterministically).
+
+Convolutions use ``lax.conv_general_dilated`` directly (XLA's native conv);
+the dense / FiLM / distance compute hot spots route through the Pallas
+kernels in ``compile.kernels``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as kdense
+from .kernels import film as kfilm
+
+Params = dict  # name -> jnp.ndarray, insertion-ordered
+
+
+def he_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC x HWIO -> NHWC, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def avg_pool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 average pool (requires even H, W)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """[B, H, W, C] -> [B, C]."""
+    return x.mean(axis=(1, 2))
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.relu(x)
+
+
+def dense_apply(params: Params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Affine layer through the Pallas tiled-matmul kernel."""
+    return kdense.dense(x, params[f"{prefix}.w"], params[f"{prefix}.b"])
+
+
+def dense_init(key, prefix: str, k: int, n: int, params: Params) -> None:
+    params[f"{prefix}.w"] = he_init(key, (k, n), k)
+    params[f"{prefix}.b"] = jnp.zeros((n,), jnp.float32)
+
+
+def film_apply(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, pallas: bool = True
+) -> jnp.ndarray:
+    """FiLM modulation through the Pallas kernel.
+
+    ``pallas=False`` switches to the jnp formulation — required by MAML,
+    whose outer-grad-of-inner-grad needs forward-mode linearization that
+    custom_vjp-wrapped Pallas calls cannot provide.
+    """
+    if not pallas:
+        return x * gamma + beta
+    return kfilm.film(x, gamma, beta)
+
+
+def normalize_rows(f: jnp.ndarray) -> jnp.ndarray:
+    """Row-L2-normalize features, rescaled by sqrt(D).
+
+    MicroConv features come out of four ReLU+pool stages at ~1e-2
+    magnitude; linear heads on raw features produce near-zero logits and
+    vanishing CE gradients. Cosine-style normalization (standard in
+    few-shot classifiers, e.g. the ORBIT FineTuner and MD-Transfer
+    baselines) fixes the scale for MAML / CNAPs / FineTuner heads.
+    ProtoNets and Simple CNAPs use distance heads and stay on raw
+    features.
+
+    Numerics: uses rsqrt(||f||^2 + eps) rather than f/(||f||+eps) — the
+    latter's VJP contains a 0 * inf = NaN at exactly-zero rows, which
+    padded support slots (zero images -> zero features) hit."""
+    return f * jax.lax.rsqrt(
+        jnp.sum(f * f, axis=-1, keepdims=True) + 1e-8
+    ) * jnp.sqrt(jnp.float32(f.shape[-1]))
+
+
+def masked_softmax_ce(
+    logits: jnp.ndarray, onehot: jnp.ndarray, class_mask: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy + accuracy over PADDED episodic batches.
+
+    ``logits`` [M, C]; ``onehot`` [M, C] with all-zero rows for padded query
+    slots; ``class_mask`` [C] in {0,1} marking classes actually present in
+    the task (padded way slots are masked to -inf before the softmax so an
+    empty class can never win).
+
+    Returns (mean loss over valid queries, accuracy over valid queries).
+    """
+    neg = jnp.float32(-1e9)
+    masked_logits = jnp.where(class_mask[None, :] > 0, logits, neg)
+    logp = jax.nn.log_softmax(masked_logits, axis=-1)
+    row_valid = onehot.sum(axis=1)  # 1.0 for real queries, 0.0 for padding
+    n_valid = jnp.maximum(row_valid.sum(), 1.0)
+    loss = -(onehot * logp).sum() / n_valid
+    pred = jnp.argmax(masked_logits, axis=1)
+    label = jnp.argmax(onehot, axis=1)
+    acc = ((pred == label).astype(jnp.float32) * row_valid).sum() / n_valid
+    return loss, acc

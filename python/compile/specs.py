@@ -1,0 +1,248 @@
+"""Artifact configuration registry.
+
+Every HLO artifact the rust coordinator can load is described here by an
+``ArtifactSpec``; ``registry()`` enumerates the full set that
+``aot.py`` lowers. Names are stable identifiers — the rust side addresses
+artifacts exclusively through ``artifacts/manifest.json`` entries keyed by
+these names.
+
+Scale notes (DESIGN.md §3): image sizes 32/64/96 stand in for the paper's
+84/224/320; support sizes are scaled 1000 -> <=200.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+SMALL, LARGE, XLARGE = 32, 64, 96
+FEATURE_DIM = 128
+PRETRAIN_CLASSES = 20
+PRETRAIN_BATCH = 32
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Static task geometry baked into a train artifact.
+
+    way: padded class count C.
+    n_support: padded total support size N.
+    h: LITE back-prop subset size; h == 0 means NO support gradients
+       (ProtoNets' |H|=0 column in Table 2); h == n_support means exact
+       full-support back-prop (no nbp split).
+    mb: query batch size per train step (Algorithm 1's M_b).
+    """
+
+    way: int
+    n_support: int
+    h: int
+    mb: int
+
+    @property
+    def n_nbp(self) -> int:
+        return self.n_support - self.h
+
+    def tag(self) -> str:
+        return f"w{self.way}n{self.n_support}h{self.h}m{self.mb}"
+
+
+@dataclass(frozen=True)
+class TestGeometry:
+    """Static geometry for adapt/classify artifacts."""
+
+    way: int
+    n_support: int
+    mq: int  # query batch size per classify call
+
+    def tag(self) -> str:
+        return f"w{self.way}n{self.n_support}q{self.mq}"
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    name: str
+    model: str  # protonet | cnaps | simple_cnaps | maml | finetuner | pretrain
+    kind: str  # train | adapt | classify | features | head_step | head_predict | pretrain_step
+    image_size: int = 0
+    geom: Geometry | None = None
+    test_geom: TestGeometry | None = None
+    extra: dict = field(default_factory=dict)
+
+
+# Default geometries (overridable by editing this registry). WAY is the
+# global padded class count: every artifact uses the same width so trained
+# tensors (e.g. MAML's head) are shape-stable across train/test.
+WAY = 10
+TRAIN_GEOM = Geometry(way=WAY, n_support=40, h=8, mb=10)
+SWEEP_N = 80
+TEST_GEOM = TestGeometry(way=WAY, n_support=200, mq=20)
+ORBIT_TEST_GEOM = TestGeometry(way=WAY, n_support=64, mq=16)
+
+META_MODELS = ("protonet", "cnaps", "simple_cnaps")
+GRADCHECK_GEOM = dict(way=10, n_support=100, mb=10)
+GRADCHECK_HS = (10, 20, 30, 40, 50, 60, 70, 80, 90)
+
+
+def _train(model: str, size: int, geom: Geometry) -> ArtifactSpec:
+    return ArtifactSpec(
+        name=f"{model}_{size}_{geom.tag()}_train",
+        model=model,
+        kind="train",
+        image_size=size,
+        geom=geom,
+    )
+
+
+def _adapt_classify(model: str, size: int, tg: TestGeometry) -> list:
+    return [
+        ArtifactSpec(
+            name=f"{model}_{size}_{tg.tag()}_adapt",
+            model=model,
+            kind="adapt",
+            image_size=size,
+            test_geom=tg,
+        ),
+        ArtifactSpec(
+            name=f"{model}_{size}_{tg.tag()}_classify",
+            model=model,
+            kind="classify",
+            image_size=size,
+            test_geom=tg,
+        ),
+    ]
+
+
+def registry() -> list:
+    specs: list[ArtifactSpec] = []
+    for size in (SMALL, LARGE):
+        # Supervised pretraining of the shared backbone (frozen afterwards
+        # for CNAPs variants + FineTuner; DESIGN.md substitution table).
+        specs.append(
+            ArtifactSpec(
+                name=f"pretrain_{size}_step",
+                model="pretrain",
+                kind="pretrain_step",
+                image_size=size,
+                extra=dict(classes=PRETRAIN_CLASSES, batch=PRETRAIN_BATCH),
+            )
+        )
+        # Meta-learners: LITE train step + adapt/classify pair.
+        for model in META_MODELS:
+            specs.append(_train(model, size, TRAIN_GEOM))
+            specs += _adapt_classify(model, size, TEST_GEOM)
+            specs += _adapt_classify(model, size, ORBIT_TEST_GEOM)
+        # First-order MAML baseline (no LITE; inner loop in-graph). h=0
+        # geometry => a single full support buffer, no LITE split.
+        maml_geom = Geometry(way=WAY, n_support=TRAIN_GEOM.n_support, h=0, mb=TRAIN_GEOM.mb)
+        specs.append(
+            ArtifactSpec(
+                name=f"maml_{size}_{maml_geom.tag()}_train",
+                model="maml",
+                kind="train",
+                image_size=size,
+                geom=maml_geom,
+                extra=dict(inner_steps=3, inner_lr=0.05),
+            )
+        )
+        for tg in (TEST_GEOM, ORBIT_TEST_GEOM):
+            specs += [
+                ArtifactSpec(
+                    name=f"maml_{size}_{tg.tag()}_adapt",
+                    model="maml",
+                    kind="adapt",
+                    image_size=size,
+                    test_geom=tg,
+                    extra=dict(inner_steps=5, inner_lr=0.05),
+                ),
+                ArtifactSpec(
+                    name=f"maml_{size}_{tg.tag()}_classify",
+                    model="maml",
+                    kind="classify",
+                    image_size=size,
+                    test_geom=tg,
+                ),
+            ]
+        # FineTuner: frozen features + SGD'd linear head (steps run by L3).
+        specs.append(
+            ArtifactSpec(
+                name=f"finetuner_{size}_features",
+                model="finetuner",
+                kind="features",
+                image_size=size,
+                extra=dict(batch=16),
+            )
+        )
+    # Head artifacts are image-size independent (operate on [B, D] feats).
+    specs.append(
+        ArtifactSpec(
+            name="finetuner_head_step",
+            model="finetuner",
+            kind="head_step",
+            extra=dict(way=10, batch=64, lr=0.1),
+        )
+    )
+    specs.append(
+        ArtifactSpec(
+            name="finetuner_head_predict",
+            model="finetuner",
+            kind="head_predict",
+            extra=dict(way=10, batch=64),
+        )
+    )
+
+    # |H| sweep artifacts (Table 2 / D.4–D.6): larger support pool.
+    for h in (1, 10, 40, SWEEP_N):
+        specs.append(
+            _train("simple_cnaps", LARGE, Geometry(way=WAY, n_support=SWEEP_N, h=h, mb=10))
+        )
+    for h in (0, 10, 40, SWEEP_N):
+        specs.append(
+            _train("protonet", LARGE, Geometry(way=WAY, n_support=SWEEP_N, h=h, mb=10))
+        )
+    for h in (40, SWEEP_N):  # 32px right-hand columns of Table 2
+        specs.append(
+            _train("simple_cnaps", SMALL, Geometry(way=WAY, n_support=SWEEP_N, h=h, mb=10))
+        )
+
+    # "Even larger images" run (Table D.9): 96px Simple CNAPs.
+    specs.append(
+        _train("simple_cnaps", XLARGE, Geometry(way=WAY, n_support=40, h=8, mb=10))
+    )
+    specs += _adapt_classify("simple_cnaps", XLARGE, TEST_GEOM)
+    specs.append(
+        ArtifactSpec(
+            name=f"pretrain_{XLARGE}_step",
+            model="pretrain",
+            kind="pretrain_step",
+            image_size=XLARGE,
+            extra=dict(classes=PRETRAIN_CLASSES, batch=PRETRAIN_BATCH),
+        )
+    )
+
+    # Gradient-estimator lab (Fig 4 / D.7–D.8): Simple CNAPs at 32px,
+    # 10-way 10-shot N=100. "lite_h" back-props h of 100; "sub_n" is the
+    # subsampled-small-task baseline (a full-gradient step on n examples).
+    g = GRADCHECK_GEOM
+    specs.append(
+        _train("simple_cnaps", SMALL, Geometry(g["way"], g["n_support"], g["n_support"], g["mb"]))
+    )  # exact full gradient
+    for h in GRADCHECK_HS:
+        specs.append(
+            _train("simple_cnaps", SMALL, Geometry(g["way"], g["n_support"], h, g["mb"]))
+        )
+        specs.append(
+            _train("simple_cnaps", SMALL, Geometry(g["way"], h, h, g["mb"]))
+        )  # subsampled small task: N = h, exact
+    # Dedup (some geometries coincide).
+    seen, out = set(), []
+    for s in specs:
+        if s.name not in seen:
+            seen.add(s.name)
+            out.append(s)
+    return out
+
+
+def spec_by_name(name: str) -> ArtifactSpec:
+    for s in registry():
+        if s.name == name:
+            return s
+    raise KeyError(name)

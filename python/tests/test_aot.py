@@ -1,0 +1,109 @@
+"""AOT layer tests: registry consistency, HLO-text round-trip through
+jax's own HLO parser-independent checks, manifest emission, and
+python/rust MACs parity."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, backbone, encoders, specs
+
+
+def test_registry_names_unique_and_complete():
+    r = specs.registry()
+    names = [s.name for s in r]
+    assert len(names) == len(set(names))
+    # Every experiment family is present.
+    for needle in [
+        "pretrain_32_step",
+        "pretrain_64_step",
+        "protonet_64_",
+        "cnaps_64_",
+        "simple_cnaps_64_",
+        "maml_64_",
+        "finetuner_64_features",
+        "finetuner_head_step",
+        "simple_cnaps_96_",
+        "simple_cnaps_32_w10n100h10m10_train",  # gradcheck lite
+        "simple_cnaps_32_w10n10h10m10_train",  # gradcheck sub
+    ]:
+        assert any(n.startswith(needle) or needle in n for n in names), needle
+
+
+def test_geometry_tags_roundtrip():
+    g = specs.Geometry(way=10, n_support=80, h=8, mb=10)
+    assert g.tag() == "w10n80h8m10"
+    assert g.n_nbp == 72
+
+
+def test_lower_spec_hlo_is_wellformed():
+    """Lower one small artifact and sanity-check the HLO text (the format
+    the rust xla crate parses): it must declare an ENTRY computation and
+    a tuple root with the manifest's output arity."""
+    spec = specs.spec_by_name("finetuner_head_predict")
+    hlo, entry, params = aot.lower_spec(spec)
+    assert "ENTRY" in hlo and "ROOT" in hlo
+    assert len(entry["outputs"]) == 1
+    assert entry["param_group"] is None
+    # Input count in HLO matches manifest (params + data).
+    n_inputs = len(entry["param_names"]) + len(entry["inputs"])
+    assert hlo.count("parameter(") >= n_inputs
+
+
+def test_manifest_files_exist_and_agree():
+    """If artifacts have been built, manifest.json and manifest.txt must
+    agree on artifact names and param groups."""
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mjson = os.path.join(out_dir, "manifest.json")
+    if not os.path.exists(mjson):
+        pytest.skip("artifacts not built")
+    m = json.load(open(mjson))
+    txt = open(os.path.join(out_dir, "manifest.txt")).read()
+    for a in m["artifacts"]:
+        assert f"artifact {a['name']} " in txt
+        assert os.path.exists(os.path.join(out_dir, a["path"])), a["name"]
+    for g, info in m["param_groups"].items():
+        assert f"group {g} " in txt
+        p = os.path.join(out_dir, info["file"])
+        assert os.path.exists(p)
+        want = sum(t["len"] for t in info["tensors"]) * 4
+        assert os.path.getsize(p) == want, g
+
+
+def test_param_groups_shared_across_kinds():
+    """Train/adapt/classify artifacts of one model+size must share one
+    param group with identical tensor order."""
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mjson = os.path.join(out_dir, "manifest.json")
+    if not os.path.exists(mjson):
+        pytest.skip("artifacts not built")
+    m = json.load(open(mjson))
+    by_group = {}
+    for a in m["artifacts"]:
+        g = a["param_group"]
+        if g is None:
+            continue
+        by_group.setdefault(g, []).append(a)
+    for g, arts in by_group.items():
+        names0 = arts[0]["param_names"]
+        for a in arts[1:]:
+            assert a["param_names"] == names0, (g, a["name"])
+
+
+def test_macs_parity_with_rust():
+    """Golden MACs values mirrored in rust/src/eval/macs.rs — keep the
+    two cost models in lockstep."""
+    assert backbone.macs_per_image(32) == 4_012_032
+    assert encoders.macs_per_image(32) == 704_512
+    # Quadratic scaling in image side.
+    assert backbone.macs_per_image(64) == 4 * backbone.macs_per_image(32)
+
+
+def test_param_seed_stable():
+    assert aot.param_seed("protonet", 32) == aot.param_seed("protonet", 32)
+    assert aot.param_seed("protonet", 32) != aot.param_seed("protonet", 64)
+    assert aot.param_seed("protonet", 32) != aot.param_seed("cnaps", 32)

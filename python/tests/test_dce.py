@@ -1,0 +1,72 @@
+"""L2 perf invariant: the LITE stop-gradient branch must be DEAD in the
+lowered HLO — XLA eliminates the entire backward graph of the
+no-back-prop support split, which is where the paper's memory/compute
+saving comes from.
+
+Methodology: lower the same ProtoNets train graph twice, once as-built
+(stop_gradient on the nbp branch) and once with stop_gradient patched to
+identity; the patched module must contain strictly more convolution ops
+(the nbp backward convs), and the real one must match the analytic
+forward+backward conv count with ZERO nbp backward convs.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, specs
+from compile.models import module_for
+from compile.specs import ArtifactSpec, Geometry
+
+
+def _conv_count(spec) -> int:
+    mod = module_for(spec.model)
+    params, _ = mod.init_params(jax.random.PRNGKey(0), spec)
+    fn, data_specs = mod.build(spec)
+    p_shapes = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params.values()]
+    d_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for (_, s, _) in data_specs]
+    lowered = jax.jit(fn, keep_unused=True).lower(p_shapes, *d_shapes)
+    hlo = aot.to_hlo_text(lowered)
+    return hlo.count(" convolution(")
+
+
+def _spec(h):
+    return ArtifactSpec(
+        name=f"dce_{h}",
+        model="protonet",
+        kind="train",
+        image_size=16,
+        geom=Geometry(way=3, n_support=12, h=h, mb=4),
+    )
+
+
+def test_nbp_backward_is_dce_eliminated():
+    spec = _spec(4)
+    real = _conv_count(spec)
+
+    # Patch stop_gradient to identity: the nbp branch becomes
+    # differentiable and its backward convs appear in the module.
+    orig = jax.lax.stop_gradient
+    try:
+        jax.lax.stop_gradient = lambda x: x
+        leaky = _conv_count(spec)
+    finally:
+        jax.lax.stop_gradient = orig
+
+    assert leaky > real, (
+        f"stop_gradient removal should ADD backward convs: {real} vs {leaky}"
+    )
+    # Analytic count for the real graph: 3 forward applies (bp, nbp,
+    # query) x 4 conv layers = 12 forward; backward only for bp + query
+    # paths: 4 filter grads + 3 input grads each = 14. Total 26.
+    assert real == 26, real
+    # The leaky graph adds the nbp path's 7 backward convs.
+    assert leaky == 33, leaky
+
+
+def test_h0_graph_has_no_support_backward():
+    """|H|=0: the whole support set is forward-only — only the query
+    path carries backward convs (12 fwd? no: 2 applies x 4 = 8 fwd,
+    query backward 7)."""
+    real = _conv_count(_spec(0))
+    assert real == 8 + 7, real

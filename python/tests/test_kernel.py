@@ -1,0 +1,284 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the integer label structure for the
+aggregation kernel); assert_allclose at float32 tolerance. These tests are
+the core numerical signal for the whole stack — the AOT'd HLO contains
+exactly these kernels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import dense, distances, film, mahalanobis, protoagg, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _onehot(labels, way):
+    return (labels[:, None] == np.arange(way)[None, :]).astype(np.float32)
+
+
+# ---------------------------------------------------------------- protoagg
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 90),
+    d=st.integers(1, 200),
+    way=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_proto_sums_matches_ref(n, d, way, seed):
+    rng = _rng(seed)
+    f = rng.normal(size=(n, d)).astype(np.float32)
+    oh = _onehot(rng.integers(0, way, size=n), way)
+    got = protoagg.proto_sums(jnp.asarray(f), jnp.asarray(oh))
+    want = ref.proto_sums(jnp.asarray(f), jnp.asarray(oh))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 60),
+    d=st.integers(1, 160),
+    way=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prototypes_matches_ref(n, d, way, seed):
+    rng = _rng(seed)
+    f = rng.normal(size=(n, d)).astype(np.float32)
+    oh = _onehot(rng.integers(0, way, size=n), way)
+    got = protoagg.prototypes(jnp.asarray(f), jnp.asarray(oh))
+    want = ref.prototypes(jnp.asarray(f), jnp.asarray(oh))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_prototypes_masked_rows_ignored():
+    """All-zero one-hot rows (padding) must not move the prototypes."""
+    rng = _rng(0)
+    f = rng.normal(size=(10, 16)).astype(np.float32)
+    oh = _onehot(rng.integers(0, 3, size=10), 3)
+    f_pad = np.concatenate([f, rng.normal(size=(6, 16)).astype(np.float32)])
+    oh_pad = np.concatenate([oh, np.zeros((6, 3), np.float32)])
+    a = protoagg.prototypes(jnp.asarray(f), jnp.asarray(oh))
+    b = protoagg.prototypes(jnp.asarray(f_pad), jnp.asarray(oh_pad))
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_prototypes_empty_class_is_zero_not_nan():
+    f = np.ones((4, 8), np.float32)
+    oh = _onehot(np.zeros(4, np.int64), 3)  # classes 1, 2 empty
+    out = np.asarray(protoagg.prototypes(jnp.asarray(f), jnp.asarray(oh)))
+    assert np.isfinite(out).all()
+    assert_allclose(out[1], 0.0)
+    assert_allclose(out[2], 0.0)
+
+
+def test_proto_sums_permutation_invariant():
+    """The SUM structure LITE relies on (paper Eq. 5)."""
+    rng = _rng(7)
+    f = rng.normal(size=(20, 32)).astype(np.float32)
+    oh = _onehot(rng.integers(0, 4, size=20), 4)
+    perm = rng.permutation(20)
+    a = protoagg.proto_sums(jnp.asarray(f), jnp.asarray(oh))
+    b = protoagg.proto_sums(jnp.asarray(f[perm]), jnp.asarray(oh[perm]))
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- distances
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    c=st.integers(1, 12),
+    d=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sq_euclidean_matches_ref(m, c, d, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    p = rng.normal(size=(c, d)).astype(np.float32)
+    got = distances.sq_euclidean(jnp.asarray(x), jnp.asarray(p))
+    want = ref.sq_euclidean(jnp.asarray(x), jnp.asarray(p))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_sq_euclidean_self_distance_zero():
+    rng = _rng(3)
+    x = rng.normal(size=(6, 64)).astype(np.float32)
+    d = np.asarray(distances.sq_euclidean(jnp.asarray(x), jnp.asarray(x)))
+    assert_allclose(np.diag(d), 0.0, atol=1e-3)
+    assert (d >= -1e-3).all()  # non-negativity up to fp error
+
+
+# ------------------------------------------------------------- mahalanobis
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    c=st.integers(1, 8),
+    d=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mahalanobis_matches_ref(m, c, d, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    mu = rng.normal(size=(c, d)).astype(np.float32)
+    prec = rng.normal(size=(c, d, d)).astype(np.float32) / np.sqrt(d)
+    got = mahalanobis.mahalanobis(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(prec))
+    want = ref.mahalanobis(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(prec))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_mahalanobis_identity_precision_is_sq_euclidean():
+    rng = _rng(11)
+    x = rng.normal(size=(9, 48)).astype(np.float32)
+    mu = rng.normal(size=(4, 48)).astype(np.float32)
+    prec = np.stack([np.eye(48, dtype=np.float32)] * 4)
+    got = mahalanobis.mahalanobis(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(prec))
+    want = ref.sq_euclidean(jnp.asarray(x), jnp.asarray(mu))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_mahalanobis_psd_precision_nonnegative():
+    rng = _rng(12)
+    x = rng.normal(size=(8, 32)).astype(np.float32)
+    mu = rng.normal(size=(3, 32)).astype(np.float32)
+    a = rng.normal(size=(3, 32, 32)).astype(np.float32)
+    prec = np.einsum("cij,ckj->cik", a, a) / 32.0  # PSD
+    out = np.asarray(
+        mahalanobis.mahalanobis(jnp.asarray(x), jnp.asarray(mu), jnp.asarray(prec))
+    )
+    assert (out >= -1e-2).all()
+
+
+# -------------------------------------------------------------------- film
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(1, 12),
+    ch=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_film_matches_ref(b, hw, ch, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(b, hw, hw, ch)).astype(np.float32)
+    g = rng.normal(size=(ch,)).astype(np.float32)
+    be = rng.normal(size=(ch,)).astype(np.float32)
+    got = film.film(jnp.asarray(x), jnp.asarray(g), jnp.asarray(be))
+    want = ref.film(jnp.asarray(x), jnp.asarray(g), jnp.asarray(be))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_film_identity_params_is_noop():
+    rng = _rng(5)
+    x = rng.normal(size=(2, 5, 5, 24)).astype(np.float32)
+    g = np.ones(24, np.float32)
+    b = np.zeros(24, np.float32)
+    out = film.film(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b))
+    assert_allclose(np.asarray(out), x, rtol=1e-6)
+
+
+def test_film_2d_input():
+    """FiLM must also handle flat [B, C] feature vectors."""
+    rng = _rng(6)
+    x = rng.normal(size=(7, 40)).astype(np.float32)
+    g = rng.normal(size=(40,)).astype(np.float32)
+    b = rng.normal(size=(40,)).astype(np.float32)
+    got = film.film(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b))
+    assert_allclose(np.asarray(got), x * g + b, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- dense
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 180),
+    n=st.integers(1, 180),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, seed):
+    rng = _rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    got = dense.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_zero_weight_gives_bias():
+    x = np.ones((3, 5), np.float32)
+    w = np.zeros((5, 4), np.float32)
+    b = np.arange(4, dtype=np.float32)
+    got = np.asarray(dense.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    assert_allclose(got, np.tile(b, (3, 1)))
+
+
+# -------------------------------------------------- differentiation through
+def test_kernels_are_differentiable():
+    """The AOT train graph takes jax.grad THROUGH the Pallas kernels."""
+    import jax
+
+    rng = _rng(9)
+    f = jnp.asarray(rng.normal(size=(12, 32)).astype(np.float32))
+    oh = jnp.asarray(_onehot(rng.integers(0, 3, size=12), 3))
+    q = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+
+    def loss(feats):
+        protos = protoagg.prototypes(feats, oh)
+        d = distances.sq_euclidean(q, protos)
+        return jnp.sum(jax.nn.log_softmax(-d))
+
+    g = jax.grad(loss)(f)
+
+    def loss_ref(feats):
+        protos = ref.prototypes(feats, oh)
+        d = ref.sq_euclidean(q, protos)
+        return jnp.sum(jax.nn.log_softmax(-d))
+
+    g_ref = jax.grad(loss_ref)(f)
+    assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-4, atol=1e-4)
+
+
+def _grads_match(fn_pallas, fn_ref, args, rtol=1e-3, atol=1e-3):
+    import jax
+
+    for argnum in range(len(args)):
+        gp = jax.grad(lambda *a: jnp.sum(fn_pallas(*a) ** 2), argnums=argnum)(*args)
+        gr = jax.grad(lambda *a: jnp.sum(fn_ref(*a) ** 2), argnums=argnum)(*args)
+        assert_allclose(np.asarray(gp), np.asarray(gr), rtol=rtol, atol=atol)
+
+
+def test_dense_vjp_matches_ref():
+    rng = _rng(21)
+    x = jnp.asarray(rng.normal(size=(9, 20)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(20, 14)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(14,)).astype(np.float32))
+    _grads_match(dense.dense, ref.dense, (x, w, b))
+
+
+def test_film_vjp_matches_ref():
+    rng = _rng(22)
+    x = jnp.asarray(rng.normal(size=(2, 4, 4, 24)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(24,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(24,)).astype(np.float32))
+    _grads_match(film.film, ref.film, (x, g, b))
+
+
+def test_mahalanobis_vjp_matches_ref():
+    rng = _rng(23)
+    x = jnp.asarray(rng.normal(size=(6, 24)).astype(np.float32))
+    mu = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+    prec = jnp.asarray(rng.normal(size=(3, 24, 24)).astype(np.float32) / 5.0)
+    _grads_match(mahalanobis.mahalanobis, ref.mahalanobis, (x, mu, prec), rtol=5e-3, atol=5e-3)
+
+
+def test_sq_euclidean_vjp_matches_ref():
+    rng = _rng(24)
+    x = jnp.asarray(rng.normal(size=(8, 30)).astype(np.float32))
+    p = jnp.asarray(rng.normal(size=(4, 30)).astype(np.float32))
+    _grads_match(distances.sq_euclidean, ref.sq_euclidean, (x, p))

@@ -1,0 +1,215 @@
+"""Scientific core tests for the LITE estimator (paper §3 / Fig 4).
+
+Run on a tiny geometry (16px images) so the exact full-support gradient is
+cheap, then check the three properties the paper proves/measures:
+
+  1. LITE's FORWARD value is exact — identical loss for any H split.
+  2. The LITE gradient estimator is UNBIASED: the mean over random H
+     subsets matches the exact gradient.
+  3. LITE's RMSE is below the subsampled-small-task estimator's at
+     matched |H| (the Fig 4 separation) — because LITE evaluates L' at
+     the full-support encoding.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import specs as specs_mod
+from compile.models import module_for
+from compile.specs import ArtifactSpec, Geometry
+
+WAY, N, MB, SIZE = 3, 12, 4, 16
+SEED = 0
+
+
+def make_spec(model, h, n=N):
+    return ArtifactSpec(
+        name=f"test_{model}_h{h}",
+        model=model,
+        kind="train",
+        image_size=SIZE,
+        geom=Geometry(way=WAY, n_support=n, h=h, mb=MB),
+    )
+
+
+def make_task(rng, n=N):
+    """A linearly separable toy task: class-coloured noisy images."""
+    labels = np.arange(n) % WAY
+    x = rng.normal(0, 0.3, size=(n, SIZE, SIZE, 3)).astype(np.float32)
+    for i, c in enumerate(labels):
+        x[i, :, :, c % 3] += 0.5 + 0.3 * c
+    oh = (labels[:, None] == np.arange(WAY)[None, :]).astype(np.float32)
+    qx = rng.normal(0, 0.3, size=(MB, SIZE, SIZE, 3)).astype(np.float32)
+    qlab = np.arange(MB) % WAY
+    for i, c in enumerate(qlab):
+        qx[i, :, :, c % 3] += 0.5 + 0.3 * c
+    qoh = (qlab[:, None] == np.arange(WAY)[None, :]).astype(np.float32)
+    return x, oh, qx, qoh
+
+
+_FN_CACHE = {}
+
+
+def _get_fn(model, h, n):
+    """Build + jit a train-step fn once per geometry (pallas interpret is
+    prohibitively slow op-by-op; jit compiles it once)."""
+    key = (model, h, n)
+    if key not in _FN_CACHE:
+        spec = make_spec(model, h, n)
+        fn, _ = module_for(model).build(spec)
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+def run_train(model, h, params_list, x, oh, qx, qoh, bp_idx=None, n=N):
+    """Invoke a train-step fn with a given H-subset choice."""
+    fn = _get_fn(model, h, n)
+    if h == 0 or h >= n:
+        data = (x, oh, qx, qoh)
+    else:
+        bp = np.asarray(bp_idx)
+        nbp = np.setdiff1d(np.arange(n), bp)
+        data = (x[bp], oh[bp], x[nbp], oh[nbp], qx, qoh)
+    out = fn(params_list, *map(jnp.asarray, data))
+    loss, acc, grads = out[0], out[1], out[2:]
+    return float(loss), [np.asarray(g) for g in grads]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(SEED)
+    task = make_task(rng)
+    out = {}
+    for model in ("protonet", "simple_cnaps"):
+        spec = make_spec(model, N)
+        params, learn = module_for(model).init_params(jax.random.PRNGKey(1), spec)
+        out[model] = [params[k] for k in params]
+    return rng, task, out
+
+
+@pytest.mark.parametrize("model", ["protonet", "simple_cnaps"])
+def test_lite_forward_value_is_exact(setup, model):
+    rng, (x, oh, qx, qoh), params = setup
+    loss_full, _ = run_train(model, N, params[model], x, oh, qx, qoh)
+    for h in (2, 4, 8):
+        bp = rng.choice(N, size=h, replace=False)
+        loss_h, _ = run_train(model, h, params[model], x, oh, qx, qoh, bp)
+        assert abs(loss_h - loss_full) < 1e-4, (h, loss_h, loss_full)
+
+
+def _mean_estimate_rel_err(rng, model, params, task, h, n_trials, tensor=None):
+    """Relative L2 error of the mean LITE estimate vs the exact gradient.
+
+    ``tensor``: restrict to one gradient tensor index (the paper's D.4
+    protocol measures the FIRST set-encoder conv only); None = all."""
+    x, oh, qx, qoh = task
+
+    def select(gs):
+        gs = gs if tensor is None else [gs[tensor]]
+        return np.concatenate([g.ravel() for g in gs])
+
+    _, g_full = run_train(model, N, params, x, oh, qx, qoh)
+    flat_full = select(g_full)
+    acc = np.zeros_like(flat_full)
+    for _ in range(n_trials):
+        bp = rng.choice(N, size=h, replace=False)
+        _, g = run_train(model, h, params, x, oh, qx, qoh, bp)
+        acc += select(g) / n_trials
+    return np.linalg.norm(acc - flat_full) / (np.linalg.norm(flat_full) + 1e-12)
+
+
+def test_lite_gradient_unbiased_protonet(setup):
+    """Mean of LITE grads over random subsets ~= exact gradient.
+
+    ProtoNets is the SINGLE-SUM case the paper's Eq. 8 proof covers
+    exactly: the support set enters the loss only through the per-class
+    feature sums, so the estimator must be exactly unbiased (up to MC
+    noise ~ 1/sqrt(trials))."""
+    rng, task, params = setup
+    rel = _mean_estimate_rel_err(rng, "protonet", params["protonet"], task, h=4, n_trials=64)
+    assert rel < 0.25, rel
+
+
+def test_lite_gradient_near_unbiased_simple_cnaps(setup):
+    """Simple CNAPs implements the paper's estimator exactly: the H
+    subset is back-propagated unscaled and the FINAL gradient carries a
+    single N/H factor (Algorithm 1 line 11). With nested aggregations
+    this is near-unbiased on the SET-ENCODER gradients — which is
+    precisely what the paper's Table D.7 measures (first conv of the set
+    encoder) — while generator-direct paths absorb the uniform factor
+    as an effective learning-rate scale. We therefore check the
+    encoder-conv-1 gradient, matching the paper's D.4 protocol."""
+    rng, task, params = setup
+    rel = _mean_estimate_rel_err(
+        rng, "simple_cnaps", params["simple_cnaps"], task, h=4, n_trials=64, tensor=0
+    )
+    assert rel < 0.8, rel
+
+
+def test_lite_rmse_below_subsampled(setup):
+    """Fig 4: LITE RMSE < subsampled-task RMSE at matched |H|.
+
+    Measured on Simple CNAPs, matching the paper's Fig 4 setup (gradients
+    of the set-encoder path). The separation is dramatic because a
+    subsampled task produces very different class covariances and FiLM
+    parameters, while LITE evaluates L' at the exact full-task encoding.
+    (For ProtoNets trained end-to-end the query-path gradient dominates
+    and the subsampled estimator can win at moderate |H|/N — the paper
+    makes no claim there and neither do we.)"""
+    rng, (x, oh, qx, qoh), params = setup
+    model = "simple_cnaps"
+    _, g_full = run_train(model, N, params[model], x, oh, qx, qoh)
+    flat_full = g_full[0].ravel()  # set-encoder conv1 (paper D.4 protocol)
+    h = 6
+    n_trials = 30
+
+    def rmse(runner):
+        errs = []
+        for _ in range(n_trials):
+            bp = rng.choice(N, size=h, replace=False)
+            _, g = runner(bp)
+            errs.append(np.mean((g[0].ravel() - flat_full) ** 2))
+        return np.sqrt(np.mean(errs))
+
+    rmse_lite = rmse(lambda bp: run_train(model, h, params[model], x, oh, qx, qoh, bp))
+
+    def sub_runner(bp):
+        # Subsampled small task: h examples, exact gradient, no scaling.
+        return run_train(model, h, params[model], x[bp], oh[bp], qx, qoh, None, n=h)
+
+    rmse_sub = rmse(sub_runner)
+    assert rmse_lite < rmse_sub, (rmse_lite, rmse_sub)
+
+
+def test_h0_protonet_has_query_gradients_only(setup):
+    """|H|=0: support path carries no gradient but the query path does."""
+    rng, (x, oh, qx, qoh), params = setup
+    _, g = run_train("protonet", 0, params["protonet"], x, oh, qx, qoh)
+    total = sum(np.abs(gi).sum() for gi in g)
+    assert total > 0.0  # backbone still learns through queries
+
+
+def test_newton_schulz_inverse_accuracy():
+    from compile.heads import newton_schulz_inverse
+
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(4, 32, 32)).astype(np.float32)
+    spd = np.einsum("cij,ckj->cik", a, a) / 32.0 + 0.1 * np.eye(32, dtype=np.float32)
+    inv = np.asarray(newton_schulz_inverse(jnp.asarray(spd)))
+    eye = np.einsum("cij,cjk->cik", spd, inv)
+    err = np.abs(eye - np.eye(32, dtype=np.float32)).max()
+    assert err < 1e-3, err
+
+
+def test_newton_schulz_matches_numpy_inverse():
+    from compile.heads import newton_schulz_inverse
+
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(2, 16, 16)).astype(np.float32)
+    spd = np.einsum("cij,ckj->cik", a, a) / 16.0 + 0.2 * np.eye(16, dtype=np.float32)
+    inv = np.asarray(newton_schulz_inverse(jnp.asarray(spd)))
+    ref = np.linalg.inv(spd)
+    assert_allclose(inv, ref, rtol=1e-2, atol=1e-3)

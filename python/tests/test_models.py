@@ -1,0 +1,189 @@
+"""L2 model graph tests: shapes, gradient plumbing, and behavioural
+invariants of each meta-learner's episodic loss."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.models import module_for
+from compile.specs import ArtifactSpec, Geometry, TestGeometry
+
+SIZE = 16
+WAY = 10
+
+
+def train_spec(model, way=WAY, n=12, h=4, mb=4):
+    if model == "maml":
+        h = 0
+    return ArtifactSpec(
+        name=f"t_{model}",
+        model=model,
+        kind="train",
+        image_size=SIZE,
+        geom=Geometry(way=way, n_support=n, h=h, mb=mb),
+        extra=dict(inner_steps=2, inner_lr=0.05),
+    )
+
+
+def rand_task(rng, n, way, mb, n_classes=3):
+    x = rng.normal(0.4, 0.2, size=(n, SIZE, SIZE, 3)).astype(np.float32).clip(0, 1)
+    labels = np.arange(n) % n_classes
+    oh = np.zeros((n, way), np.float32)
+    oh[np.arange(n), labels] = 1.0
+    qx = rng.normal(0.4, 0.2, size=(mb, SIZE, SIZE, 3)).astype(np.float32).clip(0, 1)
+    qoh = np.zeros((mb, way), np.float32)
+    qoh[np.arange(mb), np.arange(mb) % n_classes] = 1.0
+    return x, oh, qx, qoh
+
+
+@pytest.mark.parametrize("model", ["protonet", "cnaps", "simple_cnaps", "maml"])
+def test_train_outputs_and_grad_shapes(model):
+    spec = train_spec(model)
+    mod = module_for(model)
+    params, learn = mod.init_params(jax.random.PRNGKey(0), spec)
+    fn, data_specs = mod.build(spec)
+    rng = np.random.default_rng(0)
+    g = spec.geom
+    x, oh, qx, qoh = rand_task(rng, g.n_support, g.way, g.mb)
+    if model == "maml":
+        data = (x, oh, qx, qoh)
+    else:
+        data = (x[: g.h], oh[: g.h], x[g.h :], oh[g.h :], qx, qoh)
+    out = jax.jit(fn)([params[k] for k in params], *map(jnp.asarray, data))
+    names = mod.output_names(spec)
+    assert len(out) == len(names) == 2 + len(learn)
+    loss, acc = float(out[0]), float(out[1])
+    assert np.isfinite(loss) and loss > 0
+    assert 0.0 <= acc <= 1.0
+    for g_t, lname in zip(out[2:], learn):
+        assert g_t.shape == params[lname].shape, lname
+        assert np.isfinite(np.asarray(g_t)).all(), lname
+
+
+@pytest.mark.parametrize("model", ["protonet", "cnaps", "simple_cnaps", "maml"])
+def test_adapt_classify_consistency(model):
+    """Classify logits via (adapt -> classify) must be finite, shaped
+    [mq, way], and padded classes must never win."""
+    tg = TestGeometry(way=WAY, n_support=12, mq=4)
+    spec_a = ArtifactSpec(
+        name="a", model=model, kind="adapt", image_size=SIZE, test_geom=tg,
+        extra=dict(inner_steps=1, inner_lr=0.05),
+    )
+    spec_c = ArtifactSpec(name="c", model=model, kind="classify", image_size=SIZE, test_geom=tg)
+    mod = module_for(model)
+    params, _ = mod.init_params(jax.random.PRNGKey(1), spec_a)
+    plist = [params[k] for k in params]
+    adapt, _ = mod.build(spec_a)
+    classify, c_specs = mod.build(spec_c)
+    rng = np.random.default_rng(1)
+    x, oh, qx, _ = rand_task(rng, tg.n_support, tg.way, tg.mq)
+    state = jax.jit(adapt)(plist, jnp.asarray(x), jnp.asarray(oh))
+    state_names = mod.output_names(spec_a)
+    by_name = dict(zip(state_names, state))
+    c_args = [by_name[n] if n in by_name else jnp.asarray(qx) for (n, _, _) in c_specs]
+    (logits,) = jax.jit(classify)(plist, *c_args)
+    assert logits.shape == (tg.mq, tg.way)
+    l = np.asarray(logits)
+    assert np.isfinite(l).all()
+    # Only 3 classes present: padded classes must be masked to -inf-ish.
+    preds = l.argmax(axis=1)
+    assert (preds < 3).all(), preds
+
+
+def test_protonet_classify_matches_manual_distance():
+    """The classify graph == -sq euclidean distance to the adapt graph's
+    prototypes (pipeline consistency)."""
+    from compile.kernels import ref
+
+    tg = TestGeometry(way=WAY, n_support=9, mq=3)
+    mod = module_for("protonet")
+    spec_a = ArtifactSpec(name="a", model="protonet", kind="adapt", image_size=SIZE, test_geom=tg)
+    spec_c = ArtifactSpec(name="c", model="protonet", kind="classify", image_size=SIZE, test_geom=tg)
+    params, _ = mod.init_params(jax.random.PRNGKey(2), spec_a)
+    plist = [params[k] for k in params]
+    adapt, _ = mod.build(spec_a)
+    classify, _ = mod.build(spec_c)
+    rng = np.random.default_rng(2)
+    x, oh, qx, _ = rand_task(rng, tg.n_support, tg.way, tg.mq)
+    protos, counts = jax.jit(adapt)(plist, jnp.asarray(x), jnp.asarray(oh))
+    (logits,) = jax.jit(classify)(plist, protos, counts, jnp.asarray(qx))
+    from compile import backbone
+
+    qf = backbone.apply(params, jnp.asarray(qx))
+    want = -ref.sq_euclidean(qf, protos)
+    got = np.asarray(logits)
+    mask = np.asarray(counts) > 0
+    assert_allclose(got[:, mask], np.asarray(want)[:, mask], rtol=1e-3, atol=1e-3)
+
+
+def test_maml_inner_loop_reduces_support_loss():
+    """The unrolled inner loop must descend the support loss."""
+    from compile.models import maml as maml_mod
+    from compile import nn as nn_mod
+
+    spec = train_spec("maml")
+    params, _ = maml_mod.init_params(jax.random.PRNGKey(3), spec)
+    names = list(params.keys())
+    rng = np.random.default_rng(3)
+    g = spec.geom
+    x, oh, _, _ = rand_task(rng, g.n_support, g.way, g.mb)
+    x, oh = jnp.asarray(x), jnp.asarray(oh)
+    class_mask = (oh.sum(axis=0) > 0).astype(jnp.float32)
+
+    def sup_loss(p):
+        return maml_mod._support_loss(p, x, oh, class_mask)
+
+    before = float(sup_loss(params))
+    adapted, _ = maml_mod._inner_adapt(params, names, x, oh, steps=3, lr=0.1)
+    after = float(sup_loss(adapted))
+    assert after < before, (before, after)
+
+
+def test_pretrain_step_gradients_nonzero():
+    spec = ArtifactSpec(
+        name="p", model="pretrain", kind="pretrain_step", image_size=SIZE,
+        extra=dict(classes=6, batch=4),
+    )
+    mod = module_for("pretrain")
+    params, learn = mod.init_params(jax.random.PRNGKey(4), spec)
+    fn, _ = mod.build(spec)
+    rng = np.random.default_rng(4)
+    x = rng.normal(0.4, 0.2, size=(4, SIZE, SIZE, 3)).astype(np.float32).clip(0, 1)
+    oh = np.zeros((4, 6), np.float32)
+    oh[np.arange(4), np.arange(4) % 6] = 1.0
+    out = jax.jit(fn)([params[k] for k in params], jnp.asarray(x), jnp.asarray(oh))
+    total = sum(float(np.abs(np.asarray(g)).sum()) for g in out[2:])
+    assert total > 0
+
+
+def test_query_padding_rows_do_not_change_loss():
+    """All-zero one-hot query rows are excluded from the mean loss."""
+    spec = train_spec("protonet")
+    mod = module_for("protonet")
+    params, _ = mod.init_params(jax.random.PRNGKey(5), spec)
+    plist = [params[k] for k in params]
+    fn, _ = mod.build(spec)
+    rng = np.random.default_rng(5)
+    g = spec.geom
+    x, oh, qx, qoh = rand_task(rng, g.n_support, g.way, g.mb)
+    data = (x[: g.h], oh[: g.h], x[g.h :], oh[g.h :], qx, qoh)
+    full = jax.jit(fn)(plist, *map(jnp.asarray, data))
+    # Pad out the last query row.
+    qoh2 = qoh.copy()
+    qoh2[-1] = 0.0
+    qx2 = qx.copy()
+    qx2[-1] = rng.normal(size=qx2[-1].shape).astype(np.float32)
+    data2 = (x[: g.h], oh[: g.h], x[g.h :], oh[g.h :], qx2, qoh2)
+    padded = jax.jit(fn)(plist, *map(jnp.asarray, data2))
+    # Loss must equal the mean over the 3 remaining valid queries of the
+    # original per-query losses — recompute by rerunning with only the
+    # valid rows duplicated is overkill; we just require the padded run
+    # to be finite and independent of the random padded pixels.
+    qx3 = qx.copy()
+    qx3[-1] = 0.123
+    data3 = (x[: g.h], oh[: g.h], x[g.h :], oh[g.h :], qx3, qoh2)
+    padded2 = jax.jit(fn)(plist, *map(jnp.asarray, data3))
+    assert_allclose(float(padded[0]), float(padded2[0]), rtol=1e-5)
+    assert np.isfinite(float(full[0]))

@@ -1,0 +1,20 @@
+//! E5 — regenerates Table D.3: LITE (large image, large task) vs
+//! no-LITE small-image and no-LITE small-task ablations of Simple
+//! CNAPs. Env knobs: D3_TRAIN_EPISODES / D3_EVAL_EPISODES
+
+use lite::config::Args;
+
+fn env(k: &str, d: &str) -> String {
+    std::env::var(k).unwrap_or_else(|_| d.to_string())
+}
+
+fn main() {
+    let argv = vec![
+        "--train-episodes".to_string(),
+        env("D3_TRAIN_EPISODES", "25"),
+        "--eval-episodes".to_string(),
+        env("D3_EVAL_EPISODES", "2"),
+    ];
+    let mut args = Args::parse(&argv).unwrap();
+    lite::bench::d3_ablation(&mut args).unwrap();
+}

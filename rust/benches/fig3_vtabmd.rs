@@ -1,0 +1,23 @@
+//! E2 — regenerates Fig 3 / Table D.2: per-dataset accuracy on the
+//! synthetic VTAB+MD suite for SC+LITE (large images), SC (small
+//! images), ProtoNets+LITE, and the FineTuner transfer baseline.
+//! Env knobs: F3_TRAIN_EPISODES / F3_EVAL_EPISODES / F3_SIZE
+
+use lite::config::Args;
+
+fn env(k: &str, d: &str) -> String {
+    std::env::var(k).unwrap_or_else(|_| d.to_string())
+}
+
+fn main() {
+    let argv = vec![
+        "--train-episodes".to_string(),
+        env("F3_TRAIN_EPISODES", "30"),
+        "--eval-episodes".to_string(),
+        env("F3_EVAL_EPISODES", "3"),
+        "--image-size".to_string(),
+        env("F3_SIZE", "64"),
+    ];
+    let mut args = Args::parse(&argv).unwrap();
+    lite::bench::fig3_vtabmd(&mut args).unwrap();
+}

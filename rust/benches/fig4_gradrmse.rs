@@ -1,0 +1,24 @@
+//! E4 — regenerates Fig 4 and Tables D.7/D.8: bias and RMSE of the LITE
+//! estimator vs the subsampled-small-task estimator across |H|, on the
+//! fixed 10-way 10-shot task (N=100). Env knobs: F4_BUDGET / F4_HS
+
+use lite::runtime::Engine;
+
+fn main() {
+    let budget: usize = std::env::var("F4_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let hs: Vec<usize> = std::env::var("F4_HS")
+        .unwrap_or_else(|_| "10,20,30,40,50,60,70,80,90".into())
+        .split(',')
+        .map(|s| s.trim().parse().unwrap())
+        .collect();
+    let engine = Engine::load(Engine::default_dir()).unwrap();
+    let rows = lite::gradcheck::run(&engine, &hs, budget, 0).unwrap();
+    lite::gradcheck::print_rows(&rows);
+    // Sanity: both estimators unbiased (bias MSE << RMSE^2).
+    for r in &rows {
+        assert!(r.lite_bias_mse < r.lite_rmse * r.lite_rmse, "LITE bias dominates at |H|={}", r.h);
+    }
+}

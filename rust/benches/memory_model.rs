@@ -1,0 +1,36 @@
+//! E6 — the paper's memory claims, from the analytic accountant:
+//!   * full-backprop memory linear in N, quadratic in image side (§2);
+//!   * LITE flat in N beyond the stream chunk;
+//!   * |H|=40 ≈ half of full at N=80 (D.4 note);
+//!   * LITE at small H below gradient checkpointing (§2 option iv).
+
+use lite::memory::{mib, peak_bytes, Mode};
+
+fn main() {
+    println!("peak activation memory per meta-train step (MiB), query batch 10\n");
+    println!(
+        "{:>4} {:>6} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "px", "N", "full", "lite(H=8)", "lite(H=40)", "checkpoint", "small(N=40)"
+    );
+    for &px in &[32usize, 64, 96] {
+        for &n in &[40usize, 80, 200, 1000] {
+            println!(
+                "{:>4} {:>6} {:>10.2} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+                px,
+                n,
+                mib(peak_bytes(Mode::Full, px, n, 10)),
+                mib(peak_bytes(Mode::Lite { h: 8, chunk: 8 }, px, n, 10)),
+                mib(peak_bytes(Mode::Lite { h: 40, chunk: 8 }, px, n, 10)),
+                mib(peak_bytes(Mode::Checkpoint, px, n, 10)),
+                mib(peak_bytes(Mode::SmallTask { n_small: 40 }, px, n, 10)),
+            );
+        }
+    }
+    // Assert the paper-shape claims so `cargo bench` fails loudly if the
+    // model drifts.
+    let full = peak_bytes(Mode::Full, 32, 80, 10);
+    let lite40 = peak_bytes(Mode::Lite { h: 40, chunk: 8 }, 32, 80, 10);
+    let r = lite40 as f64 / full as f64;
+    assert!((0.4..0.65).contains(&r), "H=40/N=80 ratio {r}");
+    println!("\nD.4 check: |H|=40 vs full at N=80 -> {:.2}x memory", r);
+}

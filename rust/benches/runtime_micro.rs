@@ -1,0 +1,62 @@
+//! Micro-benchmarks of the PJRT runtime layer: XLA compile time and
+//! per-execution latency for each artifact class. This is the L3 perf
+//! baseline for EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use lite::data::rng::Rng;
+use lite::runtime::Engine;
+use lite::tensor::Tensor;
+
+fn rand_inputs(engine: &Engine, name: &str, rng: &mut Rng) -> Vec<Tensor> {
+    let entry = engine.entry(name).unwrap();
+    let mut out = Vec::new();
+    for spec in entry
+        .params
+        .iter()
+        .map(|p| &p.shape)
+        .chain(entry.inputs.iter().map(|i| &i.shape))
+    {
+        let n: usize = spec.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal()).collect();
+        out.push(Tensor::new(spec.clone(), data).unwrap());
+    }
+    out
+}
+
+fn bench(engine: &Engine, name: &str, reps: usize) {
+    let mut rng = Rng::new(7);
+    let inputs = rand_inputs(engine, name, &mut rng);
+    let t0 = Instant::now();
+    engine.executable(name).unwrap();
+    let compile = t0.elapsed().as_secs_f64();
+    engine.run(name, &inputs).unwrap(); // warm-up
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        engine.run(name, &inputs).unwrap();
+    }
+    let per = t1.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<48} compile {compile:>7.2}s  exec {:>9.1} ms", per * 1e3);
+}
+
+fn main() {
+    let engine = Engine::load(Engine::default_dir()).unwrap();
+    let names = [
+        "pretrain_32_step",
+        "protonet_32_w10n40h8m10_train",
+        "simple_cnaps_32_w10n40h8m10_train",
+        "protonet_32_w10n64q16_adapt",
+        "protonet_32_w10n64q16_classify",
+        "simple_cnaps_32_w10n64q16_adapt",
+        "finetuner_32_features",
+        "finetuner_head_step",
+    ];
+    for n in names {
+        bench(&engine, n, 3);
+    }
+    let stats = engine.stats();
+    println!(
+        "totals: {} compiles ({:.1}s), {} execs ({:.1}s)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+}

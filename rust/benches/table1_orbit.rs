@@ -1,0 +1,27 @@
+//! E1 — regenerates Table 1 (+ Fig 1's cost axis): ORBIT accuracy and
+//! test-time adaptation cost for all five methods at both image sizes.
+//! Scaled defaults for one CPU core; crank with env vars:
+//!   T1_TRAIN_EPISODES / T1_USERS / T1_TASKS / T1_MODELS / T1_SIZES
+
+use lite::config::Args;
+
+fn env(k: &str, d: &str) -> String {
+    std::env::var(k).unwrap_or_else(|_| d.to_string())
+}
+
+fn main() {
+    let argv = vec![
+        "--train-episodes".to_string(),
+        env("T1_TRAIN_EPISODES", "30"),
+        "--users".to_string(),
+        env("T1_USERS", "3"),
+        "--tasks-per-user".to_string(),
+        env("T1_TASKS", "1"),
+        "--models".to_string(),
+        env("T1_MODELS", "finetuner,maml,protonet,cnaps,simple_cnaps"),
+        "--sizes".to_string(),
+        env("T1_SIZES", "32,64"),
+    ];
+    let mut args = Args::parse(&argv).unwrap();
+    lite::bench::table1_orbit(&mut args).unwrap();
+}

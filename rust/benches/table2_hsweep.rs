@@ -1,0 +1,20 @@
+//! E3 — regenerates Table 2 / D.4–D.6: accuracy vs |H| for Simple CNAPs
+//! and ProtoNets (64px), plus the 32px H=40-vs-full columns.
+//! Env knobs: T2_TRAIN_EPISODES / T2_EVAL_EPISODES
+
+use lite::config::Args;
+
+fn env(k: &str, d: &str) -> String {
+    std::env::var(k).unwrap_or_else(|_| d.to_string())
+}
+
+fn main() {
+    let argv = vec![
+        "--train-episodes".to_string(),
+        env("T2_TRAIN_EPISODES", "25"),
+        "--eval-episodes".to_string(),
+        env("T2_EVAL_EPISODES", "2"),
+    ];
+    let mut args = Args::parse(&argv).unwrap();
+    lite::bench::table2_hsweep(&mut args).unwrap();
+}

@@ -1,0 +1,344 @@
+//! Benchmark harnesses regenerating every table and figure of the
+//! paper's evaluation (DESIGN.md §6 experiment index). Shared between
+//! the CLI `bench-*` subcommands and the `cargo bench` targets.
+//!
+//! All harnesses are seeded and take `--train-episodes` /
+//! `--eval-episodes` knobs: defaults are sized for a single CPU core
+//! (shape, not absolute numbers — see EXPERIMENTS.md).
+
+use anyhow::Result;
+
+use crate::config::Args;
+use crate::coordinator::{
+    meta_train, meta_train_with, pretrained_backbone, FineTuner, MetaLearner, TrainConfig,
+};
+use crate::data::orbit::{OrbitSim, VideoMode};
+use crate::data::registry::{md_suite, vtab_suite, Group};
+use crate::data::task::EpisodeConfig;
+use crate::eval::{adapt_cost, eval_dataset, eval_orbit, Predictor};
+use crate::runtime::Engine;
+use crate::util::fmt_macs;
+
+pub const ORBIT_TEST_SUPPORT: usize = 64;
+pub const VTAB_TEST_SUPPORT: usize = 200;
+
+/// Meta-train a learner on ORBIT-sim train users.
+fn train_on_orbit(
+    engine: &Engine,
+    learner: &mut MetaLearner,
+    episodes: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<()> {
+    let cfg = TrainConfig {
+        episodes,
+        accum_period: 4,
+        lr,
+        seed,
+        log_every: 25,
+        episode_cfg: EpisodeConfig::train_default(),
+        ..Default::default()
+    };
+    let image_size = learner.image_size;
+    let sim = OrbitSim::new(seed ^ 0x0B17, 6); // train users
+    meta_train_with(engine, learner, &cfg, move |rng| {
+        let user = rng.below(sim.users.len());
+        // Small train tasks: 4 clean clips per object for support, one
+        // 2-frame query video per object.
+        sim.user_episode(user, VideoMode::Clean, rng, image_size, 4, 1, 2)
+    })?;
+    Ok(())
+}
+
+/// Build (and meta-train) a learner for the ORBIT benchmark.
+fn orbit_learner(
+    engine: &Engine,
+    model: &str,
+    size: usize,
+    train_episodes: usize,
+    seed: u64,
+) -> Result<MetaLearner> {
+    let mut learner = MetaLearner::new(engine, model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
+    // All models start from the pretrained extractor (the paper's
+    // ImageNet protocol); CNAPs variants freeze it, ProtoNets/MAML learn
+    // through it.
+    let bb = pretrained_backbone(engine, size, 150, seed)?;
+    learner.install_backbone(&bb);
+    let lr = if model == "maml" { 1e-4 } else { 1e-3 };
+    train_on_orbit(engine, &mut learner, train_episodes, lr, seed)?;
+    Ok(learner)
+}
+
+/// E1 — Table 1 (+ D.1): ORBIT accuracy and test-time adaptation cost.
+pub fn table1_orbit(args: &mut Args) -> Result<()> {
+    let train_episodes: usize = args.get("train-episodes", 40)?;
+    let users: usize = args.get("users", 4)?;
+    let tasks_per_user: usize = args.get("tasks-per-user", 2)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let sizes: Vec<usize> = parse_list(&args.get_str("sizes", "32,64"))?;
+    let models: Vec<String> = args
+        .get_str("models", "finetuner,maml,protonet,cnaps,simple_cnaps")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let test_sim = OrbitSim::new(seed ^ 0x7E57, users);
+
+    println!("\nTable 1 — ORBIT teachable object recognition ({} test users x {} tasks)", users, tasks_per_user);
+    println!(
+        "{:<14} {:>4} {:>6} {:>11} {:>11} {:>11} {:>11} {:>9} {:>6} {:>8}",
+        "model", "px", "LITE", "clean-frame", "clean-video", "clut-frame", "clut-video", "MACs", "steps", "s/task"
+    );
+    for size in &sizes {
+        for model in &models {
+            let (pred_holder, learner_holder);
+            let pred: Predictor = if model == "finetuner" {
+                let mut ft = FineTuner::new(&engine, *size, 50)?;
+                let bb = pretrained_backbone(&engine, *size, 150, seed)?;
+                ft.install_backbone(&bb);
+                pred_holder = ft;
+                Predictor::Fine(&pred_holder)
+            } else {
+                learner_holder = orbit_learner(&engine, model, *size, train_episodes, seed)?;
+                Predictor::Meta(&learner_holder)
+            };
+            let clean = eval_orbit(&engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1)?;
+            let clutter = eval_orbit(&engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2)?;
+            let steps = match model.as_str() {
+                "maml" => 5,
+                "finetuner" => 50,
+                _ => 1,
+            };
+            let cost = adapt_cost(model, *size, 48, steps);
+            let lite = if *size > 32 && matches!(model.as_str(), "protonet" | "cnaps" | "simple_cnaps") {
+                "+LITE"
+            } else {
+                ""
+            };
+            println!(
+                "{:<14} {:>4} {:>6} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>9} {:>6} {:>8.2}",
+                model, size, lite,
+                clean.frame_acc.0, clean.frame_acc.1,
+                clean.video_acc.0, clean.video_acc.1,
+                clutter.frame_acc.0, clutter.frame_acc.1,
+                clutter.video_acc.0, clutter.video_acc.1,
+                fmt_macs(cost.macs as f64), cost.steps_label(), clean.secs_per_task
+            );
+        }
+    }
+    println!("\n(Fig 1 shape: meta-learners reach FineTuner-level accuracy at orders-of-magnitude fewer adaptation MACs.)");
+    Ok(())
+}
+
+/// Train a learner on the synthetic meta-training suite (VTAB+MD
+/// protocol stand-in) with a given train geometry.
+pub fn synth_learner(
+    engine: &Engine,
+    model: &str,
+    size: usize,
+    train_h: Option<usize>,
+    train_n: Option<usize>,
+    episode_cfg: EpisodeConfig,
+    train_episodes: usize,
+    seed: u64,
+) -> Result<MetaLearner> {
+    let mut learner = MetaLearner::new(engine, model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
+    let bb = pretrained_backbone(engine, size, 150, seed)?;
+    learner.install_backbone(&bb);
+    let cfg = TrainConfig {
+        episodes: train_episodes,
+        accum_period: 4,
+        lr: if model == "maml" { 1e-4 } else { 1e-3 },
+        seed,
+        log_every: 25,
+        episode_cfg,
+        ..Default::default()
+    };
+    meta_train(engine, &mut learner, &md_suite(), &cfg)?;
+    Ok(learner)
+}
+
+/// E2 — Fig 3 / Table D.2: per-dataset accuracy on synthetic VTAB+MD.
+pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
+    let train_episodes: usize = args.get("train-episodes", 40)?;
+    let eval_episodes: usize = args.get("eval-episodes", 4)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let size: usize = args.get("image-size", 64)?;
+    let small: usize = args.get("small-size", 32)?;
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+
+    // Contenders: SC+LITE (large images), SC (small images), ProtoNets
+    // +LITE (large), FineTuner (transfer baseline, large). Contenders
+    // whose artifacts don't exist at this image size (e.g. the 96px
+    // D.9 run only ships Simple CNAPs) are skipped with a notice.
+    let mut metas: Vec<(String, MetaLearner)> = Vec::new();
+    for (label, model, sz) in [
+        ("SC+LITE", "simple_cnaps", size),
+        ("SC(small)", "simple_cnaps", small),
+        ("ProtoNets+LITE", "protonet", size),
+    ] {
+        match synth_learner(&engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed) {
+            Ok(l) => metas.push((label.to_string(), l)),
+            Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
+        }
+    }
+    let ft: Option<FineTuner> = match FineTuner::new(&engine, size, 50) {
+        Ok(mut f) => {
+            let bb = pretrained_backbone(&engine, size, 150, seed)?;
+            f.install_backbone(&bb);
+            Some(f)
+        }
+        Err(e) => {
+            eprintln!("skipping FineTuner at {size}px: {e}");
+            None
+        }
+    };
+
+    let mut preds: Vec<(&str, Predictor)> = metas
+        .iter()
+        .map(|(l, m)| (l.as_str(), Predictor::Meta(m)))
+        .collect();
+    if let Some(f) = &ft {
+        preds.push(("FineTuner", Predictor::Fine(f)));
+    }
+
+    let mut suite = md_suite();
+    suite.extend(vtab_suite());
+    let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
+
+    println!("\nFig 3 / Table D.2 — synthetic VTAB+MD accuracy (%)");
+    print!("{:<22} {:>6}", "dataset", "group");
+    for (name, _) in &preds {
+        print!(" {name:>15}");
+    }
+    println!();
+    let mut group_acc: std::collections::HashMap<(usize, &str), Vec<f64>> = Default::default();
+    for ds in &suite {
+        print!("{:<22} {:>6}", ds.name(), short_group(ds.group));
+        for (k, (_, p)) in preds.iter().enumerate() {
+            let isize = match p {
+                Predictor::Meta(m) => m.image_size,
+                Predictor::Fine(f) => f.image_size,
+            };
+            let s = eval_dataset(&engine, p, ds, &cfg, isize, eval_episodes, seed + 7)?;
+            print!(" {:>15.1}", 100.0 * s.frame_acc.0);
+            group_acc.entry((k, ds.group.label())).or_default().push(s.frame_acc.0);
+            if ds.group == Group::Md {
+            } else {
+                group_acc.entry((k, "VTAB(all)")).or_default().push(s.frame_acc.0);
+            }
+        }
+        println!();
+    }
+    println!("\ngroup means:");
+    for g in ["MD-v2", "VTAB(all)", "natural", "specialized", "structured"] {
+        print!("{:<29}", g);
+        for k in 0..preds.len() {
+            let acc = group_acc.get(&(k, g)).map(|v| 100.0 * crate::util::mean(v)).unwrap_or(f64::NAN);
+            print!(" {acc:>15.1}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// E3 — Table 2 / D.4–D.6: accuracy vs |H|.
+pub fn table2_hsweep(args: &mut Args) -> Result<()> {
+    let train_episodes: usize = args.get("train-episodes", 40)?;
+    let eval_episodes: usize = args.get("eval-episodes", 3)?;
+    let seed: u64 = args.get("seed", 0)?;
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let sweep_cfg = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
+
+    println!("\nTable 2 — accuracy vs |H| (support pool N=80)");
+    println!("{:<16} {:>4} {:>4} {:>10} {:>10}", "model", "px", "|H|", "MD-like", "VTAB-like");
+    let cases: Vec<(&str, usize, usize)> = vec![
+        ("simple_cnaps", 64, 1),
+        ("simple_cnaps", 64, 10),
+        ("simple_cnaps", 64, 40),
+        ("simple_cnaps", 64, 80),
+        ("protonet", 64, 0),
+        ("protonet", 64, 10),
+        ("protonet", 64, 40),
+        ("protonet", 64, 80),
+        ("simple_cnaps", 32, 40),
+        ("simple_cnaps", 32, 80),
+    ];
+    for (model, size, h) in cases {
+        let learner = synth_learner(&engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed)?;
+        let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
+        let mut md_acc = vec![];
+        let mut vt_acc = vec![];
+        for ds in md_suite() {
+            md_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
+        }
+        for ds in vtab_suite() {
+            vt_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
+        }
+        println!(
+            "{:<16} {:>4} {:>4} {:>10.1} {:>10.1}",
+            model, size, h,
+            100.0 * crate::util::mean(&md_acc),
+            100.0 * crate::util::mean(&vt_acc)
+        );
+    }
+    Ok(())
+}
+
+/// E5 — Table D.3: LITE vs small-task vs small-image ablation.
+pub fn d3_ablation(args: &mut Args) -> Result<()> {
+    let train_episodes: usize = args.get("train-episodes", 40)?;
+    let eval_episodes: usize = args.get("eval-episodes", 3)?;
+    let seed: u64 = args.get("seed", 0)?;
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+
+    // (no LITE, small image, large task) / (no LITE, large image, small
+    // task) / (LITE, large image, large task) — D.3's three columns.
+    let large_task = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
+    let small_task = EpisodeConfig { way_max: 5, shot_min: 1, shot_max: 6, n_support_max: 24, query_per_class: 1 };
+    let cases: Vec<(&str, usize, Option<usize>, EpisodeConfig)> = vec![
+        ("noLITE-smallimg-largetask", 32, Some(80), large_task),
+        ("noLITE-largeimg-smalltask", 64, Some(80), small_task),
+        ("LITE-largeimg-largetask", 64, Some(10), large_task),
+    ];
+    println!("\nTable D.3 — Simple CNAPs ablation");
+    println!("{:<28} {:>10} {:>10}", "config", "MD-like", "VTAB-like");
+    for (label, size, h, ep_cfg) in cases {
+        let learner = synth_learner(&engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed)?;
+        let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
+        let mut md_acc = vec![];
+        let mut vt_acc = vec![];
+        for ds in md_suite() {
+            md_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
+        }
+        for ds in vtab_suite() {
+            vt_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
+        }
+        println!(
+            "{:<28} {:>10.1} {:>10.1}",
+            label,
+            100.0 * crate::util::mean(&md_acc),
+            100.0 * crate::util::mean(&vt_acc)
+        );
+    }
+    Ok(())
+}
+
+fn short_group(g: Group) -> &'static str {
+    match g {
+        Group::Md => "MD",
+        Group::Natural => "nat",
+        Group::Specialized => "spec",
+        Group::Structured => "str",
+    }
+}
+
+fn parse_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|x| Ok(x.trim().parse::<usize>()?))
+        .collect()
+}

@@ -1,0 +1,101 @@
+//! Minimal CLI flag parsing (`--key value` / `--flag`), since the
+//! offline crate set has no clap. Unknown flags are an error so typos
+//! don't silently fall back to defaults.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    consumed: std::collections::HashSet<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                out.flags.insert(key.to_string(), val);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    pub fn get_str(&mut self, key: &str, default: &str) -> String {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&mut self, key: &str) -> bool {
+        self.consumed.insert(key.to_string());
+        self.flags.contains_key(key)
+    }
+
+    /// Call after all gets: error on unconsumed flags (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let mut a = Args::parse(&sv(&["train", "--model", "protonet", "--fast"])).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_str("model", "x"), "protonet");
+        assert!(a.has("fast"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn typed_get_with_default() {
+        let mut a = Args::parse(&sv(&["--episodes", "42"])).unwrap();
+        assert_eq!(a.get("episodes", 7usize).unwrap(), 42);
+        assert_eq!(a.get("seed", 5u64).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = Args::parse(&sv(&["--oops", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Episode -> artifact-tensor assembly: padding, one-hot encoding, and
+//! the LITE H / H-bar split (Algorithm 1 lines 3-6).
+//!
+//! All geometry is STATIC in the artifacts; episodes smaller than the
+//! buffers are padded with all-zero one-hot rows, which the graphs mask
+//! out of every aggregate, and the in-graph N/H scale is computed from
+//! valid counts so padding never biases the estimator (see
+//! python/compile/lite.py).
+
+use anyhow::{bail, Result};
+
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+use crate::runtime::manifest::{ArtifactEntry, Geom, TestGeom};
+use crate::tensor::Tensor;
+
+/// The sampled LITE split for one query batch.
+#[derive(Clone, Debug)]
+pub struct LiteSplit {
+    /// Indices of episode.support back-propagated (<= geometry h).
+    pub bp: Vec<usize>,
+    /// The complement (forward-only).
+    pub nbp: Vec<usize>,
+}
+
+/// Sample the H subset uniformly (Algorithm 1 line 4; distinct indices —
+/// see DESIGN.md §4).
+pub fn sample_split(n_valid: usize, h: usize, rng: &mut Rng) -> LiteSplit {
+    if h == 0 {
+        return LiteSplit { bp: vec![], nbp: (0..n_valid).collect() };
+    }
+    if h >= n_valid {
+        return LiteSplit { bp: (0..n_valid).collect(), nbp: vec![] };
+    }
+    let bp = rng.choose(n_valid, h);
+    let mut in_bp = vec![false; n_valid];
+    for &i in &bp {
+        in_bp[i] = true;
+    }
+    let nbp = (0..n_valid).filter(|&i| !in_bp[i]).collect();
+    LiteSplit { bp, nbp }
+}
+
+fn pixels_per_image(image_size: usize) -> usize {
+    image_size * image_size * 3
+}
+
+/// Gather the images at `idx` into a padded [slots, S, S, 3] tensor and
+/// their labels into a padded one-hot [slots, way] tensor.
+fn gather(
+    episode: &Episode,
+    idx: &[usize],
+    slots: usize,
+    way: usize,
+) -> Result<(Tensor, Tensor)> {
+    if idx.len() > slots {
+        bail!("{} examples for {} slots", idx.len(), slots);
+    }
+    let px = pixels_per_image(episode.image_size);
+    let s = episode.image_size;
+    let mut x = vec![0f32; slots * px];
+    let mut oh = vec![0f32; slots * way];
+    for (slot, &i) in idx.iter().enumerate() {
+        let (img, label) = &episode.support[i];
+        if img.len() != px {
+            bail!("image {} has {} px, want {}", i, img.len(), px);
+        }
+        x[slot * px..(slot + 1) * px].copy_from_slice(img);
+        if *label >= way {
+            bail!("label {} >= way {}", label, way);
+        }
+        oh[slot * way + label] = 1.0;
+    }
+    Ok((
+        Tensor::new(vec![slots, s, s, 3], x)?,
+        Tensor::new(vec![slots, way], oh)?,
+    ))
+}
+
+/// Gather a query slice (by position range into episode.query).
+pub fn gather_query(
+    episode: &Episode,
+    range: std::ops::Range<usize>,
+    slots: usize,
+    way: usize,
+) -> Result<(Tensor, Tensor)> {
+    let px = pixels_per_image(episode.image_size);
+    let s = episode.image_size;
+    let mut x = vec![0f32; slots * px];
+    let mut oh = vec![0f32; slots * way];
+    for (slot, i) in range.enumerate() {
+        let (img, label) = &episode.query[i];
+        x[slot * px..(slot + 1) * px].copy_from_slice(img);
+        oh[slot * way + label] = 1.0;
+    }
+    Ok((
+        Tensor::new(vec![slots, s, s, 3], x)?,
+        Tensor::new(vec![slots, way], oh)?,
+    ))
+}
+
+/// Assemble the data inputs of a LITE train step for one query batch.
+/// Returns tensors in the artifact's data-input order.
+pub fn train_inputs(
+    entry: &ArtifactEntry,
+    geom: &Geom,
+    episode: &Episode,
+    split: &LiteSplit,
+    query_range: std::ops::Range<usize>,
+) -> Result<Vec<Tensor>> {
+    let way = geom.way;
+    if episode.way > way {
+        bail!("episode way {} exceeds geometry way {}", episode.way, way);
+    }
+    let mut out = Vec::new();
+    for spec in &entry.inputs {
+        let t = match spec.name.as_str() {
+            // MAML-style single support buffer.
+            "sup_x" => gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)?.0,
+            "sup_oh" => gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)?.1,
+            "sup_bp_x" => gather(episode, &split.bp, geom.h.max(split.bp.len()), way)?.0,
+            "sup_bp_oh" => gather(episode, &split.bp, geom.h.max(split.bp.len()), way)?.1,
+            "sup_nbp_x" => {
+                let slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
+                gather(episode, &split.nbp, slots, way)?.0
+            }
+            "sup_nbp_oh" => {
+                let slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
+                gather(episode, &split.nbp, slots, way)?.1
+            }
+            "q_x" => gather_query(episode, query_range.clone(), geom.mb, way)?.0,
+            "q_oh" => gather_query(episode, query_range.clone(), geom.mb, way)?.1,
+            other => bail!("unknown train input `{other}` in {}", entry.name),
+        };
+        if t.shape != spec.shape {
+            bail!(
+                "{}: input {} shape {:?} != manifest {:?}",
+                entry.name,
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+fn all_idx(episode: &Episode, cap: usize) -> Vec<usize> {
+    (0..episode.n_support().min(cap)).collect()
+}
+
+/// Assemble the adapt-artifact data inputs: full support, padded.
+pub fn adapt_inputs(tg: &TestGeom, episode: &Episode) -> Result<Vec<Tensor>> {
+    let idx = all_idx(episode, tg.n_support);
+    let (x, oh) = gather(episode, &idx, tg.n_support, tg.way)?;
+    Ok(vec![x, oh])
+}
+
+/// Number of query batches for an episode under batch size `mq`.
+pub fn n_query_batches(episode: &Episode, mq: usize) -> usize {
+    episode.query.len().div_ceil(mq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    fn toy_episode(n: usize, way: usize, q: usize, size: usize, seed: u64) -> Episode {
+        let mut rng = Rng::new(seed);
+        let px = size * size * 3;
+        let mk = |rng: &mut Rng| (0..px).map(|_| rng.uniform()).collect::<Vec<f32>>();
+        Episode {
+            image_size: size,
+            way,
+            support: (0..n).map(|i| (mk(&mut rng), i % way)).collect(),
+            query: (0..q).map(|i| (mk(&mut rng), i % way)).collect(),
+            query_video: vec![usize::MAX; q],
+        }
+    }
+
+    #[test]
+    fn split_partitions_support() {
+        forall("split partitions support", 50, |seed| {
+            let mut rng = Rng::new(seed);
+            let n = 1 + rng.below(60);
+            let h = rng.below(n + 4);
+            let split = sample_split(n, h, &mut rng);
+            let mut all: Vec<usize> = split.bp.iter().chain(&split.nbp).cloned().collect();
+            all.sort_unstable();
+            let want: Vec<usize> = (0..n).collect();
+            if all != want {
+                return Err(format!("n={n} h={h}: not a partition: {all:?}"));
+            }
+            if split.bp.len() != h.min(n) {
+                return Err(format!("bp len {} != {}", split.bp.len(), h.min(n)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_is_uniform() {
+        // Each element should land in bp with probability h/n.
+        let (n, h, trials) = (20usize, 5usize, 4000usize);
+        let mut counts = vec![0usize; n];
+        let mut rng = Rng::new(99);
+        for _ in 0..trials {
+            for i in sample_split(n, h, &mut rng).bp {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * h as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "index {i}: count {c} vs expect {expect}");
+        }
+    }
+
+    #[test]
+    fn gather_pads_with_zero_onehot() {
+        let ep = toy_episode(6, 3, 4, 8, 1);
+        let (x, oh) = gather(&ep, &[0, 1, 2], 5, 4).unwrap();
+        assert_eq!(x.shape, vec![5, 8, 8, 3]);
+        assert_eq!(oh.shape, vec![5, 4]);
+        // Padding rows all-zero.
+        assert!(oh.row(3).iter().all(|&v| v == 0.0));
+        assert!(oh.row(4).iter().all(|&v| v == 0.0));
+        // Valid rows one-hot.
+        assert_eq!(oh.row(0).iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn gather_rejects_out_of_range_labels() {
+        let ep = toy_episode(6, 5, 4, 8, 2);
+        assert!(gather(&ep, &[0, 1, 2, 3, 4, 5], 6, 3).is_err());
+    }
+}

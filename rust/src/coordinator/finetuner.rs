@@ -1,0 +1,146 @@
+//! FineTuner baseline driver: frozen pretrained features + an SGD'd
+//! linear head, trained per task at TEST time (50 steps by default —
+//! the paper's transfer-learning comparison point).
+
+use anyhow::{Context, Result};
+
+use crate::data::task::Episode;
+use crate::params::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+pub struct FineTuner {
+    pub image_size: usize,
+    pub features_artifact: String,
+    pub feat_batch: usize,
+    pub way: usize,
+    pub head_batch: usize,
+    pub steps: usize,
+    pub params: ParamStore,
+    feat_dim: usize,
+}
+
+impl FineTuner {
+    pub fn new(engine: &Engine, image_size: usize, steps: usize) -> Result<Self> {
+        let feats = engine.manifest.find("finetuner", "features", image_size, |_| true)?;
+        let head = engine.manifest.get("finetuner_head_step")?;
+        let way: usize = head.extra.get("way").context("way")?.parse()?;
+        let head_batch: usize = head.extra.get("batch").context("batch")?.parse()?;
+        let feat_batch: usize = feats.extra.get("batch").context("batch")?.parse()?;
+        let feat_dim = head.inputs[0].shape[0]; // w is [D, way]
+        let params = ParamStore::load(&Engine::default_dir(), &engine.manifest, feats)?;
+        Ok(Self {
+            image_size,
+            features_artifact: feats.name.clone(),
+            feat_batch,
+            way,
+            head_batch,
+            steps,
+            params,
+            feat_dim,
+        })
+    }
+
+    pub fn install_backbone(&mut self, pretrained: &ParamStore) -> usize {
+        self.params.overlay(pretrained, "bb.")
+    }
+
+    /// Extract features for a list of images (batched through the frozen
+    /// extractor artifact).
+    fn features(&self, engine: &Engine, images: &[&Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let px = self.image_size * self.image_size * 3;
+        let mut out = Vec::with_capacity(images.len());
+        let mut lo = 0;
+        while lo < images.len() {
+            let hi = (lo + self.feat_batch).min(images.len());
+            let mut buf = vec![0f32; self.feat_batch * px];
+            for (k, img) in images[lo..hi].iter().enumerate() {
+                buf[k * px..(k + 1) * px].copy_from_slice(img);
+            }
+            let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
+            inputs.push(Tensor::new(
+                vec![self.feat_batch, self.image_size, self.image_size, 3],
+                buf,
+            )?);
+            let res = engine.run(&self.features_artifact, &inputs)?;
+            for k in 0..(hi - lo) {
+                out.push(res[0].row(k).to_vec());
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Adapt to an episode (feature extraction + `steps` SGD steps on the
+    /// linear head) and predict all query labels.
+    pub fn predict_episode(&self, engine: &Engine, episode: &Episode) -> Result<Vec<usize>> {
+        let d = self.feat_dim;
+        let way = self.way;
+        // Class mask from support labels.
+        let mut class_mask = vec![0f32; way];
+        for (_, y) in &episode.support {
+            class_mask[*y] = 1.0;
+        }
+        let mask_t = Tensor::new(vec![way], class_mask)?;
+        // Head training. Faithful to the paper's FineTuner protocol
+        // [28]: each of the 50 SGD steps re-runs the frozen extractor
+        // forward on its support mini-batch (no feature caching) — this
+        // recompute is exactly why Table 1 charges the FineTuner ~2
+        // orders of magnitude more adaptation MACs (and wall-clock)
+        // than the single-forward meta-learners.
+        let mut w = Tensor::zeros(&[d, way]);
+        let mut b = Tensor::zeros(&[way]);
+        let n = episode.support.len();
+        for step in 0..self.steps {
+            // Cycle mini-batches deterministically.
+            let bsz = self.head_batch.min(n);
+            let idx: Vec<usize> = (0..bsz).map(|k| (step * bsz + k) % n).collect();
+            let imgs: Vec<&Vec<f32>> = idx.iter().map(|&i| &episode.support[i].0).collect();
+            let feats = self.features(engine, &imgs)?;
+            let mut feats_buf = vec![0f32; self.head_batch * d];
+            let mut oh_buf = vec![0f32; self.head_batch * way];
+            for (k, (&i, f)) in idx.iter().zip(&feats).enumerate() {
+                feats_buf[k * d..(k + 1) * d].copy_from_slice(f);
+                oh_buf[k * way + episode.support[i].1] = 1.0;
+            }
+            let out = engine.run(
+                "finetuner_head_step",
+                &[
+                    w.clone(),
+                    b.clone(),
+                    Tensor::new(vec![self.head_batch, d], feats_buf)?,
+                    Tensor::new(vec![self.head_batch, way], oh_buf)?,
+                    mask_t.clone(),
+                ],
+            )?;
+            w = out[1].clone();
+            b = out[2].clone();
+        }
+        // Predict queries.
+        let q_imgs: Vec<&Vec<f32>> = episode.query.iter().map(|(x, _)| x).collect();
+        let q_feats = self.features(engine, &q_imgs)?;
+        let mut preds = Vec::with_capacity(q_feats.len());
+        let mut lo = 0;
+        while lo < q_feats.len() {
+            let hi = (lo + self.head_batch).min(q_feats.len());
+            let mut buf = vec![0f32; self.head_batch * d];
+            for (k, f) in q_feats[lo..hi].iter().enumerate() {
+                buf[k * d..(k + 1) * d].copy_from_slice(f);
+            }
+            let out = engine.run(
+                "finetuner_head_predict",
+                &[
+                    w.clone(),
+                    b.clone(),
+                    Tensor::new(vec![self.head_batch, d], buf)?,
+                    mask_t.clone(),
+                ],
+            )?;
+            for k in 0..(hi - lo) {
+                preds.push(out[0].row_argmax(k));
+            }
+            lo = hi;
+        }
+        Ok(preds)
+    }
+}

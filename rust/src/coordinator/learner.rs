@@ -1,0 +1,212 @@
+//! MetaLearner: one meta-learning model wired to its train / adapt /
+//! classify artifacts with its parameter store.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batch;
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+use crate::params::ParamStore;
+use crate::runtime::{Engine, Geom, TestGeom};
+use crate::tensor::Tensor;
+
+/// Per-episode training statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub acc: f32,
+    pub query_batches: usize,
+}
+
+/// Task-adapted state: the adapt artifact's outputs, keyed for the
+/// classify artifact's `state.*` inputs.
+#[derive(Clone, Debug)]
+pub struct TaskState {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+pub struct MetaLearner {
+    pub model: String,
+    pub image_size: usize,
+    pub train_artifact: String,
+    pub train_geom: Geom,
+    pub adapt_artifact: Option<String>,
+    pub classify_artifact: Option<String>,
+    pub test_geom: Option<TestGeom>,
+    pub params: ParamStore,
+}
+
+impl MetaLearner {
+    /// Wire a model from the manifest. `n_test_support` picks among the
+    /// adapt/classify geometries (e.g. 64 for ORBIT, 200 for VTAB-like).
+    pub fn new(
+        engine: &Engine,
+        model: &str,
+        image_size: usize,
+        train_h: Option<usize>,
+        train_n: Option<usize>,
+        n_test_support: usize,
+    ) -> Result<Self> {
+        let train = engine.manifest.find(model, "train", image_size, |a| {
+            let g = a.geom.as_ref().unwrap();
+            train_h.map_or(true, |h| g.h == h) && train_n.map_or(true, |n| g.n_support == n)
+        })?;
+        let train_geom = train.geom.clone().context("train artifact missing geom")?;
+        let adapt = engine
+            .manifest
+            .find(model, "adapt", image_size, |a| {
+                a.test_geom.as_ref().unwrap().n_support == n_test_support
+            })
+            .ok();
+        let classify = engine
+            .manifest
+            .find(model, "classify", image_size, |a| {
+                a.test_geom.as_ref().unwrap().n_support == n_test_support
+            })
+            .ok();
+        let params = ParamStore::load(&Engine::default_dir(), &engine.manifest, train)?;
+        Ok(Self {
+            model: model.to_string(),
+            image_size,
+            train_artifact: train.name.clone(),
+            train_geom,
+            adapt_artifact: adapt.map(|a| a.name.clone()),
+            classify_artifact: classify.map(|a| a.name.clone()),
+            test_geom: adapt.map(|a| a.test_geom.clone().unwrap()),
+            params,
+        })
+    }
+
+    /// Overlay pretrained backbone tensors (frozen extractor protocol).
+    pub fn install_backbone(&mut self, pretrained: &ParamStore) -> usize {
+        self.params.overlay(pretrained, "bb.")
+    }
+
+    /// Run Algorithm 1 on one episode: loop over query batches, sample a
+    /// fresh H subset per batch, execute the LITE train step, and
+    /// accumulate gradients. Returns (stats, task gradients in learnable
+    /// order, averaged over query batches).
+    pub fn train_episode(
+        &self,
+        engine: &Engine,
+        episode: &Episode,
+        rng: &mut Rng,
+    ) -> Result<(TrainStats, Vec<Tensor>)> {
+        let g = &self.train_geom;
+        if episode.n_support() == 0 || episode.query.is_empty() {
+            bail!("empty episode");
+        }
+        let n_valid = episode.n_support().min(g.n_support);
+        let n_batches = batch::n_query_batches(episode, g.mb);
+        let mut grads: Option<Vec<Tensor>> = None;
+        let mut stats = TrainStats::default();
+        for b in 0..n_batches {
+            let lo = b * g.mb;
+            let hi = (lo + g.mb).min(episode.query.len());
+            // Fresh H subset per query batch (Algorithm 1 line 4).
+            let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
+            let data = batch::train_inputs(
+                engine.entry(&self.train_artifact)?,
+                g,
+                episode,
+                &split,
+                lo..hi,
+            )?;
+            let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
+            inputs.extend(data);
+            let out = engine.run(&self.train_artifact, &inputs)?;
+            stats.loss += out[0].item()?;
+            stats.acc += out[1].item()?;
+            stats.query_batches += 1;
+            let batch_grads = &out[2..];
+            match &mut grads {
+                None => grads = Some(batch_grads.to_vec()),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(batch_grads) {
+                        for i in 0..a.data.len() {
+                            a.data[i] += g.data[i];
+                        }
+                    }
+                }
+            }
+        }
+        let mut grads = grads.unwrap();
+        let inv = 1.0 / stats.query_batches as f32;
+        for t in &mut grads {
+            for v in &mut t.data {
+                *v *= inv;
+            }
+        }
+        stats.loss *= inv;
+        stats.acc *= inv;
+        Ok((stats, grads))
+    }
+
+    /// Single forward pass over the support set -> task state (the
+    /// meta-learners' cheap test-time adaptation).
+    pub fn adapt(&self, engine: &Engine, episode: &Episode) -> Result<TaskState> {
+        let name = self
+            .adapt_artifact
+            .as_ref()
+            .context("model has no adapt artifact")?;
+        let entry = engine.entry(name)?;
+        let tg = entry.test_geom.clone().context("adapt missing test geom")?;
+        let data = batch::adapt_inputs(&tg, episode)?;
+        let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
+        inputs.extend(data);
+        let out = engine.run(name, &inputs)?;
+        Ok(TaskState {
+            names: entry.outputs.iter().map(|o| o.name.clone()).collect(),
+            tensors: out,
+        })
+    }
+
+    /// Classify one query batch against an adapted state; returns logits
+    /// rows for the `n` real queries in the batch.
+    pub fn classify(
+        &self,
+        engine: &Engine,
+        state: &TaskState,
+        episode: &Episode,
+        range: std::ops::Range<usize>,
+    ) -> Result<Tensor> {
+        let name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let entry = engine.entry(name)?;
+        let tg = entry.test_geom.clone().context("classify missing test geom")?;
+        let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
+        for spec in &entry.inputs {
+            if let Some(pos) = state.names.iter().position(|n| n == &spec.name) {
+                inputs.push(state.tensors[pos].clone());
+            } else if spec.name == "q_x" {
+                let (qx, _) = batch::gather_query(episode, range.clone(), tg.mq, tg.way)?;
+                inputs.push(qx);
+            } else {
+                bail!("{name}: unresolvable input {}", spec.name);
+            }
+        }
+        let out = engine.run(name, &inputs)?;
+        Ok(out[0].clone())
+    }
+
+    /// Full evaluation of one episode: adapt once, classify all query
+    /// batches; returns predicted labels per query element.
+    pub fn predict_episode(&self, engine: &Engine, episode: &Episode) -> Result<Vec<usize>> {
+        let state = self.adapt(engine, episode)?;
+        let tg = self.test_geom.clone().context("no test geom")?;
+        let mut preds = Vec::with_capacity(episode.query.len());
+        let mut lo = 0;
+        while lo < episode.query.len() {
+            let hi = (lo + tg.mq).min(episode.query.len());
+            let logits = self.classify(engine, &state, episode, lo..hi)?;
+            for i in 0..(hi - lo) {
+                preds.push(logits.row_argmax(i));
+            }
+            lo = hi;
+        }
+        Ok(preds)
+    }
+}

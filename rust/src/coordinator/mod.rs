@@ -1,0 +1,16 @@
+//! The paper's system contribution, as a coordinator: LITE episodic
+//! training (Algorithm 1 — H-subset sampling, query mini-batching,
+//! gradient accumulation), model wiring, and the FineTuner baseline's
+//! test-time adaptation driver.
+
+pub mod batch;
+pub mod finetuner;
+pub mod learner;
+pub mod trainer;
+
+pub use batch::{sample_split, LiteSplit};
+pub use finetuner::FineTuner;
+pub use learner::{MetaLearner, TaskState, TrainStats};
+pub use trainer::{
+    meta_train, meta_train_with, pretrain_backbone, pretrained_backbone, TrainConfig, TrainLog,
+};

@@ -1,0 +1,243 @@
+//! Meta-training and backbone-pretraining loops.
+//!
+//! Meta-training implements the paper's protocol: one episode per task,
+//! gradients accumulated over `accum_period` tasks (VTAB+MD: 16) before
+//! each Adam step. Episode generation runs on a producer thread with a
+//! bounded channel so image synthesis overlaps PJRT execution
+//! (backpressure keeps memory flat).
+
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::learner::MetaLearner;
+use crate::data::registry::Dataset;
+use crate::data::rng::Rng;
+use crate::data::task::{sample_episode, Episode, EpisodeConfig};
+use crate::data::PretrainCorpus;
+use crate::optim::{Adam, GradAccum};
+use crate::params::ParamStore;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub episodes: usize,
+    pub accum_period: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+    pub episode_cfg: EpisodeConfig,
+    /// Every `validate_every` episodes, score `validate_episodes`
+    /// held-out episodes and keep the best-accuracy parameters (the
+    /// paper's model-selection protocol: "the model with the best frame
+    /// accuracy on a held-out validation set"). 0 disables validation.
+    pub validate_every: usize,
+    pub validate_episodes: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            episodes: 200,
+            accum_period: 8,
+            lr: 1e-3,
+            seed: 0,
+            log_every: 20,
+            episode_cfg: EpisodeConfig::train_default(),
+            validate_every: 0,
+            validate_episodes: 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Meta-train a learner episodically over a dataset suite; returns the
+/// per-episode loss curve.
+pub fn meta_train(
+    engine: &Engine,
+    learner: &mut MetaLearner,
+    datasets: &[Dataset],
+    cfg: &TrainConfig,
+) -> Result<Vec<TrainLog>> {
+    let datasets: Arc<Vec<Dataset>> = Arc::new(datasets.to_vec());
+    let ep_cfg = cfg.episode_cfg;
+    let image_size = learner.image_size;
+    meta_train_with(engine, learner, cfg, move |grng| {
+        let d = &datasets[grng.below(datasets.len())];
+        sample_episode(d, &ep_cfg, grng, image_size)
+    })
+}
+
+/// Meta-train from an arbitrary episode source (ORBIT user tasks, custom
+/// suites, ...). Episode synthesis runs on a producer thread behind a
+/// bounded channel so it overlaps PJRT execution with backpressure.
+pub fn meta_train_with(
+    engine: &Engine,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    mut make_episode: impl FnMut(&mut Rng) -> Episode + Send + 'static,
+) -> Result<Vec<TrainLog>> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut adam = Adam::new(cfg.lr);
+    let mut accum = GradAccum::new(cfg.accum_period);
+    let mut logs = Vec::new();
+
+    // The producer generates train episodes, plus (interleaved, flagged)
+    // validation episodes when validation is enabled — both streams stay
+    // deterministic per seed.
+    let (tx, rx) = sync_channel::<Episode>(4);
+    let gen_seed = cfg.seed ^ 0xE915_0DE5;
+    let n_episodes = cfg.episodes;
+    let val_every = cfg.validate_every;
+    let val_eps = cfg.validate_episodes;
+    let producer = std::thread::spawn(move || {
+        let mut grng = Rng::new(gen_seed);
+        let mut vrng = Rng::new(gen_seed ^ 0x5A11_DA7E);
+        for step in 0..n_episodes {
+            let ep = make_episode(&mut grng);
+            if tx.send(ep).is_err() {
+                return; // consumer dropped (error path)
+            }
+            if val_every > 0 && (step + 1) % val_every == 0 {
+                // Validation episodes from an independent stream.
+                for _ in 0..val_eps {
+                    if tx.send(make_episode(&mut vrng)).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+    });
+
+    let mut best: Option<(f64, crate::params::ParamStore)> = None;
+    for step in 0..cfg.episodes {
+        let episode = rx.recv().context("episode producer terminated early")?;
+        let (stats, grads) = learner.train_episode(engine, &episode, &mut rng)?;
+        if let Some(avg) = accum.push(&grads)? {
+            adam.step(&mut learner.params, &avg)?;
+        }
+        logs.push(TrainLog { step, loss: stats.loss, acc: stats.acc });
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            let recent: Vec<f64> = logs
+                .iter()
+                .rev()
+                .take(cfg.log_every)
+                .map(|l| l.loss as f64)
+                .collect();
+            eprintln!(
+                "[meta-train {}] step {step}/{} loss {:.4} acc {:.3}",
+                learner.model,
+                cfg.episodes,
+                crate::util::mean(&recent),
+                stats.acc
+            );
+        }
+        if val_every > 0 && (step + 1) % val_every == 0 {
+            // Score the validation episodes with the current parameters
+            // (adapt + classify, no gradients).
+            let mut accs = Vec::with_capacity(val_eps);
+            for _ in 0..val_eps {
+                let vep = rx.recv().context("validation episode missing")?;
+                let preds = learner.predict_episode(engine, &vep)?;
+                accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
+            }
+            let va = crate::util::mean(&accs);
+            if best.as_ref().map_or(true, |(b, _)| va > *b) {
+                best = Some((va, learner.params.clone()));
+            }
+            eprintln!(
+                "[meta-train {}] step {step}: validation acc {va:.3}{}",
+                learner.model,
+                if best.as_ref().map(|(b, _)| *b) == Some(va) { " (best)" } else { "" }
+            );
+        }
+    }
+    // Paper protocol: report/keep the best-validation model.
+    if let Some((_, params)) = best {
+        learner.params = params;
+    }
+    producer.join().ok();
+    Ok(logs)
+}
+
+/// Supervised pretraining of the shared backbone (ImageNet stand-in).
+/// Returns the trained ParamStore (contains `bb.*` + the throwaway
+/// classifier head) and the loss curve.
+pub fn pretrain_backbone(
+    engine: &Engine,
+    image_size: usize,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ParamStore, Vec<TrainLog>)> {
+    let entry = engine
+        .manifest
+        .find("pretrain", "pretrain_step", image_size, |_| true)?;
+    let name = entry.name.clone();
+    let classes: usize = entry.extra.get("classes").context("classes")?.parse()?;
+    let batch: usize = entry.extra.get("batch").context("batch")?.parse()?;
+    let mut params = ParamStore::load(&Engine::default_dir(), &engine.manifest, entry)?;
+    let corpus = PretrainCorpus::new();
+    anyhow::ensure!(
+        corpus.n_classes == classes,
+        "corpus classes {} != artifact classes {}",
+        corpus.n_classes,
+        classes
+    );
+    let mut rng = Rng::new(seed);
+    let mut adam = Adam::new(lr);
+    let px = image_size * image_size * 3;
+    let mut logs = Vec::new();
+    for step in 0..steps {
+        let mut x = vec![0f32; batch * px];
+        let mut oh = vec![0f32; batch * classes];
+        for k in 0..batch {
+            let c = rng.below(classes);
+            let im = corpus.sample(c, &mut rng, image_size);
+            x[k * px..(k + 1) * px].copy_from_slice(&im.data);
+            oh[k * classes + c] = 1.0;
+        }
+        let mut inputs: Vec<Tensor> = params.tensors().to_vec();
+        inputs.push(Tensor::new(vec![batch, image_size, image_size, 3], x)?);
+        inputs.push(Tensor::new(vec![batch, classes], oh)?);
+        let out = engine.run(&name, &inputs)?;
+        let (loss, acc) = (out[0].item()?, out[1].item()?);
+        adam.step(&mut params, &out[2..])?;
+        logs.push(TrainLog { step, loss, acc });
+        if step % 20 == 0 {
+            eprintln!("[pretrain {image_size}px] step {step}/{steps} loss {loss:.4} acc {acc:.3}");
+        }
+    }
+    Ok((params, logs))
+}
+
+/// Load a cached pretrained backbone checkpoint, or pretrain + cache one.
+pub fn pretrained_backbone(
+    engine: &Engine,
+    image_size: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<ParamStore> {
+    let dir = Engine::default_dir();
+    let ckpt = dir.join(format!("backbone_{image_size}.ckpt"));
+    let entry = engine
+        .manifest
+        .find("pretrain", "pretrain_step", image_size, |_| true)?;
+    let mut params = ParamStore::load(&dir, &engine.manifest, entry)?;
+    if ckpt.exists() {
+        let n = params.restore(&ckpt)?;
+        anyhow::ensure!(n > 0, "checkpoint {} restored nothing", ckpt.display());
+        return Ok(params);
+    }
+    let (trained, _) = pretrain_backbone(engine, image_size, steps, 1e-3, seed)?;
+    trained.save(&ckpt)?;
+    Ok(trained)
+}

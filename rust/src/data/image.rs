@@ -1,0 +1,224 @@
+//! Procedural image canvas: the drawing substrate every synthetic
+//! dataset generator builds on. Images are HWC row-major f32 in [0, 1],
+//! matching the layout the AOT graphs expect.
+
+use crate::data::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub size: usize,
+    /// size * size * 3, HWC row-major.
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(size: usize) -> Self {
+        Self { size, data: vec![0.0; size * size * 3] }
+    }
+
+    pub fn filled(size: usize, rgb: [f32; 3]) -> Self {
+        let mut im = Self::new(size);
+        for px in im.data.chunks_exact_mut(3) {
+            px.copy_from_slice(&rgb);
+        }
+        im
+    }
+
+    #[inline]
+    pub fn px_mut(&mut self, x: usize, y: usize) -> &mut [f32] {
+        let i = (y * self.size + x) * 3;
+        &mut self.data[i..i + 3]
+    }
+
+    #[inline]
+    pub fn px(&self, x: usize, y: usize) -> &[f32] {
+        let i = (y * self.size + x) * 3;
+        &self.data[i..i + 3]
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, rgb: [f32; 3]) {
+        self.px_mut(x, y).copy_from_slice(&rgb);
+    }
+
+    /// Alpha-blend a colour onto a pixel.
+    pub fn blend(&mut self, x: usize, y: usize, rgb: [f32; 3], alpha: f32) {
+        let p = self.px_mut(x, y);
+        for c in 0..3 {
+            p[c] = p[c] * (1.0 - alpha) + rgb[c] * alpha;
+        }
+    }
+
+    /// Filled axis-aligned rectangle in normalized [0,1] coords.
+    pub fn rect(&mut self, cx: f32, cy: f32, w: f32, h: f32, rgb: [f32; 3]) {
+        let s = self.size as f32;
+        let x0 = ((cx - w / 2.0) * s).max(0.0) as usize;
+        let x1 = (((cx + w / 2.0) * s) as usize).min(self.size.saturating_sub(1));
+        let y0 = ((cy - h / 2.0) * s).max(0.0) as usize;
+        let y1 = (((cy + h / 2.0) * s) as usize).min(self.size.saturating_sub(1));
+        for y in y0..=y1.min(self.size - 1) {
+            for x in x0..=x1.min(self.size - 1) {
+                self.set(x, y, rgb);
+            }
+        }
+    }
+
+    /// Filled circle (anti-aliased edge) in normalized coords.
+    pub fn circle(&mut self, cx: f32, cy: f32, r: f32, rgb: [f32; 3]) {
+        let s = self.size as f32;
+        let (pcx, pcy, pr) = (cx * s, cy * s, r * s);
+        let x0 = (pcx - pr - 1.0).max(0.0) as usize;
+        let x1 = ((pcx + pr + 1.0) as usize).min(self.size - 1);
+        let y0 = (pcy - pr - 1.0).max(0.0) as usize;
+        let y1 = ((pcy + pr + 1.0) as usize).min(self.size - 1);
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let d = ((x as f32 + 0.5 - pcx).powi(2) + (y as f32 + 0.5 - pcy).powi(2)).sqrt();
+                let a = (pr - d + 0.5).clamp(0.0, 1.0);
+                if a > 0.0 {
+                    self.blend(x, y, rgb, a);
+                }
+            }
+        }
+    }
+
+    /// Filled triangle pointing `angle` radians from up, inscribed in
+    /// radius `r`, normalized coords.
+    pub fn triangle(&mut self, cx: f32, cy: f32, r: f32, angle: f32, rgb: [f32; 3]) {
+        let s = self.size as f32;
+        let mut vx = [0f32; 3];
+        let mut vy = [0f32; 3];
+        for k in 0..3 {
+            let a = angle + k as f32 * 2.0 * std::f32::consts::PI / 3.0;
+            vx[k] = (cx + r * a.sin()) * s;
+            vy[k] = (cy - r * a.cos()) * s;
+        }
+        let x0 = vx.iter().cloned().fold(f32::MAX, f32::min).max(0.0) as usize;
+        let x1 = (vx.iter().cloned().fold(0.0, f32::max) as usize).min(self.size - 1);
+        let y0 = vy.iter().cloned().fold(f32::MAX, f32::min).max(0.0) as usize;
+        let y1 = (vy.iter().cloned().fold(0.0, f32::max) as usize).min(self.size - 1);
+        let edge = |ax: f32, ay: f32, bx: f32, by: f32, px: f32, py: f32| {
+            (bx - ax) * (py - ay) - (by - ay) * (px - ax)
+        };
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
+                let d0 = edge(vx[0], vy[0], vx[1], vy[1], px, py);
+                let d1 = edge(vx[1], vy[1], vx[2], vy[2], px, py);
+                let d2 = edge(vx[2], vy[2], vx[0], vy[0], px, py);
+                let inside = (d0 >= 0.0 && d1 >= 0.0 && d2 >= 0.0)
+                    || (d0 <= 0.0 && d1 <= 0.0 && d2 <= 0.0);
+                if inside {
+                    self.set(x, y, rgb);
+                }
+            }
+        }
+    }
+
+    /// Thick line segment in normalized coords (glyph strokes).
+    pub fn stroke(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, w: f32, rgb: [f32; 3]) {
+        let s = self.size as f32;
+        let (ax, ay, bx, by) = (x0 * s, y0 * s, x1 * s, y1 * s);
+        let pw = (w * s).max(0.75);
+        let minx = (ax.min(bx) - pw - 1.0).max(0.0) as usize;
+        let maxx = ((ax.max(bx) + pw + 1.0) as usize).min(self.size - 1);
+        let miny = (ay.min(by) - pw - 1.0).max(0.0) as usize;
+        let maxy = ((ay.max(by) + pw + 1.0) as usize).min(self.size - 1);
+        let (dx, dy) = (bx - ax, by - ay);
+        let len2 = (dx * dx + dy * dy).max(1e-6);
+        for y in miny..=maxy {
+            for x in minx..=maxx {
+                let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
+                let t = ((px - ax) * dx + (py - ay) * dy) / len2;
+                let t = t.clamp(0.0, 1.0);
+                let (qx, qy) = (ax + t * dx, ay + t * dy);
+                let d = ((px - qx).powi(2) + (py - qy).powi(2)).sqrt();
+                let a = (pw / 2.0 - d + 0.5).clamp(0.0, 1.0);
+                if a > 0.0 {
+                    self.blend(x, y, rgb, a);
+                }
+            }
+        }
+    }
+
+    /// Additive per-pixel gaussian noise, clamped to [0,1].
+    pub fn add_noise(&mut self, rng: &mut Rng, sigma: f32) {
+        for v in &mut self.data {
+            *v = (*v + sigma * rng.normal()).clamp(0.0, 1.0);
+        }
+    }
+
+    /// Sinusoidal grating overlaid with weight `amp`; `freq` in cycles
+    /// per image, `theta` the orientation.
+    pub fn grating(&mut self, freq: f32, theta: f32, amp: f32, rgb: [f32; 3]) {
+        let s = self.size as f32;
+        let (ct, st) = (theta.cos(), theta.sin());
+        for y in 0..self.size {
+            for x in 0..self.size {
+                let u = (x as f32 / s) * ct + (y as f32 / s) * st;
+                let v = 0.5 + 0.5 * (2.0 * std::f32::consts::PI * freq * u).sin();
+                self.blend(x, y, rgb, amp * v);
+            }
+        }
+    }
+
+    /// Nearest-neighbour upsample from a smaller canvas — models
+    /// natively-small datasets (Omniglot/QuickDraw analogues) where large
+    /// input images carry no extra information.
+    pub fn upsample_from(src: &Image, size: usize) -> Image {
+        let mut out = Image::new(size);
+        for y in 0..size {
+            for x in 0..size {
+                let sx = (x * src.size / size).min(src.size - 1);
+                let sy = (y * src.size / size).min(src.size - 1);
+                let p = src.px(sx, sy);
+                out.set(x, y, [p[0], p[1], p[2]]);
+            }
+        }
+        out
+    }
+
+    /// 3x3 box blur (cheap camera defocus for ORBIT frames).
+    pub fn box_blur(&self) -> Image {
+        let s = self.size;
+        let mut out = Image::new(s);
+        for y in 0..s {
+            for x in 0..s {
+                let mut acc = [0f32; 3];
+                let mut n = 0f32;
+                for dy in -1i32..=1 {
+                    for dx in -1i32..=1 {
+                        let nx = x as i32 + dx;
+                        let ny = y as i32 + dy;
+                        if nx >= 0 && ny >= 0 && (nx as usize) < s && (ny as usize) < s {
+                            let p = self.px(nx as usize, ny as usize);
+                            for c in 0..3 {
+                                acc[c] += p[c];
+                            }
+                            n += 1.0;
+                        }
+                    }
+                }
+                out.set(x, y, [acc[0] / n, acc[1] / n, acc[2] / n]);
+            }
+        }
+        out
+    }
+}
+
+/// HSV -> RGB helper for class-conditioned palettes.
+pub fn hsv(h: f32, s: f32, v: f32) -> [f32; 3] {
+    let h = (h.rem_euclid(1.0)) * 6.0;
+    let i = h.floor();
+    let f = h - i;
+    let p = v * (1.0 - s);
+    let q = v * (1.0 - s * f);
+    let t = v * (1.0 - s * (1.0 - f));
+    match i as i32 % 6 {
+        0 => [v, t, p],
+        1 => [q, v, p],
+        2 => [p, v, t],
+        3 => [p, q, v],
+        4 => [t, p, v],
+        _ => [v, p, q],
+    }
+}

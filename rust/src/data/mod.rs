@@ -1,0 +1,16 @@
+//! Data substrates: deterministic RNG, procedural image generators, the
+//! synthetic VTAB+MD registry, the ORBIT simulator, and episodic task
+//! sampling. Everything is pure-rust and reproducible from a seed.
+
+pub mod image;
+pub mod orbit;
+pub mod registry;
+pub mod rng;
+pub mod synth;
+#[cfg(test)]
+mod synth_tests;
+pub mod task;
+
+pub use registry::{md_suite, vtab_suite, Dataset, Group, PretrainCorpus};
+pub use rng::Rng;
+pub use task::{sample_episode, Episode, EpisodeConfig};

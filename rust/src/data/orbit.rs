@@ -1,0 +1,209 @@
+//! ORBIT benchmark simulator (experiment E1, Table 1 substitute).
+//!
+//! Mirrors the real benchmark's *structure* (DESIGN.md §3): disjoint
+//! users, each with a small library of personal objects; per-object
+//! support VIDEOS recorded "clean" (single object on a clear surface)
+//! and query videos in clean or CLUTTER mode (the object amid distractor
+//! objects from the same user's home). Video frames share a smooth
+//! camera path with jitter + occasional defocus, giving the intra-video
+//! redundancy the paper notes (Appendix D.3).
+
+use crate::data::image::{hsv, Image};
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ObjectSpec {
+    pub kind: usize, // 0 circle, 1 square, 2 triangle
+    pub hue: f32,
+    pub size: f32,
+    pub ring: bool, // secondary marking
+}
+
+#[derive(Clone, Debug)]
+pub struct User {
+    pub objects: Vec<ObjectSpec>,
+    pub room_hue: f32,
+}
+
+pub struct OrbitSim {
+    pub users: Vec<User>,
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum VideoMode {
+    Clean,
+    Clutter,
+}
+
+impl OrbitSim {
+    /// Deterministic world: `n_users` users with 4..=8 objects each.
+    pub fn new(seed: u64, n_users: usize) -> Self {
+        let root = Rng::new(seed);
+        let users = (0..n_users)
+            .map(|u| {
+                let mut r = root.split(u as u64 + 1);
+                let n_obj = 4 + r.below(5);
+                let objects = (0..n_obj)
+                    .map(|_| ObjectSpec {
+                        kind: r.below(3),
+                        hue: r.uniform(),
+                        size: r.range(0.10, 0.2),
+                        ring: r.uniform() < 0.5,
+                    })
+                    .collect();
+                User { objects, room_hue: r.uniform() }
+            })
+            .collect();
+        Self { users }
+    }
+
+    fn draw_object(im: &mut Image, o: &ObjectSpec, cx: f32, cy: f32, scale: f32, ang: f32) {
+        let col = hsv(o.hue, 0.8, 0.95);
+        let r = o.size * scale;
+        match o.kind {
+            0 => im.circle(cx, cy, r, col),
+            1 => im.rect(cx, cy, 1.7 * r, 1.7 * r, col),
+            _ => im.triangle(cx, cy, 1.4 * r, ang, col),
+        }
+        if o.ring {
+            im.circle(cx, cy, 0.35 * r, hsv(o.hue + 0.5, 0.9, 0.9));
+        }
+    }
+
+    /// Render one video of `frames` frames of `user`'s object `obj`.
+    /// Clutter mode drops 2–3 distractor objects from the same user's
+    /// library into the scene.
+    pub fn render_video(
+        &self,
+        user: usize,
+        obj: usize,
+        mode: VideoMode,
+        frames: usize,
+        rng: &mut Rng,
+        size: usize,
+    ) -> Vec<Vec<f32>> {
+        let u = &self.users[user];
+        let o = &u.objects[obj];
+        // Smooth camera path.
+        let mut cx = rng.range(0.3, 0.7);
+        let mut cy = rng.range(0.3, 0.7);
+        let mut vx = rng.range(-0.02, 0.02);
+        let mut vy = rng.range(-0.02, 0.02);
+        let scale = rng.range(0.8, 1.25);
+        let blurry = rng.uniform() < 0.25;
+        // Persistent distractor layout for the video.
+        let distractors: Vec<(usize, f32, f32)> = if mode == VideoMode::Clutter {
+            let n = 2 + rng.below(2);
+            (0..n)
+                .map(|_| {
+                    let mut d = rng.below(u.objects.len());
+                    if d == obj {
+                        d = (d + 1) % u.objects.len();
+                    }
+                    (d, rng.range(0.1, 0.9), rng.range(0.1, 0.9))
+                })
+                .collect()
+        } else {
+            vec![]
+        };
+        (0..frames)
+            .map(|_| {
+                let mut im = Image::filled(size, hsv(u.room_hue, 0.2, 0.5));
+                // Surface texture stripes (room context).
+                im.grating(3.0, 0.3, 0.1, hsv(u.room_hue + 0.1, 0.3, 0.7));
+                for &(d, dx, dy) in &distractors {
+                    Self::draw_object(&mut im, &u.objects[d], dx, dy, 0.8, 0.7);
+                }
+                Self::draw_object(&mut im, o, cx, cy, scale, rng.uniform() * 6.28);
+                vx += rng.range(-0.008, 0.008);
+                vy += rng.range(-0.008, 0.008);
+                cx = (cx + vx).clamp(0.15, 0.85);
+                cy = (cy + vy).clamp(0.15, 0.85);
+                im.add_noise(rng, 0.04);
+                let im = if blurry { im.box_blur() } else { im };
+                im.data
+            })
+            .collect()
+    }
+
+    /// Build one personalization episode for a test user: support clips
+    /// from clean videos of ALL their objects; query videos in `mode`.
+    /// `query_video` carries per-frame video ids for video accuracy.
+    pub fn user_episode(
+        &self,
+        user: usize,
+        mode: VideoMode,
+        rng: &mut Rng,
+        size: usize,
+        support_clips_per_obj: usize,
+        query_videos_per_obj: usize,
+        frames_per_video: usize,
+    ) -> Episode {
+        let n_obj = self.users[user].objects.len();
+        let mut support = Vec::new();
+        let mut query = Vec::new();
+        let mut query_video = Vec::new();
+        let mut vid = 0usize;
+        for obj in 0..n_obj {
+            // Support: clips sampled from clean videos (1 frame per clip,
+            // CLIP_LEN=1 scaling of the paper's 8-frame clips).
+            let v = self.render_video(user, obj, VideoMode::Clean, support_clips_per_obj, rng, size);
+            for f in v {
+                support.push((f, obj));
+            }
+            for _ in 0..query_videos_per_obj {
+                let frames = self.render_video(user, obj, mode, frames_per_video, rng, size);
+                for f in frames {
+                    query.push((f, obj));
+                    query_video.push(vid);
+                }
+                vid += 1;
+            }
+        }
+        rng.shuffle(&mut support);
+        Episode { image_size: size, way: n_obj, support, query, query_video }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = OrbitSim::new(5, 4);
+        let b = OrbitSim::new(5, 4);
+        assert_eq!(a.users.len(), b.users.len());
+        for (ua, ub) in a.users.iter().zip(&b.users) {
+            assert_eq!(ua.objects.len(), ub.objects.len());
+            assert_eq!(ua.room_hue, ub.room_hue);
+        }
+    }
+
+    #[test]
+    fn episode_structure() {
+        let sim = OrbitSim::new(1, 3);
+        let mut rng = Rng::new(2);
+        let ep = sim.user_episode(0, VideoMode::Clutter, &mut rng, 32, 3, 2, 4);
+        let n_obj = sim.users[0].objects.len();
+        assert_eq!(ep.way, n_obj);
+        assert_eq!(ep.support.len(), 3 * n_obj);
+        assert_eq!(ep.query.len(), 2 * 4 * n_obj);
+        assert_eq!(ep.query_video.len(), ep.query.len());
+        // Frames of the same video are contiguous and share an id.
+        let mut ids = ep.query_video.clone();
+        ids.dedup();
+        assert_eq!(ids.len(), 2 * n_obj);
+    }
+
+    #[test]
+    fn clutter_differs_from_clean() {
+        let sim = OrbitSim::new(1, 2);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let clean = sim.render_video(0, 0, VideoMode::Clean, 2, &mut r1, 32);
+        let clutter = sim.render_video(0, 0, VideoMode::Clutter, 2, &mut r2, 32);
+        assert_ne!(clean[0], clutter[0]);
+    }
+}

@@ -1,0 +1,132 @@
+//! The synthetic VTAB+MD dataset registry (experiment E2, Fig 3 /
+//! Table D.2 substitute) and the pretraining base corpus.
+//!
+//! Groups mirror the paper's: 8 MD-like datasets, plus VTAB-like
+//! datasets split natural / specialized / structured. Names carry the
+//! analogy to the real benchmark (see DESIGN.md §3).
+
+use std::sync::Arc;
+
+use crate::data::synth::{
+    Blobs, Generator, Glyphs, Gratings, Scenes, ShapeMode, Shapes, Spots, Textures,
+};
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum Group {
+    Md,
+    Natural,
+    Specialized,
+    Structured,
+}
+
+impl Group {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Group::Md => "MD-v2",
+            Group::Natural => "natural",
+            Group::Specialized => "specialized",
+            Group::Structured => "structured",
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Dataset {
+    pub gen: Arc<dyn Generator>,
+    pub group: Group,
+    /// True if the underlying content is natively low-resolution (the
+    /// Omniglot/QuickDraw/dSprites caveat in the paper's results).
+    pub natively_small: bool,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &str {
+        self.gen.name()
+    }
+}
+
+/// The 8 MD-v2-like datasets.
+pub fn md_suite() -> Vec<Dataset> {
+    vec![
+        ds(Glyphs { name: "omniglot-like".into(), classes: 50, strokes: 5, jitter: 0.05 }, Group::Md, true),
+        ds(Gratings { name: "aircraft-like".into(), classes: 20, freq_lo: 9.0, freq_hi: 14.0 }, Group::Md, false),
+        ds(Spots { name: "birds-like".into(), classes: 25 }, Group::Md, false),
+        ds(Textures { name: "dtd-like".into(), classes: 20 }, Group::Md, false),
+        ds(Glyphs { name: "quickdraw-like".into(), classes: 40, strokes: 4, jitter: 0.1 }, Group::Md, true),
+        ds(Spots { name: "fungi-like".into(), classes: 30 }, Group::Md, false),
+        ds(Shapes { name: "trafficsign-like".into(), classes: 16, mode: ShapeMode::Kind }, Group::Md, false),
+        ds(Scenes { name: "mscoco-like".into(), classes: 20 }, Group::Md, false),
+    ]
+}
+
+/// The VTAB-v2-like datasets, grouped natural / specialized / structured.
+pub fn vtab_suite() -> Vec<Dataset> {
+    vec![
+        // natural
+        ds(Blobs { name: "caltech-like".into(), classes: 20, radius: 0.1, n_blobs: 3 }, Group::Natural, false),
+        ds(Blobs { name: "cifar-like".into(), classes: 30, radius: 0.06, n_blobs: 5 }, Group::Natural, false),
+        ds(Spots { name: "flowers-like".into(), classes: 20 }, Group::Natural, false),
+        ds(Gratings { name: "pets-like".into(), classes: 15, freq_lo: 7.0, freq_hi: 12.0 }, Group::Natural, false),
+        ds(Scenes { name: "sun-like".into(), classes: 25 }, Group::Natural, false),
+        // specialized
+        ds(Textures { name: "eurosat-like".into(), classes: 12 }, Group::Specialized, false),
+        ds(Spots { name: "camelyon-like".into(), classes: 10 }, Group::Specialized, false),
+        ds(Gratings { name: "retinopathy-like".into(), classes: 8, freq_lo: 12.0, freq_hi: 18.0 }, Group::Specialized, false),
+        // structured
+        ds(Shapes { name: "clevr-count-like".into(), classes: 8, mode: ShapeMode::Count }, Group::Structured, false),
+        ds(Shapes { name: "clevr-dist-like".into(), classes: 6, mode: ShapeMode::Scale }, Group::Structured, false),
+        ds(Shapes { name: "dsprites-loc-like".into(), classes: 16, mode: ShapeMode::Location }, Group::Structured, true),
+        ds(Shapes { name: "dsprites-ori-like".into(), classes: 12, mode: ShapeMode::Orientation }, Group::Structured, true),
+        ds(Shapes { name: "smallnorb-like".into(), classes: 9, mode: ShapeMode::Orientation }, Group::Structured, false),
+    ]
+}
+
+/// Meta-training datasets (the VTAB+MD protocol trains on the MD train
+/// split; we meta-train on a disjoint class range of the same families).
+pub fn train_suite() -> Vec<Dataset> {
+    md_suite()
+}
+
+/// The supervised pretraining corpus: one flat classification problem
+/// mixing several families (ImageNet stand-in for backbone pretraining).
+pub struct PretrainCorpus {
+    datasets: Vec<Dataset>,
+    pub n_classes: usize,
+}
+
+impl PretrainCorpus {
+    pub fn new() -> Self {
+        let datasets = vec![
+            ds(Blobs { name: "pre-blobs".into(), classes: 5, radius: 0.09, n_blobs: 4 }, Group::Natural, false),
+            ds(Gratings { name: "pre-gratings".into(), classes: 5, freq_lo: 6.0, freq_hi: 12.0 }, Group::Natural, false),
+            ds(Shapes { name: "pre-shapes".into(), classes: 5, mode: ShapeMode::Kind }, Group::Natural, false),
+            ds(Spots { name: "pre-spots".into(), classes: 5 }, Group::Natural, false),
+        ];
+        let n_classes = datasets.iter().map(|d| d.gen.n_classes()).sum();
+        Self { datasets, n_classes }
+    }
+
+    /// Render instance of global class `c` (classes concatenated across
+    /// member families).
+    pub fn sample(&self, c: usize, rng: &mut crate::data::rng::Rng, size: usize) -> crate::data::image::Image {
+        let mut base = 0;
+        for d in &self.datasets {
+            let n = d.gen.n_classes();
+            if c < base + n {
+                return d.gen.sample(c - base, rng, size);
+            }
+            base += n;
+        }
+        panic!("class {c} out of range {}", self.n_classes);
+    }
+}
+
+impl Default for PretrainCorpus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn ds(g: impl Generator + 'static, group: Group, natively_small: bool) -> Dataset {
+    Dataset { gen: Arc::new(g), group, natively_small }
+}

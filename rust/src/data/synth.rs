@@ -1,0 +1,337 @@
+//! Procedural dataset generators: the synthetic VTAB+MD substrate
+//! (DESIGN.md §3 substitution table).
+//!
+//! Each generator defines a *family* of classes; `sample(class, rng,
+//! size)` renders one instance. Resolution sensitivity is engineered per
+//! dataset so the paper's two image-size effects reproduce:
+//!   * fine-detail families (gratings-fine, textures, fungi-like spots)
+//!     are ambiguous at 32px and separable at 64px+;
+//!   * natively-small families (glyphs, quickdraw-like) render on a 16px
+//!     canvas and upsample, so large images add nothing — the paper's
+//!     Omniglot/QuickDraw observation.
+
+use crate::data::image::{hsv, Image};
+use crate::data::rng::Rng;
+
+/// A procedural image dataset.
+pub trait Generator: Send + Sync {
+    fn name(&self) -> &str;
+    fn n_classes(&self) -> usize;
+    /// Render one instance of `class` at `size` px using `rng`.
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image;
+}
+
+// ------------------------------------------------------------- gratings
+/// Oriented sinusoidal gratings; class = orientation bin. `freq_lo/hi`
+/// picks the spatial frequency band: high bands alias at small sizes.
+pub struct Gratings {
+    pub name: String,
+    pub classes: usize,
+    pub freq_lo: f32,
+    pub freq_hi: f32,
+}
+
+impl Generator for Gratings {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let base = hsv(rng.uniform(), 0.2, 0.45);
+        let mut im = Image::filled(size, base);
+        let theta = std::f32::consts::PI * (class as f32 + rng.range(-0.18, 0.18))
+            / self.classes as f32;
+        let freq = rng.range(self.freq_lo, self.freq_hi);
+        let tint = hsv(rng.uniform(), 0.5, 0.9);
+        im.grating(freq, theta, 0.7, tint);
+        im.add_noise(rng, 0.06);
+        im
+    }
+}
+
+// ---------------------------------------------------------------- blobs
+/// Gaussian colour blobs; class = (hue, layout) prototype. Coarse and
+/// easy — a "natural images" stand-in.
+pub struct Blobs {
+    pub name: String,
+    pub classes: usize,
+    /// Blob radius scale; small radii need resolution.
+    pub radius: f32,
+    pub n_blobs: usize,
+}
+
+impl Generator for Blobs {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut proto = Rng::new(0xB10B).split(class as u64);
+        let hue = proto.uniform();
+        let mut im = Image::filled(size, hsv(hue + 0.5, 0.15, 0.35));
+        for _ in 0..self.n_blobs {
+            let (px, py) = (proto.range(0.15, 0.85), proto.range(0.15, 0.85));
+            let cx = (px + rng.range(-0.06, 0.06)).clamp(0.05, 0.95);
+            let cy = (py + rng.range(-0.06, 0.06)).clamp(0.05, 0.95);
+            let r = self.radius * proto.range(0.7, 1.3) * rng.range(0.9, 1.1);
+            let col = hsv(hue + proto.range(-0.08, 0.08), 0.8, 0.95);
+            im.circle(cx, cy, r, col);
+        }
+        im.add_noise(rng, 0.05);
+        im
+    }
+}
+
+// --------------------------------------------------------------- glyphs
+/// Omniglot/QuickDraw analogue: per-class stroke prototype rendered on a
+/// NATIVE_PX canvas then upsampled — large images carry no information.
+pub struct Glyphs {
+    pub name: String,
+    pub classes: usize,
+    pub strokes: usize,
+    pub jitter: f32,
+}
+
+const GLYPH_NATIVE_PX: usize = 16;
+
+impl Generator for Glyphs {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut proto = Rng::new(0x617F).split(class as u64);
+        let mut small = Image::filled(GLYPH_NATIVE_PX, [0.05, 0.05, 0.08]);
+        let mut x = proto.range(0.2, 0.8);
+        let mut y = proto.range(0.2, 0.8);
+        for _ in 0..self.strokes {
+            let nx = (proto.range(0.1, 0.9) + rng.range(-self.jitter, self.jitter))
+                .clamp(0.05, 0.95);
+            let ny = (proto.range(0.1, 0.9) + rng.range(-self.jitter, self.jitter))
+                .clamp(0.05, 0.95);
+            small.stroke(x, y, nx, ny, 0.09, [0.95, 0.95, 0.92]);
+            x = nx;
+            y = ny;
+        }
+        let mut im = Image::upsample_from(&small, size);
+        im.add_noise(rng, 0.03);
+        im
+    }
+}
+
+// -------------------------------------------------------------- textures
+/// Checkerboard-ish micro-textures; class = (cell count, phase) — fine
+/// structure that 32px undersamples.
+pub struct Textures {
+    pub name: String,
+    pub classes: usize,
+}
+
+impl Generator for Textures {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut proto = Rng::new(0x7E47).split(class as u64);
+        let cells = 10.0 + 22.0 * proto.uniform(); // cells per image side
+        let warp = proto.range(0.0, 0.5);
+        let c0 = hsv(proto.uniform(), 0.4, 0.35);
+        let c1 = hsv(proto.uniform(), 0.6, 0.85);
+        let phase = rng.uniform() * 2.0;
+        let mut im = Image::new(size);
+        for yy in 0..size {
+            for xx in 0..size {
+                let u = xx as f32 / size as f32;
+                let v = yy as f32 / size as f32;
+                let w = (cells * (u + warp * (6.0 * v).sin() / cells) + phase).floor()
+                    + (cells * v + phase).floor();
+                let col = if (w as i64) % 2 == 0 { c0 } else { c1 };
+                im.set(xx, yy, col);
+            }
+        }
+        im.add_noise(rng, 0.08);
+        im
+    }
+}
+
+// ---------------------------------------------------------------- shapes
+/// dSprites-like structured families. `mode` picks what the LABEL is —
+/// the paper's structured tasks (position / orientation bins) are where
+/// metric meta-learners underperform (Fig 3 discussion).
+#[derive(Clone, Copy, PartialEq)]
+pub enum ShapeMode {
+    /// class = shape identity (easy, "natural").
+    Kind,
+    /// class = position bin on a grid (dSprites-loc).
+    Location,
+    /// class = orientation bin (dSprites-ori).
+    Orientation,
+    /// class = number of shapes in the scene (CLEVR-count).
+    Count,
+    /// class = object scale bin (CLEVR-dist proxy).
+    Scale,
+}
+
+pub struct Shapes {
+    pub name: String,
+    pub classes: usize,
+    pub mode: ShapeMode,
+}
+
+impl Shapes {
+    fn draw_one(im: &mut Image, kind: usize, cx: f32, cy: f32, r: f32, ang: f32, col: [f32; 3]) {
+        match kind % 3 {
+            0 => im.circle(cx, cy, r, col),
+            1 => im.rect(cx, cy, 1.6 * r, 1.6 * r, col),
+            _ => im.triangle(cx, cy, 1.3 * r, ang, col),
+        }
+    }
+}
+
+impl Generator for Shapes {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut im = Image::filled(size, [0.08, 0.08, 0.1]);
+        let col = hsv(rng.uniform(), 0.7, 0.95);
+        match self.mode {
+            ShapeMode::Kind => {
+                let cx = rng.range(0.25, 0.75);
+                let cy = rng.range(0.25, 0.75);
+                let r = rng.range(0.12, 0.2);
+                Self::draw_one(&mut im, class, cx, cy, r, rng.uniform() * 6.28, col);
+            }
+            ShapeMode::Location => {
+                // Grid of location bins; shape kind/size are nuisance.
+                let g = (self.classes as f32).sqrt().ceil() as usize;
+                let bx = class % g;
+                let by = class / g;
+                let cx = (bx as f32 + 0.5) / g as f32 + rng.range(-0.4, 0.4) / g as f32;
+                let cy = (by as f32 + 0.5) / g as f32 + rng.range(-0.4, 0.4) / g as f32;
+                let r = rng.range(0.05, 0.09);
+                Self::draw_one(&mut im, rng.below(3), cx, cy, r, rng.uniform() * 6.28, col);
+            }
+            ShapeMode::Orientation => {
+                let ang = 2.0 * std::f32::consts::PI
+                    * (class as f32 + rng.range(-0.25, 0.25))
+                    / self.classes as f32;
+                im.triangle(
+                    rng.range(0.4, 0.6),
+                    rng.range(0.4, 0.6),
+                    rng.range(0.18, 0.28),
+                    ang,
+                    col,
+                );
+            }
+            ShapeMode::Count => {
+                for _ in 0..=class {
+                    let cx = rng.range(0.12, 0.88);
+                    let cy = rng.range(0.12, 0.88);
+                    let r = rng.range(0.05, 0.08);
+                    Self::draw_one(&mut im, rng.below(3), cx, cy, r, rng.uniform() * 6.28, hsv(rng.uniform(), 0.7, 0.95));
+                }
+            }
+            ShapeMode::Scale => {
+                let r = 0.04 + 0.30 * (class as f32 + rng.range(0.15, 0.85)) / self.classes as f32;
+                Self::draw_one(&mut im, rng.below(3), 0.5, 0.5, r, rng.uniform() * 6.28, col);
+            }
+        }
+        im.add_noise(rng, 0.04);
+        im
+    }
+}
+
+// ---------------------------------------------------------------- spots
+/// Fungi-like: classes = spot size/density signatures — fine detail that
+/// rewards resolution.
+pub struct Spots {
+    pub name: String,
+    pub classes: usize,
+}
+
+impl Generator for Spots {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut proto = Rng::new(0x5707).split(class as u64);
+        let density = 8 + proto.below(28);
+        let radius = proto.range(0.015, 0.05);
+        let hue = proto.uniform();
+        let mut im = Image::filled(size, hsv(hue, 0.25, 0.3));
+        for _ in 0..density {
+            let cx = rng.range(0.05, 0.95);
+            let cy = rng.range(0.05, 0.95);
+            im.circle(cx, cy, radius * rng.range(0.8, 1.25), hsv(hue + 0.3, 0.7, 0.9));
+        }
+        im.add_noise(rng, 0.05);
+        im
+    }
+}
+
+// --------------------------------------------------------------- scenes
+/// MSCOCO-like multi-object scenes: the class object appears among
+/// distractors; harder at any resolution, rewards context.
+pub struct Scenes {
+    pub name: String,
+    pub classes: usize,
+}
+
+impl Generator for Scenes {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn n_classes(&self) -> usize {
+        self.classes
+    }
+    fn sample(&self, class: usize, rng: &mut Rng, size: usize) -> Image {
+        let mut proto = Rng::new(0x5CEE).split(class as u64);
+        let hue = proto.uniform();
+        let kind = proto.below(3);
+        let mut im = Image::filled(size, hsv(rng.uniform(), 0.15, 0.4));
+        // Distractors from OTHER class prototypes.
+        for _ in 0..3 {
+            let other = rng.below(self.classes.max(2));
+            let mut op = Rng::new(0x5CEE).split(other as u64);
+            let oh = op.uniform();
+            let ok = op.below(3);
+            Shapes::draw_one(
+                &mut im,
+                ok,
+                rng.range(0.1, 0.9),
+                rng.range(0.1, 0.9),
+                rng.range(0.05, 0.1),
+                rng.uniform() * 6.28,
+                hsv(oh, 0.7, 0.8),
+            );
+        }
+        // The labelled object, slightly larger.
+        Shapes::draw_one(
+            &mut im,
+            kind,
+            rng.range(0.2, 0.8),
+            rng.range(0.2, 0.8),
+            rng.range(0.1, 0.16),
+            rng.uniform() * 6.28,
+            hsv(hue, 0.85, 0.95),
+        );
+        im.add_noise(rng, 0.05);
+        im
+    }
+}

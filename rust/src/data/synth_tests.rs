@@ -1,0 +1,167 @@
+//! Property tests for the procedural dataset generators: determinism,
+//! class separation, pixel-range invariants, and the engineered
+//! resolution behaviours the benchmarks rely on (DESIGN.md §3).
+
+use crate::data::registry::{md_suite, vtab_suite};
+use crate::data::rng::Rng;
+use crate::util::forall;
+
+#[test]
+fn all_generators_deterministic_and_in_range() {
+    let mut suites = md_suite();
+    suites.extend(vtab_suite());
+    for ds in &suites {
+        forall(&format!("{} determinism", ds.name()), 6, |seed| {
+            let class = (seed as usize) % ds.gen.n_classes();
+            let a = ds.gen.sample(class, &mut Rng::new(seed), 32);
+            let b = ds.gen.sample(class, &mut Rng::new(seed), 32);
+            if a.data != b.data {
+                return Err("nondeterministic".into());
+            }
+            if a.data.len() != 32 * 32 * 3 {
+                return Err(format!("bad size {}", a.data.len()));
+            }
+            if !a.data.iter().all(|v| (0.0..=1.0).contains(v)) {
+                return Err("pixel out of [0,1]".into());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn classes_are_visually_distinct_on_average() {
+    // Mean inter-class pixel distance must exceed mean intra-class
+    // distance for every family (otherwise the dataset is pure noise).
+    let mut suites = md_suite();
+    suites.extend(vtab_suite());
+    let mut rng = Rng::new(77);
+    for ds in &suites {
+        let c0 = 0usize;
+        let c1 = 1usize.min(ds.gen.n_classes() - 1);
+        if c0 == c1 {
+            continue;
+        }
+        let n = 6;
+        let a: Vec<_> = (0..n).map(|_| ds.gen.sample(c0, &mut rng, 32).data).collect();
+        let b: Vec<_> = (0..n).map(|_| ds.gen.sample(c1, &mut rng, 32).data).collect();
+        let dist = |x: &Vec<f32>, y: &Vec<f32>| -> f64 {
+            x.iter().zip(y).map(|(p, q)| ((p - q) as f64).powi(2)).sum::<f64>()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0.0;
+        let mut nx = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i < j {
+                    intra += dist(&a[i], &a[j]) + dist(&b[i], &b[j]);
+                    ni += 2.0;
+                }
+                inter += dist(&a[i], &b[j]);
+                nx += 1.0;
+            }
+        }
+        assert!(
+            inter / nx > intra / ni * 0.9,
+            "{}: inter {} vs intra {}",
+            ds.name(),
+            inter / nx,
+            intra / ni
+        );
+    }
+}
+
+#[test]
+fn glyphs_are_natively_small() {
+    // The Omniglot/QuickDraw analogue renders at 16px and upsamples:
+    // a 64px sample must be piecewise-constant over 4x4 blocks — large
+    // images genuinely carry no extra information (the paper's caveat).
+    let suite = md_suite();
+    let glyphs = suite.iter().find(|d| d.name() == "omniglot-like").unwrap();
+    let im = glyphs.gen.sample(3, &mut Rng::new(5), 64);
+    // Noise is added after upsampling; compare block structure with a
+    // tolerance above the noise floor but below stroke contrast.
+    let mut max_dev: f32 = 0.0;
+    for by in 0..16 {
+        for bx in 0..16 {
+            let base = im.px(bx * 4, by * 4)[0];
+            for dy in 0..4 {
+                for dx in 0..4 {
+                    let v = im.px(bx * 4 + dx, by * 4 + dy)[0];
+                    max_dev = max_dev.max((v - base).abs());
+                }
+            }
+        }
+    }
+    assert!(max_dev < 0.35, "glyph upsample not block-structured: {max_dev}");
+}
+
+#[test]
+fn fine_gratings_alias_at_small_size() {
+    // aircraft-like (9-14 cycles/image): at 32px adjacent-orientation
+    // classes should be much harder to separate than at 64px. Proxy:
+    // nearest-class-mean classification in pixel space.
+    let suite = md_suite();
+    let ds = suite.iter().find(|d| d.name() == "aircraft-like").unwrap();
+    let acc_at = |size: usize| -> f64 {
+        let mut rng = Rng::new(123);
+        let classes = [2usize, 3, 4];
+        let means: Vec<Vec<f32>> = classes
+            .iter()
+            .map(|&c| {
+                let mut m = vec![0f32; size * size * 3];
+                for _ in 0..8 {
+                    let im = ds.gen.sample(c, &mut rng, size);
+                    for (a, b) in m.iter_mut().zip(&im.data) {
+                        *a += b / 8.0;
+                    }
+                }
+                m
+            })
+            .collect();
+        let mut correct = 0;
+        let mut total = 0;
+        for (k, &c) in classes.iter().enumerate() {
+            for _ in 0..10 {
+                let im = ds.gen.sample(c, &mut rng, size);
+                let best = (0..3)
+                    .min_by(|&i, &j| {
+                        let di: f32 = means[i].iter().zip(&im.data).map(|(a, b)| (a - b) * (a - b)).sum();
+                        let dj: f32 = means[j].iter().zip(&im.data).map(|(a, b)| (a - b) * (a - b)).sum();
+                        di.partial_cmp(&dj).unwrap()
+                    })
+                    .unwrap();
+                if best == k {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        correct as f64 / total as f64
+    };
+    let a32 = acc_at(32);
+    let a64 = acc_at(64);
+    assert!(
+        a64 >= a32,
+        "fine gratings should not get EASIER at low res: 32px {a32} vs 64px {a64}"
+    );
+}
+
+#[test]
+fn pretrain_corpus_covers_all_classes() {
+    let corpus = crate::data::PretrainCorpus::new();
+    assert_eq!(corpus.n_classes, 20);
+    let mut rng = Rng::new(1);
+    for c in 0..corpus.n_classes {
+        let im = corpus.sample(c, &mut rng, 32);
+        assert_eq!(im.data.len(), 32 * 32 * 3);
+    }
+}
+
+#[test]
+#[should_panic]
+fn pretrain_corpus_rejects_out_of_range() {
+    let corpus = crate::data::PretrainCorpus::new();
+    corpus.sample(99, &mut Rng::new(0), 32);
+}

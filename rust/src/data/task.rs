@@ -1,0 +1,123 @@
+//! Episodic task sampling (way/shot protocol with padding + masks).
+
+use crate::data::registry::Dataset;
+use crate::data::rng::Rng;
+
+/// One few-shot episode: raw support/query examples with integer labels
+/// in [0, way). Tensor assembly (padding, one-hot, LITE splits) happens
+/// in the coordinator so the same episode can be replayed under
+/// different H policies.
+#[derive(Clone)]
+pub struct Episode {
+    pub image_size: usize,
+    /// Number of classes actually present.
+    pub way: usize,
+    pub support: Vec<(Vec<f32>, usize)>,
+    pub query: Vec<(Vec<f32>, usize)>,
+    /// Video id per query element (ORBIT video accuracy); usize::MAX for
+    /// non-video episodes.
+    pub query_video: Vec<usize>,
+}
+
+impl Episode {
+    pub fn n_support(&self) -> usize {
+        self.support.len()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeConfig {
+    pub way_max: usize,
+    pub shot_min: usize,
+    pub shot_max: usize,
+    pub n_support_max: usize,
+    pub query_per_class: usize,
+}
+
+impl EpisodeConfig {
+    /// Meta-training default matching the AOT train geometry (N<=40).
+    pub fn train_default() -> Self {
+        Self { way_max: 5, shot_min: 1, shot_max: 8, n_support_max: 40, query_per_class: 2 }
+    }
+
+    /// Large-support test tasks (VTAB-like protocol, scaled).
+    pub fn test_large(n_support_max: usize) -> Self {
+        Self { way_max: 10, shot_min: 5, shot_max: 20, n_support_max, query_per_class: 5 }
+    }
+}
+
+/// Sample one episode from a dataset. Class identities are drawn from the
+/// dataset's class range; way is capped by both the config and the
+/// dataset.
+pub fn sample_episode(
+    ds: &Dataset,
+    cfg: &EpisodeConfig,
+    rng: &mut Rng,
+    image_size: usize,
+) -> Episode {
+    let n_classes = ds.gen.n_classes();
+    let way = cfg.way_max.min(n_classes).max(1);
+    let classes = rng.choose(n_classes, way);
+    let mut support = Vec::new();
+    let mut query = Vec::new();
+    // Shots per class, respecting the global support cap.
+    let mut budget = cfg.n_support_max;
+    let mut shots = vec![0usize; way];
+    for (k, s) in shots.iter_mut().enumerate() {
+        let remaining_classes = way - k;
+        let max_here = budget.saturating_sub(remaining_classes - 1).max(1);
+        let want = cfg.shot_min + rng.below(cfg.shot_max - cfg.shot_min + 1);
+        *s = want.min(max_here).max(1);
+        budget = budget.saturating_sub(*s);
+    }
+    for (k, &class) in classes.iter().enumerate() {
+        for _ in 0..shots[k] {
+            let im = ds.gen.sample(class, rng, image_size);
+            support.push((im.data, k));
+        }
+        for _ in 0..cfg.query_per_class {
+            let im = ds.gen.sample(class, rng, image_size);
+            query.push((im.data, k));
+        }
+    }
+    rng.shuffle(&mut support);
+    let query_video = vec![usize::MAX; query.len()];
+    Episode { image_size, way, support, query, query_video }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::md_suite;
+
+    #[test]
+    fn episode_respects_caps_and_labels() {
+        let suite = md_suite();
+        let mut rng = Rng::new(3);
+        for ds in &suite {
+            let cfg = EpisodeConfig::train_default();
+            let ep = sample_episode(ds, &cfg, &mut rng, 32);
+            assert!(ep.n_support() <= cfg.n_support_max, "{}", ds.name());
+            assert!(ep.way <= cfg.way_max);
+            assert!(ep.support.iter().all(|(x, y)| *y < ep.way && x.len() == 32 * 32 * 3));
+            // Every class has at least one support example.
+            for c in 0..ep.way {
+                assert!(ep.support.iter().any(|(_, y)| *y == c), "class {c} empty");
+            }
+            // Pixels in range.
+            for (x, _) in ep.support.iter().take(2) {
+                assert!(x.iter().all(|v| (0.0..=1.0).contains(v)));
+            }
+        }
+    }
+
+    #[test]
+    fn episodes_are_deterministic_per_seed() {
+        let suite = md_suite();
+        let cfg = EpisodeConfig::train_default();
+        let a = sample_episode(&suite[0], &cfg, &mut Rng::new(9), 32);
+        let b = sample_episode(&suite[0], &cfg, &mut Rng::new(9), 32);
+        assert_eq!(a.n_support(), b.n_support());
+        assert_eq!(a.support[0].0, b.support[0].0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Meta-test harnesses: run a trained model over test episodes and
+//! aggregate paper-style metrics (mean ± 95% CI, adaptation wall-clock).
+
+use anyhow::Result;
+
+use crate::coordinator::{FineTuner, MetaLearner};
+use crate::data::orbit::{OrbitSim, VideoMode};
+use crate::data::registry::Dataset;
+use crate::data::rng::Rng;
+use crate::data::task::{sample_episode, Episode, EpisodeConfig};
+use crate::eval::metrics::{score_episode, EpisodeMetrics};
+use crate::runtime::Engine;
+use crate::util::{mean_ci95, timed};
+
+/// Aggregated evaluation over a set of episodes.
+#[derive(Clone, Debug, Default)]
+pub struct EvalSummary {
+    pub frame_acc: (f64, f64),
+    pub video_acc: (f64, f64),
+    pub ftr: (f64, f64),
+    /// Mean wall-clock seconds to adapt+classify one task.
+    pub secs_per_task: f64,
+    pub episodes: usize,
+}
+
+/// Anything that can predict labels for an episode's queries.
+pub enum Predictor<'a> {
+    Meta(&'a MetaLearner),
+    Fine(&'a FineTuner),
+}
+
+impl Predictor<'_> {
+    pub fn predict(&self, engine: &Engine, ep: &Episode) -> Result<Vec<usize>> {
+        match self {
+            Predictor::Meta(m) => m.predict_episode(engine, ep),
+            Predictor::Fine(f) => f.predict_episode(engine, ep),
+        }
+    }
+
+    pub fn model_name(&self) -> &str {
+        match self {
+            Predictor::Meta(m) => &m.model,
+            Predictor::Fine(_) => "finetuner",
+        }
+    }
+}
+
+pub fn summarize(metrics: &[EpisodeMetrics], secs: &[f64]) -> EvalSummary {
+    let fa: Vec<f64> = metrics.iter().map(|m| m.frame_acc).collect();
+    let va: Vec<f64> = metrics.iter().map(|m| m.video_acc).collect();
+    let ft: Vec<f64> = metrics.iter().map(|m| m.ftr).collect();
+    EvalSummary {
+        frame_acc: mean_ci95(&fa),
+        video_acc: mean_ci95(&va),
+        ftr: mean_ci95(&ft),
+        secs_per_task: crate::util::mean(secs),
+        episodes: metrics.len(),
+    }
+}
+
+/// Evaluate on episodes sampled from one dataset.
+pub fn eval_dataset(
+    engine: &Engine,
+    pred: &Predictor,
+    ds: &Dataset,
+    cfg: &EpisodeConfig,
+    image_size: usize,
+    n_episodes: usize,
+    seed: u64,
+) -> Result<EvalSummary> {
+    let mut rng = Rng::new(seed);
+    let mut metrics = Vec::new();
+    let mut secs = Vec::new();
+    for _ in 0..n_episodes {
+        let ep = sample_episode(ds, cfg, &mut rng, image_size);
+        let (preds, dt) = timed(|| pred.predict(engine, &ep));
+        metrics.push(score_episode(&ep, &preds?));
+        secs.push(dt);
+    }
+    Ok(summarize(&metrics, &secs))
+}
+
+/// ORBIT protocol: `tasks_per_user` personalization tasks per test user,
+/// in the given video mode.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_orbit(
+    engine: &Engine,
+    pred: &Predictor,
+    sim: &OrbitSim,
+    mode: VideoMode,
+    image_size: usize,
+    tasks_per_user: usize,
+    frames_per_video: usize,
+    seed: u64,
+) -> Result<EvalSummary> {
+    let rng = Rng::new(seed);
+    let mut metrics = Vec::new();
+    let mut secs = Vec::new();
+    for user in 0..sim.users.len() {
+        for t in 0..tasks_per_user {
+            let mut erng = rng.split((user * 1000 + t) as u64);
+            let ep = sim.user_episode(user, mode, &mut erng, image_size, 6, 2, frames_per_video);
+            let (preds, dt) = timed(|| pred.predict(engine, &ep));
+            metrics.push(score_episode(&ep, &preds?));
+            secs.push(dt);
+        }
+    }
+    Ok(summarize(&metrics, &secs))
+}

@@ -1,0 +1,134 @@
+//! Analytic test-time adaptation cost model (Table 1's MACs / steps
+//! columns). Mirrors the architecture constants in python/compile —
+//! `python/tests/test_macs_parity.py` asserts the two stay in sync via
+//! golden values.
+
+/// MicroConv channel plan (keep in sync with python/compile/backbone.py).
+pub const BACKBONE_CHANNELS: [usize; 4] = [16, 32, 64, 128];
+pub const ENCODER_CHANNELS: [usize; 3] = [16, 32, 64];
+pub const FEATURE_DIM: usize = 128;
+pub const EMB_DIM: usize = 64;
+pub const GEN_HIDDEN: usize = 32;
+
+/// MACs for one backbone forward of one image.
+pub fn backbone_macs(image_size: usize) -> u64 {
+    let mut total = 0u64;
+    let mut s = image_size as u64;
+    let mut cin = 3u64;
+    for &cout in &BACKBONE_CHANNELS {
+        let cout = cout as u64;
+        total += s * s * 9 * cin * cout; // conv 3x3
+        total += s * s * cout; // film
+        s /= 2;
+        cin = cout;
+    }
+    total
+}
+
+/// MACs for one set-encoder forward of one image (CNAPs variants).
+pub fn encoder_macs(image_size: usize) -> u64 {
+    let mut total = 0u64;
+    let mut s = image_size as u64;
+    let mut cin = 3u64;
+    for &cout in &ENCODER_CHANNELS {
+        let cout = cout as u64;
+        s /= 2; // stride-2 conv
+        total += s * s * 9 * cin * cout;
+        cin = cout;
+    }
+    total + cin * EMB_DIM as u64
+}
+
+/// MACs of the FiLM generator MLPs (once per task).
+pub fn film_generator_macs() -> u64 {
+    BACKBONE_CHANNELS
+        .iter()
+        .map(|&ch| (EMB_DIM * GEN_HIDDEN + GEN_HIDDEN * 2 * ch) as u64)
+        .sum()
+}
+
+/// Steps-to-adapt descriptor (the paper's "1F" / "15FB" / "50FB" column).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptCost {
+    pub macs: u64,
+    pub steps: usize,
+    /// true if each step is a forward+backward pass (gradient methods).
+    pub forward_backward: bool,
+}
+
+impl AdaptCost {
+    pub fn steps_label(&self) -> String {
+        format!("{}{}", self.steps, if self.forward_backward { "FB" } else { "F" })
+    }
+}
+
+/// Test-time adaptation cost per model for a task with `n_support`
+/// support images (the paper's Table 1 accounting: the cost of turning a
+/// support set into a task-adapted classifier).
+pub fn adapt_cost(model: &str, image_size: usize, n_support: usize, steps: usize) -> AdaptCost {
+    let n = n_support as u64;
+    let bb = backbone_macs(image_size);
+    match model {
+        // Single forward pass of the support set.
+        "protonet" => AdaptCost { macs: n * bb, steps: 1, forward_backward: false },
+        // Support through encoder + configured extractor, one pass.
+        "cnaps" | "simple_cnaps" => AdaptCost {
+            macs: n * (bb + encoder_macs(image_size)) + film_generator_macs(),
+            steps: 1,
+            forward_backward: false,
+        },
+        // `steps` full forward-backward passes (backward ~ 2x forward).
+        "maml" => AdaptCost {
+            macs: steps as u64 * n * bb * 3,
+            steps,
+            forward_backward: true,
+        },
+        // The paper's FineTuner protocol [28]: every head step re-runs
+        // the frozen extractor forward on the support mini-batch (no
+        // feature caching — this recompute is exactly why the paper's
+        // Table 1 shows ~2 orders of magnitude more adaptation MACs
+        // than the single-forward meta-learners). FB counted as 2x fwd.
+        "finetuner" => {
+            let head = (FEATURE_DIM * 10) as u64; // linear head fwd
+            AdaptCost {
+                macs: steps as u64 * n.min(64) * (bb * 2 + head * 3),
+                steps,
+                forward_backward: true,
+            }
+        }
+        _ => AdaptCost { macs: 0, steps: 0, forward_backward: false },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backbone_macs_quadratic_in_size() {
+        let m32 = backbone_macs(32);
+        let m64 = backbone_macs(64);
+        assert_eq!(m64, m32 * 4, "conv MACs scale with S^2");
+    }
+
+    #[test]
+    fn golden_values_match_python() {
+        // python: compile.backbone.macs_per_image(32) etc. — keep in sync
+        // with python/tests/test_macs_parity.py.
+        assert_eq!(backbone_macs(32), 4_012_032);
+        assert_eq!(encoder_macs(32), 704_512);
+    }
+
+    #[test]
+    fn meta_learners_cheaper_than_finetuner() {
+        // The paper's headline efficiency ordering at test time.
+        let n = 100;
+        let proto = adapt_cost("protonet", 64, n, 1).macs;
+        let sc = adapt_cost("simple_cnaps", 64, n, 1).macs;
+        let maml = adapt_cost("maml", 64, n, 15).macs;
+        let ft = adapt_cost("finetuner", 64, n, 50).macs;
+        assert!(proto < maml && proto < ft);
+        assert!(sc < maml && sc < ft);
+        assert!(maml > 10 * proto, "gradient adaptation is >,10x a forward");
+    }
+}

@@ -1,0 +1,109 @@
+//! Evaluation metrics matching the ORBIT/VTAB+MD conventions
+//! (paper Appendix D.1's metric definitions).
+
+use crate::data::task::Episode;
+
+/// Per-episode evaluation given predicted labels for each query element.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeMetrics {
+    /// Fraction of correct per-frame predictions.
+    pub frame_acc: f64,
+    /// Majority-vote-per-video accuracy (equals frame_acc for non-video
+    /// episodes, where each element is its own "video").
+    pub video_acc: f64,
+    /// Frames-to-recognition: index of first correct prediction divided
+    /// by video length, averaged over videos (lower is better).
+    pub ftr: f64,
+}
+
+pub fn score_episode(episode: &Episode, preds: &[usize]) -> EpisodeMetrics {
+    assert_eq!(preds.len(), episode.query.len());
+    let n = preds.len().max(1);
+    let mut correct = 0usize;
+    for (p, (_, y)) in preds.iter().zip(&episode.query) {
+        if p == y {
+            correct += 1;
+        }
+    }
+    let frame_acc = correct as f64 / n as f64;
+
+    // Group into videos.
+    let mut videos: Vec<(usize, Vec<usize>)> = Vec::new(); // (label, pred list)
+    let mut cur: Option<usize> = None;
+    for (i, &vid) in episode.query_video.iter().enumerate() {
+        let label = episode.query[i].1;
+        let is_new = match cur {
+            Some(v) => v != vid || vid == usize::MAX,
+            None => true,
+        };
+        if is_new {
+            videos.push((label, vec![]));
+            cur = Some(vid);
+        }
+        videos.last_mut().unwrap().1.push(preds[i]);
+    }
+    let mut vid_correct = 0usize;
+    let mut ftr_sum = 0f64;
+    for (label, ps) in &videos {
+        // Majority vote.
+        let mut counts = std::collections::HashMap::new();
+        for p in ps {
+            *counts.entry(*p).or_insert(0usize) += 1;
+        }
+        let maj = counts.iter().max_by_key(|(_, c)| **c).map(|(p, _)| *p).unwrap();
+        if maj == *label {
+            vid_correct += 1;
+        }
+        // FTR.
+        let first = ps.iter().position(|p| p == label).unwrap_or(ps.len());
+        ftr_sum += first as f64 / ps.len() as f64;
+    }
+    let nv = videos.len().max(1);
+    EpisodeMetrics {
+        frame_acc,
+        video_acc: vid_correct as f64 / nv as f64,
+        ftr: ftr_sum / nv as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(way: usize, labels: Vec<usize>, vids: Vec<usize>) -> Episode {
+        Episode {
+            image_size: 4,
+            way,
+            support: vec![],
+            query: labels.into_iter().map(|y| (vec![0.0; 48], y)).collect(),
+            query_video: vids,
+        }
+    }
+
+    #[test]
+    fn frame_and_video_acc() {
+        // Two videos of 3 frames: video 0 labelled 1, video 1 labelled 0.
+        let e = ep(2, vec![1, 1, 1, 0, 0, 0], vec![0, 0, 0, 1, 1, 1]);
+        let preds = vec![1, 0, 1, 0, 1, 1]; // v0: majority 1 ok; v1: majority 1 wrong
+        let m = score_episode(&e, &preds);
+        assert!((m.frame_acc - 3.0 / 6.0).abs() < 1e-9);
+        assert!((m.video_acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ftr_zero_when_first_frame_correct() {
+        let e = ep(2, vec![1, 1], vec![0, 0]);
+        let m = score_episode(&e, &[1, 0]);
+        assert_eq!(m.ftr, 0.0);
+        let m2 = score_episode(&e, &[0, 1]);
+        assert!((m2.ftr - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_video_episodes_each_element_is_a_video() {
+        let e = ep(3, vec![0, 1, 2], vec![usize::MAX; 3]);
+        let m = score_episode(&e, &[0, 1, 0]);
+        assert!((m.frame_acc - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m.video_acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

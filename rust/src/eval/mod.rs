@@ -1,0 +1,10 @@
+//! Evaluation: metrics (frame/video accuracy, FTR, 95% CIs), the
+//! analytic MACs cost model, and meta-test harnesses.
+
+pub mod harness;
+pub mod macs;
+pub mod metrics;
+
+pub use harness::{eval_dataset, eval_orbit, EvalSummary, Predictor};
+pub use macs::{adapt_cost, backbone_macs, AdaptCost};
+pub use metrics::{score_episode, EpisodeMetrics};

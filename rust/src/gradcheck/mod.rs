@@ -1,0 +1,188 @@
+//! The gradient-estimator lab (experiments E4: Fig 4, Tables D.7/D.8).
+//!
+//! Fixes one 10-way 10-shot task (N = 100, textures/DTD-like, 32 px —
+//! the paper's configuration scaled), computes the EXACT gradient with
+//! the full-backprop artifact, then for each |H| draws repeated
+//! estimates from (a) LITE and (b) the subsampled-small-task baseline,
+//! and reports bias (MSE of the estimate mean, Table D.7) and average
+//! RMSE (Table D.8 / Fig 4). Gradients are measured on the first
+//! set-encoder conv, matching the paper (Appendix D.4).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batch;
+use crate::data::registry::md_suite;
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+pub const GC_WAY: usize = 10;
+pub const GC_N: usize = 100;
+pub const GC_SIZE: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct GradCheckRow {
+    pub h: usize,
+    pub lite_bias_mse: f64,
+    pub sub_bias_mse: f64,
+    pub lite_rmse: f64,
+    pub sub_rmse: f64,
+}
+
+/// Build the fixed gradcheck task: 10 classes x 10 shots from the
+/// DTD-like texture family, plus one query batch.
+pub fn fixed_task(seed: u64) -> Episode {
+    let suite = md_suite();
+    let dtd = suite
+        .iter()
+        .find(|d| d.name() == "dtd-like")
+        .expect("dtd-like in md suite");
+    let mut rng = Rng::new(seed);
+    let mut support = Vec::new();
+    let mut query = Vec::new();
+    for c in 0..GC_WAY {
+        for _ in 0..(GC_N / GC_WAY) {
+            support.push((dtd.gen.sample(c, &mut rng, GC_SIZE).data, c));
+        }
+        query.push((dtd.gen.sample(c, &mut rng, GC_SIZE).data, c));
+    }
+    Episode { image_size: GC_SIZE, way: GC_WAY, support, query, query_video: vec![usize::MAX; GC_WAY] }
+}
+
+fn artifact_for(n: usize, h: usize) -> String {
+    format!("simple_cnaps_{GC_SIZE}_w{GC_WAY}n{n}h{h}m10_train")
+}
+
+/// Run one train step on `episode` restricted to `idx` support elements,
+/// back-propagating `split_bp` of them; returns the gradient tensor of
+/// the first learnable parameter (enc.conv0.w).
+fn grad_of(
+    engine: &Engine,
+    params: &[Tensor],
+    artifact: &str,
+    episode: &Episode,
+    split: &batch::LiteSplit,
+) -> Result<Tensor> {
+    let entry = engine.entry(artifact)?;
+    let geom = entry.geom.clone().context("train artifact missing geom")?;
+    let data = batch::train_inputs(entry, &geom, episode, split, 0..episode.query.len())?;
+    let mut inputs: Vec<Tensor> = params.to_vec();
+    inputs.extend(data);
+    let out = engine.run(artifact, &inputs)?;
+    Ok(out[2].clone()) // loss, acc, grad[0]=enc.conv0.w
+}
+
+fn sub_episode(episode: &Episode, idx: &[usize]) -> Episode {
+    Episode {
+        image_size: episode.image_size,
+        way: episode.way,
+        support: idx.iter().map(|&i| episode.support[i].clone()).collect(),
+        query: episode.query.clone(),
+        query_video: episode.query_video.clone(),
+    }
+}
+
+/// Draw `k` indices for the subsampled-small-task baseline ensuring at
+/// least one example per class (the paper's D.4 protocol).
+fn stratified_subsample(episode: &Episode, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut by_class: Vec<Vec<usize>> = vec![vec![]; episode.way];
+    for (i, (_, y)) in episode.support.iter().enumerate() {
+        by_class[*y].push(i);
+    }
+    let mut chosen = Vec::new();
+    for c in by_class.iter() {
+        if !c.is_empty() && chosen.len() < k {
+            chosen.push(c[rng.below(c.len())]);
+        }
+    }
+    let mut rest: Vec<usize> = (0..episode.n_support())
+        .filter(|i| !chosen.contains(i))
+        .collect();
+    rng.shuffle(&mut rest);
+    for i in rest {
+        if chosen.len() >= k {
+            break;
+        }
+        chosen.push(i);
+    }
+    chosen
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// The full experiment: for each |H| in `hs`, draw enough estimates that
+/// ~`budget` support examples are consumed per setting (paper: 1000).
+pub fn run(engine: &Engine, hs: &[usize], budget: usize, seed: u64) -> Result<Vec<GradCheckRow>> {
+    let episode = fixed_task(seed);
+    // Parameters: the shared simple_cnaps_32 init (all gradcheck
+    // artifacts share one param group).
+    let full_name = artifact_for(GC_N, GC_N);
+    let full_entry = engine.entry(&full_name)?;
+    let params = crate::params::ParamStore::load(
+        &Engine::default_dir(),
+        &engine.manifest,
+        full_entry,
+    )?;
+    let ptensors: Vec<Tensor> = params.tensors().to_vec();
+
+    // Exact gradient: full backprop.
+    let full_split = batch::sample_split(GC_N, GC_N, &mut Rng::new(0));
+    let g_true = grad_of(engine, &ptensors, &full_name, &episode, &full_split)?;
+
+    let mut rng = Rng::new(seed ^ 0x6C0D);
+    let mut rows = Vec::new();
+    for &h in hs {
+        let trials = (budget / h).max(2);
+        let mut lite_mean = vec![0f32; g_true.len()];
+        let mut sub_mean = vec![0f32; g_true.len()];
+        let mut lite_se = 0f64;
+        let mut sub_se = 0f64;
+        for _ in 0..trials {
+            // LITE estimate.
+            let split = batch::sample_split(GC_N, h, &mut rng);
+            let g = grad_of(engine, &ptensors, &artifact_for(GC_N, h), &episode, &split)?;
+            for (m, v) in lite_mean.iter_mut().zip(&g.data) {
+                *m += v / trials as f32;
+            }
+            lite_se += mse(&g.data, &g_true.data);
+            // Subsampled-small-task estimate: h examples, exact gradient.
+            let idx = stratified_subsample(&episode, h, &mut rng);
+            let sub_ep = sub_episode(&episode, &idx);
+            let sub_split = batch::sample_split(h, h, &mut rng);
+            let g = grad_of(engine, &ptensors, &artifact_for(h, h), &sub_ep, &sub_split)?;
+            for (m, v) in sub_mean.iter_mut().zip(&g.data) {
+                *m += v / trials as f32;
+            }
+            sub_se += mse(&g.data, &g_true.data);
+        }
+        rows.push(GradCheckRow {
+            h,
+            lite_bias_mse: mse(&lite_mean, &g_true.data),
+            sub_bias_mse: mse(&sub_mean, &g_true.data),
+            lite_rmse: (lite_se / trials as f64).sqrt(),
+            sub_rmse: (sub_se / trials as f64).sqrt(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print_rows(rows: &[GradCheckRow]) {
+    println!("\n Fig 4 / Tables D.7-D.8: gradient estimator quality vs |H| (N={GC_N})");
+    println!("{:>5} {:>14} {:>14} {:>12} {:>12}", "|H|", "LITE bias MSE", "sub bias MSE", "LITE RMSE", "sub RMSE");
+    for r in rows {
+        println!(
+            "{:>5} {:>14.3e} {:>14.3e} {:>12.4e} {:>12.4e}",
+            r.h, r.lite_bias_mse, r.sub_bias_mse, r.lite_rmse, r.sub_rmse
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! LITE: Memory Efficient Meta-Learning with Large Images — rust coordinator.
+//!
+//! Layer 3 of the three-layer reproduction (see DESIGN.md): episodic
+//! meta-training orchestration, task sampling, LITE subset scheduling,
+//! optimization, evaluation harnesses, and every substrate the paper's
+//! evaluation needs. The compute graphs themselves are AOT-compiled JAX +
+//! Pallas HLO artifacts executed through PJRT (`runtime`).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gradcheck;
+pub mod memory;
+pub mod optim;
+pub mod params;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

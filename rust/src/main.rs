@@ -1,0 +1,194 @@
+//! `lite` — the LITE meta-learning coordinator CLI.
+//!
+//! Subcommands (see README):
+//!   info           inspect artifacts + manifest
+//!   pretrain       supervised backbone pretraining (ImageNet stand-in)
+//!   train          meta-train a model with LITE
+//!   eval           meta-test a trained checkpoint on a suite
+//!   gradcheck      Fig 4 / D.7-D.8 gradient-estimator experiment
+//!   memory-report  E6 analytic memory model report
+//!   bench-*        paper table/figure harnesses (also under cargo bench)
+
+use anyhow::Result;
+
+use lite::config::Args;
+use lite::coordinator::{meta_train, pretrained_backbone, MetaLearner, TrainConfig};
+use lite::data::{md_suite, EpisodeConfig};
+use lite::memory::{mib, peak_bytes, Mode};
+use lite::runtime::Engine;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "info" => cmd_info(args),
+        "pretrain" => cmd_pretrain(args),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "gradcheck" => cmd_gradcheck(args),
+        "memory-report" => cmd_memory(args),
+        "bench-orbit" => lite::bench::table1_orbit(&mut args),
+        "bench-vtab" => lite::bench::fig3_vtabmd(&mut args),
+        "bench-hsweep" => lite::bench::table2_hsweep(&mut args),
+        "bench-ablation" => lite::bench::d3_ablation(&mut args),
+        "help" | _ => {
+            println!(
+                "usage: lite <info|pretrain|train|eval|gradcheck|memory-report|\
+                 bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: Args) -> Result<()> {
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    println!("artifacts dir: {}", Engine::default_dir().display());
+    println!("{} artifacts, {} param groups", engine.manifest.artifacts.len(), engine.manifest.groups.len());
+    for a in &engine.manifest.artifacts {
+        println!(
+            "  {:<48} {:<12} {:<14} {}px  {} inputs  {} outputs",
+            a.name,
+            a.model,
+            a.kind,
+            a.image_size,
+            a.params.len() + a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(mut args: Args) -> Result<()> {
+    let size: usize = args.get("image-size", 32)?;
+    let steps: usize = args.get("steps", 150)?;
+    let seed: u64 = args.get("seed", 0)?;
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let params = pretrained_backbone(&engine, size, steps, seed)?;
+    println!(
+        "pretrained backbone ({} tensors, {} params) cached at artifacts/backbone_{size}.ckpt",
+        params.names().len(),
+        params.n_params()
+    );
+    Ok(())
+}
+
+fn cmd_train(mut args: Args) -> Result<()> {
+    let model = args.get_str("model", "protonet");
+    let size: usize = args.get("image-size", 32)?;
+    let episodes: usize = args.get("episodes", 200)?;
+    let lr: f32 = args.get("lr", 1e-3)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let accum: usize = args.get("accum", 8)?;
+    let pretrain_steps: usize = args.get("pretrain-steps", 150)?;
+    let validate_every: usize = args.get("validate-every", 0)?;
+    let out = args.get_str("out", "");
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let mut learner = MetaLearner::new(&engine, &model, size, None, Some(40), 200)?;
+    if model != "protonet" && model != "maml" {
+        // Frozen-extractor protocol: install the pretrained backbone.
+        let bb = pretrained_backbone(&engine, size, pretrain_steps, seed)?;
+        let n = learner.install_backbone(&bb);
+        eprintln!("installed {n} pretrained backbone tensors");
+    }
+    let cfg = TrainConfig {
+        episodes,
+        accum_period: accum,
+        lr,
+        seed,
+        log_every: 20,
+        episode_cfg: EpisodeConfig::train_default(),
+        validate_every,
+        ..Default::default()
+    };
+    let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
+    let last: Vec<f64> = logs.iter().rev().take(20).map(|l| l.loss as f64).collect();
+    println!("final loss (20-ep mean): {:.4}", lite::util::mean(&last));
+    let path = if out.is_empty() {
+        Engine::default_dir().join(format!("{model}_{size}.ckpt"))
+    } else {
+        out.into()
+    };
+    learner.params.save(&path)?;
+    println!("checkpoint saved to {}", path.display());
+    Ok(())
+}
+
+fn cmd_eval(mut args: Args) -> Result<()> {
+    let model = args.get_str("model", "protonet");
+    let size: usize = args.get("image-size", 32)?;
+    let episodes: usize = args.get("episodes", 10)?;
+    let seed: u64 = args.get("seed", 1)?;
+    let ckpt = args.get_str("ckpt", "");
+    args.finish()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let mut learner = MetaLearner::new(&engine, &model, size, None, Some(40), 200)?;
+    if !ckpt.is_empty() {
+        let n = learner.params.restore(std::path::Path::new(&ckpt))?;
+        eprintln!("restored {n} tensors from {ckpt}");
+    }
+    let cfg = EpisodeConfig::test_large(200);
+    println!("{:<20} {:>8} {:>10}", "dataset", "acc", "±95%");
+    for ds in md_suite() {
+        let s = lite::eval::eval_dataset(
+            &engine,
+            &lite::eval::Predictor::Meta(&learner),
+            &ds,
+            &cfg,
+            size,
+            episodes,
+            seed,
+        )?;
+        println!("{:<20} {:>8.3} {:>10.3}", ds.name(), s.frame_acc.0, s.frame_acc.1);
+    }
+    Ok(())
+}
+
+fn cmd_gradcheck(mut args: Args) -> Result<()> {
+    let budget: usize = args.get("budget", 300)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let hs_str = args.get_str("hs", "10,30,50,70,90");
+    args.finish()?;
+    let hs: Vec<usize> = hs_str
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let engine = Engine::load(Engine::default_dir())?;
+    let rows = lite::gradcheck::run(&engine, &hs, budget, seed)?;
+    lite::gradcheck::print_rows(&rows);
+    Ok(())
+}
+
+fn cmd_memory(args: Args) -> Result<()> {
+    args.finish()?;
+    println!("Analytic peak activation memory per meta-training step (MiB)");
+    println!("(paper §2 structure; MicroConv backbone; query batch 10)\n");
+    for &size in &[32usize, 64, 96] {
+        println!("image {size}px:");
+        for &n in &[40usize, 80, 200, 1000] {
+            let full = peak_bytes(Mode::Full, size, n, 10);
+            let lite8 = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, size, n, 10);
+            let lite40 = peak_bytes(Mode::Lite { h: 40, chunk: 8 }, size, n, 10);
+            let ckpt = peak_bytes(Mode::Checkpoint, size, n, 10);
+            println!(
+                "  N={n:<5} full {:>9.2}  lite(H=8) {:>8.2}  lite(H=40) {:>8.2}  ckpt {:>8.2}",
+                mib(full),
+                mib(lite8),
+                mib(lite40),
+                mib(ckpt)
+            );
+        }
+    }
+    Ok(())
+}

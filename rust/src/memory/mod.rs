@@ -1,0 +1,143 @@
+//! Analytic activation-memory accountant (experiment E6).
+//!
+//! Replaces the paper's measured GPU memory (no GPU in this testbed)
+//! with the exact structural bookkeeping the paper's §2 argument makes:
+//! training memory is dominated by the activations retained for
+//! backward, which scale LINEARLY in the number of back-propagated
+//! support images and QUADRATICALLY in image side length. LITE retains
+//! activations only for the H subset plus a transient forward buffer for
+//! the complement (streamed in chunks, paper §3.1 footnote).
+
+/// Keep in sync with python/compile/backbone.py.
+const CHANNELS: [usize; 4] = [16, 32, 64, 128];
+const BYTES_PER_FLOAT: usize = 4;
+
+/// Floats of activation storage required to BACKWARD through one image's
+/// backbone pass: every block retains its conv output (pre-FiLM), its
+/// FiLM output (pre-ReLU mask), and its pooled output.
+pub fn backward_floats_per_image(image_size: usize) -> usize {
+    let mut total = 0usize;
+    let mut s = image_size;
+    total += s * s * 3; // input
+    for &ch in &CHANNELS {
+        total += s * s * ch; // conv out
+        total += s * s * ch; // film out (relu mask folds into sign bits; counted)
+        s /= 2;
+        total += s * s * ch; // pooled
+    }
+    total
+}
+
+/// Floats for a forward-ONLY pass (no graph retained): just the two
+/// ping-pong buffers of the widest layer — what the nbp stream costs.
+pub fn forward_floats_per_image(image_size: usize) -> usize {
+    let mut widest = image_size * image_size * 3;
+    let mut s = image_size;
+    for &ch in &CHANNELS {
+        widest = widest.max(s * s * ch);
+        s /= 2;
+    }
+    2 * widest
+}
+
+/// Training-memory modes compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    /// Back-propagate the full support set (the baseline that OOMs).
+    Full,
+    /// LITE: back-propagate H, stream the rest in `chunk`-image batches.
+    Lite { h: usize, chunk: usize },
+    /// Gradient/activation checkpointing [12]: store only block
+    /// boundaries, recompute inside blocks (sqrt-style schedule).
+    Checkpoint,
+    /// Train on smaller tasks of `n_small` images (ablation D.3).
+    SmallTask { n_small: usize },
+}
+
+/// Peak activation bytes for one meta-training step of a task with
+/// `n_support` support and `mb` query-batch images.
+pub fn peak_bytes(mode: Mode, image_size: usize, n_support: usize, mb: usize) -> usize {
+    let bwd = backward_floats_per_image(image_size);
+    let fwd = forward_floats_per_image(image_size);
+    let query = mb * bwd; // queries always carry gradients
+    let floats = match mode {
+        Mode::Full => n_support * bwd + query,
+        Mode::Lite { h, chunk } => {
+            let h = h.min(n_support);
+            // No stream buffer when everything is back-propagated
+            // (H >= N collapses LITE to full backprop).
+            let stream = chunk.min(n_support - h);
+            h * bwd + stream * fwd + query
+        }
+        Mode::Checkpoint => {
+            // Store block boundaries for all N; recompute within a block:
+            // boundary footprint ~ pooled outputs only + one block's full
+            // activations during recompute.
+            let mut boundary = image_size * image_size * 3;
+            let mut s = image_size;
+            let mut max_block = 0usize;
+            for &ch in &CHANNELS {
+                max_block = max_block.max(2 * s * s * ch);
+                s /= 2;
+                boundary += s * s * ch;
+            }
+            n_support * boundary + max_block + query
+        }
+        Mode::SmallTask { n_small } => n_small.min(n_support) * bwd + query,
+    };
+    floats * BYTES_PER_FLOAT
+}
+
+/// Pretty MiB.
+pub fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_linear_in_n() {
+        // Paper §2: "memory scales linearly with the number of support
+        // images" for full backprop.
+        let m1 = peak_bytes(Mode::Full, 64, 100, 10);
+        let m2 = peak_bytes(Mode::Full, 64, 200, 10);
+        let q = peak_bytes(Mode::Full, 64, 0, 10);
+        assert_eq!(m2 - q, 2 * (m1 - q));
+    }
+
+    #[test]
+    fn memory_quadratic_in_image_side() {
+        // "...and quadratically with their dimension."
+        let a = backward_floats_per_image(32);
+        let b = backward_floats_per_image(64);
+        assert_eq!(b, 4 * a);
+    }
+
+    #[test]
+    fn lite_memory_near_constant_in_n() {
+        let a = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 50, 10);
+        let b = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 1000, 10);
+        assert_eq!(a, b, "LITE peak is independent of N beyond the stream chunk");
+    }
+
+    #[test]
+    fn lite_roughly_halves_at_h40_of_n80() {
+        // The D.4 note: |H|=40 uses about half the memory of full
+        // backprop on the same task.
+        let full = peak_bytes(Mode::Full, 32, 80, 10);
+        let lite = peak_bytes(Mode::Lite { h: 40, chunk: 8 }, 32, 80, 10);
+        let ratio = lite as f64 / full as f64;
+        assert!((0.4..0.65).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn checkpointing_saves_but_less_than_lite_at_small_h() {
+        let full = peak_bytes(Mode::Full, 64, 200, 10);
+        let ckpt = peak_bytes(Mode::Checkpoint, 64, 200, 10);
+        let lite = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 200, 10);
+        assert!(ckpt < full);
+        assert!(lite < ckpt, "LITE at small H beats checkpointing (paper §2 (iv))");
+    }
+}

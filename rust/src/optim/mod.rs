@@ -1,0 +1,132 @@
+//! Optimizers for the meta-training loop (operate on the learnable
+//! tensor subset of a `ParamStore`, in train-artifact gradient order).
+
+use anyhow::{bail, Result};
+
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+/// Adam [35], the paper's meta-training optimizer.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![], v: vec![] }
+    }
+
+    /// One step over the learnable tensors; `grads` in learnable order.
+    pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor]) -> Result<()> {
+        let idx = params.learnable_indices();
+        if grads.len() != idx.len() {
+            bail!("adam: {} grads for {} learnable tensors", grads.len(), idx.len());
+        }
+        if self.m.is_empty() {
+            self.m = grads.iter().map(|g| vec![0.0; g.len()]).collect();
+            self.v = grads.iter().map(|g| vec![0.0; g.len()]).collect();
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for (k, g) in grads.iter().enumerate() {
+            let p = params.learnable_tensor_mut(k);
+            if p.shape != g.shape {
+                bail!("adam: grad {k} shape {:?} vs param {:?}", g.shape, p.shape);
+            }
+            let (m, v) = (&mut self.m[k], &mut self.v[k]);
+            for i in 0..g.data.len() {
+                let gi = g.data[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = m[i] / b1t;
+                let vhat = v[i] / b2t;
+                p.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Plain SGD (used by a couple of baselines / tests).
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr }
+    }
+
+    pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor]) -> Result<()> {
+        let idx = params.learnable_indices();
+        if grads.len() != idx.len() {
+            bail!("sgd: {} grads for {} learnable tensors", grads.len(), idx.len());
+        }
+        for (k, g) in grads.iter().enumerate() {
+            let p = params.learnable_tensor_mut(k);
+            for i in 0..g.data.len() {
+                p.data[i] -= self.lr * g.data[i];
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Gradient accumulator: the paper back-propagates after every task but
+/// steps the optimizer every `period` tasks (VTAB+MD protocol: 16).
+pub struct GradAccum {
+    sums: Vec<Tensor>,
+    count: usize,
+    pub period: usize,
+}
+
+impl GradAccum {
+    pub fn new(period: usize) -> Self {
+        Self { sums: vec![], count: 0, period: period.max(1) }
+    }
+
+    /// Add one task's gradients; returns the averaged gradients when the
+    /// accumulation period completes, else None.
+    pub fn push(&mut self, grads: &[Tensor]) -> Result<Option<Vec<Tensor>>> {
+        if self.sums.is_empty() {
+            self.sums = grads.to_vec();
+        } else {
+            if self.sums.len() != grads.len() {
+                bail!("accum: tensor count changed");
+            }
+            for (s, g) in self.sums.iter_mut().zip(grads) {
+                if s.shape != g.shape {
+                    bail!("accum: shape changed");
+                }
+                for i in 0..s.data.len() {
+                    s.data[i] += g.data[i];
+                }
+            }
+        }
+        self.count += 1;
+        if self.count >= self.period {
+            let inv = 1.0 / self.count as f32;
+            let mut out = std::mem::take(&mut self.sums);
+            for t in &mut out {
+                for v in &mut t.data {
+                    *v *= inv;
+                }
+            }
+            self.count = 0;
+            Ok(Some(out))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.count
+    }
+}

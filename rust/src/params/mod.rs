@@ -1,0 +1,226 @@
+//! Parameter store: the coordinator-side owner of model tensors.
+//!
+//! Tensors are loaded from the AOT param-group binaries
+//! (`artifacts/params_<group>.bin`, concatenated little-endian f32 in
+//! manifest order), updated in place by the optimizer, checkpointed to a
+//! simple self-describing binary format, and overlaid across models by
+//! name (e.g. the pretrained `bb.*` backbone tensors onto a CNAPs
+//! variant's frozen backbone slots).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+    learnable: Vec<bool>,
+}
+
+impl ParamStore {
+    /// Load the param group backing `entry` from the artifacts dir.
+    pub fn load(dir: &Path, manifest: &Manifest, entry: &ArtifactEntry) -> Result<Self> {
+        let group_name = entry
+            .param_group
+            .as_ref()
+            .with_context(|| format!("{} has no param group", entry.name))?;
+        let group = manifest
+            .groups
+            .get(group_name)
+            .with_context(|| format!("param group {group_name} missing"))?;
+        let raw = std::fs::read(dir.join(&group.file))
+            .with_context(|| format!("reading {}", group.file))?;
+        let floats = bytes_to_f32(&raw)?;
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for t in &group.tensors {
+            let slice = floats
+                .get(t.offset..t.offset + t.len)
+                .with_context(|| format!("{}: tensor {} out of range", group.file, t.name))?;
+            names.push(t.name.clone());
+            tensors.push(Tensor::new(t.shape.clone(), slice.to_vec())?);
+        }
+        let mut store = Self::from_tensors(names, tensors)?;
+        store.set_learnable_from(entry);
+        Ok(store)
+    }
+
+    pub fn from_tensors(names: Vec<String>, tensors: Vec<Tensor>) -> Result<Self> {
+        if names.len() != tensors.len() {
+            bail!("names/tensors length mismatch");
+        }
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        let learnable = vec![true; names.len()];
+        Ok(Self { names, tensors, index, learnable })
+    }
+
+    /// Mark learnable flags per the artifact entry (order must match the
+    /// entry's param list — validated).
+    pub fn set_learnable_from(&mut self, entry: &ArtifactEntry) {
+        for p in &entry.params {
+            if let Some(&i) = self.index.get(&p.name) {
+                self.learnable[i] = p.learnable;
+            }
+        }
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        if let Some(&i) = self.index.get(name) {
+            Some(&mut self.tensors[i])
+        } else {
+            None
+        }
+    }
+
+    pub fn learnable_indices(&self) -> Vec<usize> {
+        (0..self.names.len()).filter(|&i| self.learnable[i]).collect()
+    }
+
+    pub fn learnable_names(&self) -> Vec<&str> {
+        self.learnable_indices()
+            .into_iter()
+            .map(|i| self.names[i].as_str())
+            .collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn n_learnable(&self) -> usize {
+        self.learnable_indices()
+            .iter()
+            .map(|&i| self.tensors[i].len())
+            .sum()
+    }
+
+    /// Apply an in-place update to the learnable tensor at learnable slot
+    /// `k` (the k-th learnable tensor, matching train-artifact grad order).
+    pub fn learnable_tensor_mut(&mut self, k: usize) -> &mut Tensor {
+        let idx = self.learnable_indices()[k];
+        &mut self.tensors[idx]
+    }
+
+    /// Overlay tensors from `other` by name where shapes match; returns
+    /// the number of tensors copied. Used to install the pretrained
+    /// backbone into a meta-learner's frozen slots.
+    pub fn overlay(&mut self, other: &ParamStore, prefix: &str) -> usize {
+        let mut n = 0;
+        for (name, t) in other.names.iter().zip(&other.tensors) {
+            if !name.starts_with(prefix) {
+                continue;
+            }
+            if let Some(&i) = self.index.get(name) {
+                if self.tensors[i].shape == t.shape {
+                    self.tensors[i] = t.clone();
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    // ------------------------------------------------------ checkpoints
+    /// Save to a self-describing binary: for each tensor a header line
+    /// `name ndim d0 d1 ...\n` then raw little-endian f32 payload; the
+    /// file starts with `LITECKPT1 <count>\n`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "LITECKPT1 {}", self.names.len())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            write!(f, "{} {}", name, t.shape.len())?;
+            for d in &t.shape {
+                write!(f, " {d}")?;
+            }
+            writeln!(f)?;
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by `save`, overlaying by name onto this
+    /// store (shape-checked). Returns number of tensors restored.
+    pub fn restore(&mut self, path: &Path) -> Result<usize> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let mut pos = 0usize;
+        let header = read_line(&buf, &mut pos)?;
+        let mut it = header.split_whitespace();
+        if it.next() != Some("LITECKPT1") {
+            bail!("{}: bad checkpoint magic", path.display());
+        }
+        let count: usize = it.next().context("missing count")?.parse()?;
+        let mut restored = 0;
+        for _ in 0..count {
+            let line = read_line(&buf, &mut pos)?;
+            let mut toks = line.split_whitespace();
+            let name = toks.next().context("missing name")?.to_string();
+            let ndim: usize = toks.next().context("missing ndim")?.parse()?;
+            let shape: Vec<usize> = (0..ndim)
+                .map(|_| Ok(toks.next().context("missing dim")?.parse::<usize>()?))
+                .collect::<Result<_>>()?;
+            let n: usize = shape.iter().product();
+            let end = pos + 4 * n;
+            let bytes = buf.get(pos..end).context("truncated payload")?;
+            pos = end;
+            let data = bytes_to_f32(bytes)?;
+            if let Some(&i) = self.index.get(&name) {
+                if self.tensors[i].shape == shape {
+                    self.tensors[i] = Tensor::new(shape, data)?;
+                    restored += 1;
+                }
+            }
+        }
+        Ok(restored)
+    }
+}
+
+fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("byte length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_line(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let start = *pos;
+    while *pos < buf.len() && buf[*pos] != b'\n' {
+        *pos += 1;
+    }
+    if *pos >= buf.len() {
+        bail!("unterminated header line");
+    }
+    let line = std::str::from_utf8(&buf[start..*pos])?.to_string();
+    *pos += 1;
+    Ok(line)
+}

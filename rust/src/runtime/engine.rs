@@ -1,0 +1,164 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, caches executables, and runs them on host tensors.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** is the
+//! interchange format (jax >= 0.5 serialized protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::Tensor;
+
+/// Cumulative runtime counters (perf pass bookkeeping).
+#[derive(Default, Debug, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Load the manifest and create a CPU PJRT client. `dir` is the
+    /// artifacts directory produced by `make artifacts`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Locate the artifacts directory relative to the repo root (walks up
+    /// from the current dir so tests/benches work from any cwd).
+    pub fn default_dir() -> PathBuf {
+        let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = d.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !d.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest.get(name)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.dir.join(&entry.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {name}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact: `inputs` are positional (params first, then
+    /// data inputs, exactly the manifest order). Returns the output
+    /// tensors in manifest output order.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.get(name)?;
+        let want = entry.params.len() + entry.inputs.len();
+        if inputs.len() != want {
+            bail!(
+                "{name}: expected {} inputs ({} params + {} data), got {}",
+                want,
+                entry.params.len(),
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("building literals for {name}"))?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // aot.py lowers with return_tuple=True: the result is a tuple of
+        // `entry.outputs.len()` elements.
+        let parts = lit.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, spec) in parts.iter().zip(&entry.outputs) {
+            let data = part
+                .to_vec::<f32>()
+                .with_context(|| format!("{name}: output {} not f32", spec.name))?;
+            out.push(Tensor::new(spec.shape.clone(), data)?);
+        }
+        Ok(out)
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // 0-d scalar: reshape to [] is expressed as reshape(&[]).
+        return Ok(lit.reshape(&[])?);
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}

@@ -1,0 +1,242 @@
+//! Parser for `artifacts/manifest.txt`, the line-oriented artifact index
+//! emitted by `python/compile/aot.py` (see its docstring for the
+//! grammar). Every artifact's I/O contract — parameter tensors, data
+//! inputs, outputs, geometry — is resolved here once at startup; the hot
+//! path only touches the pre-resolved structs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Geom {
+    pub way: usize,
+    pub n_support: usize,
+    pub h: usize,
+    pub mb: usize,
+}
+
+impl Geom {
+    pub fn n_nbp(&self) -> usize {
+        self.n_support - self.h
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TestGeom {
+    pub way: usize,
+    pub n_support: usize,
+    pub mq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub learnable: bool,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    pub model: String,
+    pub kind: String,
+    pub image_size: usize,
+    pub geom: Option<Geom>,
+    pub test_geom: Option<TestGeom>,
+    pub extra: HashMap<String, String>,
+    pub param_group: Option<String>,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactEntry {
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .with_context(|| format!("{}: no output named {name}", self.name))
+    }
+
+    pub fn learnable_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| p.learnable)
+            .map(|p| p.name.clone())
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GroupTensor {
+    pub name: String,
+    pub offset: usize, // in f32 elements
+    pub len: usize,    // in f32 elements
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamGroup {
+    pub name: String,
+    pub file: String,
+    pub tensors: Vec<GroupTensor>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+    pub groups: HashMap<String, ParamGroup>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactEntry> = None;
+        let mut cur_group: Option<ParamGroup> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.is_empty() {
+                continue;
+            }
+            let at = || format!("manifest.txt:{}", lineno + 1);
+            match toks[0] {
+                "artifact" => {
+                    if toks.len() != 6 {
+                        bail!("{}: artifact wants 5 fields", at());
+                    }
+                    cur = Some(ArtifactEntry {
+                        name: toks[1].into(),
+                        path: toks[2].into(),
+                        model: toks[3].into(),
+                        kind: toks[4].into(),
+                        image_size: toks[5].parse()?,
+                        geom: None,
+                        test_geom: None,
+                        extra: HashMap::new(),
+                        param_group: None,
+                        params: vec![],
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "geom" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.geom = Some(Geom {
+                        way: toks[1].parse()?,
+                        n_support: toks[2].parse()?,
+                        h: toks[3].parse()?,
+                        mb: toks[4].parse()?,
+                    });
+                }
+                "testgeom" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.test_geom = Some(TestGeom {
+                        way: toks[1].parse()?,
+                        n_support: toks[2].parse()?,
+                        mq: toks[3].parse()?,
+                    });
+                }
+                "extra" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.extra.insert(toks[1].into(), toks[2].into());
+                }
+                "pgroup" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.param_group = Some(toks[1].into());
+                }
+                "param" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.params.push(ParamSpec {
+                        name: toks[1].into(),
+                        learnable: toks[2] == "1",
+                        shape: parse_dims(&toks[3..])?,
+                    });
+                }
+                "input" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.inputs.push(IoSpec {
+                        name: toks[1].into(),
+                        shape: parse_dims(&toks[2..])?,
+                    });
+                }
+                "output" => {
+                    let a = cur.as_mut().with_context(at)?;
+                    a.outputs.push(IoSpec {
+                        name: toks[1].into(),
+                        shape: parse_dims(&toks[2..])?,
+                    });
+                }
+                "group" => {
+                    cur_group = Some(ParamGroup {
+                        name: toks[1].into(),
+                        file: toks[2].into(),
+                        tensors: vec![],
+                    });
+                }
+                "tensor" => {
+                    let g = cur_group.as_mut().with_context(at)?;
+                    g.tensors.push(GroupTensor {
+                        name: toks[1].into(),
+                        offset: toks[2].parse()?,
+                        len: toks[3].parse()?,
+                        shape: parse_dims(&toks[4..])?,
+                    });
+                }
+                "end" => {
+                    if let Some(a) = cur.take() {
+                        m.artifacts.push(a);
+                    } else if let Some(g) = cur_group.take() {
+                        m.groups.insert(g.name.clone(), g);
+                    } else {
+                        bail!("{}: dangling end", at());
+                    }
+                }
+                other => bail!("{}: unknown record `{other}`", at()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    /// Find an artifact by structural key rather than exact name.
+    pub fn find(
+        &self,
+        model: &str,
+        kind: &str,
+        image_size: usize,
+        pred: impl Fn(&ArtifactEntry) -> bool,
+    ) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.model == model && a.kind == kind && a.image_size == image_size && pred(a)
+            })
+            .with_context(|| format!("no artifact for {model}/{kind}/{image_size}"))
+    }
+}
+
+fn parse_dims(toks: &[&str]) -> Result<Vec<usize>> {
+    toks.iter().map(|t| Ok(t.parse::<usize>()?)).collect()
+}

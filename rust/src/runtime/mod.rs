@@ -1,0 +1,9 @@
+//! PJRT runtime bridge: manifest-driven loading and execution of the
+//! AOT-compiled HLO artifacts. Python is never on this path — the rust
+//! binary is self-contained once `make artifacts` has run.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ArtifactEntry, Geom, Manifest, TestGeom};

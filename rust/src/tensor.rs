@@ -1,0 +1,78 @@
+//! Dense f32 tensors: the host-side value type flowing between the
+//! coordinator and the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+/// Row-major (C-order) f32 tensor. All artifact I/O is f32 — the AOT
+/// layer (python/compile/aot.py) lowers every graph with f32 leaves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar view of a 0-d (or single-element) tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Row `i` of a 2-d tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = *self.shape.last().unwrap_or(&1);
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Argmax over the last axis for row `i` of a 2-d tensor.
+    pub fn row_argmax(&self, i: usize) -> usize {
+        let r = self.row(i);
+        let mut best = 0;
+        for (j, v) in r.iter().enumerate() {
+            if *v > r[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+/// Concatenate tensors' elements into one flat vector (gradient-space ops).
+pub fn flatten_all(ts: &[Tensor]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ts.iter().map(|t| t.len()).sum());
+    for t in ts {
+        out.extend_from_slice(&t.data);
+    }
+    out
+}

@@ -1,0 +1,59 @@
+//! Small shared utilities: timing, statistics, and a tiny property-test
+//! driver (the offline crate set has no proptest; `forall` covers the
+//! coordinator-invariant tests' needs: seeded random cases + failure
+//! reporting with the seed to reproduce).
+
+use std::time::Instant;
+
+/// Mean and 95% confidence half-width (normal approximation, the same
+/// convention as the paper's ± columns).
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, 1.96 * (var / n).sqrt())
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Minimal property-test driver: run `cases` seeded random checks; panic
+/// with the failing seed on the first violation.
+pub fn forall(name: &str, cases: u64, mut check: impl FnMut(u64) -> Result<(), String>) {
+    for case in 0..cases {
+        // Decorrelate case seeds.
+        let seed = case.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xDEAD_BEEF);
+        if let Err(msg) = check(seed) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Format a MAC count the way the paper's tables do (T = 1e12 MACs).
+pub fn fmt_macs(macs: f64) -> String {
+    if macs >= 1e12 {
+        format!("{:.2}T", macs / 1e12)
+    } else if macs >= 1e9 {
+        format!("{:.2}G", macs / 1e9)
+    } else {
+        format!("{:.2}M", macs / 1e6)
+    }
+}

@@ -1,0 +1,229 @@
+//! Integration tests over the REAL AOT artifacts: runtime loading,
+//! train-step execution, the LITE runtime invariants (forward-exactness,
+//! split correctness), adapt/classify wiring for every model family,
+//! checkpoint round-trips, and short optimization runs.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use lite::coordinator::{batch, pretrain_backbone, FineTuner, MetaLearner};
+use lite::data::orbit::{OrbitSim, VideoMode};
+use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
+use lite::eval::score_episode;
+use lite::optim::{Adam, GradAccum};
+use lite::params::ParamStore;
+use lite::runtime::Engine;
+use lite::tensor::Tensor;
+
+fn engine() -> Engine {
+    Engine::load(Engine::default_dir()).expect("artifacts present (run `make artifacts`)")
+}
+
+fn episode(seed: u64, size: usize) -> lite::data::Episode {
+    let suite = md_suite();
+    let cfg = EpisodeConfig::train_default();
+    sample_episode(&suite[seed as usize % suite.len()], &cfg, &mut Rng::new(seed), size)
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let e = engine();
+    assert!(e.manifest.artifacts.len() >= 70);
+    for a in &e.manifest.artifacts {
+        // Every referenced param group exists and covers the params.
+        if let Some(g) = &a.param_group {
+            let group = e.manifest.groups.get(g).expect("group exists");
+            for p in &a.params {
+                let t = group
+                    .tensors
+                    .iter()
+                    .find(|t| t.name == p.name)
+                    .unwrap_or_else(|| panic!("{}: param {} not in group", a.name, p.name));
+                assert_eq!(t.shape, p.shape, "{}: {}", a.name, p.name);
+            }
+        }
+        // Train artifacts: outputs = loss, acc, then one grad per
+        // learnable param.
+        if a.kind == "train" {
+            assert_eq!(
+                a.outputs.len(),
+                2 + a.params.iter().filter(|p| p.learnable).count(),
+                "{}",
+                a.name
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_runs_and_grads_match_shapes() {
+    let e = engine();
+    let name = "protonet_32_w10n40h8m10_train";
+    let entry = e.entry(name).unwrap();
+    let geom = entry.geom.clone().unwrap();
+    let params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let ep = episode(3, 32);
+    let split = batch::sample_split(ep.n_support(), geom.h, &mut Rng::new(1));
+    let data = batch::train_inputs(entry, &geom, &ep, &split, 0..ep.query.len().min(geom.mb)).unwrap();
+    let mut inputs: Vec<Tensor> = params.tensors().to_vec();
+    inputs.extend(data);
+    let out = e.run(name, &inputs).unwrap();
+    let loss = out[0].item().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    let learn: Vec<_> = entry.params.iter().filter(|p| p.learnable).collect();
+    assert_eq!(out.len(), 2 + learn.len());
+    for (g, p) in out[2..].iter().zip(&learn) {
+        assert_eq!(g.shape, p.shape, "{}", p.name);
+        assert!(g.data.iter().all(|v| v.is_finite()), "{} grad NaN", p.name);
+    }
+}
+
+#[test]
+fn lite_forward_value_is_split_invariant_at_runtime() {
+    // The paper's core identity, end to end through PJRT: the loss is
+    // the FULL-support loss no matter which H subset is drawn.
+    let e = engine();
+    let name = "simple_cnaps_32_w10n40h8m10_train";
+    let entry = e.entry(name).unwrap();
+    let geom = entry.geom.clone().unwrap();
+    let params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let ep = episode(5, 32);
+    let mut losses = Vec::new();
+    for seed in 0..3u64 {
+        let split = batch::sample_split(ep.n_support(), geom.h, &mut Rng::new(seed));
+        let data =
+            batch::train_inputs(entry, &geom, &ep, &split, 0..ep.query.len().min(geom.mb)).unwrap();
+        let mut inputs: Vec<Tensor> = params.tensors().to_vec();
+        inputs.extend(data);
+        let out = e.run(name, &inputs).unwrap();
+        losses.push(out[0].item().unwrap());
+    }
+    for w in losses.windows(2) {
+        assert!((w[0] - w[1]).abs() < 2e-3, "losses differ across splits: {losses:?}");
+    }
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let e = engine();
+    let name = "protonet_32_w10n64q16_adapt";
+    let entry = e.entry(name).unwrap();
+    let params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let tg = entry.test_geom.clone().unwrap();
+    let mut ep = episode(7, 32);
+    ep.support.truncate(tg.n_support);
+    let data = batch::adapt_inputs(&tg, &ep).unwrap();
+    let mut inputs: Vec<Tensor> = params.tensors().to_vec();
+    inputs.extend(data);
+    let a = e.run(name, &inputs).unwrap();
+    let b = e.run(name, &inputs).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn adapt_classify_roundtrip_all_models() {
+    let e = engine();
+    for model in ["protonet", "cnaps", "simple_cnaps", "maml"] {
+        let learner = MetaLearner::new(&e, model, 32, None, Some(40), 64).unwrap();
+        let sim = OrbitSim::new(11, 2);
+        let ep = sim.user_episode(0, VideoMode::Clean, &mut Rng::new(4), 32, 4, 1, 3);
+        let preds = learner.predict_episode(&e, &ep).unwrap();
+        assert_eq!(preds.len(), ep.query.len(), "{model}");
+        assert!(preds.iter().all(|&p| p < 10), "{model}: pred out of way range");
+        let m = score_episode(&ep, &preds);
+        assert!((0.0..=1.0).contains(&m.frame_acc), "{model}");
+    }
+}
+
+#[test]
+fn finetuner_adapts_and_beats_chance() {
+    let e = engine();
+    let mut ft = FineTuner::new(&e, 32, 25).unwrap();
+    let bb = pretrain_backbone(&e, 32, 10, 1e-3, 0).unwrap().0;
+    ft.install_backbone(&bb);
+    // An easy episode: colour blobs are linearly separable in features.
+    let suite = md_suite();
+    let birds = suite.iter().find(|d| d.name() == "birds-like").unwrap();
+    let ep = sample_episode(birds, &EpisodeConfig::train_default(), &mut Rng::new(2), 32);
+    let preds = ft.predict_episode(&e, &ep).unwrap();
+    let m = score_episode(&ep, &preds);
+    let chance = 1.0 / ep.way as f64;
+    assert!(m.frame_acc > chance, "ft acc {} <= chance {chance}", m.frame_acc);
+}
+
+#[test]
+fn adam_reduces_pretrain_loss() {
+    let e = engine();
+    let (_, logs) = pretrain_backbone(&e, 32, 25, 1e-3, 3).unwrap();
+    let first: f64 = logs[..5].iter().map(|l| l.loss as f64).sum::<f64>() / 5.0;
+    let last: f64 = logs[logs.len() - 5..].iter().map(|l| l.loss as f64).sum::<f64>() / 5.0;
+    assert!(last < first, "pretrain loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_tensors() {
+    let e = engine();
+    let entry = e.entry("protonet_32_w10n40h8m10_train").unwrap();
+    let mut params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let dir = std::env::temp_dir().join(format!("lite_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("p.ckpt");
+    // Perturb, save, zero, restore.
+    params.get_mut("bb.conv0.w").unwrap().data[0] = 1234.5;
+    params.save(&path).unwrap();
+    let orig = params.get("bb.conv0.w").unwrap().clone();
+    params.get_mut("bb.conv0.w").unwrap().data.iter_mut().for_each(|v| *v = 0.0);
+    let n = params.restore(&path).unwrap();
+    assert_eq!(n, params.names().len());
+    assert_eq!(params.get("bb.conv0.w").unwrap(), &orig);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn grad_accum_averages_and_respects_period() {
+    let mut acc = GradAccum::new(3);
+    let g1 = vec![Tensor::new(vec![2], vec![1.0, 2.0]).unwrap()];
+    let g2 = vec![Tensor::new(vec![2], vec![3.0, 4.0]).unwrap()];
+    let g3 = vec![Tensor::new(vec![2], vec![5.0, 6.0]).unwrap()];
+    assert!(acc.push(&g1).unwrap().is_none());
+    assert!(acc.push(&g2).unwrap().is_none());
+    let avg = acc.push(&g3).unwrap().unwrap();
+    assert_eq!(avg[0].data, vec![3.0, 4.0]);
+    assert_eq!(acc.pending(), 0);
+}
+
+#[test]
+fn adam_step_moves_learnable_only() {
+    let e = engine();
+    let entry = e.entry("simple_cnaps_32_w10n40h8m10_train").unwrap();
+    let mut params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let frozen_before = params.get("bb.conv0.w").unwrap().clone();
+    let learn_before = params.get("enc.conv0.w").unwrap().clone();
+    let grads: Vec<Tensor> = params
+        .learnable_indices()
+        .iter()
+        .map(|&i| {
+            let t = &params.tensors()[i];
+            Tensor::new(t.shape.clone(), vec![0.1; t.len()]).unwrap()
+        })
+        .collect();
+    let mut adam = Adam::new(1e-2);
+    adam.step(&mut params, &grads).unwrap();
+    assert_eq!(params.get("bb.conv0.w").unwrap(), &frozen_before, "frozen moved");
+    assert_ne!(params.get("enc.conv0.w").unwrap(), &learn_before, "learnable did not move");
+}
+
+#[test]
+fn maml_train_artifact_runs() {
+    let e = engine();
+    let name = "maml_32_w10n40h0m10_train";
+    let entry = e.entry(name).unwrap();
+    let geom = entry.geom.clone().unwrap();
+    let params = ParamStore::load(&Engine::default_dir(), &e.manifest, entry).unwrap();
+    let ep = episode(9, 32);
+    let split = batch::sample_split(ep.n_support(), 0, &mut Rng::new(0));
+    let data = batch::train_inputs(entry, &geom, &ep, &split, 0..ep.query.len().min(geom.mb)).unwrap();
+    let mut inputs: Vec<Tensor> = params.tensors().to_vec();
+    inputs.extend(data);
+    let out = e.run(name, &inputs).unwrap();
+    assert!(out[0].item().unwrap().is_finite());
+}
