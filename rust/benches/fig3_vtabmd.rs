@@ -1,7 +1,8 @@
 //! E2 — regenerates Fig 3 / Table D.2: per-dataset accuracy on the
 //! synthetic VTAB+MD suite for SC+LITE (large images), SC (small
 //! images), ProtoNets+LITE, and the FineTuner transfer baseline.
-//! Env knobs: F3_TRAIN_EPISODES / F3_EVAL_EPISODES / F3_SIZE
+//! Env knobs: F3_TRAIN_EPISODES / F3_EVAL_EPISODES / F3_SIZE /
+//! F3_WORKERS (meta-test eval threads; 0 = all cores)
 
 use lite::config::Args;
 
@@ -17,6 +18,8 @@ fn main() {
         env("F3_EVAL_EPISODES", "3"),
         "--image-size".to_string(),
         env("F3_SIZE", "64"),
+        "--workers".to_string(),
+        env("F3_WORKERS", "0"),
     ];
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::fig3_vtabmd(&mut args).unwrap();

@@ -1,7 +1,8 @@
 //! E1 — regenerates Table 1 (+ Fig 1's cost axis): ORBIT accuracy and
 //! test-time adaptation cost for all five methods at both image sizes.
 //! Scaled defaults for one CPU core; crank with env vars:
-//!   T1_TRAIN_EPISODES / T1_USERS / T1_TASKS / T1_MODELS / T1_SIZES
+//!   T1_TRAIN_EPISODES / T1_USERS / T1_TASKS / T1_MODELS / T1_SIZES /
+//!   T1_WORKERS (meta-test eval threads; 0 = all cores)
 
 use lite::config::Args;
 
@@ -21,6 +22,8 @@ fn main() {
         env("T1_MODELS", "finetuner,maml,protonet,cnaps,simple_cnaps"),
         "--sizes".to_string(),
         env("T1_SIZES", "32,64"),
+        "--workers".to_string(),
+        env("T1_WORKERS", "0"),
     ];
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::table1_orbit(&mut args).unwrap();

@@ -15,7 +15,7 @@ use crate::coordinator::{
 use crate::data::orbit::{OrbitSim, VideoMode};
 use crate::data::registry::{md_suite, vtab_suite, Group};
 use crate::data::task::EpisodeConfig;
-use crate::eval::{adapt_cost, eval_dataset, eval_orbit, Predictor};
+use crate::eval::{adapt_cost, eval_dataset, par_eval_dataset, par_eval_orbit, Predictor};
 use crate::runtime::Engine;
 use crate::util::fmt_macs;
 
@@ -75,6 +75,10 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
     let users: usize = args.get("users", 4)?;
     let tasks_per_user: usize = args.get("tasks-per-user", 2)?;
     let seed: u64 = args.get("seed", 0)?;
+    // Meta-test episodes fan out over this many threads (0 = all cores);
+    // the engine is shared, so the parameter-literal cache is warm for
+    // every worker.
+    let workers: usize = args.get("workers", 0)?;
     let sizes: Vec<usize> = parse_list(&args.get_str("sizes", "32,64"))?;
     let models: Vec<String> = args
         .get_str("models", "finetuner,maml,protonet,cnaps,simple_cnaps")
@@ -103,8 +107,8 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
                 learner_holder = orbit_learner(&engine, model, *size, train_episodes, seed)?;
                 Predictor::Meta(&learner_holder)
             };
-            let clean = eval_orbit(&engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1)?;
-            let clutter = eval_orbit(&engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2)?;
+            let clean = par_eval_orbit(&engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, workers)?;
+            let clutter = par_eval_orbit(&engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2, workers)?;
             let steps = match model.as_str() {
                 "maml" => 5,
                 "finetuner" => 50,
@@ -128,7 +132,12 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
         }
     }
     println!("\n(Fig 1 shape: meta-learners reach FineTuner-level accuracy at orders-of-magnitude fewer adaptation MACs.)");
+    print_engine_stats(&engine);
     Ok(())
+}
+
+fn print_engine_stats(engine: &Engine) {
+    eprintln!("{}", engine.stats().report_line());
 }
 
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
@@ -166,6 +175,7 @@ pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
     let seed: u64 = args.get("seed", 0)?;
     let size: usize = args.get("image-size", 64)?;
     let small: usize = args.get("small-size", 32)?;
+    let workers: usize = args.get("workers", 0)?;
     args.finish()?;
     let engine = Engine::load(Engine::default_dir())?;
 
@@ -222,7 +232,7 @@ pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
                 Predictor::Meta(m) => m.image_size,
                 Predictor::Fine(f) => f.image_size,
             };
-            let s = eval_dataset(&engine, p, ds, &cfg, isize, eval_episodes, seed + 7)?;
+            let s = par_eval_dataset(&engine, p, ds, &cfg, isize, eval_episodes, seed + 7, workers)?;
             print!(" {:>15.1}", 100.0 * s.frame_acc.0);
             group_acc.entry((k, ds.group.label())).or_default().push(s.frame_acc.0);
             if ds.group == Group::Md {
@@ -241,6 +251,7 @@ pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
         }
         println!();
     }
+    print_engine_stats(&engine);
     Ok(())
 }
 

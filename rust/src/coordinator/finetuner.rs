@@ -57,12 +57,14 @@ impl FineTuner {
             for (k, img) in images[lo..hi].iter().enumerate() {
                 buf[k * px..(k + 1) * px].copy_from_slice(img);
             }
-            let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
-            inputs.push(Tensor::new(
+            // The frozen extractor's params never change mid-episode, so
+            // the engine serves them from its literal cache across all
+            // 50 head steps' feature batches.
+            let img = Tensor::new(
                 vec![self.feat_batch, self.image_size, self.image_size, 3],
                 buf,
-            )?);
-            let res = engine.run(&self.features_artifact, &inputs)?;
+            )?;
+            let res = engine.run_with_params(&self.features_artifact, &self.params, &[img])?;
             for k in 0..(hi - lo) {
                 out.push(res[0].row(k).to_vec());
             }

@@ -16,6 +16,9 @@ pub struct TrainStats {
     pub loss: f32,
     pub acc: f32,
     pub query_batches: usize,
+    /// Total valid query examples across the batches (the weighting
+    /// denominator — a final partial batch counts its true size).
+    pub queries: usize,
 }
 
 /// Task-adapted state: the adapt artifact's outputs, keyed for the
@@ -86,7 +89,9 @@ impl MetaLearner {
     /// Run Algorithm 1 on one episode: loop over query batches, sample a
     /// fresh H subset per batch, execute the LITE train step, and
     /// accumulate gradients. Returns (stats, task gradients in learnable
-    /// order, averaged over query batches).
+    /// order, averaged over query examples — each batch's in-graph mean
+    /// is weighted by its valid query count, so a final partial batch is
+    /// not over-weighted relative to full batches).
     pub fn train_episode(
         &self,
         engine: &Engine,
@@ -101,9 +106,11 @@ impl MetaLearner {
         let n_batches = batch::n_query_batches(episode, g.mb);
         let mut grads: Option<Vec<Tensor>> = None;
         let mut stats = TrainStats::default();
+        let mut total_q = 0usize;
         for b in 0..n_batches {
             let lo = b * g.mb;
             let hi = (lo + g.mb).min(episode.query.len());
+            let wq = (hi - lo) as f32;
             // Fresh H subset per query batch (Algorithm 1 line 4).
             let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
             let data = batch::train_inputs(
@@ -113,26 +120,34 @@ impl MetaLearner {
                 &split,
                 lo..hi,
             )?;
-            let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
-            inputs.extend(data);
-            let out = engine.run(&self.train_artifact, &inputs)?;
-            stats.loss += out[0].item()?;
-            stats.acc += out[1].item()?;
+            let out = engine.run_with_params(&self.train_artifact, &self.params, &data)?;
+            stats.loss += out[0].item()? * wq;
+            stats.acc += out[1].item()? * wq;
             stats.query_batches += 1;
+            total_q += hi - lo;
             let batch_grads = &out[2..];
             match &mut grads {
-                None => grads = Some(batch_grads.to_vec()),
+                None => {
+                    let mut first = batch_grads.to_vec();
+                    for t in &mut first {
+                        for v in &mut t.data {
+                            *v *= wq;
+                        }
+                    }
+                    grads = Some(first);
+                }
                 Some(acc) => {
                     for (a, g) in acc.iter_mut().zip(batch_grads) {
                         for i in 0..a.data.len() {
-                            a.data[i] += g.data[i];
+                            a.data[i] += wq * g.data[i];
                         }
                     }
                 }
             }
         }
         let mut grads = grads.unwrap();
-        let inv = 1.0 / stats.query_batches as f32;
+        stats.queries = total_q;
+        let inv = 1.0 / total_q as f32;
         for t in &mut grads {
             for v in &mut t.data {
                 *v *= inv;
@@ -153,9 +168,7 @@ impl MetaLearner {
         let entry = engine.entry(name)?;
         let tg = entry.test_geom.clone().context("adapt missing test geom")?;
         let data = batch::adapt_inputs(&tg, episode)?;
-        let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
-        inputs.extend(data);
-        let out = engine.run(name, &inputs)?;
+        let out = engine.run_with_params(name, &self.params, &data)?;
         Ok(TaskState {
             names: entry.outputs.iter().map(|o| o.name.clone()).collect(),
             tensors: out,
@@ -177,18 +190,18 @@ impl MetaLearner {
             .context("model has no classify artifact")?;
         let entry = engine.entry(name)?;
         let tg = entry.test_geom.clone().context("classify missing test geom")?;
-        let mut inputs: Vec<Tensor> = self.params.tensors().to_vec();
+        let mut data: Vec<Tensor> = Vec::with_capacity(entry.inputs.len());
         for spec in &entry.inputs {
             if let Some(pos) = state.names.iter().position(|n| n == &spec.name) {
-                inputs.push(state.tensors[pos].clone());
+                data.push(state.tensors[pos].clone());
             } else if spec.name == "q_x" {
                 let (qx, _) = batch::gather_query(episode, range.clone(), tg.mq, tg.way)?;
-                inputs.push(qx);
+                data.push(qx);
             } else {
                 bail!("{name}: unresolvable input {}", spec.name);
             }
         }
-        let out = engine.run(name, &inputs)?;
+        let out = engine.run_with_params(name, &self.params, &data)?;
         Ok(out[0].clone())
     }
 

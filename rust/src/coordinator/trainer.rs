@@ -160,6 +160,12 @@ pub fn meta_train_with(
             );
         }
     }
+    // Apply the tail of accumulated task gradients: when
+    // `cfg.episodes % accum_period != 0` the last partial accumulation
+    // window would otherwise be silently dropped.
+    if let Some(avg) = accum.flush() {
+        adam.step(&mut learner.params, &avg)?;
+    }
     // Paper protocol: report/keep the best-validation model.
     if let Some((_, params)) = best {
         learner.params = params;
@@ -205,10 +211,11 @@ pub fn pretrain_backbone(
             x[k * px..(k + 1) * px].copy_from_slice(&im.data);
             oh[k * classes + c] = 1.0;
         }
-        let mut inputs: Vec<Tensor> = params.tensors().to_vec();
-        inputs.push(Tensor::new(vec![batch, image_size, image_size, 3], x)?);
-        inputs.push(Tensor::new(vec![batch, classes], oh)?);
-        let out = engine.run(&name, &inputs)?;
+        let data = vec![
+            Tensor::new(vec![batch, image_size, image_size, 3], x)?,
+            Tensor::new(vec![batch, classes], oh)?,
+        ];
+        let out = engine.run_with_params(&name, &params, &data)?;
         let (loss, acc) = (out[0].item()?, out[1].item()?);
         adam.step(&mut params, &out[2..])?;
         logs.push(TrainLog { step, loss, acc });

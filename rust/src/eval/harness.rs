@@ -1,5 +1,15 @@
 //! Meta-test harnesses: run a trained model over test episodes and
 //! aggregate paper-style metrics (mean ± 95% CI, adaptation wall-clock).
+//!
+//! Episode `i` of an evaluation run is always sampled from the derived
+//! stream `Rng::new(seed).split(i)` (and ORBIT task `(user, t)` from
+//! `split(user * 1000 + t)`), independent of execution order. That
+//! contract is what lets `par_eval_dataset` / `par_eval_orbit` fan
+//! episodes over a worker pool and still produce metrics bit-identical
+//! to the serial paths: the tasks are the same, and aggregation happens
+//! in episode-index order. Only `secs_per_task` is wall-clock dependent.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
 
@@ -58,6 +68,23 @@ pub fn summarize(metrics: &[EpisodeMetrics], secs: &[f64]) -> EvalSummary {
     }
 }
 
+/// Score episode `i` of a dataset evaluation run (the shared unit of
+/// work for the serial and parallel paths).
+fn eval_one(
+    engine: &Engine,
+    pred: &Predictor,
+    ds: &Dataset,
+    cfg: &EpisodeConfig,
+    image_size: usize,
+    seed: u64,
+    i: usize,
+) -> Result<(EpisodeMetrics, f64)> {
+    let mut rng = Rng::new(seed).split(i as u64);
+    let ep = sample_episode(ds, cfg, &mut rng, image_size);
+    let (preds, dt) = timed(|| pred.predict(engine, &ep));
+    Ok((score_episode(&ep, &preds?), dt))
+}
+
 /// Evaluate on episodes sampled from one dataset.
 pub fn eval_dataset(
     engine: &Engine,
@@ -68,16 +95,26 @@ pub fn eval_dataset(
     n_episodes: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
-    let mut rng = Rng::new(seed);
-    let mut metrics = Vec::new();
-    let mut secs = Vec::new();
-    for _ in 0..n_episodes {
-        let ep = sample_episode(ds, cfg, &mut rng, image_size);
-        let (preds, dt) = timed(|| pred.predict(engine, &ep));
-        metrics.push(score_episode(&ep, &preds?));
-        secs.push(dt);
-    }
-    Ok(summarize(&metrics, &secs))
+    par_eval_dataset(engine, pred, ds, cfg, image_size, n_episodes, seed, 1)
+}
+
+/// Parallel `eval_dataset`: fans episodes over a scoped worker pool.
+/// Deterministic per-episode RNG splitting plus index-ordered
+/// aggregation make the accuracy metrics bit-identical to the serial
+/// path on the same seed. `workers == 0` uses the machine's available
+/// parallelism.
+#[allow(clippy::too_many_arguments)]
+pub fn par_eval_dataset(
+    engine: &Engine,
+    pred: &Predictor,
+    ds: &Dataset,
+    cfg: &EpisodeConfig,
+    image_size: usize,
+    n_episodes: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<EvalSummary> {
+    par_eval(workers, n_episodes, |i| eval_one(engine, pred, ds, cfg, image_size, seed, i))
 }
 
 /// ORBIT protocol: `tasks_per_user` personalization tasks per test user,
@@ -93,17 +130,87 @@ pub fn eval_orbit(
     frames_per_video: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
+    par_eval_orbit(engine, pred, sim, mode, image_size, tasks_per_user, frames_per_video, seed, 1)
+}
+
+/// Parallel `eval_orbit`: fans the `(user, task)` grid over a scoped
+/// worker pool with the same per-task RNG salts as the serial path, so
+/// the accuracy metrics are bit-identical on the same seed.
+/// `workers == 0` uses the machine's available parallelism.
+#[allow(clippy::too_many_arguments)]
+pub fn par_eval_orbit(
+    engine: &Engine,
+    pred: &Predictor,
+    sim: &OrbitSim,
+    mode: VideoMode,
+    image_size: usize,
+    tasks_per_user: usize,
+    frames_per_video: usize,
+    seed: u64,
+    workers: usize,
+) -> Result<EvalSummary> {
     let rng = Rng::new(seed);
-    let mut metrics = Vec::new();
-    let mut secs = Vec::new();
-    for user in 0..sim.users.len() {
-        for t in 0..tasks_per_user {
-            let mut erng = rng.split((user * 1000 + t) as u64);
-            let ep = sim.user_episode(user, mode, &mut erng, image_size, 6, 2, frames_per_video);
-            let (preds, dt) = timed(|| pred.predict(engine, &ep));
-            metrics.push(score_episode(&ep, &preds?));
+    let n_tasks = sim.users.len() * tasks_per_user;
+    par_eval(workers, n_tasks, |j| {
+        let (user, t) = (j / tasks_per_user, j % tasks_per_user);
+        let mut erng = rng.split((user * 1000 + t) as u64);
+        let ep = sim.user_episode(user, mode, &mut erng, image_size, 6, 2, frames_per_video);
+        let (preds, dt) = timed(|| pred.predict(engine, &ep));
+        Ok((score_episode(&ep, &preds?), dt))
+    })
+}
+
+/// Run `n_tasks` independent evaluation units, serially for
+/// `workers <= 1` (or when there is nothing to parallelize), otherwise
+/// over a scoped worker pool pulling indices from a shared atomic
+/// counter. Results are re-ordered by task index before aggregation so
+/// both paths sum floats in the same order.
+fn par_eval<F>(workers: usize, n_tasks: usize, task: F) -> Result<EvalSummary>
+where
+    F: Fn(usize) -> Result<(EpisodeMetrics, f64)> + Sync,
+{
+    let workers = if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    }
+    .min(n_tasks.max(1));
+    if workers <= 1 {
+        let mut metrics = Vec::with_capacity(n_tasks);
+        let mut secs = Vec::with_capacity(n_tasks);
+        for i in 0..n_tasks {
+            let (m, dt) = task(i)?;
+            metrics.push(m);
             secs.push(dt);
         }
+        return Ok(summarize(&metrics, &secs));
     }
+    let next = AtomicUsize::new(0);
+    let task = &task;
+    let per_worker: Vec<Vec<(usize, EpisodeMetrics, f64)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| -> Result<Vec<(usize, EpisodeMetrics, f64)>> {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_tasks {
+                            return Ok(out);
+                        }
+                        let (m, dt) = task(i)?;
+                        out.push((i, m, dt));
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("eval worker panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let mut all: Vec<(usize, EpisodeMetrics, f64)> = per_worker.into_iter().flatten().collect();
+    all.sort_by_key(|&(i, _, _)| i);
+    let metrics: Vec<EpisodeMetrics> = all.iter().map(|(_, m, _)| m.clone()).collect();
+    let secs: Vec<f64> = all.iter().map(|&(_, _, s)| s).collect();
     Ok(summarize(&metrics, &secs))
 }

@@ -130,6 +130,9 @@ fn cmd_eval(mut args: Args) -> Result<()> {
     let size: usize = args.get("image-size", 32)?;
     let episodes: usize = args.get("episodes", 10)?;
     let seed: u64 = args.get("seed", 1)?;
+    // Episodes fan out over this many eval threads (0 = all cores); the
+    // metrics are bit-identical to --workers 1 on the same seed.
+    let workers: usize = args.get("workers", 0)?;
     let ckpt = args.get_str("ckpt", "");
     args.finish()?;
     let engine = Engine::load(Engine::default_dir())?;
@@ -141,7 +144,7 @@ fn cmd_eval(mut args: Args) -> Result<()> {
     let cfg = EpisodeConfig::test_large(200);
     println!("{:<20} {:>8} {:>10}", "dataset", "acc", "±95%");
     for ds in md_suite() {
-        let s = lite::eval::eval_dataset(
+        let s = lite::eval::par_eval_dataset(
             &engine,
             &lite::eval::Predictor::Meta(&learner),
             &ds,
@@ -149,9 +152,11 @@ fn cmd_eval(mut args: Args) -> Result<()> {
             size,
             episodes,
             seed,
+            workers,
         )?;
         println!("{:<20} {:>8.3} {:>10.3}", ds.name(), s.frame_acc.0, s.frame_acc.1);
     }
+    eprintln!("{}", engine.stats().report_line());
     Ok(())
 }
 

@@ -112,21 +112,86 @@ impl GradAccum {
         }
         self.count += 1;
         if self.count >= self.period {
-            let inv = 1.0 / self.count as f32;
-            let mut out = std::mem::take(&mut self.sums);
-            for t in &mut out {
-                for v in &mut t.data {
-                    *v *= inv;
-                }
-            }
-            self.count = 0;
-            Ok(Some(out))
+            Ok(self.flush())
         } else {
             Ok(None)
         }
     }
 
+    /// Average and return whatever gradients are still pending (the tail
+    /// of a run whose episode count is not a multiple of the period) and
+    /// reset the accumulator; `None` when nothing is pending. Call after
+    /// the episode loop so the last partial window is not dropped.
+    pub fn flush(&mut self) -> Option<Vec<Tensor>> {
+        if self.count == 0 {
+            return None;
+        }
+        let inv = 1.0 / self.count as f32;
+        let mut out = std::mem::take(&mut self.sums);
+        for t in &mut out {
+            for v in &mut t.data {
+                *v *= inv;
+            }
+        }
+        self.count = 0;
+        Some(out)
+    }
+
     pub fn pending(&self) -> usize {
         self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(vals: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::new(vec![vals.len()], vals.to_vec()).unwrap()]
+    }
+
+    #[test]
+    fn flush_averages_the_tail() {
+        // period 4, but only 2 tasks pushed: flush must return their mean.
+        let mut acc = GradAccum::new(4);
+        assert!(acc.push(&g(&[1.0, 3.0])).unwrap().is_none());
+        assert!(acc.push(&g(&[3.0, 5.0])).unwrap().is_none());
+        assert_eq!(acc.pending(), 2);
+        let tail = acc.flush().expect("pending gradients");
+        assert_eq!(tail[0].data, vec![2.0, 4.0]);
+        assert_eq!(acc.pending(), 0);
+    }
+
+    #[test]
+    fn flush_empty_is_none() {
+        let mut acc = GradAccum::new(3);
+        assert!(acc.flush().is_none());
+        // A full period consumes everything: nothing left to flush.
+        assert!(acc.push(&g(&[1.0])).unwrap().is_none());
+        assert!(acc.push(&g(&[2.0])).unwrap().is_none());
+        assert!(acc.push(&g(&[3.0])).unwrap().is_some());
+        assert!(acc.flush().is_none());
+    }
+
+    #[test]
+    fn accumulator_reusable_after_flush() {
+        let mut acc = GradAccum::new(2);
+        acc.push(&g(&[4.0])).unwrap();
+        assert_eq!(acc.flush().unwrap()[0].data, vec![4.0]);
+        assert!(acc.push(&g(&[1.0])).unwrap().is_none());
+        let avg = acc.push(&g(&[3.0])).unwrap().unwrap();
+        assert_eq!(avg[0].data, vec![2.0]);
+    }
+
+    #[test]
+    fn sgd_updates_all_learnable() {
+        let mut params = crate::params::ParamStore::from_tensors(
+            vec!["w".into()],
+            vec![Tensor::new(vec![2], vec![1.0, 2.0]).unwrap()],
+        )
+        .unwrap();
+        let mut sgd = Sgd::new(0.5);
+        sgd.step(&mut params, &g(&[2.0, 4.0])).unwrap();
+        assert_eq!(params.get("w").unwrap().data, vec![0.0, 0.0]);
     }
 }

@@ -6,22 +6,61 @@
 //! simple self-describing binary format, and overlaid across models by
 //! name (e.g. the pretrained `bb.*` backbone tensors onto a CNAPs
 //! variant's frozen backbone slots).
+//!
+//! Each store carries a `(store_id, version)` identity: the id is unique
+//! per store (clones included), the version bumps on every mutating
+//! path. The runtime engine keys its parameter-literal cache on this
+//! pair, so stale device-side literals can never be replayed after an
+//! optimizer step, overlay, or checkpoint restore.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::tensor::Tensor;
 
-#[derive(Clone, Debug)]
+/// Process-wide store-identity source: every `ParamStore` (including
+/// clones) gets a unique id, so `(store_id, version)` pairs never
+/// collide across stores and the engine's parameter-literal cache can
+/// key on them safely.
+static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_store_id() -> u64 {
+    NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+#[derive(Debug)]
 pub struct ParamStore {
     names: Vec<String>,
     tensors: Vec<Tensor>,
     index: HashMap<String, usize>,
     learnable: Vec<bool>,
+    /// Unique identity of this store (fresh per construction AND per
+    /// clone — clones diverge independently).
+    store_id: u64,
+    /// Mutation counter: bumped by every path that can change tensor
+    /// values (`get_mut`, `learnable_tensor_mut` — i.e. every
+    /// `Adam`/`Sgd` step — `overlay`, `restore`). The engine reuses
+    /// cached parameter literals only while `(store_id, version)` is
+    /// unchanged.
+    version: u64,
+}
+
+impl Clone for ParamStore {
+    fn clone(&self) -> Self {
+        Self {
+            names: self.names.clone(),
+            tensors: self.tensors.clone(),
+            index: self.index.clone(),
+            learnable: self.learnable.clone(),
+            store_id: next_store_id(),
+            version: 0,
+        }
+    }
 }
 
 impl ParamStore {
@@ -62,7 +101,22 @@ impl ParamStore {
             .map(|(i, n)| (n.clone(), i))
             .collect();
         let learnable = vec![true; names.len()];
-        Ok(Self { names, tensors, index, learnable })
+        Ok(Self { names, tensors, index, learnable, store_id: next_store_id(), version: 0 })
+    }
+
+    /// Unique identity of this store (cache key half 1).
+    pub fn store_id(&self) -> u64 {
+        self.store_id
+    }
+
+    /// Mutation counter (cache key half 2); see the field doc for what
+    /// bumps it.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn bump_version(&mut self) {
+        self.version = self.version.wrapping_add(1);
     }
 
     /// Mark learnable flags per the artifact entry (order must match the
@@ -89,6 +143,9 @@ impl ParamStore {
 
     pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
         if let Some(&i) = self.index.get(name) {
+            // Conservatively treat handing out a mutable borrow as a
+            // mutation: cached literals for this store are invalidated.
+            self.bump_version();
             Some(&mut self.tensors[i])
         } else {
             None
@@ -121,6 +178,7 @@ impl ParamStore {
     /// `k` (the k-th learnable tensor, matching train-artifact grad order).
     pub fn learnable_tensor_mut(&mut self, k: usize) -> &mut Tensor {
         let idx = self.learnable_indices()[k];
+        self.bump_version();
         &mut self.tensors[idx]
     }
 
@@ -139,6 +197,9 @@ impl ParamStore {
                     n += 1;
                 }
             }
+        }
+        if n > 0 {
+            self.bump_version();
         }
         n
     }
@@ -198,6 +259,9 @@ impl ParamStore {
                 }
             }
         }
+        if restored > 0 {
+            self.bump_version();
+        }
         Ok(restored)
     }
 }
@@ -210,6 +274,78 @@ fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_store() -> ParamStore {
+        ParamStore::from_tensors(
+            vec!["bb.w".into(), "head.w".into()],
+            vec![
+                Tensor::new(vec![2], vec![1.0, 2.0]).unwrap(),
+                Tensor::new(vec![3], vec![3.0, 4.0, 5.0]).unwrap(),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn version_stable_under_reads() {
+        let s = toy_store();
+        let v = s.version();
+        let _ = s.get("bb.w");
+        let _ = s.tensors();
+        let _ = s.learnable_indices();
+        assert_eq!(s.version(), v);
+    }
+
+    #[test]
+    fn mutating_paths_bump_version() {
+        let mut s = toy_store();
+        let v0 = s.version();
+        s.get_mut("bb.w").unwrap().data[0] = 9.0;
+        let v1 = s.version();
+        assert_ne!(v1, v0, "get_mut must invalidate cached literals");
+        let _ = s.learnable_tensor_mut(0);
+        let v2 = s.version();
+        assert_ne!(v2, v1, "learnable_tensor_mut must invalidate cached literals");
+        let other = toy_store();
+        assert_ne!(s.overlay(&other, "bb."), 0);
+        assert_ne!(s.version(), v2, "overlay must invalidate cached literals");
+    }
+
+    #[test]
+    fn restore_bumps_version() {
+        let mut s = toy_store();
+        let dir = std::env::temp_dir().join(format!("lite_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v.ckpt");
+        s.save(&path).unwrap();
+        let v = s.version();
+        assert_eq!(s.restore(&path).unwrap(), 2);
+        assert_ne!(s.version(), v, "restore must invalidate cached literals");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clone_gets_fresh_identity() {
+        let s = toy_store();
+        let c = s.clone();
+        assert_ne!(c.store_id(), s.store_id(), "clones must not share cache keys");
+        let d = toy_store();
+        assert_ne!(d.store_id(), s.store_id());
+    }
+
+    #[test]
+    fn overlay_without_match_keeps_version() {
+        let mut s = toy_store();
+        let other = toy_store();
+        let v = s.version();
+        assert_eq!(s.overlay(&other, "nope."), 0);
+        assert_eq!(s.version(), v);
+    }
 }
 
 fn read_line(buf: &[u8], pos: &mut usize) -> Result<String> {

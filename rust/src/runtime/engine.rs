@@ -1,18 +1,20 @@
 //! PJRT execution engine: loads HLO-text artifacts, compiles them on the
-//! CPU PJRT client, caches executables, and runs them on host tensors.
+//! CPU PJRT client, caches executables AND marshaled parameter literals,
+//! and runs them on host tensors. Thread-safe: see the module doc in
+//! `runtime/mod.rs` for the caching/threading contract.
 //!
 //! Follows the /opt/xla-example/load_hlo pattern: HLO **text** is the
 //! interchange format (jax >= 0.5 serialized protos use 64-bit ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::params::ParamStore;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::tensor::Tensor;
 
@@ -23,15 +25,69 @@ pub struct EngineStats {
     pub compile_secs: f64,
     pub executions: usize,
     pub execute_secs: f64,
+    /// Individual parameter literals marshaled host->device. With the
+    /// version cache this grows O(params x optimizer steps), not
+    /// O(params x executions).
+    pub param_literal_builds: usize,
+    /// `run_with_params` executions whose parameter literals came
+    /// entirely from the cache (only the data inputs were marshaled).
+    pub param_cache_hits: usize,
+}
+
+impl EngineStats {
+    /// One-line cache report shared by the CLI and the bench harnesses:
+    /// cached-param runs skipping literal rebuilds is the marshaling win
+    /// the runtime refactor is for.
+    pub fn report_line(&self) -> String {
+        format!(
+            "[engine] {} compiles ({:.1}s), {} executions ({:.1}s), {} param-literal builds, {} cached-param runs",
+            self.compiles,
+            self.compile_secs,
+            self.executions,
+            self.execute_secs,
+            self.param_literal_builds,
+            self.param_cache_hits
+        )
+    }
+}
+
+/// Cached parameter literals for one artifact, valid only while the
+/// originating `ParamStore` still reports the same `(store_id, version)`.
+struct ParamLiterals {
+    store_id: u64,
+    version: u64,
+    literals: Arc<Vec<xla::Literal>>,
 }
 
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<EngineStats>,
+    cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    param_cache: RwLock<HashMap<String, ParamLiterals>>,
+    stats: RwLock<EngineStats>,
 }
+
+// SAFETY: all interior mutability (executable cache, parameter-literal
+// cache, stats) is behind `RwLock`s, and compilation is serialized under
+// the executable cache's write lock. The underlying C++ PJRT CPU client
+// supports concurrent `Execute` calls from multiple threads, and the
+// cached `xla::Literal` values are immutable once built. The wrapper
+// types are `!Send`/`!Sync` only because the binding does not assert
+// this contract.
+//
+// LOAD-BEARING ASSUMPTION (audit when swapping the `xla` binding): no
+// rust-side handle with a NON-atomic refcount may be cloned on the
+// execute path. If the vendored binding's client handle is `Rc`-based
+// AND `execute`/result-buffer creation clones it, concurrent execution
+// would race that refcount; in that case `Engine::execute` must take a
+// lock around `exe.execute(..)` (serializing device execution but
+// keeping episode synthesis/scoring parallel) or the binding must be
+// patched to `Arc`. The `engine_shared_across_threads` /
+// `par_eval_is_bit_identical_to_serial` integration tests exercise this
+// contract in anger.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Load the manifest and create a CPU PJRT client. `dir` is the
@@ -44,8 +100,9 @@ impl Engine {
             client,
             dir,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            cache: RwLock::new(HashMap::new()),
+            param_cache: RwLock::new(HashMap::new()),
+            stats: RwLock::new(EngineStats::default()),
         })
     }
 
@@ -69,12 +126,20 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        self.stats.read().unwrap().clone()
     }
 
     /// Compile (or fetch from cache) an artifact's executable.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.read().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        // Compile while holding the write lock: this both dedupes
+        // concurrent compiles of the same artifact and serializes every
+        // clone of the PJRT client handle (see the Send/Sync SAFETY
+        // comment above).
+        let mut cache = self.cache.write().unwrap();
+        if let Some(e) = cache.get(name) {
             return Ok(e.clone());
         }
         let entry = self.manifest.get(name)?;
@@ -89,19 +154,21 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("XLA-compiling {name}"))?;
-        let exe = Rc::new(exe);
+        let exe = Arc::new(exe);
+        cache.insert(name.to_string(), exe.clone());
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.write().unwrap();
             s.compiles += 1;
             s.compile_secs += t0.elapsed().as_secs_f64();
         }
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Execute an artifact: `inputs` are positional (params first, then
     /// data inputs, exactly the manifest order). Returns the output
-    /// tensors in manifest output order.
+    /// tensors in manifest output order. Marshals every input on every
+    /// call — prefer `run_with_params` when the leading inputs come from
+    /// a `ParamStore`, which reuses cached parameter literals.
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let entry = self.manifest.get(name)?;
         let want = entry.params.len() + entry.inputs.len();
@@ -114,21 +181,93 @@ impl Engine {
                 inputs.len()
             );
         }
-        let exe = self.executable(name)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(to_literal)
             .collect::<Result<_>>()
             .with_context(|| format!("building literals for {name}"))?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute(name, entry, &refs)
+    }
+
+    /// Execute an artifact whose leading inputs are the tensors of
+    /// `params`: parameter literals are cached per artifact and reused
+    /// until the store's version changes (any mutation bumps it), so
+    /// steady-state calls marshal only the small `data` inputs.
+    pub fn run_with_params(
+        &self,
+        name: &str,
+        params: &ParamStore,
+        data: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.get(name)?;
+        if params.tensors().len() != entry.params.len() {
+            bail!(
+                "{name}: store has {} tensors, artifact wants {} params",
+                params.tensors().len(),
+                entry.params.len()
+            );
+        }
+        if data.len() != entry.inputs.len() {
+            bail!(
+                "{name}: expected {} data inputs, got {}",
+                entry.inputs.len(),
+                data.len()
+            );
+        }
+        let cached = self.param_literals(name, params)?;
+        let data_lits: Vec<xla::Literal> = data
+            .iter()
+            .map(to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("building data literals for {name}"))?;
+        let mut refs: Vec<&xla::Literal> = cached.iter().collect();
+        refs.extend(data_lits.iter());
+        self.execute(name, entry, &refs)
+    }
+
+    /// Fetch (or rebuild) the cached parameter literals for `name`.
+    fn param_literals(&self, name: &str, params: &ParamStore) -> Result<Arc<Vec<xla::Literal>>> {
+        let (sid, ver) = (params.store_id(), params.version());
+        if let Some(c) = self.param_cache.read().unwrap().get(name) {
+            if c.store_id == sid && c.version == ver {
+                self.stats.write().unwrap().param_cache_hits += 1;
+                return Ok(c.literals.clone());
+            }
+        }
+        let lits: Vec<xla::Literal> = params
+            .tensors()
+            .iter()
+            .map(to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("building param literals for {name}"))?;
+        let lits = Arc::new(lits);
+        self.stats.write().unwrap().param_literal_builds += lits.len();
+        self.param_cache.write().unwrap().insert(
+            name.to_string(),
+            ParamLiterals { store_id: sid, version: ver, literals: lits.clone() },
+        );
+        Ok(lits)
+    }
+
+    /// Shared execution tail: run the compiled executable on positional
+    /// literals and decode the output tuple per the manifest.
+    fn execute(
+        &self,
+        name: &str,
+        entry: &ArtifactEntry,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self.executable(name)?;
         let t0 = Instant::now();
         let result = exe
-            .execute::<xla::Literal>(&literals)
+            .execute(inputs)
             .with_context(|| format!("executing {name}"))?;
         let lit = result[0][0]
             .to_literal_sync()
             .context("fetching result literal")?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.write().unwrap();
             s.executions += 1;
             s.execute_secs += t0.elapsed().as_secs_f64();
         }
@@ -161,4 +300,16 @@ fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     }
     let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
     Ok(lit.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<EngineStats>();
+    }
 }

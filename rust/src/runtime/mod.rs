@@ -1,6 +1,25 @@
 //! PJRT runtime bridge: manifest-driven loading and execution of the
 //! AOT-compiled HLO artifacts. Python is never on this path — the rust
 //! binary is self-contained once `make artifacts` has run.
+//!
+//! ## Threading and caching contract
+//!
+//! `Engine` is `Send + Sync`: the executable cache, the parameter-
+//! literal cache, and the stats counters all live behind `RwLock`s, so
+//! one engine instance can serve many evaluation workers concurrently
+//! (see `eval::par_eval_dataset` / `eval::par_eval_orbit`).
+//!
+//! `Engine::run_with_params` keeps the marshaled parameter literals of
+//! each artifact cached, keyed by the `ParamStore`'s
+//! `(store_id, version)` pair. Literals are reused as long as that pair
+//! is unchanged; any store mutation — an `Adam`/`Sgd` step through
+//! `learnable_tensor_mut`, a `get_mut`, an `overlay`, a checkpoint
+//! `restore` — bumps the version and forces a rebuild on the next run,
+//! and a `clone()` gets a fresh identity altogether. Steady-state
+//! evaluation therefore marshals only the small per-batch data inputs:
+//! parameter-literal builds grow O(params x optimizer steps) instead of
+//! O(params x executions), which `EngineStats::param_literal_builds` /
+//! `EngineStats::param_cache_hits` make observable.
 
 pub mod engine;
 pub mod manifest;
