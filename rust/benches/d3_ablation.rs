@@ -1,6 +1,7 @@
 //! E5 — regenerates Table D.3: LITE (large image, large task) vs
 //! no-LITE small-image and no-LITE small-task ablations of Simple
-//! CNAPs. Env knobs: D3_TRAIN_EPISODES / D3_EVAL_EPISODES
+//! CNAPs. Env knobs: D3_TRAIN_EPISODES / D3_EVAL_EPISODES /
+//! D3_JSON (write the machine-readable report here; see BENCHMARKS.md)
 
 use lite::config::Args;
 
@@ -9,12 +10,16 @@ fn env(k: &str, d: &str) -> String {
 }
 
 fn main() {
-    let argv = vec![
+    let mut argv = vec![
         "--train-episodes".to_string(),
         env("D3_TRAIN_EPISODES", "25"),
         "--eval-episodes".to_string(),
         env("D3_EVAL_EPISODES", "2"),
     ];
+    if let Ok(path) = std::env::var("D3_JSON") {
+        argv.push("--json".to_string());
+        argv.push(path);
+    }
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::d3_ablation(&mut args).unwrap();
 }

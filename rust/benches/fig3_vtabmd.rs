@@ -2,7 +2,8 @@
 //! synthetic VTAB+MD suite for SC+LITE (large images), SC (small
 //! images), ProtoNets+LITE, and the FineTuner transfer baseline.
 //! Env knobs: F3_TRAIN_EPISODES / F3_EVAL_EPISODES / F3_SIZE /
-//! F3_WORKERS (meta-test eval threads; 0 = all cores)
+//! F3_WORKERS (meta-test eval threads; 0 = all cores) /
+//! F3_JSON (write the machine-readable report here; see BENCHMARKS.md)
 
 use lite::config::Args;
 
@@ -11,7 +12,7 @@ fn env(k: &str, d: &str) -> String {
 }
 
 fn main() {
-    let argv = vec![
+    let mut argv = vec![
         "--train-episodes".to_string(),
         env("F3_TRAIN_EPISODES", "30"),
         "--eval-episodes".to_string(),
@@ -21,6 +22,10 @@ fn main() {
         "--workers".to_string(),
         env("F3_WORKERS", "0"),
     ];
+    if let Ok(path) = std::env::var("F3_JSON") {
+        argv.push("--json".to_string());
+        argv.push(path);
+    }
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::fig3_vtabmd(&mut args).unwrap();
 }

@@ -2,7 +2,8 @@
 //! test-time adaptation cost for all five methods at both image sizes.
 //! Scaled defaults for one CPU core; crank with env vars:
 //!   T1_TRAIN_EPISODES / T1_USERS / T1_TASKS / T1_MODELS / T1_SIZES /
-//!   T1_WORKERS (meta-test eval threads; 0 = all cores)
+//!   T1_WORKERS (meta-test eval threads; 0 = all cores) /
+//!   T1_JSON (write the machine-readable report here; see BENCHMARKS.md)
 
 use lite::config::Args;
 
@@ -11,7 +12,7 @@ fn env(k: &str, d: &str) -> String {
 }
 
 fn main() {
-    let argv = vec![
+    let mut argv = vec![
         "--train-episodes".to_string(),
         env("T1_TRAIN_EPISODES", "30"),
         "--users".to_string(),
@@ -25,6 +26,10 @@ fn main() {
         "--workers".to_string(),
         env("T1_WORKERS", "0"),
     ];
+    if let Ok(path) = std::env::var("T1_JSON") {
+        argv.push("--json".to_string());
+        argv.push(path);
+    }
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::table1_orbit(&mut args).unwrap();
 }

@@ -1,6 +1,7 @@
 //! E3 — regenerates Table 2 / D.4–D.6: accuracy vs |H| for Simple CNAPs
 //! and ProtoNets (64px), plus the 32px H=40-vs-full columns.
-//! Env knobs: T2_TRAIN_EPISODES / T2_EVAL_EPISODES
+//! Env knobs: T2_TRAIN_EPISODES / T2_EVAL_EPISODES /
+//! T2_JSON (write the machine-readable report here; see BENCHMARKS.md)
 
 use lite::config::Args;
 
@@ -9,12 +10,16 @@ fn env(k: &str, d: &str) -> String {
 }
 
 fn main() {
-    let argv = vec![
+    let mut argv = vec![
         "--train-episodes".to_string(),
         env("T2_TRAIN_EPISODES", "25"),
         "--eval-episodes".to_string(),
         env("T2_EVAL_EPISODES", "2"),
     ];
+    if let Ok(path) = std::env::var("T2_JSON") {
+        argv.push("--json".to_string());
+        argv.push(path);
+    }
     let mut args = Args::parse(&argv).unwrap();
     lite::bench::table2_hsweep(&mut args).unwrap();
 }

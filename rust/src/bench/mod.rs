@@ -1,10 +1,24 @@
 //! Benchmark harnesses regenerating every table and figure of the
-//! paper's evaluation (DESIGN.md §6 experiment index). Shared between
-//! the CLI `bench-*` subcommands and the `cargo bench` targets.
+//! paper's evaluation (DESIGN.md §6 experiment index).
 //!
-//! All harnesses are seeded and take `--train-episodes` /
-//! `--eval-episodes` knobs: defaults are sized for a single CPU core
-//! (shape, not absolute numbers — see EXPERIMENTS.md).
+//! Structure (post scenario-registry refactor):
+//! - data-producing runners (`orbit_report`, `vtab_report`,
+//!   `hsweep_report`, `ablation_report`) build a
+//!   [`report::ScenarioReport`] — gateable metrics + human tables;
+//! - [`scenarios`] registers them (plus runtime/analytic scenarios)
+//!   behind the uniform `Scenario` trait for `lite bench run`;
+//! - the legacy `bench-*` CLI entrypoints below are thin wrappers:
+//!   parse flags, run the runner, render the tables, optionally write
+//!   the JSON report (`--json out.json`).
+//!
+//! All harnesses are seeded; metrics are bit-identical across reruns
+//! and worker counts (the `eval::par_eval_*` contract), which is what
+//! lets `lite bench compare` gate regressions at 0% tolerance on
+//! same-seed runs.
+
+pub mod scenarios;
+
+use std::path::Path;
 
 use anyhow::Result;
 
@@ -16,11 +30,38 @@ use crate::data::orbit::{OrbitSim, VideoMode};
 use crate::data::registry::{md_suite, vtab_suite, Group};
 use crate::data::task::EpisodeConfig;
 use crate::eval::{adapt_cost, eval_dataset, par_eval_dataset, par_eval_orbit, Predictor};
-use crate::runtime::Engine;
-use crate::util::fmt_macs;
+use crate::report::{Direction, EngineSnapshot, RunReport, ScenarioReport, Table};
+use crate::runtime::{Engine, EngineStats};
+use crate::util::{fmt_macs, mean, parse_usize_list};
+use self::scenarios::Knobs;
 
 pub const ORBIT_TEST_SUPPORT: usize = 64;
 pub const VTAB_TEST_SUPPORT: usize = 200;
+
+/// Single source of truth for each runner's knob names and defaults:
+/// the legacy CLI flags (`legacy_bench`) and the runner's own parsing
+/// (`Knobs::with_defaults` + `need`) both read these tables, so they
+/// cannot drift. The registry scenarios overlay cheaper values first
+/// (see `bench::scenarios`).
+pub(crate) const ORBIT_DEFAULTS: &[(&str, &str)] = &[
+    ("train-episodes", "40"),
+    ("users", "4"),
+    ("tasks-per-user", "2"),
+    ("workers", "0"),
+    ("sizes", "32,64"),
+    ("models", "finetuner,maml,protonet,cnaps,simple_cnaps"),
+];
+pub(crate) const VTAB_DEFAULTS: &[(&str, &str)] = &[
+    ("train-episodes", "40"),
+    ("eval-episodes", "4"),
+    ("image-size", "64"),
+    ("small-size", "32"),
+    ("workers", "0"),
+];
+pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] =
+    &[("train-episodes", "40"), ("eval-episodes", "3")];
+pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] =
+    &[("train-episodes", "40"), ("eval-episodes", "3")];
 
 /// Meta-train a learner on ORBIT-sim train users.
 fn train_on_orbit(
@@ -69,46 +110,152 @@ fn orbit_learner(
     Ok(learner)
 }
 
-/// E1 — Table 1 (+ D.1): ORBIT accuracy and test-time adaptation cost.
-pub fn table1_orbit(args: &mut Args) -> Result<()> {
-    let train_episodes: usize = args.get("train-episodes", 40)?;
-    let users: usize = args.get("users", 4)?;
-    let tasks_per_user: usize = args.get("tasks-per-user", 2)?;
+/// Per-scenario delta between two cumulative engine-stat snapshots.
+pub(crate) fn stats_delta(before: &EngineStats, after: &EngineStats) -> EngineSnapshot {
+    EngineSnapshot {
+        compiles: (after.compiles - before.compiles) as u64,
+        executions: (after.executions - before.executions) as u64,
+        param_literal_builds: (after.param_literal_builds - before.param_literal_builds) as u64,
+        param_cache_hits: (after.param_cache_hits - before.param_cache_hits) as u64,
+        compile_secs: after.compile_secs - before.compile_secs,
+        execute_secs: after.execute_secs - before.execute_secs,
+    }
+}
+
+/// Lowercased `_`-joined metric-name fragment ("SC+LITE" -> "sc_lite").
+pub(crate) fn metric_key(parts: &[&str]) -> String {
+    let mut out = String::new();
+    for part in parts {
+        for c in part.chars() {
+            if c.is_ascii_alphanumeric() {
+                out.push(c.to_ascii_lowercase());
+            } else if !out.is_empty() && !out.ends_with('_') {
+                out.push('_');
+            }
+        }
+        if !out.is_empty() && !out.ends_with('_') {
+            out.push('_');
+        }
+    }
+    out.trim_end_matches('_').to_string()
+}
+
+/// Render a scenario report for the terminal: tables to stdout, the
+/// engine cache line to stderr (same stream split as the pre-registry
+/// printers).
+pub fn render_report(rep: &ScenarioReport) {
+    for t in &rep.tables {
+        print!("{}", t.render());
+    }
+    if let Some(e) = &rep.engine {
+        eprintln!(
+            "[engine] {} compiles ({:.1}s), {} executions ({:.1}s), {} param-literal builds, {} cached-param runs",
+            e.compiles, e.compile_secs, e.executions, e.execute_secs,
+            e.param_literal_builds, e.param_cache_hits
+        );
+    }
+}
+
+/// Validate a `--json` flag value: the flag parser turns a bare
+/// `--json` (no operand) into the literal "true", which would silently
+/// become a file named `true` — reject it instead.
+pub fn json_path(path: &str) -> Result<&str> {
+    if path == "true" {
+        anyhow::bail!("--json needs a file path (e.g. --json out.json)");
+    }
+    Ok(path)
+}
+
+/// Write a one-scenario run report when `--json path` was given.
+fn maybe_write_json(path: &str, rep: &ScenarioReport) -> Result<()> {
+    if path.is_empty() {
+        return Ok(());
+    }
+    let run = RunReport { reports: vec![rep.clone()] };
+    run.save(Path::new(json_path(path)?))?;
+    eprintln!("[bench] wrote report to {path}");
+    Ok(())
+}
+
+fn fmt_acc(acc: (f64, f64)) -> String {
+    format!("{:.3}±{:.3}", acc.0, acc.1)
+}
+
+/// Shared shape of the four legacy `bench-*` entrypoints: CLI flags ->
+/// knobs (same names, original defaults), fail fast on a bad `--json`,
+/// load the engine, run the scenario runner, render the tables, write
+/// the report if asked. Single-sourced so the json/engine handling
+/// cannot drift between wrappers.
+fn legacy_bench(
+    args: &mut Args,
+    defaults: &[(&str, &str)],
+    runner: impl Fn(&Engine, &Knobs, u64) -> Result<ScenarioReport>,
+) -> Result<()> {
+    let mut knobs = Knobs::default();
+    for (k, d) in defaults {
+        knobs.set(k, args.get_str(k, d));
+    }
     let seed: u64 = args.get("seed", 0)?;
+    let json = args.get_str("json", "");
+    args.finish()?;
+    if !json.is_empty() {
+        json_path(&json)?; // fail fast, before training/eval
+    }
+    let engine = Engine::load(Engine::default_dir())?;
+    let rep = runner(&engine, &knobs, seed)?;
+    render_report(&rep);
+    maybe_write_json(&json, &rep)
+}
+
+/// E1 — Table 1 (+ D.1): ORBIT accuracy and test-time adaptation cost.
+/// Knobs: train-episodes, users, tasks-per-user, workers, sizes, models.
+pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+    let knobs = knobs.with_defaults(ORBIT_DEFAULTS);
+    let train_episodes: usize = knobs.need("train-episodes")?;
+    let users: usize = knobs.need("users")?;
+    let tasks_per_user: usize = knobs.need("tasks-per-user")?;
     // Meta-test episodes fan out over this many threads (0 = all cores);
     // the engine is shared, so the parameter-literal cache is warm for
-    // every worker.
-    let workers: usize = args.get("workers", 0)?;
-    let sizes: Vec<usize> = parse_list(&args.get_str("sizes", "32,64"))?;
-    let models: Vec<String> = args
-        .get_str("models", "finetuner,maml,protonet,cnaps,simple_cnaps")
+    // every worker. Not part of the recorded config: worker count
+    // cannot change the metrics (bit-identity contract).
+    let workers: usize = knobs.need("workers")?;
+    let sizes = parse_usize_list(knobs.need_str("sizes")?)?;
+    let models: Vec<String> = knobs
+        .need_str("models")?
         .split(',')
         .map(|s| s.trim().to_string())
         .collect();
-    args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
-    let test_sim = OrbitSim::new(seed ^ 0x7E57, users);
 
-    println!("\nTable 1 — ORBIT teachable object recognition ({} test users x {} tasks)", users, tasks_per_user);
-    println!(
-        "{:<14} {:>4} {:>6} {:>11} {:>11} {:>11} {:>11} {:>9} {:>6} {:>8}",
-        "model", "px", "LITE", "clean-frame", "clean-video", "clut-frame", "clut-video", "MACs", "steps", "s/task"
+    let mut rep = ScenarioReport::new("orbit", seed);
+    rep.config("train-episodes", train_episodes);
+    rep.config("users", users);
+    rep.config("tasks-per-user", tasks_per_user);
+    rep.config("sizes", knobs.need_str("sizes")?);
+    rep.config("models", models.join(","));
+
+    let stats0 = engine.stats();
+    let test_sim = OrbitSim::new(seed ^ 0x7E57, users);
+    let mut table = Table::new(
+        &format!(
+            "Table 1 — ORBIT teachable object recognition ({users} test users x {tasks_per_user} tasks)"
+        ),
+        &["model", "px", "LITE", "clean-frame", "clean-video", "clut-frame", "clut-video", "MACs", "steps", "s/task"],
     );
     for size in &sizes {
         for model in &models {
             let (pred_holder, learner_holder);
             let pred: Predictor = if model == "finetuner" {
-                let mut ft = FineTuner::new(&engine, *size, 50)?;
-                let bb = pretrained_backbone(&engine, *size, 150, seed)?;
+                let mut ft = FineTuner::new(engine, *size, 50)?;
+                let bb = pretrained_backbone(engine, *size, 150, seed)?;
                 ft.install_backbone(&bb);
                 pred_holder = ft;
                 Predictor::Fine(&pred_holder)
             } else {
-                learner_holder = orbit_learner(&engine, model, *size, train_episodes, seed)?;
+                learner_holder = orbit_learner(engine, model, *size, train_episodes, seed)?;
                 Predictor::Meta(&learner_holder)
             };
-            let clean = par_eval_orbit(&engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, workers)?;
-            let clutter = par_eval_orbit(&engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2, workers)?;
+            let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, workers)?;
+            let clutter = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2, workers)?;
             let steps = match model.as_str() {
                 "maml" => 5,
                 "finetuner" => 50,
@@ -120,24 +267,42 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
             } else {
                 ""
             };
-            println!(
-                "{:<14} {:>4} {:>6} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>6.3}±{:.3} {:>9} {:>6} {:>8.2}",
-                model, size, lite,
-                clean.frame_acc.0, clean.frame_acc.1,
-                clean.video_acc.0, clean.video_acc.1,
-                clutter.frame_acc.0, clutter.frame_acc.1,
-                clutter.video_acc.0, clutter.video_acc.1,
-                fmt_macs(cost.macs as f64), cost.steps_label(), clean.secs_per_task
+            // Progressive: long runs should show each row as it lands
+            // (and keep the numbers if the process dies mid-sweep).
+            eprintln!(
+                "[bench] orbit {model} {size}px: clean {:.3} clutter {:.3} ({:.2}s/task)",
+                clean.frame_acc.0, clutter.frame_acc.0, clean.secs_per_task
             );
+            let px = format!("{size}px");
+            let key = metric_key(&[model.as_str(), px.as_str()]);
+            clean.push_metrics(&format!("{key}_clean"), &mut rep.metrics);
+            clutter.push_metrics(&format!("{key}_clutter"), &mut rep.metrics);
+            rep.metric(&format!("{key}_adapt_macs"), cost.macs as f64, Direction::Lower);
+            rep.timing(&format!("{key}_secs_per_task"), clean.secs_per_task);
+            table.row(vec![
+                model.clone(),
+                size.to_string(),
+                lite.to_string(),
+                fmt_acc(clean.frame_acc),
+                fmt_acc(clean.video_acc),
+                fmt_acc(clutter.frame_acc),
+                fmt_acc(clutter.video_acc),
+                fmt_macs(cost.macs as f64),
+                cost.steps_label(),
+                format!("{:.2}", clean.secs_per_task),
+            ]);
         }
     }
-    println!("\n(Fig 1 shape: meta-learners reach FineTuner-level accuracy at orders-of-magnitude fewer adaptation MACs.)");
-    print_engine_stats(&engine);
-    Ok(())
+    rep.tables.push(table);
+    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    Ok(rep)
 }
 
-fn print_engine_stats(engine: &Engine) {
-    eprintln!("{}", engine.stats().report_line());
+/// Legacy CLI entrypoint (`lite bench-orbit`, `cargo bench table1_orbit`).
+pub fn table1_orbit(args: &mut Args) -> Result<()> {
+    legacy_bench(args, ORBIT_DEFAULTS, orbit_report)?;
+    println!("\n(Fig 1 shape: meta-learners reach FineTuner-level accuracy at orders-of-magnitude fewer adaptation MACs.)");
+    Ok(())
 }
 
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
@@ -169,16 +334,22 @@ pub fn synth_learner(
 }
 
 /// E2 — Fig 3 / Table D.2: per-dataset accuracy on synthetic VTAB+MD.
-pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
-    let train_episodes: usize = args.get("train-episodes", 40)?;
-    let eval_episodes: usize = args.get("eval-episodes", 4)?;
-    let seed: u64 = args.get("seed", 0)?;
-    let size: usize = args.get("image-size", 64)?;
-    let small: usize = args.get("small-size", 32)?;
-    let workers: usize = args.get("workers", 0)?;
-    args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
+/// Knobs: train-episodes, eval-episodes, image-size, small-size, workers.
+pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+    let knobs = knobs.with_defaults(VTAB_DEFAULTS);
+    let train_episodes: usize = knobs.need("train-episodes")?;
+    let eval_episodes: usize = knobs.need("eval-episodes")?;
+    let size: usize = knobs.need("image-size")?;
+    let small: usize = knobs.need("small-size")?;
+    let workers: usize = knobs.need("workers")?;
 
+    let mut rep = ScenarioReport::new("vtab", seed);
+    rep.config("train-episodes", train_episodes);
+    rep.config("eval-episodes", eval_episodes);
+    rep.config("image-size", size);
+    rep.config("small-size", small);
+
+    let stats0 = engine.stats();
     // Contenders: SC+LITE (large images), SC (small images), ProtoNets
     // +LITE (large), FineTuner (transfer baseline, large). Contenders
     // whose artifacts don't exist at this image size (e.g. the 96px
@@ -189,14 +360,14 @@ pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
         ("SC(small)", "simple_cnaps", small),
         ("ProtoNets+LITE", "protonet", size),
     ] {
-        match synth_learner(&engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed) {
+        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed) {
             Ok(l) => metas.push((label.to_string(), l)),
             Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
         }
     }
-    let ft: Option<FineTuner> = match FineTuner::new(&engine, size, 50) {
+    let ft: Option<FineTuner> = match FineTuner::new(engine, size, 50) {
         Ok(mut f) => {
-            let bb = pretrained_backbone(&engine, size, 150, seed)?;
+            let bb = pretrained_backbone(engine, size, 150, seed)?;
             f.install_backbone(&bb);
             Some(f)
         }
@@ -218,55 +389,80 @@ pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
     suite.extend(vtab_suite());
     let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
 
-    println!("\nFig 3 / Table D.2 — synthetic VTAB+MD accuracy (%)");
-    print!("{:<22} {:>6}", "dataset", "group");
+    let mut headers: Vec<&str> = vec!["dataset", "group"];
     for (name, _) in &preds {
-        print!(" {name:>15}");
+        headers.push(name);
     }
-    println!();
+    let mut table = Table::new("Fig 3 / Table D.2 — synthetic VTAB+MD accuracy (%)", &headers);
     let mut group_acc: std::collections::HashMap<(usize, &str), Vec<f64>> = Default::default();
     for ds in &suite {
-        print!("{:<22} {:>6}", ds.name(), short_group(ds.group));
+        let mut row = vec![ds.name().to_string(), short_group(ds.group).to_string()];
         for (k, (_, p)) in preds.iter().enumerate() {
             let isize = match p {
                 Predictor::Meta(m) => m.image_size,
                 Predictor::Fine(f) => f.image_size,
             };
-            let s = par_eval_dataset(&engine, p, ds, &cfg, isize, eval_episodes, seed + 7, workers)?;
-            print!(" {:>15.1}", 100.0 * s.frame_acc.0);
+            let s = par_eval_dataset(engine, p, ds, &cfg, isize, eval_episodes, seed + 7, workers)?;
+            row.push(format!("{:.1}", 100.0 * s.frame_acc.0));
             group_acc.entry((k, ds.group.label())).or_default().push(s.frame_acc.0);
-            if ds.group == Group::Md {
-            } else {
+            if ds.group != Group::Md {
                 group_acc.entry((k, "VTAB(all)")).or_default().push(s.frame_acc.0);
             }
         }
-        println!();
+        eprintln!("[bench] vtab {}: {}", ds.name(), row[2..].join(" "));
+        table.row(row);
     }
-    println!("\ngroup means:");
+    rep.tables.push(table);
+
+    let mut means = Table::new(
+        "group means (%)",
+        &{
+            let mut h: Vec<&str> = vec!["group"];
+            for (name, _) in &preds {
+                h.push(name);
+            }
+            h
+        },
+    );
     for g in ["MD-v2", "VTAB(all)", "natural", "specialized", "structured"] {
-        print!("{:<29}", g);
-        for k in 0..preds.len() {
-            let acc = group_acc.get(&(k, g)).map(|v| 100.0 * crate::util::mean(v)).unwrap_or(f64::NAN);
-            print!(" {acc:>15.1}");
+        let mut row = vec![g.to_string()];
+        for (k, (name, _)) in preds.iter().enumerate() {
+            let acc = group_acc.get(&(k, g)).map(|v| mean(v)).unwrap_or(f64::NAN);
+            row.push(format!("{:.1}", 100.0 * acc));
+            rep.metric(
+                &format!("{}_{}_acc", metric_key(&[*name]), metric_key(&[g])),
+                acc,
+                Direction::Higher,
+            );
         }
-        println!();
+        means.row(row);
     }
-    print_engine_stats(&engine);
-    Ok(())
+    rep.tables.push(means);
+    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    Ok(rep)
 }
 
-/// E3 — Table 2 / D.4–D.6: accuracy vs |H|.
-pub fn table2_hsweep(args: &mut Args) -> Result<()> {
-    let train_episodes: usize = args.get("train-episodes", 40)?;
-    let eval_episodes: usize = args.get("eval-episodes", 3)?;
-    let seed: u64 = args.get("seed", 0)?;
-    args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
-    let sweep_cfg = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
+/// Legacy CLI entrypoint (`lite bench-vtab`, `cargo bench fig3_vtabmd`).
+pub fn fig3_vtabmd(args: &mut Args) -> Result<()> {
+    legacy_bench(args, VTAB_DEFAULTS, vtab_report)
+}
 
-    println!("\nTable 2 — accuracy vs |H| (support pool N=80)");
-    println!("{:<16} {:>4} {:>4} {:>10} {:>10}", "model", "px", "|H|", "MD-like", "VTAB-like");
-    let cases: Vec<(&str, usize, usize)> = vec![
+/// E3 — Table 2 / D.4–D.6: accuracy vs |H|. Knobs: train-episodes,
+/// eval-episodes, max-cases (truncates the sweep for registry runs).
+pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+    let knobs = knobs.with_defaults(HSWEEP_DEFAULTS);
+    let train_episodes: usize = knobs.need("train-episodes")?;
+    let eval_episodes: usize = knobs.need("eval-episodes")?;
+    // Registry-only knob (not a legacy flag): truncate the sweep.
+    let max_cases: usize = knobs.get("max-cases", usize::MAX)?;
+
+    let mut rep = ScenarioReport::new("hsweep", seed);
+    rep.config("train-episodes", train_episodes);
+    rep.config("eval-episodes", eval_episodes);
+
+    let stats0 = engine.stats();
+    let sweep_cfg = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
+    let mut cases: Vec<(&str, usize, usize)> = vec![
         ("simple_cnaps", 64, 1),
         ("simple_cnaps", 64, 10),
         ("simple_cnaps", 64, 40),
@@ -278,35 +474,63 @@ pub fn table2_hsweep(args: &mut Args) -> Result<()> {
         ("simple_cnaps", 32, 40),
         ("simple_cnaps", 32, 80),
     ];
+    cases.truncate(max_cases.max(1));
+    rep.config("cases", cases.len());
+
+    let mut table = Table::new(
+        "Table 2 — accuracy vs |H| (support pool N=80)",
+        &["model", "px", "|H|", "MD-like", "VTAB-like"],
+    );
     for (model, size, h) in cases {
-        let learner = synth_learner(&engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed)?;
+        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];
         for ds in md_suite() {
-            md_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
+            md_acc.push(eval_dataset(engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
         }
         for ds in vtab_suite() {
-            vt_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
+            vt_acc.push(eval_dataset(engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 3)?.frame_acc.0);
         }
-        println!(
-            "{:<16} {:>4} {:>4} {:>10.1} {:>10.1}",
-            model, size, h,
-            100.0 * crate::util::mean(&md_acc),
-            100.0 * crate::util::mean(&vt_acc)
+        eprintln!(
+            "[bench] hsweep {model} {size}px |H|={h}: md {:.3} vtab {:.3}",
+            mean(&md_acc), mean(&vt_acc)
         );
+        let px = format!("{size}px");
+        let hk = format!("h{h}");
+        let key = metric_key(&[model, px.as_str(), hk.as_str()]);
+        rep.metric(&format!("{key}_md_acc"), mean(&md_acc), Direction::Higher);
+        rep.metric(&format!("{key}_vtab_acc"), mean(&vt_acc), Direction::Higher);
+        table.row(vec![
+            model.to_string(),
+            size.to_string(),
+            h.to_string(),
+            format!("{:.1}", 100.0 * mean(&md_acc)),
+            format!("{:.1}", 100.0 * mean(&vt_acc)),
+        ]);
     }
-    Ok(())
+    rep.tables.push(table);
+    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    Ok(rep)
+}
+
+/// Legacy CLI entrypoint (`lite bench-hsweep`, `cargo bench table2_hsweep`).
+pub fn table2_hsweep(args: &mut Args) -> Result<()> {
+    legacy_bench(args, HSWEEP_DEFAULTS, hsweep_report)
 }
 
 /// E5 — Table D.3: LITE vs small-task vs small-image ablation.
-pub fn d3_ablation(args: &mut Args) -> Result<()> {
-    let train_episodes: usize = args.get("train-episodes", 40)?;
-    let eval_episodes: usize = args.get("eval-episodes", 3)?;
-    let seed: u64 = args.get("seed", 0)?;
-    args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
+/// Knobs: train-episodes, eval-episodes.
+pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+    let knobs = knobs.with_defaults(ABLATION_DEFAULTS);
+    let train_episodes: usize = knobs.need("train-episodes")?;
+    let eval_episodes: usize = knobs.need("eval-episodes")?;
 
+    let mut rep = ScenarioReport::new("ablation", seed);
+    rep.config("train-episodes", train_episodes);
+    rep.config("eval-episodes", eval_episodes);
+
+    let stats0 = engine.stats();
     // (no LITE, small image, large task) / (no LITE, large image, small
     // task) / (LITE, large image, large task) — D.3's three columns.
     let large_task = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
@@ -316,27 +540,42 @@ pub fn d3_ablation(args: &mut Args) -> Result<()> {
         ("noLITE-largeimg-smalltask", 64, Some(80), small_task),
         ("LITE-largeimg-largetask", 64, Some(10), large_task),
     ];
-    println!("\nTable D.3 — Simple CNAPs ablation");
-    println!("{:<28} {:>10} {:>10}", "config", "MD-like", "VTAB-like");
+    let mut table = Table::new(
+        "Table D.3 — Simple CNAPs ablation",
+        &["config", "MD-like", "VTAB-like"],
+    );
     for (label, size, h, ep_cfg) in cases {
-        let learner = synth_learner(&engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed)?;
+        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];
         for ds in md_suite() {
-            md_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
+            md_acc.push(eval_dataset(engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
         }
         for ds in vtab_suite() {
-            vt_acc.push(eval_dataset(&engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
+            vt_acc.push(eval_dataset(engine, &Predictor::Meta(&learner), &ds, &cfg, size, eval_episodes, seed + 5)?.frame_acc.0);
         }
-        println!(
-            "{:<28} {:>10.1} {:>10.1}",
-            label,
-            100.0 * crate::util::mean(&md_acc),
-            100.0 * crate::util::mean(&vt_acc)
+        eprintln!(
+            "[bench] ablation {label}: md {:.3} vtab {:.3}",
+            mean(&md_acc), mean(&vt_acc)
         );
+        let key = metric_key(&[label]);
+        rep.metric(&format!("{key}_md_acc"), mean(&md_acc), Direction::Higher);
+        rep.metric(&format!("{key}_vtab_acc"), mean(&vt_acc), Direction::Higher);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.1}", 100.0 * mean(&md_acc)),
+            format!("{:.1}", 100.0 * mean(&vt_acc)),
+        ]);
     }
-    Ok(())
+    rep.tables.push(table);
+    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    Ok(rep)
+}
+
+/// Legacy CLI entrypoint (`lite bench-ablation`, `cargo bench d3_ablation`).
+pub fn d3_ablation(args: &mut Args) -> Result<()> {
+    legacy_bench(args, ABLATION_DEFAULTS, ablation_report)
 }
 
 fn short_group(g: Group) -> &'static str {
@@ -348,8 +587,32 @@ fn short_group(g: Group) -> &'static str {
     }
 }
 
-fn parse_list(s: &str) -> Result<Vec<usize>> {
-    s.split(',')
-        .map(|x| Ok(x.trim().parse::<usize>()?))
-        .collect()
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_keys_are_sanitized() {
+        assert_eq!(metric_key(&["SC+LITE"]), "sc_lite");
+        assert_eq!(metric_key(&["SC(small)"]), "sc_small");
+        assert_eq!(metric_key(&["ProtoNets+LITE", "64px"]), "protonets_lite_64px");
+        assert_eq!(metric_key(&["MD-v2"]), "md_v2");
+        assert_eq!(metric_key(&["VTAB(all)"]), "vtab_all");
+        assert_eq!(metric_key(&["noLITE-smallimg-largetask"]), "nolite_smallimg_largetask");
+    }
+
+    #[test]
+    fn parse_list_accepts_and_rejects() {
+        // Well-formed lists (the accepting path).
+        assert_eq!(parse_usize_list("32,64").unwrap(), vec![32, 64]);
+        assert_eq!(parse_usize_list(" 8 , 16 ").unwrap(), vec![8, 16]);
+        assert_eq!(parse_usize_list("7").unwrap(), vec![7]);
+        // Empty segments get a clear message, not an opaque parse error.
+        for bad in ["32,", ",32", "32,,64", ""] {
+            let err = parse_usize_list(bad).unwrap_err().to_string();
+            assert!(err.contains("empty"), "`{bad}` -> {err}");
+        }
+        let err = parse_usize_list("32,abc").unwrap_err().to_string();
+        assert!(err.contains("abc"), "{err}");
+    }
 }

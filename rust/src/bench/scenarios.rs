@@ -1,0 +1,730 @@
+//! The scenario registry: every benchmark this repo can run, as a
+//! uniform `Scenario` — a name, tags, config knobs, and a seeded
+//! `run -> ScenarioReport`. `lite bench run [--filter s] [--json out]`
+//! walks this registry; the legacy `bench-*` subcommands are thin
+//! wrappers over the same runners (see `bench::table1_orbit` et al).
+//!
+//! Scenario defaults here are sized so a full `lite bench run` finishes
+//! on one CPU core; the legacy subcommands keep their original, larger
+//! defaults. All knobs are recorded in the report's `config` section,
+//! so `bench compare` can warn when two reports weren't produced by
+//! the same configuration.
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::{ablation_report, hsweep_report, orbit_report, stats_delta, vtab_report};
+use crate::coordinator::MetaLearner;
+use crate::data::registry::md_suite;
+use crate::data::rng::Rng;
+use crate::data::task::{sample_episode, Episode, EpisodeConfig};
+use crate::eval::{adapt_cost, par_eval_dataset, EvalSummary, Predictor};
+use crate::memory::{mib, peak_bytes, Mode};
+use crate::report::{Direction, RunReport, ScenarioReport, Table};
+use crate::runtime::Engine;
+use crate::util::{fmt_macs, parse_usize_list, timed};
+
+/// Ordered string config knobs (`key=value`): the scenario-facing
+/// subset of CLI flags. Insertion-ordered so resolved configs serialize
+/// deterministically.
+#[derive(Clone, Debug, Default)]
+pub struct Knobs {
+    pairs: Vec<(String, String)>,
+}
+
+impl Knobs {
+    /// Parse a `k=v,k2=v2` list (the CLI's `--knobs` flag). Empty input
+    /// is an empty knob set. A comma-separated segment WITHOUT `=`
+    /// continues the previous value, so list-valued knobs parse
+    /// naturally: `episodes=3,worker-sweep=1,2,4` -> episodes=3,
+    /// worker-sweep=1,2,4.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut out = Knobs::default();
+        // Continuations must attach to the most recently PARSED key,
+        // which is not `pairs.last()` when a later `k=v` overrides an
+        // earlier key in place.
+        let mut last_key: Option<String> = None;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                if s.trim().is_empty() {
+                    continue;
+                }
+                bail!("empty knob in `{s}` (trailing or doubled comma?)");
+            }
+            match part.split_once('=') {
+                Some((k, v)) => {
+                    out.set(k.trim(), v.trim());
+                    last_key = Some(k.trim().to_string());
+                }
+                None => match &last_key {
+                    Some(key) => {
+                        let (_, v) = out
+                            .pairs
+                            .iter_mut()
+                            .find(|(p, _)| p == key)
+                            .expect("last parsed key is present");
+                        v.push(',');
+                        v.push_str(part);
+                    }
+                    None => bail!("knob `{part}` is not of the form key=value"),
+                },
+            }
+        }
+        Ok(out)
+    }
+
+    /// Set (or replace) a knob.
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        let value = value.to_string();
+        match self.pairs.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value,
+            None => self.pairs.push((key.to_string(), value)),
+        }
+    }
+
+    pub fn get_raw(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get_raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("knob {key}={v}: {e}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get_raw(key).unwrap_or(default).to_string()
+    }
+
+    /// Parse a knob that must be present (use after `with_defaults`
+    /// has filled the scenario's defaults table, so "missing" means a
+    /// defaults-table bug, and a bad value still names the knob).
+    pub fn need<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self.need_str(key)?;
+        v.parse().map_err(|e| anyhow::anyhow!("knob {key}={v}: {e}"))
+    }
+
+    /// String view of a knob that must be present.
+    pub fn need_str(&self, key: &str) -> Result<&str> {
+        self.get_raw(key)
+            .ok_or_else(|| anyhow::anyhow!("missing knob `{key}` (not in the defaults table?)"))
+    }
+
+    pub fn pairs(&self) -> &[(String, String)] {
+        &self.pairs
+    }
+
+    /// This knob set, with `defaults` filled in for absent keys — how
+    /// scenarios apply their registry-sized defaults without clobbering
+    /// user overrides.
+    pub fn with_defaults(&self, defaults: &[(&str, &str)]) -> Knobs {
+        let mut out = self.clone();
+        for (k, v) in defaults {
+            if out.get_raw(k).is_none() {
+                out.set(k, v);
+            }
+        }
+        out
+    }
+}
+
+/// One registered benchmark.
+pub trait Scenario: Sync {
+    fn name(&self) -> &'static str;
+    /// Filter tags (`lite bench run --filter smoke` selects by substring
+    /// over name and tags).
+    fn tags(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// One-line description for `lite bench list`.
+    fn about(&self) -> &'static str;
+    /// False for analytic scenarios that run without AOT artifacts.
+    fn needs_engine(&self) -> bool {
+        true
+    }
+    /// Seeded run. `engine` is `Some` whenever `needs_engine()` (the
+    /// runner loads it once for the whole registry walk).
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport>;
+}
+
+fn need_engine<'a>(engine: Option<&'a Engine>, name: &str) -> Result<&'a Engine> {
+    engine.ok_or_else(|| {
+        anyhow::anyhow!("scenario `{name}` needs the AOT artifacts (run `make artifacts`)")
+    })
+}
+
+/// All registered scenarios, cheap-analytic first.
+pub fn registry() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(MemoryModel),
+        Box::new(AdaptCostModel),
+        Box::new(CacheEfficiency),
+        Box::new(EvalThroughput),
+        Box::new(GradcheckRmse),
+        Box::new(Orbit),
+        Box::new(Vtab),
+        Box::new(Hsweep),
+        Box::new(Ablation),
+    ]
+}
+
+/// Substring filter over name and tags; empty matches everything.
+pub fn matches_filter(s: &dyn Scenario, filter: &str) -> bool {
+    filter.is_empty()
+        || s.name().contains(filter)
+        || s.tags().iter().any(|t| t.contains(filter))
+}
+
+/// Run every scenario matching `filter` and bundle the reports. The
+/// engine is loaded lazily: a filter selecting only analytic scenarios
+/// (e.g. `--filter smoke`) runs without artifacts.
+pub fn run_filtered(filter: &str, knobs: &Knobs, seed: u64) -> Result<RunReport> {
+    let scenarios = registry();
+    let selected: Vec<&dyn Scenario> = scenarios
+        .iter()
+        .map(|s| s.as_ref())
+        .filter(|s| matches_filter(*s, filter))
+        .collect();
+    if selected.is_empty() {
+        let names: Vec<&str> = scenarios.iter().map(|s| s.name()).collect();
+        bail!("no scenario matches filter `{filter}` (available: {})", names.join(", "));
+    }
+    let engine = if selected.iter().any(|s| s.needs_engine()) {
+        Some(Engine::load(Engine::default_dir())?)
+    } else {
+        None
+    };
+    let mut run = RunReport::default();
+    for s in selected {
+        eprintln!("[bench] scenario `{}`...", s.name());
+        let (res, secs) = timed(|| s.run(engine.as_ref(), knobs, seed));
+        let mut rep = res.with_context(|| format!("scenario `{}`", s.name()))?;
+        rep.timing("scenario_total", secs);
+        run.reports.push(rep);
+    }
+    Ok(run)
+}
+
+// ---------------------------------------------------------------------
+// Analytic scenarios (no artifacts needed — these carry the `smoke` tag
+// so the regression gate itself is exercisable on any machine).
+// ---------------------------------------------------------------------
+
+/// E6 — the paper's §2 memory-model claims, from the analytic
+/// accountant. Gates both absolute MiB figures and the structural
+/// claims (LITE flat in N; LITE at small H below checkpointing).
+struct MemoryModel;
+
+impl Scenario for MemoryModel {
+    fn name(&self) -> &'static str {
+        "memory-model"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["smoke", "analytic"]
+    }
+    fn about(&self) -> &'static str {
+        "analytic peak activation memory (E6): full vs LITE vs checkpointing"
+    }
+    fn needs_engine(&self) -> bool {
+        false
+    }
+    fn run(&self, _engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let mb: usize = knobs.get("query-batch", 10)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("query-batch", mb);
+        let mut table = Table::new(
+            "peak activation memory per meta-train step (MiB)",
+            &["px", "N", "full", "lite(H=8)", "lite(H=40)", "checkpoint"],
+        );
+        for &px in &[32usize, 64, 96] {
+            for &n in &[40usize, 80, 200, 1000] {
+                table.row(vec![
+                    px.to_string(),
+                    n.to_string(),
+                    format!("{:.2}", mib(peak_bytes(Mode::Full, px, n, mb))),
+                    format!("{:.2}", mib(peak_bytes(Mode::Lite { h: 8, chunk: 8 }, px, n, mb))),
+                    format!("{:.2}", mib(peak_bytes(Mode::Lite { h: 40, chunk: 8 }, px, n, mb))),
+                    format!("{:.2}", mib(peak_bytes(Mode::Checkpoint, px, n, mb))),
+                ]);
+            }
+        }
+        rep.tables.push(table);
+        rep.metric(
+            "full_64px_n80_mib",
+            mib(peak_bytes(Mode::Full, 64, 80, mb)),
+            Direction::Lower,
+        );
+        rep.metric(
+            "lite_h8_64px_n1000_mib",
+            mib(peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 1000, mb)),
+            Direction::Lower,
+        );
+        rep.metric(
+            "lite_h40_64px_n80_mib",
+            mib(peak_bytes(Mode::Lite { h: 40, chunk: 8 }, 64, 80, mb)),
+            Direction::Lower,
+        );
+        rep.metric(
+            "ckpt_64px_n200_mib",
+            mib(peak_bytes(Mode::Checkpoint, 64, 200, mb)),
+            Direction::Lower,
+        );
+        let ratio = peak_bytes(Mode::Lite { h: 40, chunk: 8 }, 32, 80, mb) as f64
+            / peak_bytes(Mode::Full, 32, 80, mb) as f64;
+        rep.metric("lite_h40_over_full_32px_n80", ratio, Direction::Info);
+        // Structural claims as 0/1 gates.
+        let flat = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 50, mb)
+            == peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 1000, mb);
+        rep.metric("lite_flat_in_n", if flat { 1.0 } else { 0.0 }, Direction::Higher);
+        let beats = peak_bytes(Mode::Lite { h: 8, chunk: 8 }, 64, 200, mb)
+            < peak_bytes(Mode::Checkpoint, 64, 200, mb);
+        rep.metric(
+            "lite_beats_checkpoint_at_h8",
+            if beats { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+        Ok(rep)
+    }
+}
+
+/// Table 1's MACs/steps columns from the analytic adaptation-cost
+/// model: any drift in the cost accounting fails the gate.
+struct AdaptCostModel;
+
+impl Scenario for AdaptCostModel {
+    fn name(&self) -> &'static str {
+        "adapt-cost"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["smoke", "analytic"]
+    }
+    fn about(&self) -> &'static str {
+        "analytic test-time adaptation cost (Table 1 MACs/steps columns)"
+    }
+    fn needs_engine(&self) -> bool {
+        false
+    }
+    fn run(&self, _engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let size: usize = knobs.get("image-size", 64)?;
+        let n_support: usize = knobs.get("n-support", 100)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("image-size", size);
+        rep.config("n-support", n_support);
+        let mut table = Table::new(
+            "test-time adaptation cost (analytic)",
+            &["model", "MACs", "steps"],
+        );
+        for (model, steps) in
+            [("protonet", 1), ("cnaps", 1), ("simple_cnaps", 1), ("maml", 5), ("finetuner", 50)]
+        {
+            let cost = adapt_cost(model, size, n_support, steps);
+            table.row(vec![
+                model.to_string(),
+                fmt_macs(cost.macs as f64),
+                cost.steps_label(),
+            ]);
+            rep.metric(&format!("{model}_adapt_macs"), cost.macs as f64, Direction::Lower);
+            rep.metric(&format!("{model}_steps"), cost.steps as f64, Direction::Info);
+        }
+        rep.tables.push(table);
+        Ok(rep)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime scenarios (need the AOT artifacts).
+// ---------------------------------------------------------------------
+
+/// Steady-state engine caching: repeated episodic prediction through one
+/// `ParamStore` must serve parameter literals from the cache (the PR-1
+/// marshaling win, as a gate).
+struct CacheEfficiency;
+
+impl Scenario for CacheEfficiency {
+    fn name(&self) -> &'static str {
+        "cache-efficiency"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "param-literal cache behavior under repeated episodic prediction"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        let episodes: usize = knobs.get("episodes", 4)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("episodes", episodes);
+        rep.config("image-size", size);
+        let learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        let suite = md_suite();
+        let ds = &suite[2]; // birds-like
+        let cfg = EpisodeConfig::test_large(64);
+        let eps: Vec<Episode> = (0..episodes)
+            .map(|i| sample_episode(ds, &cfg, &mut Rng::new(seed).split(i as u64), size))
+            .collect();
+        // Two identical serial passes: the first pays compilation and
+        // the initial literal marshal, the second must be all cache.
+        let s0 = engine.stats();
+        for ep in &eps {
+            learner.predict_episode(engine, ep)?;
+        }
+        let s1 = engine.stats();
+        for ep in &eps {
+            learner.predict_episode(engine, ep)?;
+        }
+        let s2 = engine.stats();
+        let mut table = Table::new(
+            "engine counters per pass",
+            &["pass", "executions", "literal-builds", "cached-param runs"],
+        );
+        table.row(vec![
+            "warm".into(),
+            (s1.executions - s0.executions).to_string(),
+            (s1.param_literal_builds - s0.param_literal_builds).to_string(),
+            (s1.param_cache_hits - s0.param_cache_hits).to_string(),
+        ]);
+        table.row(vec![
+            "steady".into(),
+            (s2.executions - s1.executions).to_string(),
+            (s2.param_literal_builds - s1.param_literal_builds).to_string(),
+            (s2.param_cache_hits - s1.param_cache_hits).to_string(),
+        ]);
+        rep.tables.push(table);
+        rep.metric(
+            "warm_pass_literal_builds",
+            (s1.param_literal_builds - s0.param_literal_builds) as f64,
+            Direction::Info,
+        );
+        rep.metric(
+            "steady_state_literal_builds",
+            (s2.param_literal_builds - s1.param_literal_builds) as f64,
+            Direction::Lower,
+        );
+        let steady_execs = (s2.executions - s1.executions).max(1);
+        rep.metric(
+            "steady_state_cache_hit_rate",
+            (s2.param_cache_hits - s1.param_cache_hits) as f64 / steady_execs as f64,
+            Direction::Higher,
+        );
+        rep.engine = Some(stats_delta(&s0, &s2));
+        Ok(rep)
+    }
+}
+
+/// Parallel-eval throughput: worker sweep over `par_eval_dataset`, with
+/// the serial/parallel bit-identity contract gated alongside.
+struct EvalThroughput;
+
+impl Scenario for EvalThroughput {
+    fn name(&self) -> &'static str {
+        "eval-throughput"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "episodes/sec across eval worker counts + serial/parallel bit-identity"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        let episodes: usize = knobs.get("episodes", 6)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        // NOT named `workers`: that knob is a scalar thread count for
+        // the orbit/vtab runners, and the knob namespace is shared
+        // across every scenario in one `bench run`.
+        let workers = parse_usize_list(&knobs.get_str("worker-sweep", "1,2,4"))?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("episodes", episodes);
+        rep.config("image-size", size);
+        rep.config("worker-sweep", knobs.get_str("worker-sweep", "1,2,4"));
+        let learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        let suite = md_suite();
+        let ds = &suite[2]; // birds-like
+        let cfg = EpisodeConfig::test_large(64);
+        let s0 = engine.stats();
+        let mut table = Table::new(
+            "eval throughput (worker sweep)",
+            &["workers", "eps/s", "speedup", "frame-acc"],
+        );
+        let mut reference: Option<EvalSummary> = None;
+        let mut base_rate = 0.0f64;
+        let mut identical = true;
+        for &w in &workers {
+            let (res, secs) = timed(|| {
+                par_eval_dataset(
+                    engine,
+                    &Predictor::Meta(&learner),
+                    ds,
+                    &cfg,
+                    size,
+                    episodes,
+                    seed + 1,
+                    w,
+                )
+            });
+            let summary = res?;
+            let rate = episodes as f64 / secs.max(1e-9);
+            match &reference {
+                None => {
+                    base_rate = rate;
+                    reference = Some(summary.clone());
+                }
+                Some(r) => {
+                    identical &= r.frame_acc == summary.frame_acc
+                        && r.video_acc == summary.video_acc
+                        && r.ftr == summary.ftr;
+                }
+            }
+            table.row(vec![
+                w.to_string(),
+                format!("{rate:.2}"),
+                format!("{:.2}x", rate / base_rate.max(1e-9)),
+                format!("{:.3}", summary.frame_acc.0),
+            ]);
+            rep.timing(&format!("wall_secs_w{w}"), secs);
+        }
+        rep.tables.push(table);
+        if let Some(r) = &reference {
+            // Prefixed by the actual reference worker count — calling
+            // it "serial" would lie whenever the sweep doesn't start
+            // at 1.
+            r.push_metrics(&format!("w{}", workers[0]), &mut rep.metrics);
+        }
+        // Only claim the bit-identity contract when it was actually
+        // exercised: a single-entry sweep performs zero comparisons,
+        // and a vacuous 1.0 would let `bench compare` pass a gate that
+        // never ran.
+        if workers.len() >= 2 {
+            rep.metric(
+                "parallel_bit_identical",
+                if identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+        }
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// E4 — gradient-estimator quality (Fig 4 / D.7–D.8): LITE bias and
+/// RMSE vs |H|, gated so estimator drift is caught.
+struct GradcheckRmse;
+
+impl Scenario for GradcheckRmse {
+    fn name(&self) -> &'static str {
+        "gradcheck-rmse"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["paper"]
+    }
+    fn about(&self) -> &'static str {
+        "LITE gradient-estimator bias/RMSE vs |H| (Fig 4, Tables D.7-D.8)"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        let budget: usize = knobs.get("budget", 120)?;
+        let hs = parse_usize_list(&knobs.get_str("hs", "10,50,90"))?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("budget", budget);
+        rep.config("hs", knobs.get_str("hs", "10,50,90"));
+        let s0 = engine.stats();
+        let rows = crate::gradcheck::run(engine, &hs, budget, seed)?;
+        let mut table = Table::new(
+            "gradient estimator quality vs |H|",
+            &["|H|", "LITE bias MSE", "sub bias MSE", "LITE RMSE", "sub RMSE"],
+        );
+        for r in &rows {
+            table.row(vec![
+                r.h.to_string(),
+                format!("{:.3e}", r.lite_bias_mse),
+                format!("{:.3e}", r.sub_bias_mse),
+                format!("{:.4e}", r.lite_rmse),
+                format!("{:.4e}", r.sub_rmse),
+            ]);
+            rep.metric(&format!("lite_rmse_h{}", r.h), r.lite_rmse, Direction::Lower);
+            rep.metric(&format!("lite_bias_mse_h{}", r.h), r.lite_bias_mse, Direction::Lower);
+            rep.metric(&format!("sub_rmse_h{}", r.h), r.sub_rmse, Direction::Info);
+        }
+        rep.tables.push(table);
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Paper-table scenarios: registry-sized defaults over the shared
+// runners in `bench` (the legacy `bench-*` subcommands use the same
+// runners with their original defaults).
+// ---------------------------------------------------------------------
+
+struct Orbit;
+
+impl Scenario for Orbit {
+    fn name(&self) -> &'static str {
+        "orbit"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["paper"]
+    }
+    fn about(&self) -> &'static str {
+        "ORBIT accuracy + adaptation cost (Table 1)"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let knobs = knobs.with_defaults(&[
+            ("train-episodes", "6"),
+            ("users", "2"),
+            ("tasks-per-user", "1"),
+            ("sizes", "32"),
+            ("models", "protonet,simple_cnaps"),
+        ]);
+        orbit_report(need_engine(engine, self.name())?, &knobs, seed)
+    }
+}
+
+struct Vtab;
+
+impl Scenario for Vtab {
+    fn name(&self) -> &'static str {
+        "vtab"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["paper"]
+    }
+    fn about(&self) -> &'static str {
+        "synthetic VTAB+MD per-dataset accuracy (Fig 3 / Table D.2)"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let knobs = knobs.with_defaults(&[("train-episodes", "6"), ("eval-episodes", "2")]);
+        vtab_report(need_engine(engine, self.name())?, &knobs, seed)
+    }
+}
+
+struct Hsweep;
+
+impl Scenario for Hsweep {
+    fn name(&self) -> &'static str {
+        "hsweep"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["paper"]
+    }
+    fn about(&self) -> &'static str {
+        "accuracy vs |H| sweep (Table 2 / D.4-D.6)"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let knobs = knobs.with_defaults(&[
+            ("train-episodes", "6"),
+            ("eval-episodes", "1"),
+            ("max-cases", "4"),
+        ]);
+        hsweep_report(need_engine(engine, self.name())?, &knobs, seed)
+    }
+}
+
+struct Ablation;
+
+impl Scenario for Ablation {
+    fn name(&self) -> &'static str {
+        "ablation"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["paper"]
+    }
+    fn about(&self) -> &'static str {
+        "LITE vs small-task vs small-image ablation (Table D.3)"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let knobs = knobs.with_defaults(&[("train-episodes", "6"), ("eval-episodes", "1")]);
+        ablation_report(need_engine(engine, self.name())?, &knobs, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knobs_parse_and_override() {
+        let k = Knobs::parse("a=1, b = two ,c=3").unwrap();
+        assert_eq!(k.get("a", 0usize).unwrap(), 1);
+        assert_eq!(k.get_str("b", ""), "two");
+        assert_eq!(k.get("missing", 7u64).unwrap(), 7);
+        assert!(Knobs::parse("").unwrap().pairs().is_empty());
+        assert!(Knobs::parse("a=1,,b=2").is_err());
+        assert!(Knobs::parse("noequals").is_err());
+        let d = k.with_defaults(&[("a", "99"), ("z", "5")]);
+        assert_eq!(d.get("a", 0usize).unwrap(), 1, "defaults must not clobber");
+        assert_eq!(d.get("z", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn knobs_list_values_continue_previous_pair() {
+        let k = Knobs::parse("episodes=3,worker-sweep=1,2,4,seed=9").unwrap();
+        assert_eq!(k.get_str("worker-sweep", ""), "1,2,4");
+        assert_eq!(k.get("episodes", 0usize).unwrap(), 3);
+        assert_eq!(k.get("seed", 0u64).unwrap(), 9);
+    }
+
+    #[test]
+    fn knobs_continuation_follows_reparsed_key_not_insertion_order() {
+        // A later duplicate key replaces its value IN PLACE; the
+        // continuation segment must still attach to that key, not to
+        // whichever pair happens to sit last in insertion order.
+        let k = Knobs::parse("worker-sweep=1,2,episodes=3,worker-sweep=4,8").unwrap();
+        assert_eq!(k.get_str("worker-sweep", ""), "4,8");
+        assert_eq!(k.get("episodes", 0usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn registry_names_unique_and_filters() {
+        let scenarios = registry();
+        let mut names: Vec<&str> = scenarios.iter().map(|s| s.name()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names");
+        let smoke: Vec<&str> = scenarios
+            .iter()
+            .filter(|s| matches_filter(s.as_ref(), "smoke"))
+            .map(|s| s.name())
+            .collect();
+        assert!(smoke.contains(&"memory-model"));
+        assert!(smoke.contains(&"adapt-cost"));
+        assert!(scenarios
+            .iter()
+            .filter(|s| matches_filter(s.as_ref(), "smoke"))
+            .all(|s| !s.needs_engine()), "smoke scenarios must run without artifacts");
+    }
+
+    #[test]
+    fn smoke_scenarios_run_without_engine() {
+        let run = run_filtered("smoke", &Knobs::default(), 0).unwrap();
+        assert_eq!(run.reports.len(), 2);
+        let mm = run.get("memory-model").unwrap();
+        assert_eq!(mm.get_metric("lite_flat_in_n").unwrap().value, 1.0);
+        assert_eq!(mm.get_metric("lite_beats_checkpoint_at_h8").unwrap().value, 1.0);
+        let ac = run.get("adapt-cost").unwrap();
+        assert!(ac.get_metric("protonet_adapt_macs").unwrap().value > 0.0);
+        // Same-seed reruns are byte-identical at the payload level —
+        // the determinism contract the compare gate rests on.
+        let run2 = run_filtered("smoke", &Knobs::default(), 0).unwrap();
+        for (a, b) in run.reports.iter().zip(&run2.reports) {
+            assert_eq!(a.metrics_payload(), b.metrics_payload());
+        }
+    }
+
+    #[test]
+    fn unknown_filter_lists_available() {
+        let err = run_filtered("no-such", &Knobs::default(), 0).unwrap_err().to_string();
+        assert!(err.contains("memory-model"), "{err}");
+    }
+}

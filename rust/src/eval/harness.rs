@@ -19,6 +19,7 @@ use crate::data::registry::Dataset;
 use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::eval::metrics::{score_episode, EpisodeMetrics};
+use crate::report::{Direction, Metric};
 use crate::runtime::Engine;
 use crate::util::{mean_ci95, timed};
 
@@ -31,6 +32,26 @@ pub struct EvalSummary {
     /// Mean wall-clock seconds to adapt+classify one task.
     pub secs_per_task: f64,
     pub episodes: usize,
+}
+
+impl EvalSummary {
+    /// Flatten the deterministic aggregates into gateable bench metrics
+    /// under `prefix`. Accuracies gate upward, FTR gates downward; the
+    /// CI half-widths and episode count are context (`info`). The
+    /// wall-clock `secs_per_task` is deliberately NOT here — timings
+    /// belong in a report's `timings` section, outside the determinism
+    /// payload.
+    pub fn push_metrics(&self, prefix: &str, out: &mut Vec<Metric>) {
+        let mut push = |name: &str, value: f64, direction: Direction| {
+            out.push(Metric { name: format!("{prefix}_{name}"), value, direction });
+        };
+        push("frame_acc", self.frame_acc.0, Direction::Higher);
+        push("frame_acc_ci95", self.frame_acc.1, Direction::Info);
+        push("video_acc", self.video_acc.0, Direction::Higher);
+        push("video_acc_ci95", self.video_acc.1, Direction::Info);
+        push("ftr", self.ftr.0, Direction::Lower);
+        push("episodes", self.episodes as f64, Direction::Info);
+    }
 }
 
 /// Anything that can predict labels for an episode's queries.

@@ -45,12 +45,22 @@ pub fn score_episode(episode: &Episode, preds: &[usize]) -> EpisodeMetrics {
     let mut vid_correct = 0usize;
     let mut ftr_sum = 0f64;
     for (label, ps) in &videos {
-        // Majority vote.
-        let mut counts = std::collections::HashMap::new();
+        // Majority vote with deterministic tie-breaking: highest count
+        // wins, ties go to the LOWEST label. (A HashMap max_by_key here
+        // made tied votes depend on hash iteration order, so video_acc
+        // could differ between runs on the same predictions.)
+        let mut counts: Vec<(usize, usize)> = Vec::new(); // (pred label, count)
         for p in ps {
-            *counts.entry(*p).or_insert(0usize) += 1;
+            match counts.iter_mut().find(|(q, _)| q == p) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((*p, 1)),
+            }
         }
-        let maj = counts.iter().max_by_key(|(_, c)| **c).map(|(p, _)| *p).unwrap();
+        let maj = counts
+            .iter()
+            .max_by_key(|&&(p, c)| (c, std::cmp::Reverse(p)))
+            .map(|&(p, _)| p)
+            .unwrap();
         if maj == *label {
             vid_correct += 1;
         }
@@ -97,6 +107,30 @@ mod tests {
         assert_eq!(m.ftr, 0.0);
         let m2 = score_episode(&e, &[0, 1]);
         assert!((m2.ftr - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn majority_tie_breaks_to_lowest_label_deterministically() {
+        // One 4-frame video labelled 1 with a constructed 2-2 tie
+        // between predictions 1 and 2: the tie must break to the LOWEST
+        // predicted label (2-2 -> 1), so the video counts as correct —
+        // on every run, not per hash order.
+        let e = ep(3, vec![1, 1, 1, 1], vec![0, 0, 0, 0]);
+        for _ in 0..50 {
+            let m = score_episode(&e, &[1, 2, 1, 2]);
+            assert_eq!(m.video_acc, 1.0, "tie must resolve to label 1");
+        }
+        // Mirror tie where the lowest tied label is WRONG: 0 vs 1 on a
+        // video labelled 1 -> resolves to 0 -> incorrect, every run.
+        let e2 = ep(3, vec![1, 1, 1, 1], vec![0, 0, 0, 0]);
+        for _ in 0..50 {
+            let m = score_episode(&e2, &[0, 1, 0, 1]);
+            assert_eq!(m.video_acc, 0.0, "tie must resolve to label 0");
+        }
+        // Higher count still beats a lower label: 2,2,2,0 -> 2.
+        let e3 = ep(3, vec![2, 2, 2, 2], vec![0, 0, 0, 0]);
+        let m = score_episode(&e3, &[2, 2, 2, 0]);
+        assert_eq!(m.video_acc, 1.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod gradcheck;
 pub mod memory;
 pub mod optim;
 pub mod params;
+pub mod report;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

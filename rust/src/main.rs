@@ -7,7 +7,8 @@
 //!   eval           meta-test a trained checkpoint on a suite
 //!   gradcheck      Fig 4 / D.7-D.8 gradient-estimator experiment
 //!   memory-report  E6 analytic memory model report
-//!   bench-*        paper table/figure harnesses (also under cargo bench)
+//!   bench          scenario registry: list / run [--json] / compare
+//!   bench-*        legacy per-table harnesses (also under cargo bench)
 
 use anyhow::Result;
 
@@ -35,6 +36,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(args),
         "gradcheck" => cmd_gradcheck(args),
         "memory-report" => cmd_memory(args),
+        "bench" => cmd_bench(args),
         "bench-orbit" => lite::bench::table1_orbit(&mut args),
         "bench-vtab" => lite::bench::fig3_vtabmd(&mut args),
         "bench-hsweep" => lite::bench::table2_hsweep(&mut args),
@@ -42,10 +44,80 @@ fn run(argv: &[String]) -> Result<()> {
         "help" | _ => {
             println!(
                 "usage: lite <info|pretrain|train|eval|gradcheck|memory-report|\
-                 bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]"
+                 bench|bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]\n\
+                 \n\
+                 bench list                         registered scenarios\n\
+                 bench run [--filter s] [--seed n] [--knobs k=v,..] [--json out.json]\n\
+                 bench compare <baseline.json> <candidate.json> [--tolerance-pct n]\n\
+                 (see BENCHMARKS.md for scenario names, the JSON schema, and gating rules)"
             );
             Ok(())
         }
+    }
+}
+
+/// `lite bench <list|run|compare>` — the scenario registry + regression
+/// gate (see BENCHMARKS.md).
+fn cmd_bench(mut args: Args) -> Result<()> {
+    let sub = args.positional.get(1).cloned().unwrap_or_else(|| "list".into());
+    match sub.as_str() {
+        "list" => {
+            args.finish()?;
+            println!("{:<18} {:<18} {:<8} about", "scenario", "tags", "engine");
+            for s in lite::bench::scenarios::registry() {
+                println!(
+                    "{:<18} {:<18} {:<8} {}",
+                    s.name(),
+                    s.tags().join(","),
+                    if s.needs_engine() { "yes" } else { "no" },
+                    s.about()
+                );
+            }
+            Ok(())
+        }
+        "run" => {
+            let filter = args.get_str("filter", "");
+            let seed: u64 = args.get("seed", 0)?;
+            let knobs = lite::bench::scenarios::Knobs::parse(&args.get_str("knobs", ""))?;
+            let json = args.get_str("json", "");
+            args.finish()?;
+            if !json.is_empty() {
+                lite::bench::json_path(&json)?; // fail fast, before the run
+            }
+            let run = lite::bench::scenarios::run_filtered(&filter, &knobs, seed)?;
+            for rep in &run.reports {
+                lite::bench::render_report(rep);
+            }
+            if !json.is_empty() {
+                run.save(std::path::Path::new(lite::bench::json_path(&json)?))?;
+                eprintln!("[bench] wrote {} scenario report(s) to {json}", run.reports.len());
+            }
+            Ok(())
+        }
+        "compare" => {
+            let tolerance_pct: f64 = args.get("tolerance-pct", 1.0)?;
+            let (base_path, cand_path) = match (args.positional.get(2), args.positional.get(3)) {
+                (Some(b), Some(c)) => (b.clone(), c.clone()),
+                _ => anyhow::bail!(
+                    "usage: lite bench compare <baseline.json> <candidate.json> [--tolerance-pct n]"
+                ),
+            };
+            if let Some(extra) = args.positional.get(4) {
+                // finish() only validates flags; a stray third file
+                // must not silently gate on the wrong pair.
+                anyhow::bail!("unexpected extra argument `{extra}` (compare takes exactly two reports)");
+            }
+            args.finish()?;
+            let baseline = lite::report::RunReport::load(std::path::Path::new(&base_path))?;
+            let candidate = lite::report::RunReport::load(std::path::Path::new(&cand_path))?;
+            let cmp = lite::report::compare::compare(&baseline, &candidate, tolerance_pct);
+            print!("{}", cmp.to_markdown());
+            if cmp.has_regression() {
+                std::process::exit(2);
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench subcommand `{other}` (expected list|run|compare)"),
     }
 }
 
@@ -165,10 +237,7 @@ fn cmd_gradcheck(mut args: Args) -> Result<()> {
     let seed: u64 = args.get("seed", 0)?;
     let hs_str = args.get_str("hs", "10,30,50,70,90");
     args.finish()?;
-    let hs: Vec<usize> = hs_str
-        .split(',')
-        .map(|s| s.trim().parse())
-        .collect::<Result<_, _>>()?;
+    let hs = lite::util::parse_usize_list(&hs_str)?;
     let engine = Engine::load(Engine::default_dir())?;
     let rows = lite::gradcheck::run(&engine, &hs, budget, seed)?;
     lite::gradcheck::print_rows(&rows);

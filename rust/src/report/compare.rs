@@ -1,0 +1,316 @@
+//! Baseline/candidate report comparison — the regression gate behind
+//! `lite bench compare a.json b.json --tolerance-pct N`.
+//!
+//! Gating rules:
+//! - a scenario present in the baseline but absent from the candidate
+//!   is a regression (coverage must not silently shrink);
+//! - a gateable metric (direction `higher`/`lower`) that moves in the
+//!   bad direction by more than the tolerance is a regression;
+//! - `info` metrics and wall-clock timings are reported but never gate;
+//! - metrics/scenarios new in the candidate are reported as `new`.
+//!
+//! NaN discipline: two NaN values compare equal (a deterministic NaN
+//! is not a regression of itself); a metric that *became* NaN
+//! regresses; NaN -> finite counts as an improvement (recovery), so a
+//! fix can pass against a broken baseline.
+
+use crate::report::{Direction, RunReport, ScenarioReport};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Improved,
+    Within,
+    Regressed,
+    /// Present in baseline, absent in candidate (always gates unless
+    /// the metric was `info`).
+    Missing,
+    /// Present only in the candidate (never gates).
+    New,
+}
+
+impl Status {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Status::Improved => "improved",
+            Status::Within => "ok",
+            Status::Regressed => "REGRESSED",
+            Status::Missing => "MISSING",
+            Status::New => "new",
+        }
+    }
+}
+
+/// One metric-level comparison row.
+#[derive(Clone, Debug)]
+pub struct MetricDelta {
+    pub scenario: String,
+    pub metric: String,
+    pub direction: Direction,
+    pub baseline: Option<f64>,
+    pub candidate: Option<f64>,
+    /// Signed relative change in percent ((cand-base)/|base| * 100);
+    /// NaN when undefined (missing side, or 0 -> nonzero).
+    pub delta_pct: f64,
+    pub status: Status,
+}
+
+impl MetricDelta {
+    /// True when this row alone should fail the gate.
+    pub fn gates(&self) -> bool {
+        self.direction != Direction::Info
+            && matches!(self.status, Status::Regressed | Status::Missing)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    pub tolerance_pct: f64,
+    pub deltas: Vec<MetricDelta>,
+    /// Baseline scenarios the candidate does not cover (gate failures).
+    pub missing_scenarios: Vec<String>,
+    /// Candidate-only scenarios (informational).
+    pub new_scenarios: Vec<String>,
+    /// Scenario-level caveats (seed/config drift) that make deltas
+    /// apples-to-oranges; reported, not gated.
+    pub warnings: Vec<String>,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> Vec<&MetricDelta> {
+        self.deltas.iter().filter(|d| d.gates()).collect()
+    }
+
+    pub fn has_regression(&self) -> bool {
+        !self.missing_scenarios.is_empty() || self.deltas.iter().any(|d| d.gates())
+    }
+
+    /// Markdown delta table (the human + CI-comment rendering).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "## Bench comparison (tolerance ±{}%)\n\n",
+            trim_float(self.tolerance_pct)
+        ));
+        for w in &self.warnings {
+            out.push_str(&format!("> warning: {w}\n"));
+        }
+        if !self.warnings.is_empty() {
+            out.push('\n');
+        }
+        for s in &self.missing_scenarios {
+            out.push_str(&format!("- **REGRESSED**: scenario `{s}` missing from candidate\n"));
+        }
+        for s in &self.new_scenarios {
+            out.push_str(&format!("- new scenario in candidate: `{s}`\n"));
+        }
+        if !(self.missing_scenarios.is_empty() && self.new_scenarios.is_empty()) {
+            out.push('\n');
+        }
+        out.push_str("| scenario | metric | baseline | candidate | Δ% | status |\n");
+        out.push_str("|---|---|---:|---:|---:|---|\n");
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {}{} |\n",
+                d.scenario,
+                d.metric,
+                d.baseline.map(fmt_val).unwrap_or_else(|| "—".into()),
+                d.candidate.map(fmt_val).unwrap_or_else(|| "—".into()),
+                if d.delta_pct.is_nan() { "—".to_string() } else { format!("{:+.2}", d.delta_pct) },
+                d.status.label(),
+                if d.direction == Direction::Info { " (info)" } else { "" },
+            ));
+        }
+        let n_reg = self.regressions().len() + self.missing_scenarios.len();
+        out.push_str(&format!(
+            "\n**{}**: {} metric(s) compared, {} regression(s).\n",
+            if self.has_regression() { "FAIL" } else { "PASS" },
+            self.deltas.len(),
+            n_reg
+        ));
+        out
+    }
+}
+
+fn fmt_val(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v.is_infinite() {
+        if v > 0.0 { "inf".into() } else { "-inf".into() }
+    } else if v == 0.0 || (1e-3..1e7).contains(&v.abs()) {
+        trim_float((v * 1e6).round() / 1e6)
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+fn trim_float(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Classify one (baseline, candidate) metric pair.
+fn classify(dir: Direction, base: f64, cand: f64, tol_pct: f64) -> (f64, Status) {
+    // Equal values (incl. NaN==NaN, ±inf): nothing moved.
+    if base == cand || (base.is_nan() && cand.is_nan()) {
+        return (0.0, Status::Within);
+    }
+    let delta_pct = if base.is_nan() || cand.is_nan() {
+        f64::NAN
+    } else if base != 0.0 {
+        (cand - base) / base.abs() * 100.0
+    } else {
+        // 0 -> nonzero: relative change is unbounded; ±inf keeps the
+        // sign for classification and always exceeds any tolerance.
+        if cand > 0.0 { f64::INFINITY } else { f64::NEG_INFINITY }
+    };
+    // Info before the NaN transitions: context metrics never regress
+    // (or improve) no matter what they became.
+    if dir == Direction::Info {
+        return (delta_pct, Status::Within);
+    }
+    if !cand.is_finite() && base.is_finite() {
+        // Became NaN or ±inf: pathological no matter the direction (an
+        // "accuracy" of +inf is a bug, not an improvement).
+        return (delta_pct, Status::Regressed);
+    }
+    if !base.is_finite() && cand.is_finite() {
+        // Non-finite -> finite is a recovery: gating it as a regression
+        // would make a fixed metric unable to ever pass against the
+        // broken baseline.
+        return (delta_pct, Status::Improved);
+    }
+    if base.is_nan() || cand.is_nan() {
+        // Both non-finite but unequal (e.g. +inf vs NaN): still broken.
+        return (delta_pct, Status::Regressed);
+    }
+    let good = match dir {
+        Direction::Higher => cand > base,
+        Direction::Lower => cand < base,
+        Direction::Info => unreachable!(),
+    };
+    if good {
+        (delta_pct, Status::Improved)
+    } else if delta_pct.abs() <= tol_pct {
+        (delta_pct, Status::Within)
+    } else {
+        (delta_pct, Status::Regressed)
+    }
+}
+
+fn compare_scenario(
+    base: &ScenarioReport,
+    cand: &ScenarioReport,
+    tol_pct: f64,
+    out: &mut CompareReport,
+) {
+    if base.seed != cand.seed {
+        out.warnings.push(format!(
+            "scenario `{}` compared across seeds ({} vs {})",
+            base.scenario, base.seed, cand.seed
+        ));
+    }
+    if base.config != cand.config {
+        out.warnings.push(format!(
+            "scenario `{}` compared across configs (knobs differ)",
+            base.scenario
+        ));
+    }
+    for m in &base.metrics {
+        match cand.get_metric(&m.name) {
+            None => out.deltas.push(MetricDelta {
+                scenario: base.scenario.clone(),
+                metric: m.name.clone(),
+                direction: m.direction,
+                baseline: Some(m.value),
+                candidate: None,
+                delta_pct: f64::NAN,
+                status: Status::Missing,
+            }),
+            Some(c) => {
+                let (delta_pct, status) = classify(m.direction, m.value, c.value, tol_pct);
+                out.deltas.push(MetricDelta {
+                    scenario: base.scenario.clone(),
+                    metric: m.name.clone(),
+                    direction: m.direction,
+                    baseline: Some(m.value),
+                    candidate: Some(c.value),
+                    delta_pct,
+                    status,
+                });
+            }
+        }
+    }
+    for c in &cand.metrics {
+        if base.get_metric(&c.name).is_none() {
+            out.deltas.push(MetricDelta {
+                scenario: base.scenario.clone(),
+                metric: c.name.clone(),
+                direction: c.direction,
+                baseline: None,
+                candidate: Some(c.value),
+                delta_pct: f64::NAN,
+                status: Status::New,
+            });
+        }
+    }
+}
+
+/// Compare two run reports; `tolerance_pct` is the allowed bad-direction
+/// relative drift per gateable metric.
+pub fn compare(baseline: &RunReport, candidate: &RunReport, tolerance_pct: f64) -> CompareReport {
+    let mut out = CompareReport { tolerance_pct, ..Default::default() };
+    for b in &baseline.reports {
+        match candidate.get(&b.scenario) {
+            None => out.missing_scenarios.push(b.scenario.clone()),
+            Some(c) => compare_scenario(b, c, tolerance_pct, &mut out),
+        }
+    }
+    for c in &candidate.reports {
+        if baseline.get(&c.scenario).is_none() {
+            out.new_scenarios.push(c.scenario.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_directions() {
+        // Higher-is-better: up = improved, small down = within, big
+        // down = regressed.
+        assert_eq!(classify(Direction::Higher, 0.80, 0.85, 1.0).1, Status::Improved);
+        assert_eq!(classify(Direction::Higher, 0.80, 0.796, 1.0).1, Status::Within);
+        assert_eq!(classify(Direction::Higher, 0.80, 0.70, 1.0).1, Status::Regressed);
+        // Lower-is-better mirrors.
+        assert_eq!(classify(Direction::Lower, 100.0, 90.0, 1.0).1, Status::Improved);
+        assert_eq!(classify(Direction::Lower, 100.0, 100.5, 1.0).1, Status::Within);
+        assert_eq!(classify(Direction::Lower, 100.0, 120.0, 1.0).1, Status::Regressed);
+        // Info never regresses.
+        assert_eq!(classify(Direction::Info, 1.0, 99.0, 0.0).1, Status::Within);
+    }
+
+    #[test]
+    fn classify_edge_values() {
+        assert_eq!(classify(Direction::Higher, f64::NAN, f64::NAN, 0.0).1, Status::Within);
+        assert_eq!(classify(Direction::Higher, 0.5, f64::NAN, 50.0).1, Status::Regressed);
+        // NaN -> finite is a recovery, not a regression: the gate must
+        // be passable once a broken-baseline metric is fixed.
+        assert_eq!(classify(Direction::Higher, f64::NAN, 0.5, 0.0).1, Status::Improved);
+        assert_eq!(classify(Direction::Lower, f64::NAN, 0.5, 0.0).1, Status::Improved);
+        // Becoming ±inf is pathological, not an improvement — even in
+        // the "good" direction; the reverse is a recovery.
+        assert_eq!(classify(Direction::Higher, 0.5, f64::INFINITY, 0.0).1, Status::Regressed);
+        assert_eq!(classify(Direction::Lower, 0.5, f64::NEG_INFINITY, 0.0).1, Status::Regressed);
+        assert_eq!(classify(Direction::Higher, f64::INFINITY, 0.5, 0.0).1, Status::Improved);
+        assert_eq!(classify(Direction::Higher, f64::INFINITY, f64::INFINITY, 0.0).1, Status::Within);
+        // Info never regresses, even across NaN transitions.
+        assert_eq!(classify(Direction::Info, 0.5, f64::NAN, 0.0).1, Status::Within);
+        assert_eq!(classify(Direction::Info, f64::NAN, 0.5, 0.0).1, Status::Within);
+        assert_eq!(classify(Direction::Lower, 0.0, 0.0, 0.0).1, Status::Within);
+        // 0 -> nonzero in the bad direction always exceeds tolerance.
+        assert_eq!(classify(Direction::Lower, 0.0, 1.0, 99.0).1, Status::Regressed);
+        assert_eq!(classify(Direction::Higher, 0.0, 1.0, 0.0).1, Status::Improved);
+    }
+}

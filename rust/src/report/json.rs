@@ -1,0 +1,520 @@
+//! Minimal JSON value, writer, and recursive-descent parser.
+//!
+//! The offline crate set has no serde, so the report layer hand-rolls
+//! the subset of JSON it needs: deterministic output (object keys keep
+//! insertion order, numbers print their shortest round-trip form), full
+//! string escaping both ways (control chars, `\uXXXX`, surrogate
+//! pairs), and IEEE special values. JSON itself has no NaN/Infinity, so
+//! non-finite numbers are written as the strings `"NaN"`, `"Infinity"`,
+//! `"-Infinity"` and `as_f64` maps them back — the round-trip tests in
+//! `tests/report_roundtrip.rs` pin this contract.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Non-negative integer, kept exact: u64 does not fit f64 above
+    /// 2^53, and seeds/counters must round-trip losslessly. The parser
+    /// produces this variant for any unsigned integer token that fits.
+    UInt(u64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered: serialization is byte-deterministic.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Append a key (objects only; panics otherwise — builder misuse is
+    /// a programming error, not a runtime condition).
+    pub fn push(&mut self, key: &str, value: Json) -> &mut Json {
+        match self {
+            Json::Obj(pairs) => pairs.push((key.to_string(), value)),
+            _ => panic!("Json::push on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Fetch a required key with a path-bearing error message.
+    pub fn need(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing key `{key}` in JSON object"))
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric view. The three sentinel strings decode back to the IEEE
+    /// specials they encoded (see module doc).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::UInt(v) => Some(*v as f64),
+            Json::Num(v) => Some(*v),
+            Json::Str(s) => match s.as_str() {
+                "NaN" => Some(f64::NAN),
+                "Infinity" => Some(f64::INFINITY),
+                "-Infinity" => Some(f64::NEG_INFINITY),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(v) => Some(*v),
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    /// Single-line serialization (determinism payloads, log lines).
+    pub fn to_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Human-readable serialization (report files): 2-space indent.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::UInt(v) => out.push_str(&v.to_string()),
+            Json::Num(v) => write_num(*v, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(xs) => write_seq(out, indent, depth, '[', ']', xs.len(), |out, i| {
+                xs[i].write(out, indent, depth + 1)
+            }),
+            Json::Obj(pairs) => write_seq(out, indent, depth, '{', '}', pairs.len(), |out, i| {
+                write_str(&pairs[i].0, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                pairs[i].1.write(out, indent, depth + 1);
+            }),
+        }
+    }
+}
+
+fn write_seq(
+    out: &mut String,
+    indent: Option<usize>,
+    depth: usize,
+    open: char,
+    close: char,
+    n: usize,
+    mut item: impl FnMut(&mut String, usize),
+) {
+    out.push(open);
+    if n == 0 {
+        out.push(close);
+        return;
+    }
+    for i in 0..n {
+        if i > 0 {
+            out.push(',');
+        }
+        if let Some(w) = indent {
+            out.push('\n');
+            for _ in 0..w * (depth + 1) {
+                out.push(' ');
+            }
+        }
+        item(out, i);
+    }
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+    out.push(close);
+}
+
+fn write_num(v: f64, out: &mut String) {
+    if v.is_nan() {
+        out.push_str("\"NaN\"");
+    } else if v == f64::INFINITY {
+        out.push_str("\"Infinity\"");
+    } else if v == f64::NEG_INFINITY {
+        out.push_str("\"-Infinity\"");
+    } else if v.fract() == 0.0 && v.abs() < 9e15 {
+        // Integral values print without a fractional part (counters,
+        // seeds). |v| < 2^53 so the i64 cast is exact.
+        out.push_str(&format!("{}", v as i64));
+    } else {
+        // Rust's float Display is the shortest string that parses back
+        // to the same f64 — the lossless-round-trip property the tests
+        // pin.
+        out.push_str(&format!("{v}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed, trailing
+/// garbage is an error).
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {} of JSON input", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected `{}` at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            None => bail!("unexpected end of JSON input"),
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => bail!("unexpected `{}` at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => bail!("expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // Unsigned integer tokens keep u64 exactness (seeds, counters);
+        // anything signed, fractional, exponential, or overflowing
+        // falls back to f64.
+        if tok.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(v) = tok.parse::<u64>() {
+                return Ok(Json::UInt(v));
+            }
+        }
+        tok.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| anyhow::anyhow!("bad number `{tok}` at byte {start}: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => {
+                            out.push('"');
+                            self.pos += 1;
+                        }
+                        Some(b'\\') => {
+                            out.push('\\');
+                            self.pos += 1;
+                        }
+                        Some(b'/') => {
+                            out.push('/');
+                            self.pos += 1;
+                        }
+                        Some(b'b') => {
+                            out.push('\u{8}');
+                            self.pos += 1;
+                        }
+                        Some(b'f') => {
+                            out.push('\u{c}');
+                            self.pos += 1;
+                        }
+                        Some(b'n') => {
+                            out.push('\n');
+                            self.pos += 1;
+                        }
+                        Some(b'r') => {
+                            out.push('\r');
+                            self.pos += 1;
+                        }
+                        Some(b't') => {
+                            out.push('\t');
+                            self.pos += 1;
+                        }
+                        Some(b'u') => {
+                            self.pos += 1;
+                            out.push(self.unicode_escape()?);
+                        }
+                        other => bail!("bad escape {:?} at byte {}", other.map(|c| c as char), self.pos),
+                    }
+                }
+                Some(_) => {
+                    // Consume one complete UTF-8 scalar (input is &str,
+                    // so boundaries are valid).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..]).unwrap();
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape at byte {}", self.pos);
+        }
+        let tok = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("non-ascii \\u escape at byte {}", self.pos))?;
+        let v = u32::from_str_radix(tok, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape `{tok}` at byte {}", self.pos))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let code = if (0xD800..=0xDBFF).contains(&hi) {
+            // Surrogate pair: the low half must follow immediately.
+            if self.bytes[self.pos..].starts_with(b"\\u") {
+                self.pos += 2;
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    bail!("unpaired high surrogate \\u{hi:04x}");
+                }
+                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+            } else {
+                bail!("unpaired high surrogate \\u{hi:04x}");
+            }
+        } else if (0xDC00..=0xDFFF).contains(&hi) {
+            bail!("unpaired low surrogate \\u{hi:04x}");
+        } else {
+            hi
+        };
+        char::from_u32(code).ok_or_else(|| anyhow::anyhow!("invalid scalar \\u{code:x}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trips() {
+        for text in ["null", "true", "false", "0", "-1", "1.5", "\"hi\"", "[]", "{}"] {
+            let v = parse(text).unwrap();
+            assert_eq!(v.to_compact(), text, "{text}");
+        }
+    }
+
+    #[test]
+    fn nested_round_trip_preserves_order() {
+        let text = "{\"b\":1,\"a\":[1,2,{\"z\":null}],\"c\":\"x\"}";
+        assert_eq!(parse(text).unwrap().to_compact(), text);
+    }
+
+    #[test]
+    fn specials_encode_as_strings() {
+        assert_eq!(Json::Num(f64::NAN).to_compact(), "\"NaN\"");
+        assert_eq!(Json::Num(f64::INFINITY).to_compact(), "\"Infinity\"");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_compact(), "\"-Infinity\"");
+        assert!(parse("\"NaN\"").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(parse("\"Infinity\"").unwrap().as_f64(), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn string_escapes_both_ways() {
+        let s = "q\"b\\s\n\t\r\u{1}ünicode 🦀";
+        let text = Json::Str(s.to_string()).to_compact();
+        assert_eq!(parse(&text).unwrap().as_str(), Some(s));
+        // Explicit \u escapes incl. a surrogate pair (🦀 = U+1F980).
+        let v = parse("\"\\u0041\\ud83e\\udd80\"").unwrap();
+        assert_eq!(v.as_str(), Some("A🦀"));
+    }
+
+    #[test]
+    fn errors_are_positioned() {
+        assert!(parse("{\"a\":}").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("[1] x").is_err());
+        assert!(parse("\"\\ud800\"").is_err(), "unpaired surrogate");
+    }
+
+    #[test]
+    fn u64_integers_round_trip_exactly() {
+        // Full u64 range, incl. values above 2^53 where f64 would
+        // corrupt (the seed-field regression this path exists for).
+        for v in [0u64, 7, (1 << 53) + 1, u64::MAX] {
+            let text = Json::UInt(v).to_compact();
+            assert_eq!(parse(&text).unwrap().as_u64(), Some(v), "{text}");
+        }
+        assert_eq!(parse("12").unwrap(), Json::UInt(12));
+        // Signed/fractional/exponential tokens stay on the f64 path.
+        assert_eq!(parse("-12").unwrap(), Json::Num(-12.0));
+        assert_eq!(parse("1e2").unwrap(), Json::Num(100.0));
+    }
+
+    #[test]
+    fn numbers_round_trip_shortest() {
+        for v in [0.1, 1.0 / 3.0, 1e-9, 123456789.123, -0.25, 9e15] {
+            let text = Json::Num(v).to_compact();
+            assert_eq!(parse(&text).unwrap().as_f64(), Some(v), "{text}");
+        }
+    }
+}

@@ -1,0 +1,442 @@
+//! Machine-readable benchmark reports (schema v1).
+//!
+//! Every bench scenario produces a [`ScenarioReport`]: gateable
+//! `metrics` (deterministic for a fixed seed — accuracies, analytic
+//! costs, cache counters measured serially), informational `timings`
+//! (wall-clock, never gated), human-facing `tables`, the scenario's
+//! resolved config, and an optional [`EngineSnapshot`]. A
+//! [`RunReport`] bundles the scenarios of one `lite bench run`
+//! invocation under a schema version, serializes to JSON
+//! (hand-rolled — see [`json`]), and is what `lite bench compare`
+//! diffs (see [`compare`]).
+//!
+//! Determinism contract: `ScenarioReport::metrics_payload()` is the
+//! byte-exact canonical form of everything that must be identical
+//! between two same-seed runs. Wall-clock and engine-stat fields live
+//! outside it on purpose (parallel eval can interleave cache probes,
+//! so even the cache counters are only deterministic when measured
+//! serially).
+
+pub mod compare;
+pub mod json;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::EngineStats;
+use self::json::Json;
+
+/// Bump on any change to the serialized report shape, and extend the
+/// golden snapshot in `tests/report_roundtrip.rs`.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Sanity tag so `bench compare` rejects arbitrary JSON early.
+pub const REPORT_KIND: &str = "lite-bench-report";
+
+/// How a metric should be judged by the regression gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (accuracies, cache hit rates).
+    Higher,
+    /// Smaller is better (costs, error norms, rebuild counts).
+    Lower,
+    /// Context only — never gates (episode counts, steps labels).
+    Info,
+}
+
+impl Direction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Info => "info",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "higher" => Direction::Higher,
+            "lower" => Direction::Lower,
+            "info" => Direction::Info,
+            other => bail!("unknown metric direction `{other}`"),
+        })
+    }
+}
+
+/// One gateable measurement.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub direction: Direction,
+}
+
+/// A rendered table: the human-facing view of a scenario (the rendering
+/// layer aligns columns; the JSON keeps the cells verbatim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len(), "{}", self.title);
+        self.rows.push(cells);
+    }
+
+    /// Column-aligned text rendering: first column left-aligned, the
+    /// rest right-aligned (the convention of the paper-table printers
+    /// this layer replaced).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n{}\n", self.title));
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (k, (cell, w)) in cells.iter().zip(&widths).enumerate() {
+                if k > 0 {
+                    out.push(' ');
+                }
+                let pad = w.saturating_sub(cell.chars().count());
+                if k == 0 {
+                    out.push_str(cell);
+                    out.push_str(&" ".repeat(pad));
+                } else {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(cell);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &mut out);
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Deterministic-ish runtime counters + wall-clock totals, captured at
+/// scenario end. Informational: interleaving under parallel eval makes
+/// the cache counters order-dependent, so none of this gates.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineSnapshot {
+    pub compiles: u64,
+    pub executions: u64,
+    pub param_literal_builds: u64,
+    pub param_cache_hits: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+impl From<&EngineStats> for EngineSnapshot {
+    fn from(s: &EngineStats) -> Self {
+        Self {
+            compiles: s.compiles as u64,
+            executions: s.executions as u64,
+            param_literal_builds: s.param_literal_builds as u64,
+            param_cache_hits: s.param_cache_hits as u64,
+            compile_secs: s.compile_secs,
+            execute_secs: s.execute_secs,
+        }
+    }
+}
+
+/// Everything one scenario run produced.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub seed: u64,
+    /// Resolved knobs, in definition order (part of the determinism
+    /// payload: a config change is a schema change for gating purposes).
+    pub config: Vec<(String, String)>,
+    pub metrics: Vec<Metric>,
+    /// Wall-clock phases, seconds. Never gated, never in the payload.
+    pub timings: Vec<(String, f64)>,
+    pub tables: Vec<Table>,
+    pub engine: Option<EngineSnapshot>,
+}
+
+impl ScenarioReport {
+    pub fn new(scenario: &str, seed: u64) -> Self {
+        Self { scenario: scenario.to_string(), seed, ..Default::default() }
+    }
+
+    pub fn config(&mut self, key: &str, value: impl ToString) {
+        self.config.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn metric(&mut self, name: &str, value: f64, direction: Direction) {
+        self.metrics.push(Metric { name: name.to_string(), value, direction });
+    }
+
+    pub fn timing(&mut self, name: &str, secs: f64) {
+        self.timings.push((name.to_string(), secs));
+    }
+
+    pub fn get_metric(&self, name: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Canonical byte-exact form of the deterministic content: scenario
+    /// name, seed, resolved config, and every metric. Two same-seed runs
+    /// of the same build must produce identical payloads — the
+    /// determinism gate in the integration tests compares exactly this.
+    pub fn metrics_payload(&self) -> String {
+        let mut o = Json::obj();
+        o.push("scenario", Json::Str(self.scenario.clone()));
+        o.push("seed", Json::UInt(self.seed));
+        o.push("config", config_json(&self.config));
+        o.push("metrics", metrics_json(&self.metrics));
+        o.to_compact()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("scenario", Json::Str(self.scenario.clone()));
+        o.push("seed", Json::UInt(self.seed));
+        o.push("config", config_json(&self.config));
+        o.push("metrics", metrics_json(&self.metrics));
+        o.push(
+            "timings",
+            Json::Arr(
+                self.timings
+                    .iter()
+                    .map(|(name, secs)| {
+                        let mut t = Json::obj();
+                        t.push("name", Json::Str(name.clone()));
+                        t.push("secs", Json::Num(*secs));
+                        t
+                    })
+                    .collect(),
+            ),
+        );
+        match &self.engine {
+            None => o.push("engine", Json::Null),
+            Some(e) => {
+                let mut eo = Json::obj();
+                eo.push("compiles", Json::UInt(e.compiles));
+                eo.push("executions", Json::UInt(e.executions));
+                eo.push("param_literal_builds", Json::UInt(e.param_literal_builds));
+                eo.push("param_cache_hits", Json::UInt(e.param_cache_hits));
+                eo.push("compile_secs", Json::Num(e.compile_secs));
+                eo.push("execute_secs", Json::Num(e.execute_secs));
+                o.push("engine", eo)
+            }
+        };
+        o.push(
+            "tables",
+            Json::Arr(
+                self.tables
+                    .iter()
+                    .map(|t| {
+                        let mut to = Json::obj();
+                        to.push("title", Json::Str(t.title.clone()));
+                        to.push(
+                            "headers",
+                            Json::Arr(t.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+                        );
+                        to.push(
+                            "rows",
+                            Json::Arr(
+                                t.rows
+                                    .iter()
+                                    .map(|r| {
+                                        Json::Arr(
+                                            r.iter().map(|c| Json::Str(c.clone())).collect(),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        to
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let scenario = v.need("scenario")?.as_str().context("scenario not a string")?.to_string();
+        let seed = v.need("seed")?.as_u64().context("seed not a u64")?;
+        let mut out = ScenarioReport::new(&scenario, seed);
+        for (k, val) in v.need("config")?.as_obj().context("config not an object")? {
+            out.config.push((k.clone(), val.as_str().context("config value not a string")?.to_string()));
+        }
+        for m in v.need("metrics")?.as_arr().context("metrics not an array")? {
+            out.metrics.push(Metric {
+                name: m.need("name")?.as_str().context("metric name")?.to_string(),
+                value: m.need("value")?.as_f64().context("metric value")?,
+                direction: Direction::parse(
+                    m.need("direction")?.as_str().context("metric direction")?,
+                )?,
+            });
+        }
+        for t in v.need("timings")?.as_arr().context("timings not an array")? {
+            out.timings.push((
+                t.need("name")?.as_str().context("timing name")?.to_string(),
+                t.need("secs")?.as_f64().context("timing secs")?,
+            ));
+        }
+        match v.need("engine")? {
+            Json::Null => {}
+            e => {
+                out.engine = Some(EngineSnapshot {
+                    compiles: e.need("compiles")?.as_u64().context("compiles")?,
+                    executions: e.need("executions")?.as_u64().context("executions")?,
+                    param_literal_builds: e
+                        .need("param_literal_builds")?
+                        .as_u64()
+                        .context("param_literal_builds")?,
+                    param_cache_hits: e
+                        .need("param_cache_hits")?
+                        .as_u64()
+                        .context("param_cache_hits")?,
+                    compile_secs: e.need("compile_secs")?.as_f64().context("compile_secs")?,
+                    execute_secs: e.need("execute_secs")?.as_f64().context("execute_secs")?,
+                });
+            }
+        }
+        for t in v.need("tables")?.as_arr().context("tables not an array")? {
+            let mut table = Table {
+                title: t.need("title")?.as_str().context("table title")?.to_string(),
+                headers: str_arr(t.need("headers")?)?,
+                rows: Vec::new(),
+            };
+            for r in t.need("rows")?.as_arr().context("table rows")? {
+                table.rows.push(str_arr(r)?);
+            }
+            out.tables.push(table);
+        }
+        Ok(out)
+    }
+}
+
+fn config_json(config: &[(String, String)]) -> Json {
+    Json::Obj(config.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect())
+}
+
+fn metrics_json(metrics: &[Metric]) -> Json {
+    Json::Arr(
+        metrics
+            .iter()
+            .map(|m| {
+                let mut mo = Json::obj();
+                mo.push("name", Json::Str(m.name.clone()));
+                mo.push("value", Json::Num(m.value));
+                mo.push("direction", Json::Str(m.direction.label().to_string()));
+                mo
+            })
+            .collect(),
+    )
+}
+
+fn str_arr(v: &Json) -> Result<Vec<String>> {
+    v.as_arr()
+        .context("expected array of strings")?
+        .iter()
+        .map(|c| Ok(c.as_str().context("expected string cell")?.to_string()))
+        .collect()
+}
+
+/// One `lite bench run` invocation: schema header + per-scenario reports.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub reports: Vec<ScenarioReport>,
+}
+
+impl RunReport {
+    pub fn get(&self, scenario: &str) -> Option<&ScenarioReport> {
+        self.reports.iter().find(|r| r.scenario == scenario)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("schema_version", Json::UInt(SCHEMA_VERSION));
+        o.push("kind", Json::Str(REPORT_KIND.to_string()));
+        o.push("reports", Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()));
+        o
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing bench report JSON")?;
+        let ver = v.need("schema_version")?.as_u64().context("schema_version")?;
+        if ver != SCHEMA_VERSION {
+            bail!("bench report schema v{ver} unsupported (this binary speaks v{SCHEMA_VERSION})");
+        }
+        let kind = v.need("kind")?.as_str().context("kind")?;
+        if kind != REPORT_KIND {
+            bail!("not a bench report (kind `{kind}`, expected `{REPORT_KIND}`)");
+        }
+        let mut out = RunReport::default();
+        for r in v.need("reports")?.as_arr().context("reports not an array")? {
+            out.reports.push(ScenarioReport::from_json(r)?);
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing report to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading report from {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("in {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(vec!["abc".into(), "1.5".into()]);
+        t.row(vec!["a".into(), "10.25".into()]);
+        let s = t.render();
+        assert!(s.contains("name     v"), "{s}");
+        assert!(s.contains("abc    1.5"), "{s}");
+        assert!(s.contains("a    10.25"), "{s}");
+    }
+
+    #[test]
+    fn payload_excludes_timings_and_engine() {
+        let mut r = ScenarioReport::new("x", 3);
+        r.metric("acc", 0.5, Direction::Higher);
+        let p1 = r.metrics_payload();
+        r.timing("wall", 123.0);
+        r.engine = Some(EngineSnapshot { executions: 9, ..Default::default() });
+        assert_eq!(p1, r.metrics_payload(), "payload must ignore nondeterministic sections");
+    }
+
+    #[test]
+    fn schema_version_is_checked() {
+        let mut rep = RunReport::default();
+        rep.reports.push(ScenarioReport::new("s", 0));
+        let text = rep.to_json_string().replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let err = RunReport::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("schema v99"), "{err}");
+    }
+}

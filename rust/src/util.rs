@@ -47,6 +47,27 @@ pub fn forall(name: &str, cases: u64, mut check: impl FnMut(u64) -> Result<(), S
     }
 }
 
+/// Parse a comma-separated list of unsigned integers (`"32,64"`), the
+/// shared grammar of every `--sizes`/`--hs`/`--workers`-style flag.
+/// Empty segments (trailing/doubled commas, empty input) are rejected
+/// with a message naming the problem instead of an opaque parse error.
+pub fn parse_usize_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for (i, part) in s.split(',').enumerate() {
+        let part = part.trim();
+        if part.is_empty() {
+            anyhow::bail!(
+                "empty element {i} in list `{s}` (trailing or doubled comma, or empty input?)"
+            );
+        }
+        out.push(
+            part.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("element {i} `{part}` in list `{s}`: {e}"))?,
+        );
+    }
+    Ok(out)
+}
+
 /// Format a MAC count the way the paper's tables do (T = 1e12 MACs).
 pub fn fmt_macs(macs: f64) -> String {
     if macs >= 1e12 {

@@ -5,6 +5,7 @@
 //!
 //! Requires `make artifacts` (the Makefile test target guarantees it).
 
+use lite::bench::scenarios::{run_filtered, Knobs};
 use lite::coordinator::{batch, pretrain_backbone, FineTuner, MetaLearner};
 use lite::data::orbit::{OrbitSim, VideoMode};
 use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
@@ -330,6 +331,51 @@ fn engine_shared_across_threads() {
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     assert_eq!(serial, parallel);
+}
+
+#[test]
+fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
+    // The regression-gate determinism contract, in anger: two same-seed
+    // `bench run` invocations over the runtime scenarios must produce
+    // byte-identical metric payloads (extending PR 1's serial/parallel
+    // bit-identity tests to the report layer), and `bench compare` of
+    // the two runs must pass at ZERO tolerance.
+    let Some(_) = engine_opt() else { return };
+    // cache-efficiency serially + eval-throughput across 1 vs 2 workers
+    // (each run_filtered call loads its own engine, like the CLI).
+    let knobs = Knobs::parse("episodes=3,worker-sweep=1,2").unwrap();
+    let a = run_filtered("runtime", &knobs, 5).unwrap();
+    let b = run_filtered("runtime", &knobs, 5).unwrap();
+    assert_eq!(a.reports.len(), 2);
+    assert_eq!(b.reports.len(), a.reports.len());
+    for (x, y) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(
+            x.metrics_payload(),
+            y.metrics_payload(),
+            "{}: same-seed runs diverged",
+            x.scenario
+        );
+    }
+    // The parallel path agreed with serial inside the sweep...
+    let tp = a.get("eval-throughput").unwrap();
+    assert_eq!(tp.get_metric("parallel_bit_identical").unwrap().value, 1.0);
+    // ...and steady-state prediction never rebuilt parameter literals.
+    let ce = a.get("cache-efficiency").unwrap();
+    assert_eq!(ce.get_metric("steady_state_literal_builds").unwrap().value, 0.0);
+    assert!(ce.get_metric("steady_state_cache_hit_rate").unwrap().value >= 1.0);
+    // Full JSON round trip + compare: identical runs gate clean.
+    let text = a.to_json_string();
+    let reloaded = lite::report::RunReport::parse(&text).unwrap();
+    let cmp = lite::report::compare::compare(&reloaded, &b, 0.0);
+    assert!(!cmp.has_regression(), "self-compare regressions: {:?}", cmp.regressions());
+    // An injected regression on a gateable metric must fail the gate.
+    let mut worse = b.clone();
+    for m in &mut worse.reports[0].metrics {
+        if m.direction == lite::report::Direction::Higher {
+            m.value -= 0.5;
+        }
+    }
+    assert!(lite::report::compare::compare(&a, &worse, 1.0).has_regression());
 }
 
 #[test]

@@ -1,0 +1,311 @@
+//! Report-layer tests that need no AOT artifacts: property-style
+//! JSON round-trip (incl. NaN/±inf and string escaping), a golden
+//! snapshot pinning schema v1 byte-for-byte, a schema snapshot of a
+//! seeded analytic scenario, and the `bench compare` gating matrix.
+
+use lite::bench::scenarios::{run_filtered, Knobs};
+use lite::data::Rng;
+use lite::report::compare::{compare, Status};
+use lite::report::{
+    Direction, EngineSnapshot, Metric, RunReport, ScenarioReport, Table, SCHEMA_VERSION,
+};
+use lite::util::forall;
+
+fn feq(a: f64, b: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || a == b
+}
+
+fn assert_reports_equal(a: &ScenarioReport, b: &ScenarioReport) {
+    assert_eq!(a.scenario, b.scenario);
+    assert_eq!(a.seed, b.seed);
+    assert_eq!(a.config, b.config);
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.direction, y.direction);
+        assert!(feq(x.value, y.value), "{}: {} vs {}", x.name, x.value, y.value);
+    }
+    assert_eq!(a.timings.len(), b.timings.len());
+    for (x, y) in a.timings.iter().zip(&b.timings) {
+        assert_eq!(x.0, y.0);
+        assert!(feq(x.1, y.1), "{}: {} vs {}", x.0, x.1, y.1);
+    }
+    assert_eq!(a.tables, b.tables);
+    assert_eq!(a.engine, b.engine);
+}
+
+/// Seeded random report with hostile content: every direction, tricky
+/// strings (quotes, backslashes, control chars, unicode, astral
+/// plane), and the full f64 zoo incl. arbitrary bit patterns.
+fn random_report(seed: u64) -> ScenarioReport {
+    let mut rng = Rng::new(seed);
+    let pool = [
+        "plain",
+        "with \"quotes\"",
+        "back\\slash",
+        "new\nline\ttab\rret",
+        "ctrl\u{1}\u{1f}",
+        "ünïcode µ",
+        "astral 🦀𝕊",
+        "",
+        "trailing space ",
+    ];
+    let mut pick = move |rng: &mut Rng| pool[rng.below(pool.len())].to_string();
+    let specials = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        1.0 / 3.0,
+        -1e-300,
+        9_007_199_254_740_993.0, // 2^53 + 1
+        f64::MIN_POSITIVE,
+    ];
+    let mut num = move |rng: &mut Rng| {
+        if rng.below(2) == 0 {
+            specials[rng.below(specials.len())]
+        } else {
+            f64::from_bits(rng.next_u64())
+        }
+    };
+    let mut rep = ScenarioReport::new(&format!("scn-{}-{}", seed, pick(&mut rng)), rng.next_u64());
+    for i in 0..rng.below(4) {
+        rep.config(&format!("k{i}-{}", pick(&mut rng)), pick(&mut rng));
+    }
+    let dirs = [Direction::Higher, Direction::Lower, Direction::Info];
+    for i in 0..rng.below(6) {
+        let d = dirs[rng.below(dirs.len())];
+        let v = num(&mut rng);
+        rep.metric(&format!("m{i}-{}", pick(&mut rng)), v, d);
+    }
+    for i in 0..rng.below(3) {
+        let v = num(&mut rng);
+        rep.timing(&format!("t{i}"), v);
+    }
+    if rng.below(2) == 0 {
+        rep.engine = Some(EngineSnapshot {
+            compiles: rng.below(10) as u64,
+            executions: rng.next_u64() >> 12,
+            param_literal_builds: rng.below(1000) as u64,
+            param_cache_hits: rng.below(1000) as u64,
+            // Dyadic, hence exactly representable and != NaN (the
+            // engine snapshot derives PartialEq, so NaN here would make
+            // the equality assertion fail for the wrong reason).
+            compile_secs: rng.below(1 << 20) as f64 / 256.0,
+            execute_secs: 0.125,
+        });
+    }
+    if rng.below(2) == 0 {
+        let mut t = Table::new(&pick(&mut rng), &["a", "b"]);
+        for _ in 0..rng.below(4) {
+            t.row(vec![pick(&mut rng), pick(&mut rng)]);
+        }
+        rep.tables.push(t);
+    }
+    rep
+}
+
+#[test]
+fn report_json_round_trip_is_lossless() {
+    forall("report round-trip", 60, |seed| {
+        let run = RunReport {
+            reports: (0..1 + (seed % 3) as usize).map(|i| random_report(seed ^ i as u64)).collect(),
+        };
+        let text = run.to_json_string();
+        let back = RunReport::parse(&text).map_err(|e| format!("parse failed: {e:#}"))?;
+        if back.reports.len() != run.reports.len() {
+            return Err("report count changed".into());
+        }
+        for (a, b) in run.reports.iter().zip(&back.reports) {
+            assert_reports_equal(a, b);
+        }
+        // Serialize -> parse -> serialize is a fixpoint (byte-identical
+        // files, the property the compare gate's golden diffs rely on).
+        if back.to_json_string() != text {
+            return Err("serialization not a fixpoint".into());
+        }
+        Ok(())
+    });
+}
+
+/// Golden snapshot of schema v1, byte for byte: if the writer's field
+/// names, ordering, number formatting, or escaping drift, this fails
+/// before any downstream consumer notices.
+#[test]
+fn schema_v1_golden_snapshot() {
+    const GOLDEN: &str = "{\"schema_version\":1,\"kind\":\"lite-bench-report\",\"reports\":[{\"scenario\":\"synthetic\",\"seed\":7,\"config\":{\"episodes\":\"3\"},\"metrics\":[{\"name\":\"acc\",\"value\":0.875,\"direction\":\"higher\"},{\"name\":\"cost\",\"value\":12,\"direction\":\"lower\"},{\"name\":\"oddball\",\"value\":\"NaN\",\"direction\":\"info\"},{\"name\":\"peak\",\"value\":\"Infinity\",\"direction\":\"info\"}],\"timings\":[{\"name\":\"wall\",\"secs\":0.5}],\"engine\":{\"compiles\":2,\"executions\":10,\"param_literal_builds\":4,\"param_cache_hits\":8,\"compile_secs\":1.5,\"execute_secs\":0.25},\"tables\":[{\"title\":\"t\",\"headers\":[\"a\",\"b\"],\"rows\":[[\"x\",\"1\"],[\"y\\n\\\"z\\\"\",\"2\"]]}]}]}";
+    // The exemplar parses under the current schema...
+    let run = RunReport::parse(GOLDEN).unwrap();
+    let rep = &run.reports[0];
+    assert_eq!(rep.scenario, "synthetic");
+    assert_eq!(rep.seed, 7);
+    assert_eq!(rep.config, vec![("episodes".to_string(), "3".to_string())]);
+    assert_eq!(rep.metrics.len(), 4);
+    assert_eq!(rep.metrics[0].value, 0.875);
+    assert_eq!(rep.metrics[0].direction, Direction::Higher);
+    assert!(rep.metrics[2].value.is_nan());
+    assert_eq!(rep.metrics[3].value, f64::INFINITY);
+    assert_eq!(rep.engine.as_ref().unwrap().param_cache_hits, 8);
+    assert_eq!(rep.tables[0].rows[1][0], "y\n\"z\"");
+    // ...and the writer reproduces it byte-for-byte.
+    assert_eq!(run.to_json().to_compact(), GOLDEN);
+    assert_eq!(SCHEMA_VERSION, 1, "schema bumped: regenerate GOLDEN + extend this test");
+}
+
+/// Schema snapshot of a real seeded scenario: the analytic memory-model
+/// runs anywhere (no artifacts), so its metric names pin the scenario
+/// schema against accidental drift.
+#[test]
+fn memory_model_scenario_schema_is_pinned() {
+    let run = run_filtered("memory-model", &Knobs::default(), 3).unwrap();
+    assert_eq!(run.reports.len(), 1);
+    let rep = &run.reports[0];
+    assert_eq!(rep.seed, 3);
+    assert_eq!(rep.config, vec![("query-batch".to_string(), "10".to_string())]);
+    let names: Vec<&str> = rep.metrics.iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "full_64px_n80_mib",
+            "lite_h8_64px_n1000_mib",
+            "lite_h40_64px_n80_mib",
+            "ckpt_64px_n200_mib",
+            "lite_h40_over_full_32px_n80",
+            "lite_flat_in_n",
+            "lite_beats_checkpoint_at_h8",
+        ],
+        "memory-model metric schema drifted"
+    );
+    let dirs: Vec<&str> = rep.metrics.iter().map(|m| m.direction.label()).collect();
+    assert_eq!(dirs, vec!["lower", "lower", "lower", "lower", "info", "higher", "higher"]);
+    // Same-seed rerun: byte-identical payload (the determinism gate).
+    let rerun = run_filtered("memory-model", &Knobs::default(), 3).unwrap();
+    assert_eq!(rep.metrics_payload(), rerun.reports[0].metrics_payload());
+}
+
+fn report_with(scenario: &str, metrics: &[(&str, f64, Direction)]) -> ScenarioReport {
+    let mut rep = ScenarioReport::new(scenario, 0);
+    for (n, v, d) in metrics {
+        rep.metric(n, *v, *d);
+    }
+    rep
+}
+
+#[test]
+fn compare_improvement_within_and_regression() {
+    let base = RunReport {
+        reports: vec![report_with(
+            "s",
+            &[
+                ("up", 0.80, Direction::Higher),
+                ("flat", 0.80, Direction::Higher),
+                ("down", 100.0, Direction::Lower),
+                ("note", 5.0, Direction::Info),
+            ],
+        )],
+    };
+    let cand = RunReport {
+        reports: vec![report_with(
+            "s",
+            &[
+                ("up", 0.90, Direction::Higher),   // improved
+                ("flat", 0.796, Direction::Higher), // -0.5% within 1%
+                ("down", 150.0, Direction::Lower), // +50% regression
+                ("note", 99.0, Direction::Info),   // info: never gates
+            ],
+        )],
+    };
+    let cmp = compare(&base, &cand, 1.0);
+    assert!(cmp.has_regression());
+    let by_name = |n: &str| cmp.deltas.iter().find(|d| d.metric == n).unwrap();
+    assert_eq!(by_name("up").status, Status::Improved);
+    assert_eq!(by_name("flat").status, Status::Within);
+    assert_eq!(by_name("down").status, Status::Regressed);
+    assert_eq!(by_name("note").status, Status::Within);
+    assert_eq!(cmp.regressions().len(), 1);
+    let md = cmp.to_markdown();
+    assert!(md.contains("| s | down |"), "{md}");
+    assert!(md.contains("REGRESSED"), "{md}");
+    assert!(md.contains("**FAIL**"), "{md}");
+}
+
+#[test]
+fn compare_passes_on_identical_reports() {
+    let base = RunReport {
+        reports: vec![report_with(
+            "s",
+            &[("acc", 0.5, Direction::Higher), ("odd", f64::NAN, Direction::Lower)],
+        )],
+    };
+    // Zero tolerance + identical values (incl. NaN == NaN): PASS.
+    let cmp = compare(&base, &base.clone(), 0.0);
+    assert!(!cmp.has_regression(), "{:?}", cmp.regressions());
+    assert!(cmp.to_markdown().contains("**PASS**"));
+}
+
+#[test]
+fn compare_missing_scenario_and_metric_gate() {
+    let mut base = RunReport::default();
+    base.reports.push(report_with("kept", &[("a", 1.0, Direction::Higher)]));
+    base.reports.push(report_with("dropped", &[("a", 1.0, Direction::Higher)]));
+    let mut cand = RunReport::default();
+    cand.reports.push(report_with("kept", &[("b", 1.0, Direction::Higher)]));
+    cand.reports.push(report_with("extra", &[("a", 1.0, Direction::Higher)]));
+    let cmp = compare(&base, &cand, 50.0);
+    assert!(cmp.has_regression());
+    assert_eq!(cmp.missing_scenarios, vec!["dropped".to_string()]);
+    assert_eq!(cmp.new_scenarios, vec!["extra".to_string()]);
+    // kept/a is a missing metric (gates); kept/b is new (doesn't).
+    let a = cmp.deltas.iter().find(|d| d.metric == "a").unwrap();
+    assert_eq!(a.status, Status::Missing);
+    assert!(a.gates());
+    let b = cmp.deltas.iter().find(|d| d.metric == "b").unwrap();
+    assert_eq!(b.status, Status::New);
+    assert!(!b.gates());
+    let md = cmp.to_markdown();
+    assert!(md.contains("scenario `dropped` missing"), "{md}");
+}
+
+#[test]
+fn compare_warns_on_seed_and_config_drift() {
+    let mut a = report_with("s", &[("x", 1.0, Direction::Higher)]);
+    a.seed = 1;
+    a.config("episodes", 5);
+    let mut b = report_with("s", &[("x", 1.0, Direction::Higher)]);
+    b.seed = 2;
+    b.config("episodes", 9);
+    let cmp = compare(
+        &RunReport { reports: vec![a] },
+        &RunReport { reports: vec![b] },
+        0.0,
+    );
+    assert!(!cmp.has_regression(), "warnings must not gate");
+    assert_eq!(cmp.warnings.len(), 2, "{:?}", cmp.warnings);
+}
+
+#[test]
+fn compare_round_trips_through_files() {
+    // The CLI path end-to-end minus the binary: save two reports,
+    // reload, compare — exercising the same load/parse code
+    // `lite bench compare` uses.
+    let dir = std::env::temp_dir().join(format!("lite_bench_cmp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = RunReport {
+        reports: vec![report_with("s", &[("acc", 0.75, Direction::Higher)])],
+    };
+    let mut worse = base.clone();
+    worse.reports[0].metrics[0] = Metric {
+        name: "acc".into(),
+        value: 0.5,
+        direction: Direction::Higher,
+    };
+    let (pa, pb) = (dir.join("a.json"), dir.join("b.json"));
+    base.save(&pa).unwrap();
+    worse.save(&pb).unwrap();
+    let a = RunReport::load(&pa).unwrap();
+    let b = RunReport::load(&pb).unwrap();
+    assert!(!compare(&a, &a, 0.0).has_regression(), "self-compare must pass");
+    assert!(compare(&a, &b, 5.0).has_regression(), "-33% must fail a 5% gate");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Smoke-test the bench regression gate end to end: release-build the
+# CLI, run the artifact-free `smoke` scenarios twice at the same seed,
+# and self-compare at ZERO tolerance — exercising `bench run --json`,
+# the JSON round trip, and `bench compare`'s exit-code contract.
+#
+# Exit 0 means the gate itself works; any payload nondeterminism,
+# schema break, or comparator bug fails loudly. Tier-1-adjacent: safe
+# on machines without the AOT artifacts (smoke scenarios are analytic).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+BIN="target/release/lite"
+[ -x "$BIN" ] || { echo "error: $BIN not built"; exit 1; }
+
+OUT="$(mktemp -d)"
+trap 'rm -rf "$OUT"' EXIT
+
+"./$BIN" bench run --filter smoke --seed 7 --json "$OUT/baseline.json"
+"./$BIN" bench run --filter smoke --seed 7 --json "$OUT/candidate.json"
+
+# Same seed, same build: must gate clean at zero tolerance.
+"./$BIN" bench compare "$OUT/baseline.json" "$OUT/candidate.json" --tolerance-pct 0
+
+# And the gate must actually bite: corrupt the gateable claim metrics
+# (pretty-printed as `"value": 1,` lines) and require a nonzero exit.
+sed 's/"value": 1,/"value": 0,/' "$OUT/candidate.json" > "$OUT/broken.json"
+if "./$BIN" bench compare "$OUT/baseline.json" "$OUT/broken.json" --tolerance-pct 0 > "$OUT/broken.md"; then
+    echo "error: comparator passed a known regression"
+    cat "$OUT/broken.md"
+    exit 1
+fi
+echo "bench smoke gate OK (self-compare passed, injected regression caught)"
