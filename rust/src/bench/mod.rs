@@ -63,13 +63,15 @@ pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] =
 pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] =
     &[("train-episodes", "40"), ("eval-episodes", "3")];
 
-/// Meta-train a learner on ORBIT-sim train users.
+/// Meta-train a learner on ORBIT-sim train users (`workers` feeds the
+/// staged training pipeline; bit-identical to 1 at the same seed).
 fn train_on_orbit(
     engine: &Engine,
     learner: &mut MetaLearner,
     episodes: usize,
     lr: f32,
     seed: u64,
+    workers: usize,
 ) -> Result<()> {
     let cfg = TrainConfig {
         episodes,
@@ -78,6 +80,7 @@ fn train_on_orbit(
         seed,
         log_every: 25,
         episode_cfg: EpisodeConfig::train_default(),
+        workers,
         ..Default::default()
     };
     let image_size = learner.image_size;
@@ -98,6 +101,7 @@ fn orbit_learner(
     size: usize,
     train_episodes: usize,
     seed: u64,
+    workers: usize,
 ) -> Result<MetaLearner> {
     let mut learner = MetaLearner::new(engine, model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
     // All models start from the pretrained extractor (the paper's
@@ -106,7 +110,7 @@ fn orbit_learner(
     let bb = pretrained_backbone(engine, size, 150, seed)?;
     learner.install_backbone(&bb);
     let lr = if model == "maml" { 1e-4 } else { 1e-3 };
-    train_on_orbit(engine, &mut learner, train_episodes, lr, seed)?;
+    train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers)?;
     Ok(learner)
 }
 
@@ -214,10 +218,11 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
     let train_episodes: usize = knobs.need("train-episodes")?;
     let users: usize = knobs.need("users")?;
     let tasks_per_user: usize = knobs.need("tasks-per-user")?;
-    // Meta-test episodes fan out over this many threads (0 = all cores);
-    // the engine is shared, so the parameter-literal cache is warm for
-    // every worker. Not part of the recorded config: worker count
-    // cannot change the metrics (bit-identity contract).
+    // Meta-test episodes AND training-pipeline episode gradients fan
+    // out over this many threads (0 = all cores); the engine is shared,
+    // so the parameter-literal cache is warm for every worker. Not part
+    // of the recorded config: worker count cannot change the metrics
+    // (bit-identity contract, both eval- and train-side).
     let workers: usize = knobs.need("workers")?;
     let sizes = parse_usize_list(knobs.need_str("sizes")?)?;
     let models: Vec<String> = knobs
@@ -251,7 +256,7 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
                 pred_holder = ft;
                 Predictor::Fine(&pred_holder)
             } else {
-                learner_holder = orbit_learner(engine, model, *size, train_episodes, seed)?;
+                learner_holder = orbit_learner(engine, model, *size, train_episodes, seed, workers)?;
                 Predictor::Meta(&learner_holder)
             };
             let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, workers)?;
@@ -306,7 +311,9 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
 }
 
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
-/// protocol stand-in) with a given train geometry.
+/// protocol stand-in) with a given train geometry. `workers` feeds the
+/// staged training pipeline (bit-identical to 1 at the same seed).
+#[allow(clippy::too_many_arguments)]
 pub fn synth_learner(
     engine: &Engine,
     model: &str,
@@ -316,6 +323,7 @@ pub fn synth_learner(
     episode_cfg: EpisodeConfig,
     train_episodes: usize,
     seed: u64,
+    workers: usize,
 ) -> Result<MetaLearner> {
     let mut learner = MetaLearner::new(engine, model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
     let bb = pretrained_backbone(engine, size, 150, seed)?;
@@ -327,6 +335,7 @@ pub fn synth_learner(
         seed,
         log_every: 25,
         episode_cfg,
+        workers,
         ..Default::default()
     };
     meta_train(engine, &mut learner, &md_suite(), &cfg)?;
@@ -360,7 +369,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
         ("SC(small)", "simple_cnaps", small),
         ("ProtoNets+LITE", "protonet", size),
     ] {
-        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed) {
+        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed, workers) {
             Ok(l) => metas.push((label.to_string(), l)),
             Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
         }
@@ -455,6 +464,9 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
     let eval_episodes: usize = knobs.need("eval-episodes")?;
     // Registry-only knob (not a legacy flag): truncate the sweep.
     let max_cases: usize = knobs.get("max-cases", usize::MAX)?;
+    // Training-pipeline workers (shared knob namespace; not recorded in
+    // the config — bit-identity means it cannot change the metrics).
+    let workers: usize = knobs.get("workers", 1)?;
 
     let mut rep = ScenarioReport::new("hsweep", seed);
     rep.config("train-episodes", train_episodes);
@@ -482,7 +494,7 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
         &["model", "px", "|H|", "MD-like", "VTAB-like"],
     );
     for (model, size, h) in cases {
-        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed)?;
+        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed, workers)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];
@@ -525,6 +537,9 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
     let knobs = knobs.with_defaults(ABLATION_DEFAULTS);
     let train_episodes: usize = knobs.need("train-episodes")?;
     let eval_episodes: usize = knobs.need("eval-episodes")?;
+    // Training-pipeline workers (shared knob namespace; not recorded in
+    // the config — bit-identity means it cannot change the metrics).
+    let workers: usize = knobs.get("workers", 1)?;
 
     let mut rep = ScenarioReport::new("ablation", seed);
     rep.config("train-episodes", train_episodes);
@@ -545,7 +560,7 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
         &["config", "MD-like", "VTAB-like"],
     );
     for (label, size, h, ep_cfg) in cases {
-        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed)?;
+        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed, workers)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];

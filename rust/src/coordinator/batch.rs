@@ -45,6 +45,22 @@ fn pixels_per_image(image_size: usize) -> usize {
     image_size * image_size * 3
 }
 
+#[cfg(test)]
+thread_local! {
+    /// Gather passes performed by this thread (each is one full
+    /// pixel-copy loop over an index set). Test instrumentation for the
+    /// one-gather-per-index-set contract of `train_inputs`; compiled
+    /// out of production builds.
+    static GATHER_PASSES: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Gather passes performed by the calling thread so far (monotonic);
+/// diff around a call to count how many pixel-copy loops it ran.
+#[cfg(test)]
+fn gather_passes() -> usize {
+    GATHER_PASSES.with(|c| c.get())
+}
+
 /// Gather the images at `idx` into a padded [slots, S, S, 3] tensor and
 /// their labels into a padded one-hot [slots, way] tensor.
 fn gather(
@@ -53,6 +69,8 @@ fn gather(
     slots: usize,
     way: usize,
 ) -> Result<(Tensor, Tensor)> {
+    #[cfg(test)]
+    GATHER_PASSES.with(|c| c.set(c.get() + 1));
     if idx.len() > slots {
         bail!("{} examples for {} slots", idx.len(), slots);
     }
@@ -87,6 +105,8 @@ pub fn gather_query(
     slots: usize,
     way: usize,
 ) -> Result<(Tensor, Tensor)> {
+    #[cfg(test)]
+    GATHER_PASSES.with(|c| c.set(c.get() + 1));
     if range.end > episode.query.len() {
         bail!(
             "query range {}..{} out of bounds ({} queries)",
@@ -119,8 +139,54 @@ pub fn gather_query(
     ))
 }
 
+/// One gather site of the assembly plan: the `(x, one-hot)` tensor pair
+/// for a distinct index set, materialized by a single gather pass and
+/// then handed out (by move, no re-copy) to whichever artifact inputs
+/// reference it.
+#[derive(Default)]
+struct GatherSite {
+    x: Option<Tensor>,
+    oh: Option<Tensor>,
+}
+
+impl GatherSite {
+    /// Take the `x` or `oh` half, materializing the pair on first use.
+    /// (`Fn`, not `FnOnce`: the duplicate-input fallback below may need
+    /// a second build.)
+    fn take(
+        slot: &mut Option<GatherSite>,
+        one_hot: bool,
+        build: impl Fn() -> Result<(Tensor, Tensor)>,
+    ) -> Result<Tensor> {
+        if slot.is_none() {
+            let (x, oh) = build()?;
+            *slot = Some(GatherSite { x: Some(x), oh: Some(oh) });
+        }
+        let site = slot.as_mut().expect("site just materialized");
+        let taken = if one_hot { site.oh.take() } else { site.x.take() };
+        // An artifact listing the same input twice would take a half
+        // twice; re-gather rather than guess (manifests never do this).
+        match taken {
+            Some(t) => Ok(t),
+            None => {
+                let (x, oh) = build()?;
+                Ok(if one_hot { oh } else { x })
+            }
+        }
+    }
+}
+
 /// Assemble the data inputs of a LITE train step for one query batch.
 /// Returns tensors in the artifact's data-input order.
+///
+/// Assembly plan: each distinct `(index set, slots)` gather site —
+/// full support, the H / H-bar halves of the split, the query range —
+/// is materialized EXACTLY once per call, producing both its `x` and
+/// one-hot tensors in one pass. (Previously `sup_x`/`sup_oh` and
+/// friends each invoked `gather` separately with identical indices,
+/// doing every pixel copy twice per query batch; the
+/// `one_gather_pass_per_distinct_index_set` test pins the new
+/// contract via the pass counter.)
 pub fn train_inputs(
     entry: &ArtifactEntry,
     geom: &Geom,
@@ -132,24 +198,27 @@ pub fn train_inputs(
     if episode.way > way {
         bail!("episode way {} exceeds geometry way {}", episode.way, way);
     }
-    let mut out = Vec::new();
+    let mut sup: Option<GatherSite> = None; // MAML-style single support buffer
+    let mut bp: Option<GatherSite> = None;
+    let mut nbp: Option<GatherSite> = None;
+    let mut q: Option<GatherSite> = None;
+    let nbp_slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
+    let mut out = Vec::with_capacity(entry.inputs.len());
     for spec in &entry.inputs {
+        let one_hot = spec.name.ends_with("_oh");
         let t = match spec.name.as_str() {
-            // MAML-style single support buffer.
-            "sup_x" => gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)?.0,
-            "sup_oh" => gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)?.1,
-            "sup_bp_x" => gather(episode, &split.bp, geom.h.max(split.bp.len()), way)?.0,
-            "sup_bp_oh" => gather(episode, &split.bp, geom.h.max(split.bp.len()), way)?.1,
-            "sup_nbp_x" => {
-                let slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
-                gather(episode, &split.nbp, slots, way)?.0
-            }
-            "sup_nbp_oh" => {
-                let slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
-                gather(episode, &split.nbp, slots, way)?.1
-            }
-            "q_x" => gather_query(episode, query_range.clone(), geom.mb, way)?.0,
-            "q_oh" => gather_query(episode, query_range.clone(), geom.mb, way)?.1,
+            "sup_x" | "sup_oh" => GatherSite::take(&mut sup, one_hot, || {
+                gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)
+            })?,
+            "sup_bp_x" | "sup_bp_oh" => GatherSite::take(&mut bp, one_hot, || {
+                gather(episode, &split.bp, geom.h.max(split.bp.len()), way)
+            })?,
+            "sup_nbp_x" | "sup_nbp_oh" => GatherSite::take(&mut nbp, one_hot, || {
+                gather(episode, &split.nbp, nbp_slots, way)
+            })?,
+            "q_x" | "q_oh" => GatherSite::take(&mut q, one_hot, || {
+                gather_query(episode, query_range.clone(), geom.mb, way)
+            })?,
             other => bail!("unknown train input `{other}` in {}", entry.name),
         };
         if t.shape != spec.shape {
@@ -300,5 +369,84 @@ mod tests {
         // Labels run 0..3 but the buffer is only 2-way.
         let ep = toy_episode(6, 3, 4, 8, 7);
         assert!(gather_query(&ep, 0..4, 4, 2).is_err());
+    }
+
+    fn mk_entry(inputs: &[(&str, Vec<usize>)]) -> ArtifactEntry {
+        ArtifactEntry {
+            name: "toy_train".into(),
+            path: "toy.hlo".into(),
+            model: "toy".into(),
+            kind: "train".into(),
+            image_size: 8,
+            geom: None,
+            test_geom: None,
+            extra: Default::default(),
+            param_group: None,
+            params: vec![],
+            inputs: inputs
+                .iter()
+                .map(|(n, s)| crate::runtime::manifest::IoSpec { name: (*n).to_string(), shape: s.clone() })
+                .collect(),
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn one_gather_pass_per_distinct_index_set() {
+        let ep = toy_episode(6, 3, 4, 8, 8);
+        let mut rng = Rng::new(3);
+        // LITE geometry: bp(2) + nbp(4) + query(3) = 3 distinct sites
+        // feeding 6 inputs.
+        let geom = Geom { way: 4, n_support: 6, h: 2, mb: 3 };
+        let split = sample_split(6, 2, &mut rng);
+        let entry = mk_entry(&[
+            ("sup_bp_x", vec![2, 8, 8, 3]),
+            ("sup_bp_oh", vec![2, 4]),
+            ("sup_nbp_x", vec![4, 8, 8, 3]),
+            ("sup_nbp_oh", vec![4, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let before = gather_passes();
+        let out = train_inputs(&entry, &geom, &ep, &split, 0..3).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(gather_passes() - before, 3, "one gather per distinct index set");
+
+        // MAML geometry (h = 0): full-support + query = 2 sites, 4 inputs.
+        let geom0 = Geom { way: 4, n_support: 6, h: 0, mb: 3 };
+        let split0 = sample_split(6, 0, &mut rng);
+        let entry0 = mk_entry(&[
+            ("sup_x", vec![6, 8, 8, 3]),
+            ("sup_oh", vec![6, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let before = gather_passes();
+        let out = train_inputs(&entry0, &geom0, &ep, &split0, 0..3).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(gather_passes() - before, 2, "sup_x/sup_oh share one pass");
+    }
+
+    #[test]
+    fn assembly_plan_matches_naive_per_input_gather() {
+        let ep = toy_episode(6, 3, 4, 8, 9);
+        let mut rng = Rng::new(7);
+        let geom = Geom { way: 4, n_support: 6, h: 2, mb: 3 };
+        let split = sample_split(6, 2, &mut rng);
+        let entry = mk_entry(&[
+            ("sup_bp_x", vec![2, 8, 8, 3]),
+            ("sup_bp_oh", vec![2, 4]),
+            ("sup_nbp_x", vec![4, 8, 8, 3]),
+            ("sup_nbp_oh", vec![4, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let out = train_inputs(&entry, &geom, &ep, &split, 0..3).unwrap();
+        let (bp_x, bp_oh) = gather(&ep, &split.bp, 2, 4).unwrap();
+        let (nbp_x, nbp_oh) = gather(&ep, &split.nbp, 4, 4).unwrap();
+        let (q_x, q_oh) = gather_query(&ep, 0..3, 3, 4).unwrap();
+        for (got, want) in out.iter().zip([bp_x, bp_oh, nbp_x, nbp_oh, q_x, q_oh]) {
+            assert_eq!(got, &want);
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! linear head, trained per task at TEST time (50 steps by default —
 //! the paper's transfer-learning comparison point).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::task::Episode;
 use crate::params::ParamStore;
@@ -28,7 +28,7 @@ impl FineTuner {
         let head_batch: usize = head.extra.get("batch").context("batch")?.parse()?;
         let feat_batch: usize = feats.extra.get("batch").context("batch")?.parse()?;
         let feat_dim = head.inputs[0].shape[0]; // w is [D, way]
-        let params = ParamStore::load(&Engine::default_dir(), &engine.manifest, feats)?;
+        let params = ParamStore::load(engine.dir(), &engine.manifest, feats)?;
         Ok(Self {
             image_size,
             features_artifact: feats.name.clone(),
@@ -78,9 +78,15 @@ impl FineTuner {
     pub fn predict_episode(&self, engine: &Engine, episode: &Episode) -> Result<Vec<usize>> {
         let d = self.feat_dim;
         let way = self.way;
-        // Class mask from support labels.
+        // Class mask from support labels. Labels are episode data, not
+        // an invariant of this struct: an episode sampled for a wider
+        // task must fail loudly here instead of panicking on the mask
+        // (and head one-hot) indexing below.
         let mut class_mask = vec![0f32; way];
-        for (_, y) in &episode.support {
+        for (i, (_, y)) in episode.support.iter().enumerate() {
+            if *y >= way {
+                bail!("support label {y} (example {i}) >= finetuner head way {way}");
+            }
             class_mask[*y] = 1.0;
         }
         let mask_t = Tensor::new(vec![way], class_mask)?;

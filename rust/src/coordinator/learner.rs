@@ -68,7 +68,7 @@ impl MetaLearner {
                 a.test_geom.as_ref().unwrap().n_support == n_test_support
             })
             .ok();
-        let params = ParamStore::load(&Engine::default_dir(), &engine.manifest, train)?;
+        let params = ParamStore::load(engine.dir(), &engine.manifest, train)?;
         Ok(Self {
             model: model.to_string(),
             image_size,
@@ -92,6 +92,12 @@ impl MetaLearner {
     /// order, averaged over query examples — each batch's in-graph mean
     /// is weighted by its valid query count, so a final partial batch is
     /// not over-weighted relative to full batches).
+    ///
+    /// `rng` is this episode's OWN subset-sampling stream — callers in
+    /// the training pipeline pass `trainer::episode_rng(seed, step)`
+    /// rather than one advancing stream, so the draws are a function of
+    /// `(seed, step)` alone and the episode can be processed on any
+    /// worker in any order without changing the numbers.
     pub fn train_episode(
         &self,
         engine: &Engine,

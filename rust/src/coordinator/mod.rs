@@ -12,5 +12,6 @@ pub use batch::{sample_split, LiteSplit};
 pub use finetuner::FineTuner;
 pub use learner::{MetaLearner, TaskState, TrainStats};
 pub use trainer::{
-    meta_train, meta_train_with, pretrain_backbone, pretrained_backbone, TrainConfig, TrainLog,
+    episode_rng, meta_train, meta_train_with, pretrain_backbone, pretrained_backbone, TrainConfig,
+    TrainLog,
 };

@@ -2,21 +2,47 @@
 //!
 //! Meta-training implements the paper's protocol: one episode per task,
 //! gradients accumulated over `accum_period` tasks (VTAB+MD: 16) before
-//! each Adam step. Episode generation runs on a producer thread with a
-//! bounded channel so image synthesis overlaps PJRT execution
-//! (backpressure keeps memory flat).
+//! each Adam step. The paper's own decomposition — a task's gradient is
+//! a sum of per-image (and, under accumulation, per-task) gradients —
+//! makes the accumulation window embarrassingly parallel, so the loop
+//! runs as a staged pipeline:
+//!
+//! 1. a bounded **episode-producer pool** synthesizes episode `step`
+//!    from its own derived RNG stream and sends `(step, episode)`
+//!    through a backpressured channel (episode memory stays flat,
+//!    synthesis overlaps PJRT execution);
+//! 2. per accumulation window, a scoped pool of **task-gradient
+//!    workers** computes each episode's `(stats, grads)` concurrently
+//!    against the shared engine (parameters are constant inside a
+//!    window — Adam only steps at window boundaries);
+//! 3. a **deterministic ordered reducer** folds the gradients in step
+//!    order (`optim::OrderedGradAccum`), emits logs/validation in step
+//!    order, and applies Adam at each window boundary.
+//!
+//! Because every per-step random draw comes from a stream derived from
+//! `(seed, step)` alone — episode synthesis, the LITE H-subset splits,
+//! and the validation stream — and the reducer folds floats in step
+//! order, `workers = N` is **bit-identical** to `workers = 1` at the
+//! same seed: same loss curve, same final parameters, same
+//! best-validation selection. (This is the same contract as
+//! `eval::par_eval_dataset`; like that change, moving the serial path
+//! onto per-step derived streams intentionally changes training numbers
+//! relative to the old single advancing stream.)
 
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::coordinator::learner::MetaLearner;
+use crate::coordinator::learner::{MetaLearner, TrainStats};
 use crate::data::registry::Dataset;
 use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::data::PretrainCorpus;
-use crate::optim::{Adam, GradAccum};
+use crate::optim::{Adam, OrderedGradAccum};
 use crate::params::ParamStore;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -35,6 +61,11 @@ pub struct TrainConfig {
     /// accuracy on a held-out validation set"). 0 disables validation.
     pub validate_every: usize,
     pub validate_episodes: usize,
+    /// Episode-gradient workers for the training pipeline. 1 runs each
+    /// window serially inline (no worker threads); 0 uses the machine's
+    /// available parallelism. Any value is bit-identical to 1 at the
+    /// same seed (see the module doc).
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -48,15 +79,26 @@ impl Default for TrainConfig {
             episode_cfg: EpisodeConfig::train_default(),
             validate_every: 0,
             validate_episodes: 4,
+            workers: 1,
         }
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainLog {
     pub step: usize,
     pub loss: f32,
     pub acc: f32,
+}
+
+/// The per-step derived RNG stream — used for episode synthesis (from
+/// the generator seed), LITE H-subset sampling (from the config seed),
+/// and validation episodes (from the validation seed). A function of
+/// `(seed, step)` alone, so no draw depends on which worker processed
+/// the step or in what order; every site that needs the derivation
+/// goes through here so the contract cannot drift apart.
+pub fn episode_rng(seed: u64, step: usize) -> Rng {
+    Rng::new(seed).split(step as u64)
 }
 
 /// Meta-train a learner episodically over a dataset suite; returns the
@@ -67,7 +109,7 @@ pub fn meta_train(
     datasets: &[Dataset],
     cfg: &TrainConfig,
 ) -> Result<Vec<TrainLog>> {
-    let datasets: Arc<Vec<Dataset>> = Arc::new(datasets.to_vec());
+    let datasets: Vec<Dataset> = datasets.to_vec();
     let ep_cfg = cfg.episode_cfg;
     let image_size = learner.image_size;
     meta_train_with(engine, learner, cfg, move |grng| {
@@ -76,102 +118,398 @@ pub fn meta_train(
     })
 }
 
+/// Reducer-side mutable state threaded through one training run:
+/// optimizer, the ordered gradient accumulator, the loss curve, and
+/// validation-best tracking.
+struct ReducerState {
+    adam: Adam,
+    accum: OrderedGradAccum,
+    logs: Vec<TrainLog>,
+    best: Option<(f64, ParamStore)>,
+    val_index: usize,
+}
+
 /// Meta-train from an arbitrary episode source (ORBIT user tasks, custom
-/// suites, ...). Episode synthesis runs on a producer thread behind a
-/// bounded channel so it overlaps PJRT execution with backpressure.
+/// suites, ...) through the staged pipeline described in the module doc.
+/// `make_episode` receives a fresh per-episode RNG stream each call and
+/// must be a pure function of it (it runs concurrently on the producer
+/// pool when the pipeline is parallel).
 pub fn meta_train_with(
     engine: &Engine,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
-    mut make_episode: impl FnMut(&mut Rng) -> Episode + Send + 'static,
+    make_episode: impl Fn(&mut Rng) -> Episode + Send + Sync,
 ) -> Result<Vec<TrainLog>> {
-    let mut rng = Rng::new(cfg.seed);
-    let mut adam = Adam::new(cfg.lr);
-    let mut accum = GradAccum::new(cfg.accum_period);
-    let mut logs = Vec::new();
-
-    // The producer generates train episodes, plus (interleaved, flagged)
-    // validation episodes when validation is enabled — both streams stay
-    // deterministic per seed.
-    let (tx, rx) = sync_channel::<Episode>(4);
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.workers
+    };
+    let period = cfg.accum_period.max(1);
+    // Training episode `step` comes from `split(step)` of the generator
+    // seed; validation episode `k` (numbered globally across rounds)
+    // from `split(k)` of the validation seed — both independent of
+    // execution order, which is what lets the producer pool run ahead.
     let gen_seed = cfg.seed ^ 0xE915_0DE5;
-    let n_episodes = cfg.episodes;
-    let val_every = cfg.validate_every;
-    let val_eps = cfg.validate_episodes;
-    let producer = std::thread::spawn(move || {
-        let mut grng = Rng::new(gen_seed);
-        let mut vrng = Rng::new(gen_seed ^ 0x5A11_DA7E);
-        for step in 0..n_episodes {
-            let ep = make_episode(&mut grng);
-            if tx.send(ep).is_err() {
-                return; // consumer dropped (error path)
-            }
-            if val_every > 0 && (step + 1) % val_every == 0 {
-                // Validation episodes from an independent stream.
-                for _ in 0..val_eps {
-                    if tx.send(make_episode(&mut vrng)).is_err() {
+    let val_seed = gen_seed ^ 0x5A11_DA7E;
+
+    let mut st = ReducerState {
+        adam: Adam::new(cfg.lr),
+        accum: OrderedGradAccum::new(period),
+        logs: Vec::with_capacity(cfg.episodes),
+        best: None,
+        val_index: 0,
+    };
+
+    let producers = workers.min(cfg.episodes.max(1));
+    // A window inherently holds `period` episodes at dispatch; the
+    // channel only needs enough slack to keep the producer pool busy
+    // about one window ahead, so it scales with the pool, not the
+    // period (workers=1 keeps memory as flat as the old single
+    // producer thread).
+    let chan_cap = workers.max(2);
+    // Hard prefetch bound: a producer may not START episode `step`
+    // until `step < reducer_progress + ahead_limit`. Without this gate
+    // the reducer's reorder parking (it must drain the shared channel
+    // while waiting for a slow episode) would let fast producers run
+    // arbitrarily far ahead; with it, at most `ahead_limit + producers`
+    // episodes are alive at once. The limit exceeds `period`, so the
+    // current window can always be fully produced (no deadlock).
+    let ahead_limit = period + chan_cap;
+    let progress = Mutex::new(0usize);
+    let gate = Condvar::new();
+    let done = AtomicBool::new(false);
+    // Set by a producer's drop guard when it unwinds: a panicked
+    // producer never sends its claimed step, and the OTHER producers'
+    // live senders would keep a plain `recv` blocked forever — the
+    // reducer polls this flag instead of hanging (the panic itself
+    // then resurfaces at scope join, like it would serially).
+    let producer_panicked = AtomicBool::new(false);
+
+    std::thread::scope(|scope| -> Result<()> {
+        let (ep_tx, ep_rx) = sync_channel::<(usize, Episode)>(chan_cap);
+        let next_to_produce = AtomicUsize::new(0);
+        let make_episode = &make_episode;
+        let (progress, gate, done) = (&progress, &gate, &done);
+        let producer_panicked = &producer_panicked;
+        for _ in 0..producers {
+            let ep_tx = ep_tx.clone();
+            let next_to_produce = &next_to_produce;
+            scope.spawn(move || {
+                let _flag = PanicFlag(producer_panicked);
+                loop {
+                    let step = next_to_produce.fetch_add(1, Ordering::Relaxed);
+                    if step >= cfg.episodes {
                         return;
+                    }
+                    {
+                        let mut p = progress.lock().unwrap();
+                        while step >= *p + ahead_limit {
+                            if done.load(Ordering::Relaxed) {
+                                return; // reducer exited early (error path)
+                            }
+                            p = gate.wait(p).unwrap();
+                        }
+                    }
+                    let ep = make_episode(&mut episode_rng(gen_seed, step));
+                    if ep_tx.send((step, ep)).is_err() {
+                        return; // reducer exited early (error path)
+                    }
+                }
+            });
+        }
+        drop(ep_tx);
+
+        // RAII, not a manual epilogue: the scope MUST join the
+        // producers on every exit path — including an unwind out of
+        // the reducer (e.g. a panicked gradient worker) — and a
+        // gate-blocked producer only wakes via `done` + notify.
+        // (Blocked SENDERS unblock when `ep_rx` drops with the
+        // closure's locals, after this guard fires.)
+        let _release = GateRelease { done, progress, gate };
+        reduce_loop(
+            engine,
+            learner,
+            cfg,
+            make_episode,
+            &ep_rx,
+            (progress, gate, producer_panicked),
+            &mut st,
+            val_seed,
+            workers,
+            period,
+        )
+    })?;
+
+    // Apply the tail of accumulated task gradients: when
+    // `cfg.episodes % accum_period != 0` the last partial accumulation
+    // window would otherwise be silently dropped.
+    if let Some(avg) = st.accum.flush()? {
+        st.adam.step(&mut learner.params, &avg)?;
+    }
+    // Paper protocol: report/keep the best-validation model.
+    if let Some((_, params)) = st.best {
+        learner.params = params;
+    }
+    Ok(st.logs)
+}
+
+/// RAII flag raised when the owning thread unwinds (and only then).
+struct PanicFlag<'a>(&'a AtomicBool);
+
+impl Drop for PanicFlag<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// RAII release of the producers' prefetch gate: sets `done` and wakes
+/// every `Condvar`-blocked producer so the scope's implicit join can
+/// finish, on success, error, AND unwind alike.
+struct GateRelease<'a> {
+    done: &'a AtomicBool,
+    progress: &'a Mutex<usize>,
+    gate: &'a Condvar,
+}
+
+impl Drop for GateRelease<'_> {
+    fn drop(&mut self) {
+        self.done.store(true, Ordering::Relaxed);
+        // Briefly take the lock so a producer between its `done` check
+        // and `wait` cannot miss the wake-up; ignore poisoning — this
+        // may run during an unwind.
+        if let Ok(guard) = self.progress.lock() {
+            drop(guard);
+        }
+        self.gate.notify_all();
+    }
+}
+
+/// Receive the next `(step, episode)`, surfacing producer death as an
+/// error: polls so a panicked producer (claimed step never sent, other
+/// senders still alive) cannot wedge the reducer in a blocking `recv`.
+fn recv_episode(
+    ep_rx: &Receiver<(usize, Episode)>,
+    producer_panicked: &AtomicBool,
+) -> Result<(usize, Episode)> {
+    loop {
+        match ep_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(pair) => return Ok(pair),
+            Err(RecvTimeoutError::Timeout) => {
+                if producer_panicked.load(Ordering::Relaxed) {
+                    bail!("episode producer panicked");
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => bail!("episode producer terminated early"),
+        }
+    }
+}
+
+/// The deterministic ordered reducer (pipeline stage 3): assemble each
+/// accumulation window from the producer stream, fan it over the
+/// task-gradient workers, fold gradients in step order, and emit
+/// logs / Adam steps / validation in exactly the serial interleaving —
+/// whatever order the workers finish in.
+#[allow(clippy::too_many_arguments)]
+fn reduce_loop(
+    engine: &Engine,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    ep_rx: &Receiver<(usize, Episode)>,
+    (progress, gate, producer_panicked): (&Mutex<usize>, &Condvar, &AtomicBool),
+    st: &mut ReducerState,
+    val_seed: u64,
+    workers: usize,
+    period: usize,
+) -> Result<()> {
+    // Producers race, so episodes can arrive out of step order; early
+    // arrivals park here (bounded by the producer-side prefetch gate).
+    let mut parked: BTreeMap<usize, Episode> = BTreeMap::new();
+    let mut next_episode = |step: usize| -> Result<Episode> {
+        while !parked.contains_key(&step) {
+            let (s, ep) = recv_episode(ep_rx, producer_panicked)?;
+            parked.insert(s, ep);
+        }
+        Ok(parked.remove(&step).unwrap())
+    };
+    let mut lo = 0usize;
+    while lo < cfg.episodes {
+        let hi = (lo + period).min(cfg.episodes);
+        if workers <= 1 {
+            // Serial path: same per-step streams, same fold order, no
+            // worker threads — and fully streaming: each episode is
+            // consumed the moment it is next in order, so in-flight
+            // memory stays as flat as the old single producer thread.
+            for step in lo..hi {
+                let ep = next_episode(step)?;
+                let (stats, grads) =
+                    learner.train_episode(engine, &ep, &mut episode_rng(cfg.seed, step))?;
+                for avg in st.accum.push_at(step, grads)? {
+                    st.adam.step(&mut learner.params, &avg)?;
+                }
+                emit_log(learner, cfg, &mut st.logs, step, &stats);
+                maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
+            }
+        } else {
+            // Parallel path: assemble the whole window first — its
+            // episodes are consumed near-simultaneously by the worker
+            // pool anyway, and the prefetch gate keeps the assembly
+            // stall overlapped with the previous window's compute.
+            let window: Vec<(usize, Episode)> = (lo..hi)
+                .map(|s| Ok((s, next_episode(s)?)))
+                .collect::<Result<_>>()?;
+            run_window_parallel(engine, learner, cfg, make_episode, val_seed, workers, &window, st)?;
+        }
+        lo = hi;
+        // Window consumed: advance the producers' prefetch gate.
+        *progress.lock().unwrap() = lo;
+        gate.notify_all();
+    }
+    Ok(())
+}
+
+/// Fan one accumulation window over a scoped worker pool (pipeline
+/// stage 2) and reduce it. Gradients fold in step order as results
+/// land; the log / Adam / validation pass then replays the window in
+/// step order, with Adam firing at the window boundary before that
+/// step's validation — exactly the serial interleaving.
+#[allow(clippy::too_many_arguments)]
+fn run_window_parallel(
+    engine: &Engine,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    val_seed: u64,
+    workers: usize,
+    window: &[(usize, Episode)],
+    st: &mut ReducerState,
+) -> Result<()> {
+    let lr: &MetaLearner = learner;
+    let mut stats_buf: Vec<Option<TrainStats>> = vec![None; window.len()];
+    let mut window_avgs: Vec<Vec<Tensor>> = Vec::new();
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    std::thread::scope(|ws| -> Result<()> {
+        let (res_tx, res_rx) = channel::<(usize, Result<(TrainStats, Vec<Tensor>)>)>();
+        let next_slot = AtomicUsize::new(0);
+        for _ in 0..workers.min(window.len()) {
+            let res_tx = res_tx.clone();
+            let next_slot = &next_slot;
+            ws.spawn(move || loop {
+                let k = next_slot.fetch_add(1, Ordering::Relaxed);
+                if k >= window.len() {
+                    return;
+                }
+                let (step, ep) = &window[k];
+                let res = lr.train_episode(engine, ep, &mut episode_rng(cfg.seed, *step));
+                if res_tx.send((k, res)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(res_tx);
+        for _ in 0..window.len() {
+            let (k, res) = res_rx.recv().expect("gradient worker pool hung up");
+            match res {
+                Ok((stats, grads)) => {
+                    stats_buf[k] = Some(stats);
+                    window_avgs.extend(st.accum.push_at(window[k].0, grads)?);
+                }
+                Err(e) => {
+                    // Keep draining so the surfaced error is the LOWEST
+                    // failing step (what the serial loop would have hit
+                    // first), not whichever worker lost the race.
+                    let step = window[k].0;
+                    if first_err.as_ref().map_or(true, |(s, _)| step < *s) {
+                        first_err = Some((step, e));
                     }
                 }
             }
         }
-    });
+        Ok(())
+    })?;
+    if let Some((step, e)) = first_err {
+        return Err(e.context(format!("train episode {step}")));
+    }
+    let mut avgs = window_avgs.into_iter();
+    for (k, stats) in stats_buf.iter().enumerate() {
+        let step = window[k].0;
+        let stats = stats.as_ref().expect("every window slot reduced");
+        if k + 1 == window.len() {
+            // A completed accumulation window averages exactly at the
+            // boundary step (`OrderedGradAccum` folds in index order).
+            for avg in avgs.by_ref() {
+                st.adam.step(&mut learner.params, &avg)?;
+            }
+        }
+        emit_log(learner, cfg, &mut st.logs, step, stats);
+        maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
+    }
+    Ok(())
+}
 
-    let mut best: Option<(f64, crate::params::ParamStore)> = None;
-    for step in 0..cfg.episodes {
-        let episode = rx.recv().context("episode producer terminated early")?;
-        let (stats, grads) = learner.train_episode(engine, &episode, &mut rng)?;
-        if let Some(avg) = accum.push(&grads)? {
-            adam.step(&mut learner.params, &avg)?;
-        }
-        logs.push(TrainLog { step, loss: stats.loss, acc: stats.acc });
-        if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            let recent: Vec<f64> = logs
-                .iter()
-                .rev()
-                .take(cfg.log_every)
-                .map(|l| l.loss as f64)
-                .collect();
-            eprintln!(
-                "[meta-train {}] step {step}/{} loss {:.4} acc {:.3}",
-                learner.model,
-                cfg.episodes,
-                crate::util::mean(&recent),
-                stats.acc
-            );
-        }
-        if val_every > 0 && (step + 1) % val_every == 0 {
-            // Score the validation episodes with the current parameters
-            // (adapt + classify, no gradients).
-            let mut accs = Vec::with_capacity(val_eps);
-            for _ in 0..val_eps {
-                let vep = rx.recv().context("validation episode missing")?;
-                let preds = learner.predict_episode(engine, &vep)?;
-                accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
-            }
-            let va = crate::util::mean(&accs);
-            if best.as_ref().map_or(true, |(b, _)| va > *b) {
-                best = Some((va, learner.params.clone()));
-            }
-            eprintln!(
-                "[meta-train {}] step {step}: validation acc {va:.3}{}",
-                learner.model,
-                if best.as_ref().map(|(b, _)| *b) == Some(va) { " (best)" } else { "" }
-            );
-        }
+/// Record one step's stats and print the running-mean progress line.
+fn emit_log(
+    learner: &MetaLearner,
+    cfg: &TrainConfig,
+    logs: &mut Vec<TrainLog>,
+    step: usize,
+    stats: &TrainStats,
+) {
+    logs.push(TrainLog { step, loss: stats.loss, acc: stats.acc });
+    if cfg.log_every > 0 && step % cfg.log_every == 0 {
+        let recent: Vec<f64> =
+            logs.iter().rev().take(cfg.log_every).map(|l| l.loss as f64).collect();
+        eprintln!(
+            "[meta-train {}] step {step}/{} loss {:.4} acc {:.3}",
+            learner.model,
+            cfg.episodes,
+            crate::util::mean(&recent),
+            stats.acc
+        );
     }
-    // Apply the tail of accumulated task gradients: when
-    // `cfg.episodes % accum_period != 0` the last partial accumulation
-    // window would otherwise be silently dropped.
-    if let Some(avg) = accum.flush() {
-        adam.step(&mut learner.params, &avg)?;
+}
+
+/// Run the validation round due after `step` (if any): score
+/// `validate_episodes` held-out episodes with the current parameters
+/// and keep the best-accuracy snapshot. Validation episode `k` always
+/// comes from `split(k)` of the validation seed, independent of worker
+/// count or interleaving. Synthesis runs on the reducer (a deliberate
+/// simplicity/latency tradeoff: rounds are sparse, and keeping the
+/// producer protocol train-only keeps the pipeline auditable; the
+/// derived streams would let a producer pre-build these if validation
+/// ever became hot).
+fn maybe_validate(
+    engine: &Engine,
+    learner: &MetaLearner,
+    cfg: &TrainConfig,
+    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    val_seed: u64,
+    step: usize,
+    st: &mut ReducerState,
+) -> Result<()> {
+    if cfg.validate_every == 0 || (step + 1) % cfg.validate_every != 0 {
+        return Ok(());
     }
-    // Paper protocol: report/keep the best-validation model.
-    if let Some((_, params)) = best {
-        learner.params = params;
+    let mut accs = Vec::with_capacity(cfg.validate_episodes);
+    for _ in 0..cfg.validate_episodes {
+        let vep = make_episode(&mut episode_rng(val_seed, st.val_index));
+        st.val_index += 1;
+        let preds = learner.predict_episode(engine, &vep)?;
+        accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
     }
-    producer.join().ok();
-    Ok(logs)
+    let va = crate::util::mean(&accs);
+    if st.best.as_ref().map_or(true, |(b, _)| va > *b) {
+        st.best = Some((va, learner.params.clone()));
+    }
+    eprintln!(
+        "[meta-train {}] step {step}: validation acc {va:.3}{}",
+        learner.model,
+        if st.best.as_ref().map(|(b, _)| *b) == Some(va) { " (best)" } else { "" }
+    );
+    Ok(())
 }
 
 /// Supervised pretraining of the shared backbone (ImageNet stand-in).
@@ -190,7 +528,7 @@ pub fn pretrain_backbone(
     let name = entry.name.clone();
     let classes: usize = entry.extra.get("classes").context("classes")?.parse()?;
     let batch: usize = entry.extra.get("batch").context("batch")?.parse()?;
-    let mut params = ParamStore::load(&Engine::default_dir(), &engine.manifest, entry)?;
+    let mut params = ParamStore::load(engine.dir(), &engine.manifest, entry)?;
     let corpus = PretrainCorpus::new();
     anyhow::ensure!(
         corpus.n_classes == classes,
@@ -233,12 +571,12 @@ pub fn pretrained_backbone(
     steps: usize,
     seed: u64,
 ) -> Result<ParamStore> {
-    let dir = Engine::default_dir();
+    let dir = engine.dir();
     let ckpt = dir.join(format!("backbone_{image_size}.ckpt"));
     let entry = engine
         .manifest
         .find("pretrain", "pretrain_step", image_size, |_| true)?;
-    let mut params = ParamStore::load(&dir, &engine.manifest, entry)?;
+    let mut params = ParamStore::load(dir, &engine.manifest, entry)?;
     if ckpt.exists() {
         let n = params.restore(&ckpt)?;
         anyhow::ensure!(n > 0, "checkpoint {} restored nothing", ckpt.display());

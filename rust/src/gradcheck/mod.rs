@@ -128,11 +128,7 @@ pub fn run(engine: &Engine, hs: &[usize], budget: usize, seed: u64) -> Result<Ve
     // artifacts share one param group).
     let full_name = artifact_for(GC_N, GC_N);
     let full_entry = engine.entry(&full_name)?;
-    let params = crate::params::ParamStore::load(
-        &Engine::default_dir(),
-        &engine.manifest,
-        full_entry,
-    )?;
+    let params = crate::params::ParamStore::load(engine.dir(), &engine.manifest, full_entry)?;
     let ptensors: Vec<Tensor> = params.tensors().to_vec();
 
     // Exact gradient: full backprop.

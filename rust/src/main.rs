@@ -148,9 +148,10 @@ fn cmd_pretrain(mut args: Args) -> Result<()> {
     let engine = Engine::load(Engine::default_dir())?;
     let params = pretrained_backbone(&engine, size, steps, seed)?;
     println!(
-        "pretrained backbone ({} tensors, {} params) cached at artifacts/backbone_{size}.ckpt",
+        "pretrained backbone ({} tensors, {} params) cached at {}",
         params.names().len(),
-        params.n_params()
+        params.n_params(),
+        engine.dir().join(format!("backbone_{size}.ckpt")).display()
     );
     Ok(())
 }
@@ -164,6 +165,11 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let accum: usize = args.get("accum", 8)?;
     let pretrain_steps: usize = args.get("pretrain-steps", 150)?;
     let validate_every: usize = args.get("validate-every", 0)?;
+    // Episode-gradient workers for the training pipeline (0 = all
+    // cores). Any value produces bit-identical loss curves, final
+    // parameters, and validation-best selection to --workers 1 at the
+    // same seed (the train-throughput bench scenario gates this).
+    let workers: usize = args.get("workers", 1)?;
     let out = args.get_str("out", "");
     args.finish()?;
     let engine = Engine::load(Engine::default_dir())?;
@@ -182,18 +188,20 @@ fn cmd_train(mut args: Args) -> Result<()> {
         log_every: 20,
         episode_cfg: EpisodeConfig::train_default(),
         validate_every,
+        workers,
         ..Default::default()
     };
     let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
     let last: Vec<f64> = logs.iter().rev().take(20).map(|l| l.loss as f64).collect();
     println!("final loss (20-ep mean): {:.4}", lite::util::mean(&last));
     let path = if out.is_empty() {
-        Engine::default_dir().join(format!("{model}_{size}.ckpt"))
+        engine.dir().join(format!("{model}_{size}.ckpt"))
     } else {
         out.into()
     };
     learner.params.save(&path)?;
     println!("checkpoint saved to {}", path.display());
+    eprintln!("{}", engine.stats().report_line());
     Ok(())
 }
 

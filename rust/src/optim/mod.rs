@@ -1,5 +1,10 @@
 //! Optimizers for the meta-training loop (operate on the learnable
-//! tensor subset of a `ParamStore`, in train-artifact gradient order).
+//! tensor subset of a `ParamStore`, in train-artifact gradient order),
+//! plus the gradient accumulators: the plain in-order `GradAccum` and
+//! the `OrderedGradAccum` reducer that restores step order over the
+//! out-of-order gradient stream of the parallel training pipeline.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -142,6 +147,85 @@ impl GradAccum {
     }
 }
 
+/// Deterministic ordered reducer over an index-tagged gradient stream
+/// (stage 3 of the parallel meta-training pipeline): workers hand in
+/// task gradients in whatever order they finish, but the gradients are
+/// folded into the accumulation window in strictly increasing index
+/// order — so the float sums, and therefore the Adam trajectory, are
+/// bit-identical to a serial loop pushing in step order.
+pub struct OrderedGradAccum {
+    accum: GradAccum,
+    /// The next index to fold; everything below it has been folded.
+    next: usize,
+    /// Out-of-order arrivals, buffered until the gap before them fills.
+    pending: BTreeMap<usize, Vec<Tensor>>,
+}
+
+impl OrderedGradAccum {
+    pub fn new(period: usize) -> Self {
+        Self { accum: GradAccum::new(period), next: 0, pending: BTreeMap::new() }
+    }
+
+    /// Submit the gradients for `index`. Out-of-order arrivals are
+    /// buffered; every index that becomes contiguous with the folded
+    /// prefix is folded immediately. Returns the averaged gradients of
+    /// each accumulation window this call completed, in window order —
+    /// normally zero or one, more when filling a gap releases a long
+    /// buffered run. Indices already folded (or buffered twice) are an
+    /// error: the reducer would otherwise silently double-count a task.
+    pub fn push_at(&mut self, index: usize, grads: Vec<Tensor>) -> Result<Vec<Vec<Tensor>>> {
+        if index < self.next || self.pending.contains_key(&index) {
+            bail!(
+                "ordered accum: duplicate gradient index {index} (next unfolded index {})",
+                self.next
+            );
+        }
+        self.pending.insert(index, grads);
+        let mut completed = Vec::new();
+        while let Some(g) = self.pending.remove(&self.next) {
+            self.next += 1;
+            if let Some(avg) = self.accum.push(&g)? {
+                completed.push(avg);
+            }
+        }
+        Ok(completed)
+    }
+
+    /// Flush the tail window (see [`GradAccum::flush`]). Erroring when
+    /// gradients are still buffered behind an index gap keeps a lost
+    /// step from silently shrinking the final average.
+    pub fn flush(&mut self) -> Result<Option<Vec<Tensor>>> {
+        if let Some((&idx, _)) = self.pending.iter().next() {
+            bail!(
+                "ordered accum: flush with {} gradient(s) buffered (index {idx} waiting on {})",
+                self.pending.len(),
+                self.next
+            );
+        }
+        Ok(self.accum.flush())
+    }
+
+    /// The next index the reducer will fold (test introspection).
+    #[cfg(test)]
+    fn next_index(&self) -> usize {
+        self.next
+    }
+
+    /// Gradients buffered out of order, waiting on an earlier index
+    /// (test introspection).
+    #[cfg(test)]
+    fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Folded gradients pending in the current (incomplete) window
+    /// (test introspection).
+    #[cfg(test)]
+    fn pending_in_window(&self) -> usize {
+        self.accum.pending()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +265,91 @@ mod tests {
         assert!(acc.push(&g(&[1.0])).unwrap().is_none());
         let avg = acc.push(&g(&[3.0])).unwrap().unwrap();
         assert_eq!(avg[0].data, vec![2.0]);
+    }
+
+    #[test]
+    fn ordered_accum_folds_out_of_order_identically_to_serial() {
+        // Magnitude-mixed values (1e8 alongside 1.0) make float
+        // summation order observable: if the reducer ever folded in
+        // arrival order instead of index order, the rounding would
+        // differ and the bit-compare below would catch it.
+        let vals: Vec<Vec<f32>> = vec![
+            vec![1.0e8, 3.0],
+            vec![1.0, -7.5],
+            vec![-1.0e8, 0.25],
+            vec![0.125, 1.0e7],
+        ];
+        let mut serial = GradAccum::new(4);
+        let mut serial_avg = None;
+        for v in &vals {
+            if let Some(a) = serial.push(&g(v)).unwrap() {
+                serial_avg = Some(a);
+            }
+        }
+        let serial_avg = serial_avg.expect("serial window completed");
+        // Every arrival permutation must fold to bit-identical output.
+        for perm in [[0usize, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2], [2, 0, 3, 1]] {
+            let mut ord = OrderedGradAccum::new(4);
+            let mut completed = Vec::new();
+            for &i in &perm {
+                completed.extend(ord.push_at(i, g(&vals[i])).unwrap());
+            }
+            assert_eq!(completed.len(), 1, "perm {perm:?}");
+            assert_eq!(
+                completed[0][0].data, serial_avg[0].data,
+                "perm {perm:?} diverged from serial fold order"
+            );
+            assert!(ord.flush().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn ordered_accum_tail_flush_under_out_of_order_completion() {
+        // Period 4, indices 0..6 arriving scrambled: the full window
+        // [0,4) completes when its gap fills, and the tail {4, 5} —
+        // which arrived BEFORE the window closed — flushes to its mean.
+        let mut ord = OrderedGradAccum::new(4);
+        let mut completed = Vec::new();
+        for i in [5usize, 1, 4, 0, 3, 2] {
+            completed.extend(ord.push_at(i, g(&[i as f32 * 2.0])).unwrap());
+        }
+        assert_eq!(completed.len(), 1);
+        assert_eq!(completed[0][0].data, vec![(0.0 + 2.0 + 4.0 + 6.0) / 4.0]);
+        assert_eq!(ord.next_index(), 6);
+        assert_eq!(ord.buffered(), 0);
+        assert_eq!(ord.pending_in_window(), 2);
+        let tail = ord.flush().unwrap().expect("tail window pending");
+        assert_eq!(tail[0].data, vec![(8.0 + 10.0) / 2.0]);
+        assert!(ord.flush().unwrap().is_none());
+    }
+
+    #[test]
+    fn ordered_accum_gap_fill_can_complete_multiple_windows() {
+        // Period 2, arrivals 1,2,3 buffer behind index 0; pushing 0
+        // releases the whole run and completes two windows at once.
+        let mut ord = OrderedGradAccum::new(2);
+        assert!(ord.push_at(1, g(&[1.0])).unwrap().is_empty());
+        assert!(ord.push_at(2, g(&[2.0])).unwrap().is_empty());
+        assert!(ord.push_at(3, g(&[3.0])).unwrap().is_empty());
+        assert_eq!(ord.buffered(), 3);
+        let completed = ord.push_at(0, g(&[0.0])).unwrap();
+        assert_eq!(completed.len(), 2);
+        assert_eq!(completed[0][0].data, vec![0.5]);
+        assert_eq!(completed[1][0].data, vec![2.5]);
+    }
+
+    #[test]
+    fn ordered_accum_rejects_duplicates_and_gapped_flush() {
+        let mut ord = OrderedGradAccum::new(3);
+        ord.push_at(0, g(&[1.0])).unwrap();
+        assert!(ord.push_at(0, g(&[1.0])).is_err(), "already-folded index");
+        ord.push_at(2, g(&[2.0])).unwrap();
+        assert!(ord.push_at(2, g(&[2.0])).is_err(), "buffered index");
+        // Index 1 never arrived: flushing would drop it silently.
+        assert!(ord.flush().is_err());
+        ord.push_at(1, g(&[3.0])).unwrap();
+        assert!(ord.flush().unwrap().is_none(), "window of 3 completed at the gap fill");
+        assert_eq!(ord.next_index(), 3);
     }
 
     #[test]

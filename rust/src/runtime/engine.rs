@@ -106,6 +106,14 @@ impl Engine {
         })
     }
 
+    /// The artifacts directory this engine was loaded from. Anything
+    /// resolving parameter blobs or checkpoints against this engine's
+    /// manifest must use this — NOT [`Engine::default_dir`] — so an
+    /// engine loaded from a custom directory stays self-consistent.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     /// Locate the artifacts directory relative to the repo root (walks up
     /// from the current dir so tests/benches work from any cwd).
     pub fn default_dir() -> PathBuf {

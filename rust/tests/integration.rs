@@ -6,7 +6,9 @@
 //! Requires `make artifacts` (the Makefile test target guarantees it).
 
 use lite::bench::scenarios::{run_filtered, Knobs};
-use lite::coordinator::{batch, pretrain_backbone, FineTuner, MetaLearner};
+use lite::coordinator::{
+    batch, meta_train, pretrain_backbone, FineTuner, MetaLearner, TrainConfig,
+};
 use lite::data::orbit::{OrbitSim, VideoMode};
 use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
 use lite::eval::{eval_dataset, par_eval_dataset, score_episode, Predictor};
@@ -342,11 +344,15 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     // the two runs must pass at ZERO tolerance.
     let Some(_) = engine_opt() else { return };
     // cache-efficiency serially + eval-throughput across 1 vs 2 workers
-    // (each run_filtered call loads its own engine, like the CLI).
-    let knobs = Knobs::parse("episodes=3,worker-sweep=1,2").unwrap();
+    // + train-throughput across 1 vs 2 training workers (each
+    // run_filtered call loads its own engine, like the CLI).
+    let knobs = Knobs::parse(
+        "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2",
+    )
+    .unwrap();
     let a = run_filtered("runtime", &knobs, 5).unwrap();
     let b = run_filtered("runtime", &knobs, 5).unwrap();
-    assert_eq!(a.reports.len(), 2);
+    assert_eq!(a.reports.len(), 3);
     assert_eq!(b.reports.len(), a.reports.len());
     for (x, y) in a.reports.iter().zip(&b.reports) {
         assert_eq!(
@@ -359,6 +365,11 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     // The parallel path agreed with serial inside the sweep...
     let tp = a.get("eval-throughput").unwrap();
     assert_eq!(tp.get_metric("parallel_bit_identical").unwrap().value, 1.0);
+    // ...the training pipeline agreed with ITS serial path (loss curve,
+    // final params, validation-best — the staged-pipeline contract)...
+    let tt = a.get("train-throughput").unwrap();
+    assert_eq!(tt.get_metric("train_parallel_bit_identical").unwrap().value, 1.0);
+    assert!(tt.get_metric("serial_param_cache_hit_rate").unwrap().value > 0.0);
     // ...and steady-state prediction never rebuilt parameter literals.
     let ce = a.get("cache-efficiency").unwrap();
     assert_eq!(ce.get_metric("steady_state_literal_builds").unwrap().value, 0.0);
@@ -376,6 +387,64 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
         }
     }
     assert!(lite::report::compare::compare(&a, &worse, 1.0).has_regression());
+}
+
+#[test]
+fn meta_train_parallel_bit_identical_to_serial() {
+    // The staged-pipeline contract, in anger: `workers = N` must
+    // reproduce the serial run bit for bit — loss curve, final
+    // parameters, and the validation-best selection — across seeds.
+    // episodes % accum_period != 0 keeps the ordered reducer's
+    // tail-window flush inside the property.
+    let Some(e) = engine_opt() else { return };
+    for seed in [11u64, 29] {
+        let run = |workers: usize| {
+            let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+            let cfg = TrainConfig {
+                episodes: 5,
+                accum_period: 2,
+                lr: 1e-3,
+                seed,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers,
+            };
+            let logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+            (logs, learner.params.tensors().to_vec())
+        };
+        let (serial_logs, serial_params) = run(1);
+        assert_eq!(serial_logs.len(), 5, "seed {seed}");
+        for workers in [2usize, 3] {
+            let (logs, params) = run(workers);
+            assert_eq!(serial_logs, logs, "seed {seed} workers {workers}: loss curve diverged");
+            assert_eq!(
+                serial_params, params,
+                "seed {seed} workers {workers}: final parameters diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn finetuner_rejects_out_of_way_support_labels() {
+    // `class_mask[*y]` used to panic on unvalidated support labels;
+    // an episode wider than the head's `way` must be a clean Err.
+    let Some(e) = engine_opt() else { return };
+    let ft = match FineTuner::new(&e, 32, 5) {
+        Ok(f) => f,
+        Err(err) => {
+            eprintln!("skipping: finetuner artifacts unavailable ({err:#})");
+            return;
+        }
+    };
+    let suite = md_suite();
+    let mut ep = sample_episode(&suite[0], &EpisodeConfig::train_default(), &mut Rng::new(3), 32);
+    ep.support[0].1 = 9_999;
+    let res = ft.predict_episode(&e, &ep);
+    let msg = format!("{:#}", res.expect_err("out-of-way label must be an Err, not a panic"));
+    assert!(msg.contains("way"), "unhelpful error: {msg}");
 }
 
 #[test]

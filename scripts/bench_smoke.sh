@@ -2,11 +2,16 @@
 # Smoke-test the bench regression gate end to end: release-build the
 # CLI, run the artifact-free `smoke` scenarios twice at the same seed,
 # and self-compare at ZERO tolerance — exercising `bench run --json`,
-# the JSON round trip, and `bench compare`'s exit-code contract.
+# the JSON round trip, and `bench compare`'s exit-code contract. Then
+# gate the build against the committed baseline report (bootstrapping
+# it on first run), and — when the AOT artifacts exist — gate the
+# staged training pipeline's serial/parallel bit-identity through the
+# train-throughput scenario.
 #
 # Exit 0 means the gate itself works; any payload nondeterminism,
 # schema break, or comparator bug fails loudly. Tier-1-adjacent: safe
-# on machines without the AOT artifacts (smoke scenarios are analytic).
+# on machines without the AOT artifacts (smoke scenarios are analytic;
+# the training gate self-skips).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -33,3 +38,34 @@ if "./$BIN" bench compare "$OUT/baseline.json" "$OUT/broken.json" --tolerance-pc
     exit 1
 fi
 echo "bench smoke gate OK (self-compare passed, injected regression caught)"
+
+# Committed-baseline gate (ROADMAP: perf PRs gate against a landed
+# `bench run --json` report). First run on a machine with a working
+# build bootstraps benchmarks/baseline-smoke.json; every later run
+# gates the current build against it at ZERO tolerance. The smoke
+# scenarios are analytic, so the landed numbers are machine-independent.
+LANDED="../benchmarks/baseline-smoke.json"
+if [ -f "$LANDED" ]; then
+    "./$BIN" bench compare "$LANDED" "$OUT/candidate.json" --tolerance-pct 0
+    echo "landed smoke baseline OK (current build matches benchmarks/baseline-smoke.json)"
+else
+    mkdir -p ../benchmarks
+    cp "$OUT/baseline.json" "$LANDED"
+    echo "landed new smoke baseline at benchmarks/baseline-smoke.json — commit it"
+fi
+
+# Training-pipeline gate: with the AOT artifacts present, run the
+# train-throughput scenario twice at one seed and self-compare at ZERO
+# tolerance — exercising the staged pipeline's serial/parallel
+# bit-identity metric end to end through the report layer. Artifact-free
+# machines skip (the scenario needs the compiled graphs; the in-process
+# identity check also runs under `cargo test` as
+# meta_train_parallel_bit_identical_to_serial).
+if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
+    "./$BIN" bench run --filter train-throughput --seed 7 --json "$OUT/train_base.json"
+    "./$BIN" bench run --filter train-throughput --seed 7 --json "$OUT/train_cand.json"
+    "./$BIN" bench compare "$OUT/train_base.json" "$OUT/train_cand.json" --tolerance-pct 0
+    echo "train-throughput gate OK (same-seed runs identical at 0% tolerance)"
+else
+    echo "train-throughput gate skipped (no AOT artifacts; run \`make artifacts\`)"
+fi
