@@ -29,9 +29,9 @@ use crate::coordinator::{
 use crate::data::orbit::{OrbitSim, VideoMode};
 use crate::data::registry::{md_suite, vtab_suite, Group};
 use crate::data::task::EpisodeConfig;
-use crate::eval::{adapt_cost, eval_dataset, par_eval_dataset, par_eval_orbit, Predictor};
+use crate::eval::{adapt_cost, eval_dataset, par_eval_dataset, par_eval_orbit, EvalConfig, Predictor};
 use crate::report::{Direction, EngineSnapshot, RunReport, ScenarioReport, Table};
-use crate::runtime::{Engine, EngineStats};
+use crate::runtime::{Engine, EngineShards, EngineStats, ShardView};
 use crate::util::{fmt_macs, mean, parse_usize_list};
 use self::scenarios::Knobs;
 
@@ -48,6 +48,7 @@ pub(crate) const ORBIT_DEFAULTS: &[(&str, &str)] = &[
     ("users", "4"),
     ("tasks-per-user", "2"),
     ("workers", "0"),
+    ("shards", "1"),
     ("sizes", "32,64"),
     ("models", "finetuner,maml,protonet,cnaps,simple_cnaps"),
 ];
@@ -57,16 +58,18 @@ pub(crate) const VTAB_DEFAULTS: &[(&str, &str)] = &[
     ("image-size", "64"),
     ("small-size", "32"),
     ("workers", "0"),
+    ("shards", "1"),
 ];
 pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] =
-    &[("train-episodes", "40"), ("eval-episodes", "3")];
+    &[("train-episodes", "40"), ("eval-episodes", "3"), ("shards", "1")];
 pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] =
-    &[("train-episodes", "40"), ("eval-episodes", "3")];
+    &[("train-episodes", "40"), ("eval-episodes", "3"), ("shards", "1")];
 
 /// Meta-train a learner on ORBIT-sim train users (`workers` feeds the
-/// staged training pipeline; bit-identical to 1 at the same seed).
+/// staged training pipeline and the engine's shard count feeds the
+/// config; both bit-identical to 1 at the same seed).
 fn train_on_orbit(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     episodes: usize,
     lr: f32,
@@ -81,6 +84,7 @@ fn train_on_orbit(
         log_every: 25,
         episode_cfg: EpisodeConfig::train_default(),
         workers,
+        shards: engine.n_shards(),
         ..Default::default()
     };
     let image_size = learner.image_size;
@@ -96,18 +100,19 @@ fn train_on_orbit(
 
 /// Build (and meta-train) a learner for the ORBIT benchmark.
 fn orbit_learner(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     model: &str,
     size: usize,
     train_episodes: usize,
     seed: u64,
     workers: usize,
 ) -> Result<MetaLearner> {
-    let mut learner = MetaLearner::new(engine, model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
+    let mut learner =
+        MetaLearner::new(engine.primary(), model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
     // All models start from the pretrained extractor (the paper's
     // ImageNet protocol); CNAPs variants freeze it, ProtoNets/MAML learn
     // through it.
-    let bb = pretrained_backbone(engine, size, 150, seed)?;
+    let bb = pretrained_backbone(engine.primary(), size, 150, seed)?;
     learner.install_backbone(&bb);
     let lr = if model == "maml" { 1e-4 } else { 1e-3 };
     train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers)?;
@@ -219,11 +224,13 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
     let users: usize = knobs.need("users")?;
     let tasks_per_user: usize = knobs.need("tasks-per-user")?;
     // Meta-test episodes AND training-pipeline episode gradients fan
-    // out over this many threads (0 = all cores); the engine is shared,
-    // so the parameter-literal cache is warm for every worker. Not part
-    // of the recorded config: worker count cannot change the metrics
-    // (bit-identity contract, both eval- and train-side).
+    // out over this many threads (0 = all cores); each shard engine is
+    // shared, so the parameter-literal cache is warm for every worker.
+    // Neither workers nor shards is part of the recorded config:
+    // execution shape cannot change the metrics (bit-identity contract,
+    // both eval- and train-side).
     let workers: usize = knobs.need("workers")?;
+    let shards: usize = knobs.need("shards")?;
     let sizes = parse_usize_list(knobs.need_str("sizes")?)?;
     let models: Vec<String> = knobs
         .need_str("models")?
@@ -238,7 +245,10 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
     rep.config("sizes", knobs.need_str("sizes")?);
     rep.config("models", models.join(","));
 
-    let stats0 = engine.stats();
+    let engine = ShardView::resolve(engine, shards)?;
+    let engine = &engine;
+    let eval = EvalConfig { workers, shards };
+    let stats0 = engine.merged_stats();
     let test_sim = OrbitSim::new(seed ^ 0x7E57, users);
     let mut table = Table::new(
         &format!(
@@ -250,8 +260,8 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
         for model in &models {
             let (pred_holder, learner_holder);
             let pred: Predictor = if model == "finetuner" {
-                let mut ft = FineTuner::new(engine, *size, 50)?;
-                let bb = pretrained_backbone(engine, *size, 150, seed)?;
+                let mut ft = FineTuner::new(engine.primary(), *size, 50)?;
+                let bb = pretrained_backbone(engine.primary(), *size, 150, seed)?;
                 ft.install_backbone(&bb);
                 pred_holder = ft;
                 Predictor::Fine(&pred_holder)
@@ -259,8 +269,8 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
                 learner_holder = orbit_learner(engine, model, *size, train_episodes, seed, workers)?;
                 Predictor::Meta(&learner_holder)
             };
-            let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, workers)?;
-            let clutter = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2, workers)?;
+            let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, eval)?;
+            let clutter = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clutter, *size, tasks_per_user, 4, seed + 2, eval)?;
             let steps = match model.as_str() {
                 "maml" => 5,
                 "finetuner" => 50,
@@ -299,7 +309,7 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
         }
     }
     rep.tables.push(table);
-    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    rep.engine = Some(stats_delta(&stats0, &engine.merged_stats()));
     Ok(rep)
 }
 
@@ -312,10 +322,11 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
 
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
 /// protocol stand-in) with a given train geometry. `workers` feeds the
-/// staged training pipeline (bit-identical to 1 at the same seed).
+/// staged training pipeline and the engine's shard count feeds the
+/// config (both bit-identical to 1 at the same seed).
 #[allow(clippy::too_many_arguments)]
 pub fn synth_learner(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     model: &str,
     size: usize,
     train_h: Option<usize>,
@@ -325,8 +336,9 @@ pub fn synth_learner(
     seed: u64,
     workers: usize,
 ) -> Result<MetaLearner> {
-    let mut learner = MetaLearner::new(engine, model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
-    let bb = pretrained_backbone(engine, size, 150, seed)?;
+    let mut learner =
+        MetaLearner::new(engine.primary(), model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
+    let bb = pretrained_backbone(engine.primary(), size, 150, seed)?;
     learner.install_backbone(&bb);
     let cfg = TrainConfig {
         episodes: train_episodes,
@@ -336,6 +348,7 @@ pub fn synth_learner(
         log_every: 25,
         episode_cfg,
         workers,
+        shards: engine.n_shards(),
         ..Default::default()
     };
     meta_train(engine, &mut learner, &md_suite(), &cfg)?;
@@ -351,6 +364,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
     let size: usize = knobs.need("image-size")?;
     let small: usize = knobs.need("small-size")?;
     let workers: usize = knobs.need("workers")?;
+    let shards: usize = knobs.need("shards")?;
 
     let mut rep = ScenarioReport::new("vtab", seed);
     rep.config("train-episodes", train_episodes);
@@ -358,7 +372,10 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
     rep.config("image-size", size);
     rep.config("small-size", small);
 
-    let stats0 = engine.stats();
+    let engine = ShardView::resolve(engine, shards)?;
+    let engine = &engine;
+    let eval = EvalConfig { workers, shards };
+    let stats0 = engine.merged_stats();
     // Contenders: SC+LITE (large images), SC (small images), ProtoNets
     // +LITE (large), FineTuner (transfer baseline, large). Contenders
     // whose artifacts don't exist at this image size (e.g. the 96px
@@ -374,9 +391,9 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
             Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
         }
     }
-    let ft: Option<FineTuner> = match FineTuner::new(engine, size, 50) {
+    let ft: Option<FineTuner> = match FineTuner::new(engine.primary(), size, 50) {
         Ok(mut f) => {
-            let bb = pretrained_backbone(engine, size, 150, seed)?;
+            let bb = pretrained_backbone(engine.primary(), size, 150, seed)?;
             f.install_backbone(&bb);
             Some(f)
         }
@@ -411,7 +428,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
                 Predictor::Meta(m) => m.image_size,
                 Predictor::Fine(f) => f.image_size,
             };
-            let s = par_eval_dataset(engine, p, ds, &cfg, isize, eval_episodes, seed + 7, workers)?;
+            let s = par_eval_dataset(engine, p, ds, &cfg, isize, eval_episodes, seed + 7, eval)?;
             row.push(format!("{:.1}", 100.0 * s.frame_acc.0));
             group_acc.entry((k, ds.group.label())).or_default().push(s.frame_acc.0);
             if ds.group != Group::Md {
@@ -447,7 +464,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
         means.row(row);
     }
     rep.tables.push(means);
-    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    rep.engine = Some(stats_delta(&stats0, &engine.merged_stats()));
     Ok(rep)
 }
 
@@ -464,15 +481,19 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
     let eval_episodes: usize = knobs.need("eval-episodes")?;
     // Registry-only knob (not a legacy flag): truncate the sweep.
     let max_cases: usize = knobs.get("max-cases", usize::MAX)?;
-    // Training-pipeline workers (shared knob namespace; not recorded in
-    // the config — bit-identity means it cannot change the metrics).
+    // Training-pipeline workers and engine shards (shared knob
+    // namespace; not recorded in the config — bit-identity means
+    // neither can change the metrics).
     let workers: usize = knobs.get("workers", 1)?;
+    let shards: usize = knobs.need("shards")?;
 
     let mut rep = ScenarioReport::new("hsweep", seed);
     rep.config("train-episodes", train_episodes);
     rep.config("eval-episodes", eval_episodes);
 
-    let stats0 = engine.stats();
+    let engine = ShardView::resolve(engine, shards)?;
+    let engine = &engine;
+    let stats0 = engine.merged_stats();
     let sweep_cfg = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
     let mut cases: Vec<(&str, usize, usize)> = vec![
         ("simple_cnaps", 64, 1),
@@ -522,7 +543,7 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
         ]);
     }
     rep.tables.push(table);
-    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    rep.engine = Some(stats_delta(&stats0, &engine.merged_stats()));
     Ok(rep)
 }
 
@@ -537,15 +558,19 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
     let knobs = knobs.with_defaults(ABLATION_DEFAULTS);
     let train_episodes: usize = knobs.need("train-episodes")?;
     let eval_episodes: usize = knobs.need("eval-episodes")?;
-    // Training-pipeline workers (shared knob namespace; not recorded in
-    // the config — bit-identity means it cannot change the metrics).
+    // Training-pipeline workers and engine shards (shared knob
+    // namespace; not recorded in the config — bit-identity means
+    // neither can change the metrics).
     let workers: usize = knobs.get("workers", 1)?;
+    let shards: usize = knobs.need("shards")?;
 
     let mut rep = ScenarioReport::new("ablation", seed);
     rep.config("train-episodes", train_episodes);
     rep.config("eval-episodes", eval_episodes);
 
-    let stats0 = engine.stats();
+    let engine = ShardView::resolve(engine, shards)?;
+    let engine = &engine;
+    let stats0 = engine.merged_stats();
     // (no LITE, small image, large task) / (no LITE, large image, small
     // task) / (LITE, large image, large task) — D.3's three columns.
     let large_task = EpisodeConfig { way_max: 10, shot_min: 2, shot_max: 12, n_support_max: 80, query_per_class: 1 };
@@ -584,7 +609,7 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
         ]);
     }
     rep.tables.push(table);
-    rep.engine = Some(stats_delta(&stats0, &engine.stats()));
+    rep.engine = Some(stats_delta(&stats0, &engine.merged_stats()));
     Ok(rep)
 }
 

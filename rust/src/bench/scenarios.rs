@@ -17,10 +17,10 @@ use crate::coordinator::{meta_train, MetaLearner, TrainConfig, TrainLog};
 use crate::data::registry::md_suite;
 use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
-use crate::eval::{adapt_cost, par_eval_dataset, EvalSummary, Predictor};
+use crate::eval::{adapt_cost, par_eval_dataset, EvalConfig, EvalSummary, Predictor};
 use crate::memory::{mib, peak_bytes, Mode};
 use crate::report::{Direction, RunReport, ScenarioReport, Table};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EngineShards, ShardView};
 use crate::util::{fmt_macs, parse_usize_list, timed};
 
 /// Ordered string config knobs (`key=value`): the scenario-facing
@@ -168,6 +168,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(CacheEfficiency),
         Box::new(EvalThroughput),
         Box::new(TrainThroughput),
+        Box::new(ShardThroughput),
         Box::new(GradcheckRmse),
         Box::new(Orbit),
         Box::new(Vtab),
@@ -469,7 +470,7 @@ impl Scenario for EvalThroughput {
                     size,
                     episodes,
                     seed + 1,
-                    w,
+                    EvalConfig { workers: w, shards: 1 },
                 )
             });
             let summary = res?;
@@ -584,6 +585,7 @@ impl Scenario for TrainThroughput {
                 validate_every,
                 validate_episodes: 1,
                 workers: w,
+                shards: 1,
             };
             let sw0 = engine.stats();
             let (res, secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
@@ -652,6 +654,162 @@ impl Scenario for TrainThroughput {
                 Direction::Higher,
             );
         }
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// Multi-engine sharding: sweep `meta_train` + `par_eval_dataset` over
+/// engine shard counts, gating the shards>1 == serial bit-identity
+/// contract (loss curve, final parameters, eval metrics — compared at
+/// the bit level) and reporting episodes/sec per shard count.
+struct ShardThroughput;
+
+impl Scenario for ShardThroughput {
+    fn name(&self) -> &'static str {
+        "shard-throughput"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "episodes/sec across engine shard counts + sharded/serial bit-identity"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`shard-*`): the knob namespace is
+        // shared across every scenario in one `bench run` (cf.
+        // train-throughput's `train-bench-episodes`), and retuning the
+        // worker sweeps must not silently change this gate's workload.
+        //
+        // 5 episodes at accum 2 keeps the ordered reducer's tail-window
+        // flush inside the gate; train workers default to 2 so sharding
+        // composes with the staged pipeline (the ISSUE's `--shards 2
+        // --workers 2` shape), and validation every 2 exercises
+        // best-selection on the primary shard.
+        let episodes: usize = knobs.get("shard-bench-episodes", 5)?;
+        let accum: usize = knobs.get("shard-accum", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let workers: usize = knobs.get("shard-train-workers", 2)?;
+        let eval_episodes: usize = knobs.get("shard-eval-episodes", 3)?;
+        let sweep = parse_usize_list(&knobs.get_str("shard-sweep", "1,2"))?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("shard-bench-episodes", episodes);
+        rep.config("shard-accum", accum);
+        rep.config("image-size", size);
+        rep.config("shard-train-workers", workers);
+        rep.config("shard-eval-episodes", eval_episodes);
+        rep.config("shard-sweep", knobs.get_str("shard-sweep", "1,2"));
+
+        let mut learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        // Every sweep entry restarts from the same initial parameters
+        // (and a fresh Adam inside meta_train), so the runs are
+        // comparable bit for bit.
+        let init = learner.params.clone();
+        let suite = md_suite();
+        let ds = &suite[2]; // birds-like
+        let ecfg = EpisodeConfig::test_large(64);
+        let s0 = engine.stats();
+        let mut table = Table::new(
+            "shard throughput (engine-shard sweep)",
+            &["shards", "train eps/s", "eval eps/s", "final loss", "identical", "literal-builds"],
+        );
+        let mut reference: Option<(Vec<TrainLog>, Vec<crate::tensor::Tensor>, EvalSummary)> = None;
+        let mut train_identical = true;
+        let mut eval_identical = true;
+        for &s in &sweep {
+            learner.params = init.clone();
+            // s == 1 borrows the registry engine (warm caches); s > 1
+            // loads s fresh engines over the same artifacts dir.
+            let sharded = ShardView::resolve(engine, s)?;
+            let ss0 = sharded.merged_stats();
+            let cfg = TrainConfig {
+                episodes,
+                accum_period: accum,
+                lr: 1e-3,
+                seed: seed + 1,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers,
+                shards: s,
+            };
+            let (tres, tsecs) = timed(|| meta_train(&sharded, &mut learner, &suite, &cfg));
+            let logs = tres?;
+            let (eres, esecs) = timed(|| {
+                par_eval_dataset(
+                    &sharded,
+                    &Predictor::Meta(&learner),
+                    ds,
+                    &ecfg,
+                    size,
+                    eval_episodes,
+                    seed + 2,
+                    EvalConfig { workers, shards: s },
+                )
+            });
+            let summary = eres?;
+            // Literal builds across ALL shards of this entry (table
+            // context only: parallel workers can race a rebuild, so the
+            // count is not deterministic enough for the gated payload).
+            let builds = sharded.merged_stats().param_literal_builds - ss0.param_literal_builds;
+            let final_params = learner.params.tensors().to_vec();
+            let run_identical = match &reference {
+                None => {
+                    reference = Some((logs.clone(), final_params, summary.clone()));
+                    true
+                }
+                Some((ref_logs, ref_params, ref_sum)) => {
+                    let t = *ref_logs == logs && *ref_params == final_params;
+                    let e = ref_sum.frame_acc == summary.frame_acc
+                        && ref_sum.video_acc == summary.video_acc
+                        && ref_sum.ftr == summary.ftr;
+                    train_identical &= t;
+                    eval_identical &= e;
+                    t && e
+                }
+            };
+            table.row(vec![
+                s.to_string(),
+                format!("{:.2}", episodes as f64 / tsecs.max(1e-9)),
+                format!("{:.2}", eval_episodes as f64 / esecs.max(1e-9)),
+                format!("{:.4}", logs.last().map_or(f64::NAN, |l| l.loss as f64)),
+                if run_identical { "yes".into() } else { "NO".into() },
+                builds.to_string(),
+            ]);
+            rep.timing(&format!("train_wall_secs_s{s}"), tsecs);
+            rep.timing(&format!("eval_wall_secs_s{s}"), esecs);
+        }
+        rep.tables.push(table);
+        if let Some((ref_logs, _, ref_sum)) = &reference {
+            // Deterministic aggregates from the reference entry,
+            // prefixed by its actual shard count (cf. eval-throughput).
+            let prefix = format!("s{}", sweep[0]);
+            rep.metric(
+                &format!("{prefix}_final_loss"),
+                ref_logs.last().map_or(f64::NAN, |l| l.loss as f64),
+                Direction::Info,
+            );
+            ref_sum.push_metrics(&prefix, &mut rep.metrics);
+        }
+        // As in eval/train-throughput: only claim the identity contract
+        // when at least one cross-shard comparison actually ran.
+        if sweep.len() >= 2 {
+            rep.metric(
+                "shard_train_bit_identical",
+                if train_identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            rep.metric(
+                "shard_eval_bit_identical",
+                if eval_identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+        }
+        // Engine snapshot: the registry engine only (sweep entries with
+        // s > 1 run on per-entry temporaries whose totals land in the
+        // table's literal-builds column).
         rep.engine = Some(stats_delta(&s0, &engine.stats()));
         Ok(rep)
     }

@@ -28,6 +28,15 @@
 //! `eval::par_eval_dataset`; like that change, moving the serial path
 //! onto per-step derived streams intentionally changes training numbers
 //! relative to the old single advancing stream.)
+//!
+//! The pipeline runs over a [`EngineShards`] set: episode `step`'s
+//! gradients always execute on shard `step % n_shards` (a pure function
+//! of the step, like every random draw), parameters are constant inside
+//! an accumulation window so each shard's `(store_id, version)` literal
+//! cache stays hot, and reducer-side validation runs on the primary
+//! shard. A plain `&Engine` is the one-shard set, so `shards = N` is
+//! bit-identical to serial by the same argument as `workers = N` (the
+//! `shard-throughput` scenario gates this).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -44,7 +53,7 @@ use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::data::PretrainCorpus;
 use crate::optim::{Adam, OrderedGradAccum};
 use crate::params::ParamStore;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EngineShards};
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
@@ -66,6 +75,15 @@ pub struct TrainConfig {
     /// available parallelism. Any value is bit-identical to 1 at the
     /// same seed (see the module doc).
     pub workers: usize,
+    /// Independent engine shards backing the run. Consumed where the
+    /// engine is constructed (`ShardedEngine::load(dir, cfg.shards)` in
+    /// the CLI and bench runners); the pipeline routes episode `step`
+    /// to shard `step % engine.n_shards()` and **fails loudly** when
+    /// this knob disagrees with the engine set it was actually handed,
+    /// so a config/engine mismatch cannot silently train unsharded.
+    /// Any value is bit-identical to 1 at the same seed (see the
+    /// module doc).
+    pub shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -80,6 +98,7 @@ impl Default for TrainConfig {
             validate_every: 0,
             validate_episodes: 4,
             workers: 1,
+            shards: 1,
         }
     }
 }
@@ -102,9 +121,10 @@ pub fn episode_rng(seed: u64, step: usize) -> Rng {
 }
 
 /// Meta-train a learner episodically over a dataset suite; returns the
-/// per-episode loss curve.
+/// per-episode loss curve. `engine` is any shard set — a plain
+/// `&Engine` coerces to the one-shard case.
 pub fn meta_train(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     datasets: &[Dataset],
     cfg: &TrainConfig,
@@ -135,11 +155,12 @@ struct ReducerState {
 /// must be a pure function of it (it runs concurrently on the producer
 /// pool when the pipeline is parallel).
 pub fn meta_train_with(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
     make_episode: impl Fn(&mut Rng) -> Episode + Send + Sync,
 ) -> Result<Vec<TrainLog>> {
+    engine.check_shard_knob(cfg.shards, "TrainConfig.shards")?;
     let workers = if cfg.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -203,12 +224,19 @@ pub fn meta_train_with(
                         return;
                     }
                     {
-                        let mut p = progress.lock().unwrap();
+                        // A poisoned gate means another pipeline thread
+                        // panicked; exit quietly so the ORIGINAL panic
+                        // resurfaces at scope join instead of a
+                        // secondary PoisonError panic from here.
+                        let Ok(mut p) = progress.lock() else { return };
                         while step >= *p + ahead_limit {
                             if done.load(Ordering::Relaxed) {
                                 return; // reducer exited early (error path)
                             }
-                            p = gate.wait(p).unwrap();
+                            match gate.wait(p) {
+                                Ok(guard) => p = guard,
+                                Err(_) => return,
+                            }
                         }
                     }
                     let ep = make_episode(&mut episode_rng(gen_seed, step));
@@ -314,7 +342,7 @@ fn recv_episode(
 /// whatever order the workers finish in.
 #[allow(clippy::too_many_arguments)]
 fn reduce_loop(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
     make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
@@ -345,8 +373,11 @@ fn reduce_loop(
             // memory stays as flat as the old single producer thread.
             for step in lo..hi {
                 let ep = next_episode(step)?;
-                let (stats, grads) =
-                    learner.train_episode(engine, &ep, &mut episode_rng(cfg.seed, step))?;
+                let (stats, grads) = learner.train_episode(
+                    engine.shard(step),
+                    &ep,
+                    &mut episode_rng(cfg.seed, step),
+                )?;
                 for avg in st.accum.push_at(step, grads)? {
                     st.adam.step(&mut learner.params, &avg)?;
                 }
@@ -365,7 +396,10 @@ fn reduce_loop(
         }
         lo = hi;
         // Window consumed: advance the producers' prefetch gate.
-        *progress.lock().unwrap() = lo;
+        // Recover a poisoned lock (a producer panicked while holding
+        // it): that panic resurfaces at scope join, and replacing it
+        // with a secondary PoisonError panic here would mask it.
+        *progress.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = lo;
         gate.notify_all();
     }
     Ok(())
@@ -378,7 +412,7 @@ fn reduce_loop(
 /// step's validation — exactly the serial interleaving.
 #[allow(clippy::too_many_arguments)]
 fn run_window_parallel(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
     make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
@@ -403,7 +437,8 @@ fn run_window_parallel(
                     return;
                 }
                 let (step, ep) = &window[k];
-                let res = lr.train_episode(engine, ep, &mut episode_rng(cfg.seed, *step));
+                let res =
+                    lr.train_episode(engine.shard(*step), ep, &mut episode_rng(cfg.seed, *step));
                 if res_tx.send((k, res)).is_err() {
                     return;
                 }
@@ -411,7 +446,13 @@ fn run_window_parallel(
         }
         drop(res_tx);
         for _ in 0..window.len() {
-            let (k, res) = res_rx.recv().expect("gradient worker pool hung up");
+            // Every sender gone with results still missing means a
+            // worker panicked before sending: stop draining instead of
+            // panicking on the recv. The worker's ORIGINAL panic
+            // resurfaces at the scope join right below; the missing-
+            // slot check in the replay loop backstops the impossible
+            // case where it somehow does not.
+            let Ok((k, res)) = res_rx.recv() else { break };
             match res {
                 Ok((stats, grads)) => {
                     stats_buf[k] = Some(stats);
@@ -436,7 +477,9 @@ fn run_window_parallel(
     let mut avgs = window_avgs.into_iter();
     for (k, stats) in stats_buf.iter().enumerate() {
         let step = window[k].0;
-        let stats = stats.as_ref().expect("every window slot reduced");
+        let Some(stats) = stats.as_ref() else {
+            bail!("train episode {step}: gradient worker terminated before reducing it");
+        };
         if k + 1 == window.len() {
             // A completed accumulation window averages exactly at the
             // boundary step (`OrderedGradAccum` folds in index order).
@@ -480,9 +523,11 @@ fn emit_log(
 /// simplicity/latency tradeoff: rounds are sparse, and keeping the
 /// producer protocol train-only keeps the pipeline auditable; the
 /// derived streams would let a producer pre-build these if validation
-/// ever became hot).
+/// ever became hot). Prediction runs on the primary shard: any fixed
+/// shard choice is deterministic, and the primary is the one whose
+/// adapt/classify executables the serial run warms.
 fn maybe_validate(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     learner: &MetaLearner,
     cfg: &TrainConfig,
     make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
@@ -497,7 +542,7 @@ fn maybe_validate(
     for _ in 0..cfg.validate_episodes {
         let vep = make_episode(&mut episode_rng(val_seed, st.val_index));
         st.val_index += 1;
-        let preds = learner.predict_episode(engine, &vep)?;
+        let preds = learner.predict_episode(engine.primary(), &vep)?;
         accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
     }
     let va = crate::util::mean(&accs);

@@ -8,6 +8,12 @@
 //! episodes over a worker pool and still produce metrics bit-identical
 //! to the serial paths: the tasks are the same, and aggregation happens
 //! in episode-index order. Only `secs_per_task` is wall-clock dependent.
+//!
+//! The same argument covers engine shards: episode `i` always runs on
+//! `engine.shard(i)` (a pure function of the index), execution is
+//! deterministic across engine instances, so any worker/shard
+//! combination reproduces the serial metrics bit for bit (gated by the
+//! `shard-throughput` scenario).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -20,8 +26,22 @@ use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::eval::metrics::{score_episode, EpisodeMetrics};
 use crate::report::{Direction, Metric};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EngineShards};
 use crate::util::{mean_ci95, timed};
+
+/// Execution shape of an evaluation run. `workers == 0` resolves to the
+/// machine's available parallelism. `shards` is consumed where the
+/// engine is constructed (`ShardedEngine::load(dir, shards)` in the CLI
+/// and bench runners); the harness routes episode `i` to
+/// `engine.shard(i)` and **fails loudly** when this knob disagrees with
+/// the engine set it was actually handed, so a config/engine mismatch
+/// cannot silently evaluate unsharded. Metrics stay bit-identical to
+/// serial for any worker/shard combination.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalConfig {
+    pub workers: usize,
+    pub shards: usize,
+}
 
 /// Aggregated evaluation over a set of episodes.
 #[derive(Clone, Debug, Default)]
@@ -106,9 +126,10 @@ fn eval_one(
     Ok((score_episode(&ep, &preds?), dt))
 }
 
-/// Evaluate on episodes sampled from one dataset.
+/// Evaluate on episodes sampled from one dataset: serial (one worker),
+/// over whatever shard set the engine carries.
 pub fn eval_dataset(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     pred: &Predictor,
     ds: &Dataset,
     cfg: &EpisodeConfig,
@@ -116,33 +137,37 @@ pub fn eval_dataset(
     n_episodes: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
-    par_eval_dataset(engine, pred, ds, cfg, image_size, n_episodes, seed, 1)
+    let eval = EvalConfig { workers: 1, shards: engine.n_shards() };
+    par_eval_dataset(engine, pred, ds, cfg, image_size, n_episodes, seed, eval)
 }
 
-/// Parallel `eval_dataset`: fans episodes over a scoped worker pool.
-/// Deterministic per-episode RNG splitting plus index-ordered
-/// aggregation make the accuracy metrics bit-identical to the serial
-/// path on the same seed. `workers == 0` uses the machine's available
-/// parallelism.
+/// Parallel `eval_dataset`: fans episodes over a scoped worker pool,
+/// episode `i` executing on `engine.shard(i)`. Deterministic
+/// per-episode RNG splitting plus index-ordered aggregation make the
+/// accuracy metrics bit-identical to the serial path on the same seed.
 #[allow(clippy::too_many_arguments)]
 pub fn par_eval_dataset(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     pred: &Predictor,
     ds: &Dataset,
     cfg: &EpisodeConfig,
     image_size: usize,
     n_episodes: usize,
     seed: u64,
-    workers: usize,
+    eval: EvalConfig,
 ) -> Result<EvalSummary> {
-    par_eval(workers, n_episodes, |i| eval_one(engine, pred, ds, cfg, image_size, seed, i))
+    engine.check_shard_knob(eval.shards, "EvalConfig.shards")?;
+    par_eval(eval.workers, n_episodes, |i| {
+        eval_one(engine.shard(i), pred, ds, cfg, image_size, seed, i)
+    })
 }
 
 /// ORBIT protocol: `tasks_per_user` personalization tasks per test user,
-/// in the given video mode.
+/// in the given video mode — serial (one worker), over whatever shard
+/// set the engine carries.
 #[allow(clippy::too_many_arguments)]
 pub fn eval_orbit(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     pred: &Predictor,
     sim: &OrbitSim,
     mode: VideoMode,
@@ -151,16 +176,26 @@ pub fn eval_orbit(
     frames_per_video: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
-    par_eval_orbit(engine, pred, sim, mode, image_size, tasks_per_user, frames_per_video, seed, 1)
+    par_eval_orbit(
+        engine,
+        pred,
+        sim,
+        mode,
+        image_size,
+        tasks_per_user,
+        frames_per_video,
+        seed,
+        EvalConfig { workers: 1, shards: engine.n_shards() },
+    )
 }
 
 /// Parallel `eval_orbit`: fans the `(user, task)` grid over a scoped
-/// worker pool with the same per-task RNG salts as the serial path, so
-/// the accuracy metrics are bit-identical on the same seed.
-/// `workers == 0` uses the machine's available parallelism.
+/// worker pool with the same per-task RNG salts as the serial path —
+/// task `j` executing on `engine.shard(j)` — so the accuracy metrics
+/// are bit-identical on the same seed.
 #[allow(clippy::too_many_arguments)]
 pub fn par_eval_orbit(
-    engine: &Engine,
+    engine: &dyn EngineShards,
     pred: &Predictor,
     sim: &OrbitSim,
     mode: VideoMode,
@@ -168,15 +203,16 @@ pub fn par_eval_orbit(
     tasks_per_user: usize,
     frames_per_video: usize,
     seed: u64,
-    workers: usize,
+    eval: EvalConfig,
 ) -> Result<EvalSummary> {
+    engine.check_shard_knob(eval.shards, "EvalConfig.shards")?;
     let rng = Rng::new(seed);
     let n_tasks = sim.users.len() * tasks_per_user;
-    par_eval(workers, n_tasks, |j| {
+    par_eval(eval.workers, n_tasks, |j| {
         let (user, t) = (j / tasks_per_user, j % tasks_per_user);
         let mut erng = rng.split((user * 1000 + t) as u64);
         let ep = sim.user_episode(user, mode, &mut erng, image_size, 6, 2, frames_per_video);
-        let (preds, dt) = timed(|| pred.predict(engine, &ep));
+        let (preds, dt) = timed(|| pred.predict(engine.shard(j), &ep));
         Ok((score_episode(&ep, &preds?), dt))
     })
 }

@@ -6,7 +6,7 @@ pub mod macs;
 pub mod metrics;
 
 pub use harness::{
-    eval_dataset, eval_orbit, par_eval_dataset, par_eval_orbit, EvalSummary, Predictor,
+    eval_dataset, eval_orbit, par_eval_dataset, par_eval_orbit, EvalConfig, EvalSummary, Predictor,
 };
 pub use macs::{adapt_cost, backbone_macs, AdaptCost};
 pub use metrics::{score_episode, EpisodeMetrics};

@@ -15,8 +15,9 @@ use anyhow::Result;
 use lite::config::Args;
 use lite::coordinator::{meta_train, pretrained_backbone, MetaLearner, TrainConfig};
 use lite::data::{md_suite, EpisodeConfig};
+use lite::eval::EvalConfig;
 use lite::memory::{mib, peak_bytes, Mode};
-use lite::runtime::Engine;
+use lite::runtime::{Engine, EngineShards, ShardedEngine};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -170,13 +171,17 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // parameters, and validation-best selection to --workers 1 at the
     // same seed (the train-throughput bench scenario gates this).
     let workers: usize = args.get("workers", 1)?;
+    // Independent engine shards, round-robined over episode steps.
+    // Bit-identical to --shards 1 at the same seed (the
+    // shard-throughput bench scenario gates this).
+    let shards: usize = args.get("shards", 1)?;
     let out = args.get_str("out", "");
     args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
-    let mut learner = MetaLearner::new(&engine, &model, size, None, Some(40), 200)?;
+    let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
+    let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), 200)?;
     if model != "protonet" && model != "maml" {
         // Frozen-extractor protocol: install the pretrained backbone.
-        let bb = pretrained_backbone(&engine, size, pretrain_steps, seed)?;
+        let bb = pretrained_backbone(engine.primary(), size, pretrain_steps, seed)?;
         let n = learner.install_backbone(&bb);
         eprintln!("installed {n} pretrained backbone tensors");
     }
@@ -189,19 +194,20 @@ fn cmd_train(mut args: Args) -> Result<()> {
         episode_cfg: EpisodeConfig::train_default(),
         validate_every,
         workers,
+        shards,
         ..Default::default()
     };
     let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
     let last: Vec<f64> = logs.iter().rev().take(20).map(|l| l.loss as f64).collect();
     println!("final loss (20-ep mean): {:.4}", lite::util::mean(&last));
     let path = if out.is_empty() {
-        engine.dir().join(format!("{model}_{size}.ckpt"))
+        engine.primary().dir().join(format!("{model}_{size}.ckpt"))
     } else {
         out.into()
     };
     learner.params.save(&path)?;
     println!("checkpoint saved to {}", path.display());
-    eprintln!("{}", engine.stats().report_line());
+    eprintln!("{}", engine.merged_stats().report_line());
     Ok(())
 }
 
@@ -213,10 +219,14 @@ fn cmd_eval(mut args: Args) -> Result<()> {
     // Episodes fan out over this many eval threads (0 = all cores); the
     // metrics are bit-identical to --workers 1 on the same seed.
     let workers: usize = args.get("workers", 0)?;
+    // Independent engine shards, round-robined over episode indices.
+    // Bit-identical to --shards 1 at the same seed.
+    let shards: usize = args.get("shards", 1)?;
     let ckpt = args.get_str("ckpt", "");
     args.finish()?;
-    let engine = Engine::load(Engine::default_dir())?;
-    let mut learner = MetaLearner::new(&engine, &model, size, None, Some(40), 200)?;
+    let eval_cfg = EvalConfig { workers, shards };
+    let engine = ShardedEngine::load(Engine::default_dir(), eval_cfg.shards)?;
+    let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), 200)?;
     if !ckpt.is_empty() {
         let n = learner.params.restore(std::path::Path::new(&ckpt))?;
         eprintln!("restored {n} tensors from {ckpt}");
@@ -232,11 +242,11 @@ fn cmd_eval(mut args: Args) -> Result<()> {
             size,
             episodes,
             seed,
-            workers,
+            eval_cfg,
         )?;
         println!("{:<20} {:>8.3} {:>10.3}", ds.name(), s.frame_acc.0, s.frame_acc.1);
     }
-    eprintln!("{}", engine.stats().report_line());
+    eprintln!("{}", engine.merged_stats().report_line());
     Ok(())
 }
 

@@ -208,53 +208,145 @@ impl ParamStore {
     /// Save to a self-describing binary: for each tensor a header line
     /// `name ndim d0 d1 ...\n` then raw little-endian f32 payload; the
     /// file starts with `LITECKPT1 <count>\n`.
+    ///
+    /// Crash-safe: the whole checkpoint is written to `<path>.tmp`,
+    /// fsynced, then renamed into place. A crash (or `kill -9`) at any
+    /// point leaves at worst a stale tmp file — never a truncated
+    /// checkpoint at the path `restore` / `pretrained_backbone` trusts,
+    /// and an existing checkpoint at `path` survives a failed rewrite
+    /// untouched. The guarantee is per writer: concurrent processes
+    /// saving the SAME path share the tmp name and race the rename
+    /// (last write wins, as it always did) — give concurrent runs
+    /// distinct `--out` paths.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        writeln!(f, "LITECKPT1 {}", self.names.len())?;
-        for (name, t) in self.names.iter().zip(&self.tensors) {
-            write!(f, "{} {}", name, t.shape.len())?;
-            for d in &t.shape {
-                write!(f, " {d}")?;
+        let tmp = tmp_sibling(path);
+        let write_tmp = || -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            writeln!(f, "LITECKPT1 {}", self.names.len())?;
+            for (name, t) in self.names.iter().zip(&self.tensors) {
+                write!(f, "{} {}", name, t.shape.len())?;
+                for d in &t.shape {
+                    write!(f, " {d}")?;
+                }
+                writeln!(f)?;
+                let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                f.write_all(&bytes)?;
             }
-            writeln!(f)?;
-            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-            f.write_all(&bytes)?;
+            // The rename below is only atomic for data that has reached
+            // the disk.
+            f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+            Ok(())
+        };
+        if let Err(e) = write_tmp() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        // Best-effort fsync of the parent directory so the rename
+        // itself survives a crash; ignored where a directory cannot be
+        // opened or synced.
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
         }
         Ok(())
     }
 
     /// Load a checkpoint written by `save`, overlaying by name onto this
     /// store (shape-checked). Returns number of tensors restored.
+    ///
+    /// Every tensor's payload length is validated against its header
+    /// dims before slicing — a truncated or corrupt file fails loudly,
+    /// naming the offending tensor, instead of short-reading into
+    /// garbage parameters. The whole file is parsed BEFORE the store is
+    /// touched: an error anywhere leaves the store byte-for-byte
+    /// unchanged (never partially overlaid under a stale cache
+    /// version).
     pub fn restore(&mut self, path: &Path) -> Result<usize> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
         let mut pos = 0usize;
-        let header = read_line(&buf, &mut pos)?;
+        let header = read_line(&buf, &mut pos)
+            .with_context(|| format!("{}: checkpoint header", path.display()))?;
         let mut it = header.split_whitespace();
         if it.next() != Some("LITECKPT1") {
             bail!("{}: bad checkpoint magic", path.display());
         }
-        let count: usize = it.next().context("missing count")?.parse()?;
-        let mut restored = 0;
-        for _ in 0..count {
-            let line = read_line(&buf, &mut pos)?;
+        let count: usize = it
+            .next()
+            .with_context(|| format!("{}: missing tensor count", path.display()))?
+            .parse()
+            .with_context(|| format!("{}: bad tensor count", path.display()))?;
+        // Byte ranges, not decoded payloads: pass 2 slices `buf`, so
+        // peak memory stays ~1x the file. No preallocation from the
+        // untrusted `count` — a corrupt header must surface as a parse
+        // error, not an allocator abort.
+        let mut parsed: Vec<(String, Vec<usize>, std::ops::Range<usize>)> = Vec::new();
+        for k in 0..count {
+            let line = read_line(&buf, &mut pos).with_context(|| {
+                format!("{}: tensor {}/{count}: header line", path.display(), k + 1)
+            })?;
             let mut toks = line.split_whitespace();
-            let name = toks.next().context("missing name")?.to_string();
-            let ndim: usize = toks.next().context("missing ndim")?.parse()?;
+            let name = toks
+                .next()
+                .with_context(|| format!("{}: tensor {}/{count}: missing name", path.display(), k + 1))?
+                .to_string();
+            let ndim: usize = toks
+                .next()
+                .with_context(|| format!("{}: tensor {name}: missing ndim", path.display()))?
+                .parse()
+                .with_context(|| format!("{}: tensor {name}: bad ndim", path.display()))?;
             let shape: Vec<usize> = (0..ndim)
-                .map(|_| Ok(toks.next().context("missing dim")?.parse::<usize>()?))
+                .map(|_| {
+                    toks.next()
+                        .with_context(|| format!("{}: tensor {name}: missing dim", path.display()))?
+                        .parse::<usize>()
+                        .with_context(|| format!("{}: tensor {name}: bad dim", path.display()))
+                })
                 .collect::<Result<_>>()?;
-            let n: usize = shape.iter().product();
-            let end = pos + 4 * n;
-            let bytes = buf.get(pos..end).context("truncated payload")?;
+            // Overflow-checked header->payload accounting: corrupt dims
+            // must produce an error naming the tensor, not a wrapped
+            // length that slices the wrong bytes.
+            let n = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| {
+                    format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
+                })?;
+            let nbytes = n.checked_mul(4).with_context(|| {
+                format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
+            })?;
+            let end = pos.checked_add(nbytes).with_context(|| {
+                format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
+            })?;
+            if buf.get(pos..end).is_none() {
+                bail!(
+                    "{}: tensor {name}: payload truncated (need {nbytes} bytes for shape {shape:?}, {} left)",
+                    path.display(),
+                    buf.len().saturating_sub(pos)
+                );
+            }
+            parsed.push((name, shape, pos..end));
             pos = end;
-            let data = bytes_to_f32(bytes)?;
+        }
+        if pos != buf.len() {
+            bail!(
+                "{}: {} trailing byte(s) after the last tensor (corrupt or mismatched count)",
+                path.display(),
+                buf.len() - pos
+            );
+        }
+        // Fully validated: only now overlay onto the live store.
+        let mut restored = 0;
+        for (name, shape, range) in parsed {
             if let Some(&i) = self.index.get(&name) {
                 if self.tensors[i].shape == shape {
-                    self.tensors[i] = Tensor::new(shape, data)?;
+                    self.tensors[i] = Tensor::new(shape, bytes_to_f32(&buf[range])?)?;
                     restored += 1;
                 }
             }
@@ -264,6 +356,15 @@ impl ParamStore {
         }
         Ok(restored)
     }
+}
+
+/// `<path>.tmp` — the sibling scratch file `save` writes before the
+/// atomic rename (same directory, so the rename never crosses a
+/// filesystem boundary).
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
 }
 
 fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
@@ -346,6 +447,11 @@ mod tests {
         assert_eq!(s.overlay(&other, "nope."), 0);
         assert_eq!(s.version(), v);
     }
+
+    // Crash-safety and corruption-rejection behavior is covered by the
+    // checkpoint_* integration tests (tests/integration.rs) — one
+    // place, kept next to the sharding bit-identity suite that relies
+    // on it.
 }
 
 fn read_line(buf: &[u8], pos: &mut usize) -> Result<String> {

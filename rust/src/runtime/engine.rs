@@ -35,6 +35,18 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
+    /// Fold another counter set into this one — how a shard set's
+    /// per-engine totals become one fleet-level report (see
+    /// `runtime::shard::EngineShards::merged_stats`).
+    pub fn merge(&mut self, other: &EngineStats) {
+        self.compiles += other.compiles;
+        self.compile_secs += other.compile_secs;
+        self.executions += other.executions;
+        self.execute_secs += other.execute_secs;
+        self.param_literal_builds += other.param_literal_builds;
+        self.param_cache_hits += other.param_cache_hits;
+    }
+
     /// One-line cache report shared by the CLI and the bench harnesses:
     /// cached-param runs skipping literal rebuilds is the marshaling win
     /// the runtime refactor is for.
@@ -319,5 +331,32 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Engine>();
         assert_send_sync::<EngineStats>();
+    }
+
+    #[test]
+    fn stats_merge_sums_every_counter() {
+        let mut a = EngineStats {
+            compiles: 1,
+            compile_secs: 0.5,
+            executions: 10,
+            execute_secs: 2.0,
+            param_literal_builds: 7,
+            param_cache_hits: 3,
+        };
+        let b = EngineStats {
+            compiles: 2,
+            compile_secs: 1.5,
+            executions: 5,
+            execute_secs: 1.0,
+            param_literal_builds: 0,
+            param_cache_hits: 9,
+        };
+        a.merge(&b);
+        assert_eq!(a.compiles, 3);
+        assert_eq!(a.executions, 15);
+        assert_eq!(a.param_literal_builds, 7);
+        assert_eq!(a.param_cache_hits, 12);
+        assert!((a.compile_secs - 2.0).abs() < 1e-12);
+        assert!((a.execute_secs - 3.0).abs() < 1e-12);
     }
 }

@@ -20,9 +20,20 @@
 //! parameter-literal builds grow O(params x optimizer steps) instead of
 //! O(params x executions), which `EngineStats::param_literal_builds` /
 //! `EngineStats::param_cache_hits` make observable.
+//!
+//! ## Sharding
+//!
+//! `shard::EngineShards` generalizes the single engine to a set of N
+//! independent engines over the same artifacts dir, round-robined over
+//! episode/step indices (`lite train/eval --shards N`). A plain
+//! `Engine` is the one-shard set, so single-engine call sites are
+//! untouched; see the module doc of [`shard`] for the routing and
+//! bit-identity contract.
 
 pub mod engine;
 pub mod manifest;
+pub mod shard;
 
 pub use engine::{Engine, EngineStats};
 pub use manifest::{ArtifactEntry, Geom, Manifest, TestGeom};
+pub use shard::{shard_index, EngineShards, ShardView, ShardedEngine};

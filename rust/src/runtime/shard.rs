@@ -1,0 +1,203 @@
+//! Engine sharding: N independent [`Engine`] instances over the same
+//! artifacts directory, round-robined over episode/step indices.
+//!
+//! The paper's unbiased-gradient decomposition makes episodes (and,
+//! inside an accumulation window, task gradients) independent units of
+//! work; the PR 3 staged pipeline exploited that across *threads* of
+//! one engine, this layer exploits it across *engines*. Each shard is a
+//! fully independent `Engine` — its own PJRT client, executable cache,
+//! parameter-literal cache, and stats — so shards never contend on a
+//! lock and a multi-device backend can pin one shard per device.
+//!
+//! ## Routing and the bit-identity contract
+//!
+//! All routing is a pure function of the work-unit index:
+//! episode/step `i` always runs on shard `i % n_shards`
+//! ([`shard_index`]). Execution of a compiled artifact is deterministic
+//! across engine instances, every per-step random draw is derived from
+//! `(seed, step)` alone, and the reducers fold results in index order —
+//! so `shards = N` reproduces the serial run bit for bit: same loss
+//! curve, same final parameters, same eval metrics. Parameter literals
+//! are cached per shard under the same `(store_id, version)` key, so
+//! each shard's cache stays hot across an accumulation window exactly
+//! like the single-engine cache does (builds grow O(shards x params x
+//! optimizer steps)).
+//!
+//! [`EngineShards`] is the routing trait: a plain `Engine` *is* a
+//! one-shard set, so every `&Engine` call site keeps working unchanged,
+//! while the CLI and bench runners construct a [`ShardedEngine`] (or
+//! borrow-or-own via [`ShardView`]) when `--shards N` asks for more.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::engine::{Engine, EngineStats};
+
+/// Round-robin routing: work-unit `index` runs on this shard.
+/// A pure function of the index so no draw or result can depend on
+/// which worker thread processed the unit or in what order.
+pub fn shard_index(index: usize, n_shards: usize) -> usize {
+    index % n_shards.max(1)
+}
+
+/// A set of engine shards plus the routing rule over them. Object-safe
+/// so pipelines can take `&dyn EngineShards` and accept a borrowed
+/// single [`Engine`], an owned [`ShardedEngine`], or a [`ShardView`]
+/// interchangeably.
+pub trait EngineShards: Sync {
+    /// The shard that work-unit `index` runs on (`index % n_shards`).
+    fn shard(&self, index: usize) -> &Engine;
+
+    /// Number of independent engines in the set (>= 1).
+    fn n_shards(&self) -> usize;
+
+    /// Shard 0: the engine used for everything that is not per-episode
+    /// work — manifest lookups, learner construction, checkpoint IO,
+    /// reducer-side validation.
+    fn primary(&self) -> &Engine {
+        self.shard(0)
+    }
+
+    /// Cumulative counters summed across every shard — the fleet-level
+    /// view the CLI report line and bench snapshots want.
+    fn merged_stats(&self) -> EngineStats {
+        let mut out = EngineStats::default();
+        for i in 0..self.n_shards() {
+            out.merge(&self.shard(i).stats());
+        }
+        out
+    }
+
+    /// Reject a `shards` knob that contradicts this engine set. The
+    /// knob (`TrainConfig.shards` / `EvalConfig.shards`) is consumed
+    /// where the engine is constructed, so a mismatch means the caller
+    /// built the engine from different state than its config — fail
+    /// loudly rather than silently running on the wrong shard count.
+    /// `knob.max(1)` tolerates 0, matching the constructors' clamping.
+    fn check_shard_knob(&self, knob: usize, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            knob.max(1) == self.n_shards(),
+            "{what} = {knob} but the engine set has {} shard(s) — construct the engine \
+             from the same knob (e.g. ShardedEngine::load(dir, {knob}))",
+            self.n_shards()
+        );
+        Ok(())
+    }
+}
+
+/// A single engine is the one-shard set: every existing `&Engine` call
+/// site coerces to `&dyn EngineShards` unchanged.
+impl EngineShards for Engine {
+    fn shard(&self, _index: usize) -> &Engine {
+        self
+    }
+
+    fn n_shards(&self) -> usize {
+        1
+    }
+}
+
+/// N fully independent engines over one artifacts directory. This is
+/// what `lite train --shards N` / `lite eval --shards N` construct.
+pub struct ShardedEngine {
+    engines: Vec<Engine>,
+}
+
+impl ShardedEngine {
+    /// Load `shards` independent engines from `dir` (0 is treated as 1:
+    /// unlike worker counts, defaulting a shard count to "all cores"
+    /// would multiply PJRT clients and compile caches silently).
+    pub fn load(dir: impl AsRef<Path>, shards: usize) -> Result<Self> {
+        let dir = dir.as_ref();
+        let n = shards.max(1);
+        let mut engines = Vec::with_capacity(n);
+        for i in 0..n {
+            engines.push(
+                Engine::load(dir)
+                    .with_context(|| format!("loading engine shard {}/{n}", i + 1))?,
+            );
+        }
+        Ok(Self { engines })
+    }
+
+    /// The shard engines, in routing order.
+    pub fn engines(&self) -> &[Engine] {
+        &self.engines
+    }
+}
+
+impl EngineShards for ShardedEngine {
+    fn shard(&self, index: usize) -> &Engine {
+        &self.engines[shard_index(index, self.engines.len())]
+    }
+
+    fn n_shards(&self) -> usize {
+        self.engines.len()
+    }
+}
+
+/// Borrow-or-own resolution of a shard count against an already-loaded
+/// engine: `shards <= 1` reuses the borrowed engine as the single shard
+/// (warm caches, no new PJRT client); `shards > 1` loads that many
+/// fresh engines over the same artifacts dir. This is how the bench
+/// runners honor a `shards` knob when they only borrow the registry's
+/// engine.
+pub enum ShardView<'a> {
+    Single(&'a Engine),
+    Owned(ShardedEngine),
+}
+
+impl<'a> ShardView<'a> {
+    pub fn resolve(engine: &'a Engine, shards: usize) -> Result<Self> {
+        Ok(if shards > 1 {
+            ShardView::Owned(ShardedEngine::load(engine.dir(), shards)?)
+        } else {
+            ShardView::Single(engine)
+        })
+    }
+}
+
+impl EngineShards for ShardView<'_> {
+    fn shard(&self, index: usize) -> &Engine {
+        match self {
+            ShardView::Single(e) => e,
+            ShardView::Owned(s) => s.shard(index),
+        }
+    }
+
+    fn n_shards(&self) -> usize {
+        match self {
+            ShardView::Single(_) => 1,
+            ShardView::Owned(s) => s.n_shards(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_is_round_robin_and_total() {
+        for n in 1..=4usize {
+            for i in 0..12usize {
+                assert_eq!(shard_index(i, n), i % n);
+                assert!(shard_index(i, n) < n);
+            }
+        }
+        // Degenerate shard counts never index out of range.
+        assert_eq!(shard_index(7, 0), 0);
+    }
+
+    #[test]
+    fn sharded_engine_types_are_send_sync() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<ShardedEngine>();
+        assert_sync::<ShardView<'static>>();
+        // The trait object itself must be shareable across the scoped
+        // worker pools that receive it (`&dyn EngineShards: Send`
+        // requires `dyn EngineShards: Sync`).
+        assert_sync::<&dyn EngineShards>();
+    }
+}

@@ -11,10 +11,10 @@ use lite::coordinator::{
 };
 use lite::data::orbit::{OrbitSim, VideoMode};
 use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
-use lite::eval::{eval_dataset, par_eval_dataset, score_episode, Predictor};
+use lite::eval::{eval_dataset, par_eval_dataset, score_episode, EvalConfig, Predictor};
 use lite::optim::{Adam, GradAccum};
 use lite::params::ParamStore;
-use lite::runtime::Engine;
+use lite::runtime::{Engine, EngineShards, ShardedEngine};
 use lite::tensor::Tensor;
 
 fn engine() -> Engine {
@@ -302,9 +302,17 @@ fn par_eval_is_bit_identical_to_serial() {
     let cfg = EpisodeConfig::test_large(64);
     let serial = eval_dataset(&e, &Predictor::Meta(&learner), ds, &cfg, 32, 5, 33).unwrap();
     for workers in [2usize, 3] {
-        let par =
-            par_eval_dataset(&e, &Predictor::Meta(&learner), ds, &cfg, 32, 5, 33, workers)
-                .unwrap();
+        let par = par_eval_dataset(
+            &e,
+            &Predictor::Meta(&learner),
+            ds,
+            &cfg,
+            32,
+            5,
+            33,
+            EvalConfig { workers, shards: 1 },
+        )
+        .unwrap();
         assert_eq!(serial.episodes, par.episodes);
         assert_eq!(serial.frame_acc, par.frame_acc, "workers={workers}");
         assert_eq!(serial.video_acc, par.video_acc, "workers={workers}");
@@ -344,15 +352,17 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     // the two runs must pass at ZERO tolerance.
     let Some(_) = engine_opt() else { return };
     // cache-efficiency serially + eval-throughput across 1 vs 2 workers
-    // + train-throughput across 1 vs 2 training workers (each
-    // run_filtered call loads its own engine, like the CLI).
+    // + train-throughput across 1 vs 2 training workers +
+    // shard-throughput across 1 vs 2 engine shards (each run_filtered
+    // call loads its own engine, like the CLI).
     let knobs = Knobs::parse(
-        "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2",
+        "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2,\
+         shard-bench-episodes=3,shard-sweep=1,2,shard-eval-episodes=2",
     )
     .unwrap();
     let a = run_filtered("runtime", &knobs, 5).unwrap();
     let b = run_filtered("runtime", &knobs, 5).unwrap();
-    assert_eq!(a.reports.len(), 3);
+    assert_eq!(a.reports.len(), 4);
     assert_eq!(b.reports.len(), a.reports.len());
     for (x, y) in a.reports.iter().zip(&b.reports) {
         assert_eq!(
@@ -370,6 +380,11 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     let tt = a.get("train-throughput").unwrap();
     assert_eq!(tt.get_metric("train_parallel_bit_identical").unwrap().value, 1.0);
     assert!(tt.get_metric("serial_param_cache_hit_rate").unwrap().value > 0.0);
+    // ...the engine-shard sweep agreed with serial on BOTH the training
+    // trajectory and the eval metrics (the multi-engine contract)...
+    let st = a.get("shard-throughput").unwrap();
+    assert_eq!(st.get_metric("shard_train_bit_identical").unwrap().value, 1.0);
+    assert_eq!(st.get_metric("shard_eval_bit_identical").unwrap().value, 1.0);
     // ...and steady-state prediction never rebuilt parameter literals.
     let ce = a.get("cache-efficiency").unwrap();
     assert_eq!(ce.get_metric("steady_state_literal_builds").unwrap().value, 0.0);
@@ -410,6 +425,7 @@ fn meta_train_parallel_bit_identical_to_serial() {
                 validate_every: 2,
                 validate_episodes: 1,
                 workers,
+                shards: 1,
             };
             let logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
             (logs, learner.params.tensors().to_vec())
@@ -425,6 +441,173 @@ fn meta_train_parallel_bit_identical_to_serial() {
             );
         }
     }
+}
+
+#[test]
+fn sharded_train_and_eval_bit_identical_to_serial() {
+    // The multi-engine contract, in anger, across >= 2 seeds: N
+    // independent engines round-robined over episode steps must
+    // reproduce the single-engine run bit for bit — loss curve, final
+    // parameters (training, with the parallel pipeline composed on
+    // top), and the eval metrics. episodes % accum_period != 0 keeps
+    // the tail-window flush inside the property.
+    let Some(e) = engine_opt() else { return };
+    for seed in [13u64, 37] {
+        let train = |engine: &dyn EngineShards, workers: usize, shards: usize| {
+            let mut learner =
+                MetaLearner::new(engine.primary(), "protonet", 32, None, Some(40), 64).unwrap();
+            let cfg = TrainConfig {
+                episodes: 5,
+                accum_period: 2,
+                lr: 1e-3,
+                seed,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers,
+                shards,
+            };
+            let logs = meta_train(engine, &mut learner, &md_suite(), &cfg).unwrap();
+            (logs, learner)
+        };
+        let (serial_logs, serial_learner) = train(&e, 1, 1);
+        let sharded = ShardedEngine::load(e.dir(), 2).unwrap();
+        assert_eq!(sharded.n_shards(), 2);
+        let (logs, learner) = train(&sharded, 2, 2);
+        assert_eq!(serial_logs, logs, "seed {seed}: sharded loss curve diverged");
+        assert_eq!(
+            serial_learner.params.tensors(),
+            learner.params.tensors(),
+            "seed {seed}: sharded final parameters diverged"
+        );
+
+        // Eval side: the same learner over 1 vs 2 shards (and a worker
+        // pool on top) must score identically.
+        let suite = md_suite();
+        let ds = &suite[2]; // birds-like
+        let cfg = EpisodeConfig::test_large(64);
+        let serial =
+            eval_dataset(&e, &Predictor::Meta(&serial_learner), ds, &cfg, 32, 5, seed + 100)
+                .unwrap();
+        let shard_eval = par_eval_dataset(
+            &sharded,
+            &Predictor::Meta(&serial_learner),
+            ds,
+            &cfg,
+            32,
+            5,
+            seed + 100,
+            EvalConfig { workers: 2, shards: 2 },
+        )
+        .unwrap();
+        assert_eq!(serial.episodes, shard_eval.episodes, "seed {seed}");
+        assert_eq!(serial.frame_acc, shard_eval.frame_acc, "seed {seed}");
+        assert_eq!(serial.video_acc, shard_eval.video_acc, "seed {seed}");
+        assert_eq!(serial.ftr, shard_eval.ftr, "seed {seed}");
+
+        // Merged stats see every shard's work: both engines executed.
+        let merged = sharded.merged_stats();
+        for (i, eng) in sharded.engines().iter().enumerate() {
+            assert!(eng.stats().executions > 0, "seed {seed}: shard {i} never executed");
+        }
+        assert_eq!(
+            merged.executions,
+            sharded.engines().iter().map(|e| e.stats().executions).sum::<usize>()
+        );
+    }
+}
+
+/// Artifact-free store for the checkpoint-IO regression tests below.
+fn ckpt_store() -> ParamStore {
+    ParamStore::from_tensors(
+        vec!["bb.conv.w".into(), "head.fc.w".into()],
+        vec![
+            Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            Tensor::new(vec![3], vec![5.0, 6.0, 7.0]).unwrap(),
+        ],
+    )
+    .unwrap()
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lite_it_ckpt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn checkpoint_save_survives_simulated_partial_write() {
+    // `save` goes through `<path>.tmp` + fsync + rename, so a process
+    // killed mid-write can corrupt only the tmp file. Simulate exactly
+    // that crash state and check the trusted path stays intact.
+    let dir = ckpt_dir("atomic");
+    let path = dir.join("model.ckpt");
+    let store = ckpt_store();
+    store.save(&path).unwrap();
+    let tmp = dir.join("model.ckpt.tmp");
+    assert!(!tmp.exists(), "save must clean up its tmp file");
+    let good = std::fs::read(&path).unwrap();
+
+    // A later save dies partway: header + a torn payload in the tmp.
+    std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), good, "partial write reached the checkpoint");
+    let mut restored = ckpt_store();
+    restored.get_mut("head.fc.w").unwrap().data.fill(0.0);
+    assert_eq!(restored.restore(&path).unwrap(), 2);
+    assert_eq!(restored.get("head.fc.w").unwrap().data, vec![5.0, 6.0, 7.0]);
+
+    // Recovery: the next save replaces both the stale tmp and the
+    // checkpoint atomically.
+    store.save(&path).unwrap();
+    assert!(!tmp.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_restore_rejects_truncation_and_corruption() {
+    let dir = ckpt_dir("reject");
+    let path = dir.join("model.ckpt");
+    ckpt_store().save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Truncated mid-payload: must name the offending tensor.
+    std::fs::write(&path, &good[..good.len() - 4]).unwrap();
+    let err = format!("{:#}", ckpt_store().restore(&path).unwrap_err());
+    assert!(err.contains("head.fc.w"), "error does not name the tensor: {err}");
+    assert!(err.contains("truncated"), "{err}");
+
+    // Truncated mid-header: a clean error, not a silent short-read.
+    std::fs::write(&path, &good[..10]).unwrap();
+    assert!(ckpt_store().restore(&path).is_err());
+
+    // Intact payload, corrupt dim: header/payload mismatch is caught.
+    std::fs::write(&path, b"LITECKPT1 1\nbb.conv.w 2 2 9\n\x00\x00\x00\x00").unwrap();
+    let err = format!("{:#}", ckpt_store().restore(&path).unwrap_err());
+    assert!(err.contains("bb.conv.w"), "{err}");
+
+    // Dim product overflowing usize must error, not wrap into a bogus
+    // payload length.
+    std::fs::write(&path, b"LITECKPT1 1\nbb.conv.w 2 99999999999 999999999999\n").unwrap();
+    let err = format!("{:#}", ckpt_store().restore(&path).unwrap_err());
+    assert!(err.contains("overflows"), "{err}");
+
+    // Trailing garbage after the last tensor is rejected, and a failed
+    // restore must leave the store COMPLETELY untouched — no partially
+    // overlaid tensors hiding under a stale cache version.
+    let mut bytes = good.clone();
+    bytes.extend_from_slice(&[0u8; 3]);
+    std::fs::write(&path, &bytes).unwrap();
+    let mut store = ckpt_store();
+    store.get_mut("bb.conv.w").unwrap().data.fill(9.0);
+    store.get_mut("head.fc.w").unwrap().data.fill(9.0);
+    let v = store.version();
+    let err = format!("{:#}", store.restore(&path).unwrap_err());
+    assert!(err.contains("trailing"), "{err}");
+    assert_eq!(store.get("bb.conv.w").unwrap().data, vec![9.0; 4], "partial overlay leaked");
+    assert_eq!(store.get("head.fc.w").unwrap().data, vec![9.0; 3], "partial overlay leaked");
+    assert_eq!(store.version(), v, "failed restore must not bump the version");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

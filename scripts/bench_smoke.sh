@@ -20,6 +20,16 @@ cargo build --release
 BIN="target/release/lite"
 [ -x "$BIN" ] || { echo "error: $BIN not built"; exit 1; }
 
+# Lint gate over the crate (covers every module this repo's PRs touch:
+# lib + bin + tests + benches). Skips quietly on toolchains without the
+# clippy component so artifact-free machines can still run the smoke.
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -q --all-targets -- -D warnings
+    echo "clippy gate OK (no warnings at -D warnings)"
+else
+    echo "clippy gate skipped (clippy component not installed)"
+fi
+
 OUT="$(mktemp -d)"
 trap 'rm -rf "$OUT"' EXIT
 
@@ -66,6 +76,22 @@ if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
     "./$BIN" bench run --filter train-throughput --seed 7 --json "$OUT/train_cand.json"
     "./$BIN" bench compare "$OUT/train_base.json" "$OUT/train_cand.json" --tolerance-pct 0
     echo "train-throughput gate OK (same-seed runs identical at 0% tolerance)"
+
+    # Multi-engine sharding gate. The self-compare alone cannot catch a
+    # DETERMINISTIC shard/serial divergence (both runs would carry the
+    # same 0.0), so additionally assert the bit-identity metrics are
+    # actually 1 in the produced report (pretty-printed JSON puts
+    # "value" on the line after "name").
+    "./$BIN" bench run --filter shard-throughput --seed 7 --json "$OUT/shard_base.json"
+    "./$BIN" bench run --filter shard-throughput --seed 7 --json "$OUT/shard_cand.json"
+    "./$BIN" bench compare "$OUT/shard_base.json" "$OUT/shard_cand.json" --tolerance-pct 0
+    for m in shard_train_bit_identical shard_eval_bit_identical; do
+        if ! grep -A1 "\"$m\"" "$OUT/shard_cand.json" | grep -q '"value": 1'; then
+            echo "error: $m != 1 (sharded run diverged from serial)"
+            exit 1
+        fi
+    done
+    echo "shard-throughput gate OK (same-seed runs identical; shard/serial bit-identity = 1)"
 else
-    echo "train-throughput gate skipped (no AOT artifacts; run \`make artifacts\`)"
+    echo "train/shard-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
 fi
