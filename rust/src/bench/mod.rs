@@ -49,6 +49,7 @@ pub(crate) const ORBIT_DEFAULTS: &[(&str, &str)] = &[
     ("tasks-per-user", "2"),
     ("workers", "0"),
     ("shards", "1"),
+    ("dispatch", "1"),
     ("sizes", "32,64"),
     ("models", "finetuner,maml,protonet,cnaps,simple_cnaps"),
 ];
@@ -59,15 +60,25 @@ pub(crate) const VTAB_DEFAULTS: &[(&str, &str)] = &[
     ("small-size", "32"),
     ("workers", "0"),
     ("shards", "1"),
+    ("dispatch", "1"),
 ];
-pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] =
-    &[("train-episodes", "40"), ("eval-episodes", "3"), ("shards", "1")];
-pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] =
-    &[("train-episodes", "40"), ("eval-episodes", "3"), ("shards", "1")];
+pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] = &[
+    ("train-episodes", "40"),
+    ("eval-episodes", "3"),
+    ("shards", "1"),
+    ("dispatch", "1"),
+];
+pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] = &[
+    ("train-episodes", "40"),
+    ("eval-episodes", "3"),
+    ("shards", "1"),
+    ("dispatch", "1"),
+];
 
 /// Meta-train a learner on ORBIT-sim train users (`workers` feeds the
-/// staged training pipeline and the engine's shard count feeds the
-/// config; both bit-identical to 1 at the same seed).
+/// staged training pipeline, `dispatch` the per-episode pipeline
+/// depth, and the engine's shard count feeds the config; all
+/// bit-identical to their serial settings at the same seed).
 fn train_on_orbit(
     engine: &dyn EngineShards,
     learner: &mut MetaLearner,
@@ -75,6 +86,7 @@ fn train_on_orbit(
     lr: f32,
     seed: u64,
     workers: usize,
+    dispatch: usize,
 ) -> Result<()> {
     let cfg = TrainConfig {
         episodes,
@@ -85,6 +97,7 @@ fn train_on_orbit(
         episode_cfg: EpisodeConfig::train_default(),
         workers,
         shards: engine.n_shards(),
+        dispatch,
         ..Default::default()
     };
     let image_size = learner.image_size;
@@ -99,6 +112,7 @@ fn train_on_orbit(
 }
 
 /// Build (and meta-train) a learner for the ORBIT benchmark.
+#[allow(clippy::too_many_arguments)]
 fn orbit_learner(
     engine: &dyn EngineShards,
     model: &str,
@@ -106,6 +120,7 @@ fn orbit_learner(
     train_episodes: usize,
     seed: u64,
     workers: usize,
+    dispatch: usize,
 ) -> Result<MetaLearner> {
     let mut learner =
         MetaLearner::new(engine.primary(), model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
@@ -115,7 +130,7 @@ fn orbit_learner(
     let bb = pretrained_backbone(engine.primary(), size, 150, seed)?;
     learner.install_backbone(&bb);
     let lr = if model == "maml" { 1e-4 } else { 1e-3 };
-    train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers)?;
+    train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers, dispatch)?;
     Ok(learner)
 }
 
@@ -126,8 +141,11 @@ pub(crate) fn stats_delta(before: &EngineStats, after: &EngineStats) -> EngineSn
         executions: (after.executions - before.executions) as u64,
         param_literal_builds: (after.param_literal_builds - before.param_literal_builds) as u64,
         param_cache_hits: (after.param_cache_hits - before.param_cache_hits) as u64,
+        data_literal_builds: (after.data_literal_builds - before.data_literal_builds) as u64,
+        data_cache_hits: (after.data_cache_hits - before.data_cache_hits) as u64,
         compile_secs: after.compile_secs - before.compile_secs,
         execute_secs: after.execute_secs - before.execute_secs,
+        transfer_secs: after.transfer_secs - before.transfer_secs,
     }
 }
 
@@ -157,11 +175,7 @@ pub fn render_report(rep: &ScenarioReport) {
         print!("{}", t.render());
     }
     if let Some(e) = &rep.engine {
-        eprintln!(
-            "[engine] {} compiles ({:.1}s), {} executions ({:.1}s), {} param-literal builds, {} cached-param runs",
-            e.compiles, e.compile_secs, e.executions, e.execute_secs,
-            e.param_literal_builds, e.param_cache_hits
-        );
+        eprintln!("{}", e.report_line());
     }
 }
 
@@ -231,6 +245,10 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
     // both eval- and train-side).
     let workers: usize = knobs.need("workers")?;
     let shards: usize = knobs.need("shards")?;
+    // Dispatch-pipeline depth for meta-test episodes (0 = direct).
+    // Like workers/shards, not recorded in the config: bit-identity
+    // means it cannot change the metrics.
+    let dispatch: usize = knobs.need("dispatch")?;
     let sizes = parse_usize_list(knobs.need_str("sizes")?)?;
     let models: Vec<String> = knobs
         .need_str("models")?
@@ -247,7 +265,7 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
 
     let engine = ShardView::resolve(engine, shards)?;
     let engine = &engine;
-    let eval = EvalConfig { workers, shards };
+    let eval = EvalConfig { workers, shards, dispatch };
     let stats0 = engine.merged_stats();
     let test_sim = OrbitSim::new(seed ^ 0x7E57, users);
     let mut table = Table::new(
@@ -266,7 +284,8 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
                 pred_holder = ft;
                 Predictor::Fine(&pred_holder)
             } else {
-                learner_holder = orbit_learner(engine, model, *size, train_episodes, seed, workers)?;
+                learner_holder =
+                    orbit_learner(engine, model, *size, train_episodes, seed, workers, dispatch)?;
                 Predictor::Meta(&learner_holder)
             };
             let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, eval)?;
@@ -322,8 +341,9 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
 
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
 /// protocol stand-in) with a given train geometry. `workers` feeds the
-/// staged training pipeline and the engine's shard count feeds the
-/// config (both bit-identical to 1 at the same seed).
+/// staged training pipeline, `dispatch` the per-episode pipeline
+/// depth, and the engine's shard count feeds the config (all
+/// bit-identical to their serial settings at the same seed).
 #[allow(clippy::too_many_arguments)]
 pub fn synth_learner(
     engine: &dyn EngineShards,
@@ -335,6 +355,7 @@ pub fn synth_learner(
     train_episodes: usize,
     seed: u64,
     workers: usize,
+    dispatch: usize,
 ) -> Result<MetaLearner> {
     let mut learner =
         MetaLearner::new(engine.primary(), model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
@@ -349,6 +370,7 @@ pub fn synth_learner(
         episode_cfg,
         workers,
         shards: engine.n_shards(),
+        dispatch,
         ..Default::default()
     };
     meta_train(engine, &mut learner, &md_suite(), &cfg)?;
@@ -365,6 +387,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
     let small: usize = knobs.need("small-size")?;
     let workers: usize = knobs.need("workers")?;
     let shards: usize = knobs.need("shards")?;
+    let dispatch: usize = knobs.need("dispatch")?;
 
     let mut rep = ScenarioReport::new("vtab", seed);
     rep.config("train-episodes", train_episodes);
@@ -374,7 +397,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
 
     let engine = ShardView::resolve(engine, shards)?;
     let engine = &engine;
-    let eval = EvalConfig { workers, shards };
+    let eval = EvalConfig { workers, shards, dispatch };
     let stats0 = engine.merged_stats();
     // Contenders: SC+LITE (large images), SC (small images), ProtoNets
     // +LITE (large), FineTuner (transfer baseline, large). Contenders
@@ -386,7 +409,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
         ("SC(small)", "simple_cnaps", small),
         ("ProtoNets+LITE", "protonet", size),
     ] {
-        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed, workers) {
+        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed, workers, dispatch) {
             Ok(l) => metas.push((label.to_string(), l)),
             Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
         }
@@ -481,11 +504,12 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
     let eval_episodes: usize = knobs.need("eval-episodes")?;
     // Registry-only knob (not a legacy flag): truncate the sweep.
     let max_cases: usize = knobs.get("max-cases", usize::MAX)?;
-    // Training-pipeline workers and engine shards (shared knob
-    // namespace; not recorded in the config — bit-identity means
-    // neither can change the metrics).
+    // Training-pipeline workers, engine shards, and dispatch depth
+    // (shared knob namespace; not recorded in the config —
+    // bit-identity means none of them can change the metrics).
     let workers: usize = knobs.get("workers", 1)?;
     let shards: usize = knobs.need("shards")?;
+    let dispatch: usize = knobs.need("dispatch")?;
 
     let mut rep = ScenarioReport::new("hsweep", seed);
     rep.config("train-episodes", train_episodes);
@@ -515,7 +539,7 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
         &["model", "px", "|H|", "MD-like", "VTAB-like"],
     );
     for (model, size, h) in cases {
-        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed, workers)?;
+        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed, workers, dispatch)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];
@@ -558,11 +582,12 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
     let knobs = knobs.with_defaults(ABLATION_DEFAULTS);
     let train_episodes: usize = knobs.need("train-episodes")?;
     let eval_episodes: usize = knobs.need("eval-episodes")?;
-    // Training-pipeline workers and engine shards (shared knob
-    // namespace; not recorded in the config — bit-identity means
-    // neither can change the metrics).
+    // Training-pipeline workers, engine shards, and dispatch depth
+    // (shared knob namespace; not recorded in the config —
+    // bit-identity means none of them can change the metrics).
     let workers: usize = knobs.get("workers", 1)?;
     let shards: usize = knobs.need("shards")?;
+    let dispatch: usize = knobs.need("dispatch")?;
 
     let mut rep = ScenarioReport::new("ablation", seed);
     rep.config("train-episodes", train_episodes);
@@ -585,7 +610,7 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
         &["config", "MD-like", "VTAB-like"],
     );
     for (label, size, h, ep_cfg) in cases {
-        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed, workers)?;
+        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed, workers, dispatch)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];

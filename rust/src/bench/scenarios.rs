@@ -169,6 +169,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(EvalThroughput),
         Box::new(TrainThroughput),
         Box::new(ShardThroughput),
+        Box::new(DispatchThroughput),
         Box::new(GradcheckRmse),
         Box::new(Orbit),
         Box::new(Vtab),
@@ -470,7 +471,7 @@ impl Scenario for EvalThroughput {
                     size,
                     episodes,
                     seed + 1,
-                    EvalConfig { workers: w, shards: 1 },
+                    EvalConfig { workers: w, shards: 1, dispatch: 1 },
                 )
             });
             let summary = res?;
@@ -586,6 +587,8 @@ impl Scenario for TrainThroughput {
                 validate_episodes: 1,
                 workers: w,
                 shards: 1,
+                dispatch: 1,
+                ..Default::default()
             };
             let sw0 = engine.stats();
             let (res, secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
@@ -734,6 +737,8 @@ impl Scenario for ShardThroughput {
                 validate_episodes: 1,
                 workers,
                 shards: s,
+                dispatch: 1,
+                ..Default::default()
             };
             let (tres, tsecs) = timed(|| meta_train(&sharded, &mut learner, &suite, &cfg));
             let logs = tres?;
@@ -746,7 +751,7 @@ impl Scenario for ShardThroughput {
                     size,
                     eval_episodes,
                     seed + 2,
-                    EvalConfig { workers, shards: s },
+                    EvalConfig { workers, shards: s, dispatch: 1 },
                 )
             });
             let summary = eres?;
@@ -810,6 +815,181 @@ impl Scenario for ShardThroughput {
         // Engine snapshot: the registry engine only (sweep entries with
         // s > 1 run on per-entry temporaries whose totals land in the
         // table's literal-builds column).
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// Dispatch pipeline: sweep `meta_train` + `par_eval_dataset` over
+/// dispatch depths (0 = direct serial path), gating the
+/// pipelined == direct bit-identity contract AND the data-literal
+/// cache's marshaling win — at equal executions, the pipelined runs
+/// must build strictly fewer data literals (an episode's adapted state
+/// and full-support buffer marshal once, not once per query batch).
+/// Workers and shards stay at 1 so every engine counter in the payload
+/// is measured serially, hence deterministic and gateable.
+struct DispatchThroughput;
+
+impl Scenario for DispatchThroughput {
+    fn name(&self) -> &'static str {
+        "dispatch-throughput"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "episodes/sec across dispatch depths + direct/pipelined bit-identity + data-literal reuse"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`dispatch-*`): the knob namespace
+        // is shared across every scenario in one `bench run` (cf.
+        // shard-throughput). 5 episodes at accum 2 keeps the ordered
+        // reducer's tail-window flush inside the gate; validation every
+        // 2 puts predict_episode (the adapted-state reuse path) inside
+        // the TRAINING half of the sweep too.
+        let episodes: usize = knobs.get("dispatch-bench-episodes", 5)?;
+        let accum: usize = knobs.get("dispatch-accum", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let eval_episodes: usize = knobs.get("dispatch-eval-episodes", 3)?;
+        let sweep = parse_usize_list(&knobs.get_str("dispatch-sweep", "0,1"))?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("dispatch-bench-episodes", episodes);
+        rep.config("dispatch-accum", accum);
+        rep.config("image-size", size);
+        rep.config("dispatch-eval-episodes", eval_episodes);
+        rep.config("dispatch-sweep", knobs.get_str("dispatch-sweep", "0,1"));
+
+        let mut learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        // Every sweep entry restarts from the same initial parameters
+        // (and a fresh Adam inside meta_train), so the runs are
+        // comparable bit for bit.
+        let init = learner.params.clone();
+        let suite = md_suite();
+        let ds = &suite[2]; // birds-like
+        let ecfg = EpisodeConfig::test_large(64);
+        let s0 = engine.stats();
+        let mut table = Table::new(
+            "dispatch throughput (pipeline-depth sweep)",
+            &["dispatch", "train eps/s", "eval eps/s", "identical", "executions", "data-builds", "data-hits"],
+        );
+        let mut reference: Option<(Vec<TrainLog>, Vec<crate::tensor::Tensor>, EvalSummary)> = None;
+        let mut counts: Vec<(usize, usize, usize)> = Vec::new(); // (execs, builds, hits) per entry
+        let mut train_identical = true;
+        let mut eval_identical = true;
+        for &d in &sweep {
+            learner.params = init.clone();
+            let cfg = TrainConfig {
+                episodes,
+                accum_period: accum,
+                lr: 1e-3,
+                seed: seed + 1,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers: 1,
+                shards: 1,
+                dispatch: d,
+                ..Default::default()
+            };
+            let sd0 = engine.stats();
+            let (tres, tsecs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
+            let logs = tres?;
+            let (eres, esecs) = timed(|| {
+                par_eval_dataset(
+                    engine,
+                    &Predictor::Meta(&learner),
+                    ds,
+                    &ecfg,
+                    size,
+                    eval_episodes,
+                    seed + 2,
+                    EvalConfig { workers: 1, shards: 1, dispatch: d },
+                )
+            });
+            let summary = eres?;
+            let sd1 = engine.stats();
+            let (execs, builds, hits) = (
+                sd1.executions - sd0.executions,
+                sd1.data_literal_builds - sd0.data_literal_builds,
+                sd1.data_cache_hits - sd0.data_cache_hits,
+            );
+            counts.push((execs, builds, hits));
+            let final_params = learner.params.tensors().to_vec();
+            let run_identical = match &reference {
+                None => {
+                    reference = Some((logs.clone(), final_params, summary.clone()));
+                    true
+                }
+                Some((ref_logs, ref_params, ref_sum)) => {
+                    let t = *ref_logs == logs && *ref_params == final_params;
+                    let e = ref_sum.frame_acc == summary.frame_acc
+                        && ref_sum.video_acc == summary.video_acc
+                        && ref_sum.ftr == summary.ftr;
+                    train_identical &= t;
+                    eval_identical &= e;
+                    t && e
+                }
+            };
+            table.row(vec![
+                d.to_string(),
+                format!("{:.2}", episodes as f64 / tsecs.max(1e-9)),
+                format!("{:.2}", eval_episodes as f64 / esecs.max(1e-9)),
+                if run_identical { "yes".into() } else { "NO".into() },
+                execs.to_string(),
+                builds.to_string(),
+                hits.to_string(),
+            ]);
+            rep.timing(&format!("train_wall_secs_d{d}"), tsecs);
+            rep.timing(&format!("eval_wall_secs_d{d}"), esecs);
+            // The satellite split, surfaced per sweep entry: device
+            // execute vs host transfer (timings never gate).
+            rep.timing(&format!("device_execute_secs_d{d}"), sd1.execute_secs - sd0.execute_secs);
+            rep.timing(&format!("host_transfer_secs_d{d}"), sd1.transfer_secs - sd0.transfer_secs);
+            // Counters are serial here, hence deterministic: gate the
+            // build count downward so a regression back to per-batch
+            // marshaling fails `bench compare`.
+            rep.metric(&format!("executions_d{d}"), execs as f64, Direction::Info);
+            rep.metric(&format!("data_literal_builds_d{d}"), builds as f64, Direction::Lower);
+            rep.metric(&format!("data_cache_hits_d{d}"), hits as f64, Direction::Info);
+        }
+        rep.tables.push(table);
+        // As in the other throughput scenarios: only claim the identity
+        // contract when at least one cross-depth comparison ran.
+        if sweep.len() >= 2 {
+            rep.metric(
+                "dispatch_train_bit_identical",
+                if train_identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            rep.metric(
+                "dispatch_eval_bit_identical",
+                if eval_identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            // The marshaling claim itself: same executions, strictly
+            // fewer data-literal builds on every pipelined entry than
+            // on the reference (direct) entry.
+            let (ref_execs, ref_builds, _) = counts[0];
+            let equal_execs = counts.iter().all(|&(e, _, _)| e == ref_execs);
+            rep.metric(
+                "dispatch_equal_executions",
+                if equal_execs { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            let reduced = sweep[0] == 0
+                && sweep
+                    .iter()
+                    .zip(&counts)
+                    .skip(1)
+                    .all(|(&d, &(_, b, _))| d == 0 || b < ref_builds);
+            rep.metric(
+                "dispatch_data_builds_reduced",
+                if reduced { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+        }
         rep.engine = Some(stats_delta(&s0, &engine.stats()));
         Ok(rep)
     }

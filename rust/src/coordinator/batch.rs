@@ -194,6 +194,73 @@ pub fn train_inputs(
     split: &LiteSplit,
     query_range: std::ops::Range<usize>,
 ) -> Result<Vec<Tensor>> {
+    assemble_train_inputs(entry, geom, episode, split, query_range, false)
+}
+
+/// The per-batch SUBSET of `train_inputs`: every input except the
+/// episode-constant full-support buffer (`sup_x`/`sup_oh`), in artifact
+/// order. The dispatch pipeline marshals the support buffer once per
+/// episode (`train_support_slots` -> `Engine::prepare_data`) and feeds
+/// only these varying tensors per query batch; the combined inputs are
+/// positionally identical to one `train_inputs` call.
+pub fn train_batch_inputs(
+    entry: &ArtifactEntry,
+    geom: &Geom,
+    episode: &Episode,
+    split: &LiteSplit,
+    query_range: std::ops::Range<usize>,
+) -> Result<Vec<Tensor>> {
+    assemble_train_inputs(entry, geom, episode, split, query_range, true)
+}
+
+/// The episode-constant train inputs as a positional slot map:
+/// `Some(tensor)` at each `sup_x`/`sup_oh` position (the MAML-style
+/// full-support buffer, invariant across a whole episode's query
+/// batches — the LITE `sup_bp`/`sup_nbp` halves resample per batch and
+/// stay per-call), `None` everywhere else. Feeds
+/// `Engine::prepare_data`; all-`None` for LITE geometries.
+pub fn train_support_slots(
+    entry: &ArtifactEntry,
+    geom: &Geom,
+    episode: &Episode,
+) -> Result<Vec<Option<Tensor>>> {
+    let way = geom.way;
+    if episode.way > way {
+        bail!("episode way {} exceeds geometry way {}", episode.way, way);
+    }
+    let mut sup: Option<GatherSite> = None;
+    let mut out = Vec::with_capacity(entry.inputs.len());
+    for spec in &entry.inputs {
+        if is_episode_constant(&spec.name) {
+            let one_hot = spec.name.ends_with("_oh");
+            // Shapes validate against the manifest downstream in
+            // `Engine::prepare_data`, the only consumer of these slots.
+            out.push(Some(GatherSite::take(&mut sup, one_hot, || {
+                gather(episode, &all_idx(episode, geom.n_support), geom.n_support, way)
+            })?));
+        } else {
+            out.push(None);
+        }
+    }
+    Ok(out)
+}
+
+/// Single source of truth for which train inputs are invariant across
+/// an episode's query batches (cacheable as data literals): the
+/// MAML-style full-support buffer. The LITE `sup_bp`/`sup_nbp` halves
+/// resample per batch, and the query pair changes per batch.
+fn is_episode_constant(input_name: &str) -> bool {
+    matches!(input_name, "sup_x" | "sup_oh")
+}
+
+fn assemble_train_inputs(
+    entry: &ArtifactEntry,
+    geom: &Geom,
+    episode: &Episode,
+    split: &LiteSplit,
+    query_range: std::ops::Range<usize>,
+    skip_support: bool,
+) -> Result<Vec<Tensor>> {
     let way = geom.way;
     if episode.way > way {
         bail!("episode way {} exceeds geometry way {}", episode.way, way);
@@ -205,6 +272,9 @@ pub fn train_inputs(
     let nbp_slots = if geom.h == 0 { geom.n_support } else { geom.n_nbp() };
     let mut out = Vec::with_capacity(entry.inputs.len());
     for spec in &entry.inputs {
+        if skip_support && is_episode_constant(&spec.name) {
+            continue;
+        }
         let one_hot = spec.name.ends_with("_oh");
         let t = match spec.name.as_str() {
             "sup_x" | "sup_oh" => GatherSite::take(&mut sup, one_hot, || {
@@ -425,6 +495,55 @@ mod tests {
         let out = train_inputs(&entry0, &geom0, &ep, &split0, 0..3).unwrap();
         assert_eq!(out.len(), 4);
         assert_eq!(gather_passes() - before, 2, "sup_x/sup_oh share one pass");
+    }
+
+    #[test]
+    fn support_slots_plus_batch_inputs_reconstruct_train_inputs() {
+        let ep = toy_episode(6, 3, 4, 8, 10);
+        let mut rng = Rng::new(5);
+        // MAML geometry (h = 0): sup_x/sup_oh are episode-constant, the
+        // query pair varies per batch.
+        let geom = Geom { way: 4, n_support: 6, h: 0, mb: 3 };
+        let split = sample_split(6, 0, &mut rng);
+        let entry = mk_entry(&[
+            ("sup_x", vec![6, 8, 8, 3]),
+            ("sup_oh", vec![6, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let full = train_inputs(&entry, &geom, &ep, &split, 0..3).unwrap();
+        let slots = train_support_slots(&entry, &geom, &ep).unwrap();
+        let fresh = train_batch_inputs(&entry, &geom, &ep, &split, 0..3).unwrap();
+        assert_eq!(slots.len(), 4);
+        assert!(slots[0].is_some() && slots[1].is_some(), "support positions cached");
+        assert!(slots[2].is_none() && slots[3].is_none(), "query positions per-call");
+        assert_eq!(fresh.len(), 2, "only the varying inputs are rebuilt per batch");
+        // Positional recombination equals the direct assembly.
+        let mut it = fresh.iter();
+        for (slot, want) in slots.iter().zip(&full) {
+            let got = slot.as_ref().unwrap_or_else(|| it.next().unwrap());
+            assert_eq!(got, want);
+        }
+
+        // LITE geometry (h > 0): every input resamples per batch, so
+        // nothing is episode-constant.
+        let geom_l = Geom { way: 4, n_support: 6, h: 2, mb: 3 };
+        let split_l = sample_split(6, 2, &mut rng);
+        let entry_l = mk_entry(&[
+            ("sup_bp_x", vec![2, 8, 8, 3]),
+            ("sup_bp_oh", vec![2, 4]),
+            ("sup_nbp_x", vec![4, 8, 8, 3]),
+            ("sup_nbp_oh", vec![4, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let slots_l = train_support_slots(&entry_l, &geom_l, &ep).unwrap();
+        assert!(slots_l.iter().all(|s| s.is_none()), "LITE splits are never cacheable");
+        assert_eq!(
+            train_batch_inputs(&entry_l, &geom_l, &ep, &split_l, 0..3).unwrap(),
+            train_inputs(&entry_l, &geom_l, &ep, &split_l, 0..3).unwrap(),
+            "with nothing constant the per-batch subset is the full set"
+        );
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! MetaLearner: one meta-learning model wired to its train / adapt /
 //! classify artifacts with its parameter store.
 
+use std::collections::VecDeque;
+
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batch;
 use crate::data::rng::Rng;
 use crate::data::task::Episode;
 use crate::params::ParamStore;
-use crate::runtime::{Engine, Geom, TestGeom};
+use crate::runtime::{ArtifactEntry, DispatchQueue, Engine, Geom, TestGeom};
 use crate::tensor::Tensor;
 
 /// Per-episode training statistics.
@@ -27,6 +29,89 @@ pub struct TrainStats {
 pub struct TaskState {
     pub names: Vec<String>,
     pub tensors: Vec<Tensor>,
+}
+
+/// The per-episode loss/acc/gradient fold of Algorithm 1, shared by the
+/// serial and dispatch-pipelined train paths so both sum the SAME
+/// floats in the SAME order (the bit-identity contract): each batch's
+/// in-graph mean is weighted by its valid query count, then the episode
+/// total is normalized by the summed count.
+#[derive(Default)]
+struct EpisodeAccum {
+    stats: TrainStats,
+    grads: Option<Vec<Tensor>>,
+    total_q: usize,
+}
+
+impl EpisodeAccum {
+    /// Fold one train-step output (`[loss, acc, grads..]`) covering
+    /// `nq` valid queries. Must be called in query-batch order.
+    fn fold(&mut self, out: &[Tensor], nq: usize) -> Result<()> {
+        let wq = nq as f32;
+        self.stats.loss += out[0].item()? * wq;
+        self.stats.acc += out[1].item()? * wq;
+        self.stats.query_batches += 1;
+        self.total_q += nq;
+        let batch_grads = &out[2..];
+        match self.grads.as_mut() {
+            None => {
+                let mut first = batch_grads.to_vec();
+                for t in &mut first {
+                    for v in &mut t.data {
+                        *v *= wq;
+                    }
+                }
+                self.grads = Some(first);
+            }
+            Some(acc) => {
+                for (a, g) in acc.iter_mut().zip(batch_grads) {
+                    for i in 0..a.data.len() {
+                        a.data[i] += wq * g.data[i];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Normalize by the total valid query count and hand back the
+    /// episode's `(stats, task gradients)`.
+    fn finish(mut self) -> Result<(TrainStats, Vec<Tensor>)> {
+        let mut grads = self.grads.context("episode folded no query batches")?;
+        self.stats.queries = self.total_q;
+        let inv = 1.0 / self.total_q as f32;
+        for t in &mut grads {
+            for v in &mut t.data {
+                *v *= inv;
+            }
+        }
+        self.stats.loss *= inv;
+        self.stats.acc *= inv;
+        Ok((self.stats, grads))
+    }
+}
+
+/// Resolve the classify artifact's data inputs against an adapted
+/// state: `Some(tensor)` for each state output (matched by name),
+/// `None` at the per-call query position (`q_x`). One resolver for the
+/// serial and dispatch paths, so the two cannot drift on which inputs
+/// are per-episode vs per-call.
+fn classify_slots<'s>(
+    name: &str,
+    entry: &ArtifactEntry,
+    state: &'s TaskState,
+) -> Result<Vec<Option<&'s Tensor>>> {
+    let mut slots = Vec::with_capacity(entry.inputs.len());
+    for spec in &entry.inputs {
+        if let Some(pos) = state.names.iter().position(|n| n == &spec.name) {
+            slots.push(Some(&state.tensors[pos]));
+        } else if spec.name == "q_x" {
+            slots.push(None);
+        } else {
+            bail!("{name}: unresolvable input {}", spec.name);
+        }
+    }
+    Ok(slots)
 }
 
 pub struct MetaLearner {
@@ -110,13 +195,10 @@ impl MetaLearner {
         }
         let n_valid = episode.n_support().min(g.n_support);
         let n_batches = batch::n_query_batches(episode, g.mb);
-        let mut grads: Option<Vec<Tensor>> = None;
-        let mut stats = TrainStats::default();
-        let mut total_q = 0usize;
+        let mut acc = EpisodeAccum::default();
         for b in 0..n_batches {
             let lo = b * g.mb;
             let hi = (lo + g.mb).min(episode.query.len());
-            let wq = (hi - lo) as f32;
             // Fresh H subset per query batch (Algorithm 1 line 4).
             let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
             let data = batch::train_inputs(
@@ -127,41 +209,74 @@ impl MetaLearner {
                 lo..hi,
             )?;
             let out = engine.run_with_params(&self.train_artifact, &self.params, &data)?;
-            stats.loss += out[0].item()? * wq;
-            stats.acc += out[1].item()? * wq;
-            stats.query_batches += 1;
-            total_q += hi - lo;
-            let batch_grads = &out[2..];
-            match &mut grads {
-                None => {
-                    let mut first = batch_grads.to_vec();
-                    for t in &mut first {
-                        for v in &mut t.data {
-                            *v *= wq;
-                        }
-                    }
-                    grads = Some(first);
-                }
-                Some(acc) => {
-                    for (a, g) in acc.iter_mut().zip(batch_grads) {
-                        for i in 0..a.data.len() {
-                            a.data[i] += wq * g.data[i];
-                        }
-                    }
-                }
+            acc.fold(&out, hi - lo)?;
+        }
+        acc.finish()
+    }
+
+    /// `train_episode` through the dispatch pipeline: a per-episode
+    /// [`DispatchQueue`] on `engine` marshals batch `b + 1`'s literals
+    /// while batch `b` executes, and the episode-constant full-support
+    /// buffer (h = 0 geometries) is marshaled ONCE via the data-literal
+    /// cache instead of per batch. `dispatch` is the pipeline depth;
+    /// 0 is the direct serial path above. Any depth is bit-identical to
+    /// direct at the same seed: the H-subset draws happen in the same
+    /// order (at submit), the literals are the same bytes wherever they
+    /// are built, and results fold in submission order.
+    pub fn train_episode_dispatch(
+        &self,
+        engine: &Engine,
+        dispatch: usize,
+        episode: &Episode,
+        rng: &mut Rng,
+    ) -> Result<(TrainStats, Vec<Tensor>)> {
+        // A single query batch has nothing to overlap or reuse: the
+        // direct path is the same executions without the stage thread.
+        if dispatch == 0 || batch::n_query_batches(episode, self.train_geom.mb) <= 1 {
+            return self.train_episode(engine, episode, rng);
+        }
+        let g = &self.train_geom;
+        if episode.n_support() == 0 || episode.query.is_empty() {
+            bail!("empty episode");
+        }
+        let entry = engine.entry(&self.train_artifact)?;
+        let n_valid = episode.n_support().min(g.n_support);
+        let n_batches = batch::n_query_batches(episode, g.mb);
+        // Episode-constant inputs -> data-literal cache, once.
+        let slots = batch::train_support_slots(entry, g, episode)?;
+        let prepared = if slots.iter().any(|s| s.is_some()) {
+            let refs: Vec<Option<&Tensor>> = slots.iter().map(|s| s.as_ref()).collect();
+            Some(engine.prepare_data(&self.train_artifact, &refs)?)
+        } else {
+            None // LITE geometries: every input varies per batch
+        };
+        let queue = DispatchQueue::new(engine, dispatch);
+        let mut acc = EpisodeAccum::default();
+        // (real query count, in-flight request) in submission order.
+        let mut pending = VecDeque::with_capacity(2);
+        for b in 0..n_batches {
+            let lo = b * g.mb;
+            let hi = (lo + g.mb).min(episode.query.len());
+            // Fresh H subset per query batch (Algorithm 1 line 4) —
+            // drawn at submit, so the rng sequence matches serial.
+            let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
+            let fresh = batch::train_batch_inputs(entry, g, episode, &split, lo..hi)?;
+            pending.push_back((
+                hi - lo,
+                queue.submit(&self.train_artifact, &self.params, prepared.as_ref(), fresh)?,
+            ));
+            // Keep up to `dispatch` requests marshaling while the
+            // oldest executes: the wait below runs an earlier batch on
+            // the device while the stage builds the later ones.
+            while pending.len() > dispatch {
+                let (nq, ticket) = pending.pop_front().expect("len checked");
+                acc.fold(&ticket.wait()?, nq)?;
             }
         }
-        let mut grads = grads.unwrap();
-        stats.queries = total_q;
-        let inv = 1.0 / total_q as f32;
-        for t in &mut grads {
-            for v in &mut t.data {
-                *v *= inv;
-            }
+        for (nq, ticket) in pending {
+            acc.fold(&ticket.wait()?, nq)?;
         }
-        stats.loss *= inv;
-        stats.acc *= inv;
-        Ok((stats, grads))
+        acc.finish()
     }
 
     /// Single forward pass over the support set -> task state (the
@@ -197,14 +312,13 @@ impl MetaLearner {
         let entry = engine.entry(name)?;
         let tg = entry.test_geom.clone().context("classify missing test geom")?;
         let mut data: Vec<Tensor> = Vec::with_capacity(entry.inputs.len());
-        for spec in &entry.inputs {
-            if let Some(pos) = state.names.iter().position(|n| n == &spec.name) {
-                data.push(state.tensors[pos].clone());
-            } else if spec.name == "q_x" {
-                let (qx, _) = batch::gather_query(episode, range.clone(), tg.mq, tg.way)?;
-                data.push(qx);
-            } else {
-                bail!("{name}: unresolvable input {}", spec.name);
+        for slot in classify_slots(name, entry, state)? {
+            match slot {
+                Some(t) => data.push(t.clone()),
+                None => {
+                    let (qx, _) = batch::gather_query(episode, range.clone(), tg.mq, tg.way)?;
+                    data.push(qx);
+                }
             }
         }
         let out = engine.run_with_params(name, &self.params, &data)?;
@@ -225,6 +339,67 @@ impl MetaLearner {
                 preds.push(logits.row_argmax(i));
             }
             lo = hi;
+        }
+        Ok(preds)
+    }
+
+    /// `predict_episode` through the dispatch pipeline: the adapted
+    /// task state is marshaled ONCE per episode into the data-literal
+    /// cache (instead of `classify` cloning every state tensor and the
+    /// engine re-marshaling them per query batch), and a per-episode
+    /// [`DispatchQueue`] overlaps the next batch's query gather +
+    /// literal build with the current batch's device execution.
+    /// `dispatch` is the pipeline depth; 0 is the direct path above.
+    /// Predictions are bit-identical to direct for any depth.
+    pub fn predict_episode_dispatch(
+        &self,
+        engine: &Engine,
+        dispatch: usize,
+        episode: &Episode,
+    ) -> Result<Vec<usize>> {
+        let tg = self.test_geom.clone().context("no test geom")?;
+        // A single query batch has nothing to overlap or reuse: the
+        // direct path is the same executions without the stage thread.
+        if dispatch == 0 || episode.query.len() <= tg.mq {
+            return self.predict_episode(engine, episode);
+        }
+        let state = self.adapt(engine, episode)?;
+        let name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let entry = engine.entry(name)?;
+        let ctg = entry.test_geom.clone().context("classify missing test geom")?;
+        // Adapted state -> data-literal cache, once per episode; the
+        // shared resolver keeps per-episode vs per-call classification
+        // identical to the serial `classify` path.
+        let slots = classify_slots(name, entry, &state)?;
+        let prepared = engine.prepare_data(name, &slots)?;
+        let queue = DispatchQueue::new(engine, dispatch);
+        let mut preds = Vec::with_capacity(episode.query.len());
+        // (real query count, in-flight request) in submission order.
+        let mut pending = VecDeque::with_capacity(2);
+        let mut lo = 0;
+        while lo < episode.query.len() {
+            let hi = (lo + tg.mq).min(episode.query.len());
+            let (qx, _) = batch::gather_query(episode, lo..hi, ctg.mq, ctg.way)?;
+            pending.push_back((hi - lo, queue.submit(name, &self.params, Some(&prepared), vec![qx])?));
+            // Keep up to `dispatch` requests marshaling while the
+            // oldest executes.
+            while pending.len() > dispatch {
+                let (nq, ticket) = pending.pop_front().expect("len checked");
+                let out = ticket.wait()?;
+                for i in 0..nq {
+                    preds.push(out[0].row_argmax(i));
+                }
+            }
+            lo = hi;
+        }
+        for (nq, ticket) in pending {
+            let out = ticket.wait()?;
+            for i in 0..nq {
+                preds.push(out[0].row_argmax(i));
+            }
         }
         Ok(preds)
     }

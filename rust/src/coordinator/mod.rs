@@ -7,6 +7,7 @@ pub mod batch;
 pub mod finetuner;
 pub mod learner;
 pub mod trainer;
+pub mod writer;
 
 pub use batch::{sample_split, LiteSplit};
 pub use finetuner::FineTuner;
@@ -15,3 +16,4 @@ pub use trainer::{
     episode_rng, meta_train, meta_train_with, pretrain_backbone, pretrained_backbone, TrainConfig,
     TrainLog,
 };
+pub use writer::{BackgroundWriter, WriteJob};

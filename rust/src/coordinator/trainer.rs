@@ -37,6 +37,21 @@
 //! shard. A plain `&Engine` is the one-shard set, so `shards = N` is
 //! bit-identical to serial by the same argument as `workers = N` (the
 //! `shard-throughput` scenario gates this).
+//!
+//! Inside each episode, `TrainConfig.dispatch > 0` routes execution
+//! through the runtime's dispatch pipeline
+//! (`MetaLearner::train_episode_dispatch`): a per-episode marshal
+//! stage on the episode's shard overlaps batch `b + 1`'s literal
+//! building with batch `b`'s device execution. Like workers and
+//! shards, any dispatch depth is bit-identical to the direct path at
+//! the same seed (the `dispatch-throughput` scenario gates this).
+//!
+//! Checkpoint IO never blocks the training thread: when
+//! `TrainConfig.checkpoint_every / checkpoint_path` are set, the
+//! reducer snapshots the parameters at the due steps and hands them to
+//! a bounded [`BackgroundWriter`] (atomic tmp + fsync + rename saves,
+//! PR 4), which is joined at run exit — the first IO error surfaces
+//! there instead of mid-run.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -47,6 +62,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::learner::{MetaLearner, TrainStats};
+use crate::coordinator::writer::BackgroundWriter;
 use crate::data::registry::Dataset;
 use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
@@ -84,6 +100,20 @@ pub struct TrainConfig {
     /// Any value is bit-identical to 1 at the same seed (see the
     /// module doc).
     pub shards: usize,
+    /// Dispatch-pipeline depth inside each episode: 0 runs the direct
+    /// serial execution path, N >= 1 overlaps host literal marshaling
+    /// with device execution through a per-episode `DispatchQueue`
+    /// (1 = double buffering, the default). Any value is bit-identical
+    /// to 0 at the same seed (see the module doc).
+    pub dispatch: usize,
+    /// Snapshot the parameters to `checkpoint_path` every this many
+    /// episodes, through the bounded background writer (never blocking
+    /// the training thread on IO). 0 disables periodic checkpoints.
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints land (atomic save: a crash mid-write
+    /// never corrupts the previous checkpoint). Required when
+    /// `checkpoint_every > 0`.
+    pub checkpoint_path: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -99,6 +129,9 @@ impl Default for TrainConfig {
             validate_episodes: 4,
             workers: 1,
             shards: 1,
+            dispatch: 1,
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 }
@@ -161,6 +194,14 @@ pub fn meta_train_with(
     make_episode: impl Fn(&mut Rng) -> Episode + Send + Sync,
 ) -> Result<Vec<TrainLog>> {
     engine.check_shard_knob(cfg.shards, "TrainConfig.shards")?;
+    // Checkpoint IO runs off-thread: the reducer only snapshots and
+    // enqueues; the bounded writer (capacity 2: one in flight + one
+    // queued) performs the atomic saves and is joined at run exit.
+    let writer = match (cfg.checkpoint_every, &cfg.checkpoint_path) {
+        (0, _) => None,
+        (_, None) => bail!("TrainConfig.checkpoint_every set without checkpoint_path"),
+        (_, Some(_)) => Some(BackgroundWriter::new(2)),
+    };
     let workers = if cfg.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -266,6 +307,7 @@ pub fn meta_train_with(
             val_seed,
             workers,
             period,
+            writer.as_ref(),
         )
     })?;
 
@@ -279,7 +321,33 @@ pub fn meta_train_with(
     if let Some((_, params)) = st.best {
         learner.params = params;
     }
+    // Join the background writer; the run's FIRST checkpoint IO error
+    // surfaces here (training itself already completed).
+    if let Some(w) = writer {
+        w.finish()?;
+    }
     Ok(st.logs)
+}
+
+/// Enqueue a parameter snapshot on the background writer when `step`
+/// is a checkpoint boundary. Runs on the reducer, in step order, after
+/// the step's Adam/validation — so the snapshot is exactly the state a
+/// synchronous save at this point would have written.
+fn maybe_checkpoint(
+    learner: &MetaLearner,
+    cfg: &TrainConfig,
+    step: usize,
+    writer: Option<&BackgroundWriter>,
+) -> Result<()> {
+    let Some(writer) = writer else { return Ok(()) };
+    if cfg.checkpoint_every == 0 || (step + 1) % cfg.checkpoint_every != 0 {
+        return Ok(());
+    }
+    let path = cfg
+        .checkpoint_path
+        .as_ref()
+        .context("checkpoint_every set without checkpoint_path")?;
+    writer.save_checkpoint(&learner.params, path)
 }
 
 /// RAII flag raised when the owning thread unwinds (and only then).
@@ -352,6 +420,7 @@ fn reduce_loop(
     val_seed: u64,
     workers: usize,
     period: usize,
+    writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
     // Producers race, so episodes can arrive out of step order; early
     // arrivals park here (bounded by the producer-side prefetch gate).
@@ -373,8 +442,9 @@ fn reduce_loop(
             // memory stays as flat as the old single producer thread.
             for step in lo..hi {
                 let ep = next_episode(step)?;
-                let (stats, grads) = learner.train_episode(
+                let (stats, grads) = learner.train_episode_dispatch(
                     engine.shard(step),
+                    cfg.dispatch,
                     &ep,
                     &mut episode_rng(cfg.seed, step),
                 )?;
@@ -383,6 +453,7 @@ fn reduce_loop(
                 }
                 emit_log(learner, cfg, &mut st.logs, step, &stats);
                 maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
+                maybe_checkpoint(learner, cfg, step, writer)?;
             }
         } else {
             // Parallel path: assemble the whole window first — its
@@ -392,7 +463,9 @@ fn reduce_loop(
             let window: Vec<(usize, Episode)> = (lo..hi)
                 .map(|s| Ok((s, next_episode(s)?)))
                 .collect::<Result<_>>()?;
-            run_window_parallel(engine, learner, cfg, make_episode, val_seed, workers, &window, st)?;
+            run_window_parallel(
+                engine, learner, cfg, make_episode, val_seed, workers, &window, st, writer,
+            )?;
         }
         lo = hi;
         // Window consumed: advance the producers' prefetch gate.
@@ -420,6 +493,7 @@ fn run_window_parallel(
     workers: usize,
     window: &[(usize, Episode)],
     st: &mut ReducerState,
+    writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
     let lr: &MetaLearner = learner;
     let mut stats_buf: Vec<Option<TrainStats>> = vec![None; window.len()];
@@ -437,8 +511,12 @@ fn run_window_parallel(
                     return;
                 }
                 let (step, ep) = &window[k];
-                let res =
-                    lr.train_episode(engine.shard(*step), ep, &mut episode_rng(cfg.seed, *step));
+                let res = lr.train_episode_dispatch(
+                    engine.shard(*step),
+                    cfg.dispatch,
+                    ep,
+                    &mut episode_rng(cfg.seed, *step),
+                );
                 if res_tx.send((k, res)).is_err() {
                     return;
                 }
@@ -489,6 +567,7 @@ fn run_window_parallel(
         }
         emit_log(learner, cfg, &mut st.logs, step, stats);
         maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
+        maybe_checkpoint(learner, cfg, step, writer)?;
     }
     Ok(())
 }
@@ -542,7 +621,7 @@ fn maybe_validate(
     for _ in 0..cfg.validate_episodes {
         let vep = make_episode(&mut episode_rng(val_seed, st.val_index));
         st.val_index += 1;
-        let preds = learner.predict_episode(engine.primary(), &vep)?;
+        let preds = learner.predict_episode_dispatch(engine.primary(), cfg.dispatch, &vep)?;
         accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
     }
     let va = crate::util::mean(&accs);

@@ -35,12 +35,16 @@ use crate::util::{mean_ci95, timed};
 /// and bench runners); the harness routes episode `i` to
 /// `engine.shard(i)` and **fails loudly** when this knob disagrees with
 /// the engine set it was actually handed, so a config/engine mismatch
-/// cannot silently evaluate unsharded. Metrics stay bit-identical to
-/// serial for any worker/shard combination.
+/// cannot silently evaluate unsharded. `dispatch` is the per-episode
+/// dispatch-pipeline depth (0 = direct path; N >= 1 overlaps host
+/// marshaling with device execution and reuses the adapted state's
+/// data literals across query batches). Metrics stay bit-identical to
+/// serial for any worker/shard/dispatch combination.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalConfig {
     pub workers: usize,
     pub shards: usize,
+    pub dispatch: usize,
 }
 
 /// Aggregated evaluation over a set of episodes.
@@ -81,9 +85,15 @@ pub enum Predictor<'a> {
 }
 
 impl Predictor<'_> {
-    pub fn predict(&self, engine: &Engine, ep: &Episode) -> Result<Vec<usize>> {
+    /// Predict labels for an episode's queries. `dispatch` is the
+    /// dispatch-pipeline depth for meta-learners (0 = direct); the
+    /// FineTuner ignores it — its head-SGD loop is inherently
+    /// sequential (each step consumes the previous weights), and the
+    /// frozen extractor's marshaling win already comes from the
+    /// engine's param-literal cache.
+    pub fn predict(&self, engine: &Engine, dispatch: usize, ep: &Episode) -> Result<Vec<usize>> {
         match self {
-            Predictor::Meta(m) => m.predict_episode(engine, ep),
+            Predictor::Meta(m) => m.predict_episode_dispatch(engine, dispatch, ep),
             Predictor::Fine(f) => f.predict_episode(engine, ep),
         }
     }
@@ -111,6 +121,7 @@ pub fn summarize(metrics: &[EpisodeMetrics], secs: &[f64]) -> EvalSummary {
 
 /// Score episode `i` of a dataset evaluation run (the shared unit of
 /// work for the serial and parallel paths).
+#[allow(clippy::too_many_arguments)]
 fn eval_one(
     engine: &Engine,
     pred: &Predictor,
@@ -118,15 +129,17 @@ fn eval_one(
     cfg: &EpisodeConfig,
     image_size: usize,
     seed: u64,
+    dispatch: usize,
     i: usize,
 ) -> Result<(EpisodeMetrics, f64)> {
     let mut rng = Rng::new(seed).split(i as u64);
     let ep = sample_episode(ds, cfg, &mut rng, image_size);
-    let (preds, dt) = timed(|| pred.predict(engine, &ep));
+    let (preds, dt) = timed(|| pred.predict(engine, dispatch, &ep));
     Ok((score_episode(&ep, &preds?), dt))
 }
 
-/// Evaluate on episodes sampled from one dataset: serial (one worker),
+/// Evaluate on episodes sampled from one dataset: serial (one worker,
+/// direct dispatch — THE reference path of the bit-identity contract),
 /// over whatever shard set the engine carries.
 pub fn eval_dataset(
     engine: &dyn EngineShards,
@@ -137,7 +150,7 @@ pub fn eval_dataset(
     n_episodes: usize,
     seed: u64,
 ) -> Result<EvalSummary> {
-    let eval = EvalConfig { workers: 1, shards: engine.n_shards() };
+    let eval = EvalConfig { workers: 1, shards: engine.n_shards(), dispatch: 0 };
     par_eval_dataset(engine, pred, ds, cfg, image_size, n_episodes, seed, eval)
 }
 
@@ -158,7 +171,7 @@ pub fn par_eval_dataset(
 ) -> Result<EvalSummary> {
     engine.check_shard_knob(eval.shards, "EvalConfig.shards")?;
     par_eval(eval.workers, n_episodes, |i| {
-        eval_one(engine.shard(i), pred, ds, cfg, image_size, seed, i)
+        eval_one(engine.shard(i), pred, ds, cfg, image_size, seed, eval.dispatch, i)
     })
 }
 
@@ -185,7 +198,7 @@ pub fn eval_orbit(
         tasks_per_user,
         frames_per_video,
         seed,
-        EvalConfig { workers: 1, shards: engine.n_shards() },
+        EvalConfig { workers: 1, shards: engine.n_shards(), dispatch: 0 },
     )
 }
 
@@ -212,7 +225,7 @@ pub fn par_eval_orbit(
         let (user, t) = (j / tasks_per_user, j % tasks_per_user);
         let mut erng = rng.split((user * 1000 + t) as u64);
         let ep = sim.user_episode(user, mode, &mut erng, image_size, 6, 2, frames_per_video);
-        let (preds, dt) = timed(|| pred.predict(engine.shard(j), &ep));
+        let (preds, dt) = timed(|| pred.predict(engine.shard(j), eval.dispatch, &ep));
         Ok((score_episode(&ep, &preds?), dt))
     })
 }

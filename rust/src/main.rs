@@ -175,6 +175,15 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // Bit-identical to --shards 1 at the same seed (the
     // shard-throughput bench scenario gates this).
     let shards: usize = args.get("shards", 1)?;
+    // Per-episode dispatch-pipeline depth (0 = direct serial path).
+    // Bit-identical to --dispatch 0 at the same seed (the
+    // dispatch-throughput bench scenario gates this).
+    let dispatch: usize = args.get("dispatch", 1)?;
+    // Periodic parameter snapshots through the bounded background
+    // writer (0 = only the final save). IO never blocks training; the
+    // saves are atomic, so a crash mid-write cannot corrupt the
+    // previous checkpoint.
+    let checkpoint_every: usize = args.get("checkpoint-every", 0)?;
     let out = args.get_str("out", "");
     args.finish()?;
     let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
@@ -185,6 +194,11 @@ fn cmd_train(mut args: Args) -> Result<()> {
         let n = learner.install_backbone(&bb);
         eprintln!("installed {n} pretrained backbone tensors");
     }
+    let path: std::path::PathBuf = if out.is_empty() {
+        engine.primary().dir().join(format!("{model}_{size}.ckpt"))
+    } else {
+        out.into()
+    };
     let cfg = TrainConfig {
         episodes,
         accum_period: accum,
@@ -195,16 +209,14 @@ fn cmd_train(mut args: Args) -> Result<()> {
         validate_every,
         workers,
         shards,
+        dispatch,
+        checkpoint_every,
+        checkpoint_path: (checkpoint_every > 0).then(|| path.clone()),
         ..Default::default()
     };
     let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
     let last: Vec<f64> = logs.iter().rev().take(20).map(|l| l.loss as f64).collect();
     println!("final loss (20-ep mean): {:.4}", lite::util::mean(&last));
-    let path = if out.is_empty() {
-        engine.primary().dir().join(format!("{model}_{size}.ckpt"))
-    } else {
-        out.into()
-    };
     learner.params.save(&path)?;
     println!("checkpoint saved to {}", path.display());
     eprintln!("{}", engine.merged_stats().report_line());
@@ -222,9 +234,12 @@ fn cmd_eval(mut args: Args) -> Result<()> {
     // Independent engine shards, round-robined over episode indices.
     // Bit-identical to --shards 1 at the same seed.
     let shards: usize = args.get("shards", 1)?;
+    // Per-episode dispatch-pipeline depth (0 = direct serial path).
+    // Bit-identical to --dispatch 0 at the same seed.
+    let dispatch: usize = args.get("dispatch", 1)?;
     let ckpt = args.get_str("ckpt", "");
     args.finish()?;
-    let eval_cfg = EvalConfig { workers, shards };
+    let eval_cfg = EvalConfig { workers, shards, dispatch };
     let engine = ShardedEngine::load(Engine::default_dir(), eval_cfg.shards)?;
     let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), 200)?;
     if !ckpt.is_empty() {

@@ -1,4 +1,4 @@
-//! Machine-readable benchmark reports (schema v1).
+//! Machine-readable benchmark reports (schema v2).
 //!
 //! Every bench scenario produces a [`ScenarioReport`]: gateable
 //! `metrics` (deterministic for a fixed seed — accuracies, analytic
@@ -29,7 +29,9 @@ use self::json::Json;
 
 /// Bump on any change to the serialized report shape, and extend the
 /// golden snapshot in `tests/report_roundtrip.rs`.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: `engine` gained `data_literal_builds` / `data_cache_hits` and
+/// the `transfer_secs` half of the old aggregate execute time.
+pub const SCHEMA_VERSION: u64 = 2;
 /// Sanity tag so `bench compare` rejects arbitrary JSON early.
 pub const REPORT_KIND: &str = "lite-bench-report";
 
@@ -139,8 +141,37 @@ pub struct EngineSnapshot {
     pub executions: u64,
     pub param_literal_builds: u64,
     pub param_cache_hits: u64,
+    pub data_literal_builds: u64,
+    pub data_cache_hits: u64,
     pub compile_secs: f64,
+    /// Device execution time only; host-side result transfer is the
+    /// separate `transfer_secs` (schema v2 split), so perf deltas can
+    /// be attributed to the right side of the PJRT boundary.
     pub execute_secs: f64,
+    pub transfer_secs: f64,
+}
+
+impl EngineSnapshot {
+    /// The one-line engine summary — single source for the CLI
+    /// (`EngineStats::report_line` converts through the `From` impl
+    /// below) and the bench rendering layer, so the two surfaces
+    /// cannot drift when a counter is added.
+    pub fn report_line(&self) -> String {
+        format!(
+            "[engine] {} compiles ({:.1}s), {} executions ({:.1}s exec + {:.1}s transfer), \
+             {} param-literal builds, {} cached-param runs, \
+             {} data-literal builds, {} cached-data literals",
+            self.compiles,
+            self.compile_secs,
+            self.executions,
+            self.execute_secs,
+            self.transfer_secs,
+            self.param_literal_builds,
+            self.param_cache_hits,
+            self.data_literal_builds,
+            self.data_cache_hits
+        )
+    }
 }
 
 impl From<&EngineStats> for EngineSnapshot {
@@ -150,8 +181,11 @@ impl From<&EngineStats> for EngineSnapshot {
             executions: s.executions as u64,
             param_literal_builds: s.param_literal_builds as u64,
             param_cache_hits: s.param_cache_hits as u64,
+            data_literal_builds: s.data_literal_builds as u64,
+            data_cache_hits: s.data_cache_hits as u64,
             compile_secs: s.compile_secs,
             execute_secs: s.execute_secs,
+            transfer_secs: s.transfer_secs,
         }
     }
 }
@@ -233,8 +267,11 @@ impl ScenarioReport {
                 eo.push("executions", Json::UInt(e.executions));
                 eo.push("param_literal_builds", Json::UInt(e.param_literal_builds));
                 eo.push("param_cache_hits", Json::UInt(e.param_cache_hits));
+                eo.push("data_literal_builds", Json::UInt(e.data_literal_builds));
+                eo.push("data_cache_hits", Json::UInt(e.data_cache_hits));
                 eo.push("compile_secs", Json::Num(e.compile_secs));
                 eo.push("execute_secs", Json::Num(e.execute_secs));
+                eo.push("transfer_secs", Json::Num(e.transfer_secs));
                 o.push("engine", eo)
             }
         };
@@ -307,8 +344,17 @@ impl ScenarioReport {
                         .need("param_cache_hits")?
                         .as_u64()
                         .context("param_cache_hits")?,
+                    data_literal_builds: e
+                        .need("data_literal_builds")?
+                        .as_u64()
+                        .context("data_literal_builds")?,
+                    data_cache_hits: e
+                        .need("data_cache_hits")?
+                        .as_u64()
+                        .context("data_cache_hits")?,
                     compile_secs: e.need("compile_secs")?.as_f64().context("compile_secs")?,
                     execute_secs: e.need("execute_secs")?.as_f64().context("execute_secs")?,
+                    transfer_secs: e.need("transfer_secs")?.as_f64().context("transfer_secs")?,
                 });
             }
         }
@@ -435,7 +481,8 @@ mod tests {
     fn schema_version_is_checked() {
         let mut rep = RunReport::default();
         rep.reports.push(ScenarioReport::new("s", 0));
-        let text = rep.to_json_string().replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let tag = format!("\"schema_version\": {SCHEMA_VERSION}");
+        let text = rep.to_json_string().replace(&tag, "\"schema_version\": 99");
         let err = RunReport::parse(&text).unwrap_err().to_string();
         assert!(err.contains("schema v99"), "{err}");
     }

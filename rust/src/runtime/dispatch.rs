@@ -1,0 +1,195 @@
+//! Pipelined dispatch: overlap host literal marshaling with device
+//! execution.
+//!
+//! `Engine::run_with_params` is synchronous end to end: it builds every
+//! data literal on the calling thread, then blocks that thread through
+//! `execute` and the result transfer. On the episodic hot path that
+//! cost is paid once per query batch x once per episode x thousands of
+//! steps, and the host work (pixel gathers + literal builds) and the
+//! device work (PJRT execution) serialize even though they need
+//! different resources.
+//!
+//! A [`DispatchQueue`] splits the two across a stage boundary. It binds
+//! to exactly ONE engine and owns a dedicated **marshal stage** thread:
+//! [`DispatchQueue::submit`] hands an execution request (artifact name +
+//! param-store handle + the per-call data tensors, plus an optional
+//! per-episode [`DataLiterals`] set for the episode-constant inputs) to
+//! that stage and immediately returns a [`Ticket`]. The stage builds
+//! the data literals; [`Ticket::wait`] then runs the device execution
+//! on the *calling* thread, in submission order. With the queue's
+//! bounded depth (default 1) this double-buffers the pipeline: while
+//! batch `b` executes on the device inside `wait`, the marshal stage is
+//! already building batch `b + 1`'s literals, and a caller that runs
+//! ahead of the stage blocks in `submit` (backpressure) instead of
+//! accumulating unbounded host buffers.
+//!
+//! ## Bit-identity contract
+//!
+//! Pipelining changes WHEN literals are built, never WHAT is executed:
+//! the same tensors produce the same literals on any thread, parameter
+//! literals still come from the engine's `(store_id, version)` cache
+//! resolved at `wait` time on the calling thread, and callers fold
+//! results in submission order. Any dispatch configuration is therefore
+//! bit-identical to the direct serial path at the same seed, composing
+//! with `--workers` (each gradient/eval worker drives its own queue)
+//! and `--shards` (a queue binds to one engine, so an episode's queue
+//! is constructed on its own shard — one queue per shard by
+//! construction). The `dispatch-throughput` scenario and the
+//! `dispatch_*` integration tests gate this.
+//!
+//! The pipelined episode loops themselves live next to their serial
+//! twins in `coordinator::learner` (`train_episode_dispatch`,
+//! `predict_episode_dispatch`); this module owns the stage machinery.
+//!
+//! Queues are constructed per episode, on the episode's engine: one
+//! OS-thread spawn + join per episode (tens of microseconds) against
+//! episodes that each run several PJRT executions (milliseconds+). A
+//! long-lived per-engine stage would shave that constant but needs the
+//! engine behind an `Arc` or a scoped-pool redesign — the natural next
+//! step if cross-episode megabatching (ROADMAP) makes requests outlive
+//! one episode.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::params::ParamStore;
+use crate::runtime::engine::{to_literal, DataLiterals, Engine};
+use crate::tensor::Tensor;
+
+/// Marshaled literals crossing the stage boundary.
+///
+/// SAFETY: same contract as `Engine`'s `Send`/`Sync` impls
+/// (runtime/engine.rs): an `xla::Literal` is plain host memory,
+/// immutable once built, and the wrapper types are `!Send` only because
+/// the binding does not assert the contract. Literals here are built on
+/// the marshal stage, moved exactly once to the submitting thread, and
+/// consumed there — never aliased across threads.
+struct SendLits(Vec<xla::Literal>);
+
+unsafe impl Send for SendLits {}
+
+/// One marshal request: the per-call data tensors of a single
+/// execution, in the order of the artifact's non-prepared data inputs.
+struct MarshalJob {
+    tensors: Vec<Tensor>,
+    reply: Sender<Result<SendLits>>,
+}
+
+/// A per-engine dispatch pipeline: one dedicated marshal-stage thread
+/// plus a bounded hand-off channel (see the module doc). Dropping the
+/// queue drains and joins the stage.
+pub struct DispatchQueue<'e> {
+    engine: &'e Engine,
+    tx: Option<SyncSender<MarshalJob>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl<'e> DispatchQueue<'e> {
+    /// Bind a queue to `engine`. `depth` bounds the marshal jobs in
+    /// flight (clamped to >= 1); 1 is classic double buffering — the
+    /// stage builds batch `b + 1` while batch `b` executes.
+    pub fn new(engine: &'e Engine, depth: usize) -> Self {
+        let (tx, rx) = sync_channel::<MarshalJob>(depth.max(1));
+        let worker = std::thread::spawn(move || {
+            while let Ok(job) = rx.recv() {
+                let lits = job
+                    .tensors
+                    .iter()
+                    .map(to_literal)
+                    .collect::<Result<Vec<_>>>()
+                    .map(SendLits);
+                // A dropped ticket is a caller that bailed early; the
+                // stage just moves on to the next request.
+                let _ = job.reply.send(lits);
+            }
+        });
+        Self { engine, tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Enqueue one execution request: `fresh` (the per-call data
+    /// tensors for the artifact's non-prepared input positions, in
+    /// order) goes to the marshal stage; params resolve through the
+    /// engine's version cache at [`Ticket::wait`]. Blocks when `depth`
+    /// marshal jobs are already in flight (the pipeline's backpressure
+    /// bound). Results MUST be waited in submission order per caller —
+    /// that is what keeps the fold order identical to the serial path.
+    pub fn submit<'t>(
+        &self,
+        name: &'t str,
+        params: &'t ParamStore,
+        prepared: Option<&'t DataLiterals>,
+        fresh: Vec<Tensor>,
+    ) -> Result<Ticket<'t>>
+    where
+        'e: 't,
+    {
+        let (reply, rx) = channel();
+        let tx = self.tx.as_ref().expect("sender lives until drop");
+        if tx.send(MarshalJob { tensors: fresh, reply }).is_err() {
+            bail!("dispatch marshal stage terminated");
+        }
+        Ok(Ticket { engine: self.engine, name, params, prepared, rx })
+    }
+}
+
+impl Drop for DispatchQueue<'_> {
+    fn drop(&mut self) {
+        // Closing the channel is the stage's shutdown signal (the stage
+        // holds only the receiver — never an engine reference); join so
+        // the thread's lifetime is bounded by the queue's.
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            if let Err(payload) = h.join() {
+                // Same policy as the trainer pipeline: a worker's
+                // ORIGINAL panic must resurface, not a generic
+                // "stage terminated" shadow of it — unless this drop
+                // is itself part of an unwind (double panic aborts).
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+}
+
+/// An in-flight execution request. [`Ticket::wait`] blocks for the
+/// marshal stage's literals, then executes on the calling thread and
+/// decodes the outputs — device work happens here, in the caller's
+/// submission order, never on the stage.
+pub struct Ticket<'t> {
+    engine: &'t Engine,
+    name: &'t str,
+    params: &'t ParamStore,
+    prepared: Option<&'t DataLiterals>,
+    rx: Receiver<Result<SendLits>>,
+}
+
+impl Ticket<'_> {
+    /// Complete the request: receive the marshaled literals and run the
+    /// artifact (param cache + optional prepared data + fresh literals).
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        let lits = match self.rx.recv() {
+            Ok(res) => res?,
+            Err(_) => bail!("dispatch marshal stage terminated before replying"),
+        };
+        self.engine
+            .run_with_params_lits(self.name, self.params, self.prepared, &lits.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marshal_job_types_are_send() {
+        // The stage thread moves the receiver (and with it every job)
+        // into a 'static closure: the whole request payload must be
+        // Send, including the reply sender carrying the literals back.
+        fn assert_send<T: Send>() {}
+        assert_send::<MarshalJob>();
+        assert_send::<Receiver<Result<SendLits>>>();
+    }
+}

@@ -21,6 +21,23 @@
 //! O(params x executions), which `EngineStats::param_literal_builds` /
 //! `EngineStats::param_cache_hits` make observable.
 //!
+//! The data side has the same cache, per episode instead of per store:
+//! [`engine::DataLiterals`] holds an episode's constant data inputs
+//! (an adapted task state, a full-support buffer) pre-marshaled, so
+//! query batches re-marshal only their varying tensors. Ownership is
+//! the cache key — the episode's driver prepares the set once and
+//! drops it with the episode — observable via
+//! `EngineStats::{data_literal_builds, data_cache_hits}`.
+//!
+//! ## Dispatch pipelining
+//!
+//! [`dispatch::DispatchQueue`] overlaps host literal marshaling with
+//! device execution: a per-engine marshal-stage thread builds batch
+//! `b + 1`'s literals while batch `b` executes on the submitting
+//! thread, double-buffered behind a bounded channel. Bit-identical to
+//! the direct path by construction (see the module doc of
+//! [`dispatch`]).
+//!
 //! ## Sharding
 //!
 //! `shard::EngineShards` generalizes the single engine to a set of N
@@ -30,10 +47,12 @@
 //! untouched; see the module doc of [`shard`] for the routing and
 //! bit-identity contract.
 
+pub mod dispatch;
 pub mod engine;
 pub mod manifest;
 pub mod shard;
 
-pub use engine::{Engine, EngineStats};
+pub use dispatch::{DispatchQueue, Ticket};
+pub use engine::{DataLiterals, Engine, EngineStats};
 pub use manifest::{ArtifactEntry, Geom, Manifest, TestGeom};
 pub use shard::{shard_index, EngineShards, ShardView, ShardedEngine};

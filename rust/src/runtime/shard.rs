@@ -27,6 +27,17 @@
 //! one-shard set, so every `&Engine` call site keeps working unchanged,
 //! while the CLI and bench runners construct a [`ShardedEngine`] (or
 //! borrow-or-own via [`ShardView`]) when `--shards N` asks for more.
+//!
+//! ## Composition with the dispatch pipeline
+//!
+//! A [`crate::runtime::DispatchQueue`] binds to exactly one engine, and
+//! the episode drivers construct their queue on the engine the episode
+//! routes to — so under sharding there is one marshal stage per shard
+//! per in-flight episode, never a queue spanning shards. Since routing
+//! stays a pure function of the index and dispatch only moves WHERE
+//! literals are built, `--shards`, `--workers`, and `--dispatch`
+//! compose bit-identically (gated together by the
+//! `dispatch_train_and_eval_bit_identical_composed` integration test).
 
 use std::path::Path;
 

@@ -7,7 +7,7 @@
 
 use lite::bench::scenarios::{run_filtered, Knobs};
 use lite::coordinator::{
-    batch, meta_train, pretrain_backbone, FineTuner, MetaLearner, TrainConfig,
+    batch, meta_train, pretrain_backbone, BackgroundWriter, FineTuner, MetaLearner, TrainConfig,
 };
 use lite::data::orbit::{OrbitSim, VideoMode};
 use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
@@ -310,7 +310,7 @@ fn par_eval_is_bit_identical_to_serial() {
             32,
             5,
             33,
-            EvalConfig { workers, shards: 1 },
+            EvalConfig { workers, shards: 1, dispatch: 0 },
         )
         .unwrap();
         assert_eq!(serial.episodes, par.episodes);
@@ -353,16 +353,18 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     let Some(_) = engine_opt() else { return };
     // cache-efficiency serially + eval-throughput across 1 vs 2 workers
     // + train-throughput across 1 vs 2 training workers +
-    // shard-throughput across 1 vs 2 engine shards (each run_filtered
-    // call loads its own engine, like the CLI).
+    // shard-throughput across 1 vs 2 engine shards +
+    // dispatch-throughput across direct vs pipelined dispatch (each
+    // run_filtered call loads its own engine, like the CLI).
     let knobs = Knobs::parse(
         "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2,\
-         shard-bench-episodes=3,shard-sweep=1,2,shard-eval-episodes=2",
+         shard-bench-episodes=3,shard-sweep=1,2,shard-eval-episodes=2,\
+         dispatch-bench-episodes=3,dispatch-eval-episodes=2",
     )
     .unwrap();
     let a = run_filtered("runtime", &knobs, 5).unwrap();
     let b = run_filtered("runtime", &knobs, 5).unwrap();
-    assert_eq!(a.reports.len(), 4);
+    assert_eq!(a.reports.len(), 5);
     assert_eq!(b.reports.len(), a.reports.len());
     for (x, y) in a.reports.iter().zip(&b.reports) {
         assert_eq!(
@@ -385,6 +387,13 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     let st = a.get("shard-throughput").unwrap();
     assert_eq!(st.get_metric("shard_train_bit_identical").unwrap().value, 1.0);
     assert_eq!(st.get_metric("shard_eval_bit_identical").unwrap().value, 1.0);
+    // ...the dispatch pipeline agreed with the direct path at equal
+    // executions while marshaling strictly fewer data literals...
+    let dt = a.get("dispatch-throughput").unwrap();
+    assert_eq!(dt.get_metric("dispatch_train_bit_identical").unwrap().value, 1.0);
+    assert_eq!(dt.get_metric("dispatch_eval_bit_identical").unwrap().value, 1.0);
+    assert_eq!(dt.get_metric("dispatch_equal_executions").unwrap().value, 1.0);
+    assert_eq!(dt.get_metric("dispatch_data_builds_reduced").unwrap().value, 1.0);
     // ...and steady-state prediction never rebuilt parameter literals.
     let ce = a.get("cache-efficiency").unwrap();
     assert_eq!(ce.get_metric("steady_state_literal_builds").unwrap().value, 0.0);
@@ -426,6 +435,10 @@ fn meta_train_parallel_bit_identical_to_serial() {
                 validate_episodes: 1,
                 workers,
                 shards: 1,
+                // dispatch pinned DIRECT: this property isolates the
+                // worker axis (the dispatch axis has its own gates).
+                dispatch: 0,
+                ..Default::default()
             };
             let logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
             (logs, learner.params.tensors().to_vec())
@@ -467,6 +480,10 @@ fn sharded_train_and_eval_bit_identical_to_serial() {
                 validate_episodes: 1,
                 workers,
                 shards,
+                // dispatch pinned DIRECT: this property isolates the
+                // shard axis (composition has its own test below).
+                dispatch: 0,
+                ..Default::default()
             };
             let logs = meta_train(engine, &mut learner, &md_suite(), &cfg).unwrap();
             (logs, learner)
@@ -498,7 +515,7 @@ fn sharded_train_and_eval_bit_identical_to_serial() {
             32,
             5,
             seed + 100,
-            EvalConfig { workers: 2, shards: 2 },
+            EvalConfig { workers: 2, shards: 2, dispatch: 0 },
         )
         .unwrap();
         assert_eq!(serial.episodes, shard_eval.episodes, "seed {seed}");
@@ -516,6 +533,128 @@ fn sharded_train_and_eval_bit_identical_to_serial() {
             sharded.engines().iter().map(|e| e.stats().executions).sum::<usize>()
         );
     }
+}
+
+#[test]
+fn dispatch_prediction_bit_identical_and_pins_data_literal_reuse() {
+    // The data-literal cache's unit pin: an episode's adapted state
+    // marshals ONCE under dispatch, not once per query batch, at equal
+    // executions and identical predictions. The counter arithmetic is
+    // exact because everything here runs on one thread.
+    let Some(e) = engine_opt() else { return };
+    let learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let tg = learner.test_geom.clone().unwrap();
+    let suite = md_suite();
+    let cfg = EpisodeConfig::test_large(64);
+    let mut ep = sample_episode(&suite[2], &cfg, &mut Rng::new(41), 32);
+    // Reuse only shows across >= 2 query batches; pad by cycling real
+    // queries if the sample came up short (labels stay in-way).
+    let orig_len = ep.query.len();
+    while ep.query.len() < 2 * tg.mq {
+        let recycled = ep.query[ep.query.len() % orig_len].clone();
+        ep.query.push(recycled);
+    }
+    ep.query_video = vec![usize::MAX; ep.query.len()];
+    let b = batch::n_query_batches(&ep, tg.mq);
+    assert!(b >= 2);
+    // State inputs of the classify artifact: everything but q_x.
+    let classify = learner.classify_artifact.clone().unwrap();
+    let k = e.entry(&classify).unwrap().inputs.len() - 1;
+    assert!(k >= 1, "protonet classify must consume adapted state");
+    let adapt_inputs = e
+        .entry(learner.adapt_artifact.as_ref().unwrap())
+        .unwrap()
+        .inputs
+        .len();
+
+    let s0 = e.stats();
+    let direct = learner.predict_episode(&e, &ep).unwrap();
+    let s1 = e.stats();
+    let piped = learner.predict_episode_dispatch(&e, 1, &ep).unwrap();
+    let s2 = e.stats();
+    assert_eq!(direct, piped, "dispatch path diverged from direct predictions");
+
+    // Executions: 1 adapt + B classify batches on both paths.
+    assert_eq!(s1.executions - s0.executions, 1 + b);
+    assert_eq!(s2.executions - s1.executions, 1 + b);
+    // Direct marshals the full state every batch; dispatch marshals it
+    // once and only the query tensor per batch.
+    assert_eq!(
+        s1.data_literal_builds - s0.data_literal_builds,
+        adapt_inputs + b * (k + 1),
+        "direct-path data builds"
+    );
+    assert_eq!(
+        s2.data_literal_builds - s1.data_literal_builds,
+        adapt_inputs + k + b,
+        "support/state literals must be built once per episode"
+    );
+    assert_eq!(s1.data_cache_hits - s0.data_cache_hits, 0);
+    assert_eq!(
+        s2.data_cache_hits - s1.data_cache_hits,
+        b * k,
+        "every batch must serve the state from the prepared set"
+    );
+}
+
+#[test]
+fn dispatch_train_and_eval_bit_identical_composed() {
+    // The dispatch pipeline composed with workers=2 + shards=2 must
+    // reproduce the direct serial run bit for bit — loss curve, final
+    // parameters, and eval metrics (the tentpole's contract; cf. the
+    // shard and worker twins above which pin dispatch: 0).
+    let Some(e) = engine_opt() else { return };
+    let seed = 13u64;
+    let train = |engine: &dyn EngineShards, workers: usize, shards: usize, dispatch: usize| {
+        let mut learner =
+            MetaLearner::new(engine.primary(), "protonet", 32, None, Some(40), 64).unwrap();
+        let cfg = TrainConfig {
+            episodes: 5,
+            accum_period: 2,
+            lr: 1e-3,
+            seed,
+            log_every: 0,
+            episode_cfg: EpisodeConfig::train_default(),
+            validate_every: 2,
+            validate_episodes: 1,
+            workers,
+            shards,
+            dispatch,
+            ..Default::default()
+        };
+        let logs = meta_train(engine, &mut learner, &md_suite(), &cfg).unwrap();
+        (logs, learner)
+    };
+    let (serial_logs, serial_learner) = train(&e, 1, 1, 0);
+    let sharded = ShardedEngine::load(e.dir(), 2).unwrap();
+    let (logs, learner) = train(&sharded, 2, 2, 1);
+    assert_eq!(serial_logs, logs, "dispatched loss curve diverged");
+    assert_eq!(
+        serial_learner.params.tensors(),
+        learner.params.tensors(),
+        "dispatched final parameters diverged"
+    );
+
+    let suite = md_suite();
+    let ds = &suite[2]; // birds-like
+    let cfg = EpisodeConfig::test_large(64);
+    let serial =
+        eval_dataset(&e, &Predictor::Meta(&serial_learner), ds, &cfg, 32, 5, seed + 100).unwrap();
+    let piped = par_eval_dataset(
+        &sharded,
+        &Predictor::Meta(&serial_learner),
+        ds,
+        &cfg,
+        32,
+        5,
+        seed + 100,
+        EvalConfig { workers: 2, shards: 2, dispatch: 1 },
+    )
+    .unwrap();
+    assert_eq!(serial.episodes, piped.episodes);
+    assert_eq!(serial.frame_acc, piped.frame_acc);
+    assert_eq!(serial.video_acc, piped.video_acc);
+    assert_eq!(serial.ftr, piped.ftr);
 }
 
 /// Artifact-free store for the checkpoint-IO regression tests below.
@@ -607,6 +746,80 @@ fn checkpoint_restore_rejects_truncation_and_corruption() {
     assert_eq!(store.get("bb.conv.w").unwrap().data, vec![9.0; 4], "partial overlay leaked");
     assert_eq!(store.get("head.fc.w").unwrap().data, vec![9.0; 3], "partial overlay leaked");
     assert_eq!(store.version(), v, "failed restore must not bump the version");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn background_writer_preserves_checkpoint_crash_safety() {
+    // PR 4's partial-write guarantee, extended through the async
+    // writer: checkpoints handed to the background thread go through
+    // the same atomic tmp + fsync + rename save, so a stale torn tmp
+    // (a crashed earlier save) and a failing later save both leave the
+    // trusted checkpoint intact.
+    let dir = ckpt_dir("bg_atomic");
+    let path = dir.join("model.ckpt");
+    ckpt_store().save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let tmp = dir.join("model.ckpt.tmp");
+    std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+
+    let mut changed = ckpt_store();
+    changed.get_mut("head.fc.w").unwrap().data.fill(42.0);
+    let w = BackgroundWriter::new(1);
+    w.save_checkpoint(&changed, &path).unwrap();
+    w.finish().unwrap();
+    assert!(!tmp.exists(), "async save must clean the stale tmp");
+    let mut restored = ckpt_store();
+    assert_eq!(restored.restore(&path).unwrap(), 2);
+    assert_eq!(restored.get("head.fc.w").unwrap().data, vec![42.0; 3]);
+
+    // A failed async save surfaces at finish AND leaves the previous
+    // checkpoint byte-for-byte untouched.
+    let w = BackgroundWriter::new(1);
+    w.save_checkpoint(&ckpt_store(), dir.join("no_such_subdir").join("x.ckpt")).unwrap();
+    assert!(w.finish().is_err(), "IO error must surface at the run-exit join");
+    let mut again = ckpt_store();
+    assert_eq!(again.restore(&path).unwrap(), 2);
+    assert_eq!(again.get("head.fc.w").unwrap().data, vec![42.0; 3]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn meta_train_checkpoints_asynchronously() {
+    // TrainConfig.checkpoint_every hands snapshots to the background
+    // writer at the due steps; with episodes % accum == 0 and no
+    // validation-best override, the last snapshot IS the final
+    // parameters, so the file must restore to exactly them.
+    let Some(e) = engine_opt() else { return };
+    let dir = ckpt_dir("async_train");
+    let path = dir.join("periodic.ckpt");
+    let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let cfg = TrainConfig {
+        episodes: 4,
+        accum_period: 2,
+        lr: 1e-3,
+        seed: 3,
+        log_every: 0,
+        episode_cfg: EpisodeConfig::train_default(),
+        checkpoint_every: 2,
+        checkpoint_path: Some(path.clone()),
+        ..Default::default()
+    };
+    meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+    assert!(path.exists(), "periodic checkpoint missing after the run-exit join");
+    assert!(!dir.join("periodic.ckpt.tmp").exists());
+    let mut restored = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let n = restored.params.restore(&path).unwrap();
+    assert_eq!(n, restored.params.names().len());
+    assert_eq!(
+        restored.params.tensors(),
+        learner.params.tensors(),
+        "last periodic snapshot must match the final parameters"
+    );
+    // Misconfiguration fails loudly before training starts.
+    let bad = TrainConfig { checkpoint_every: 1, checkpoint_path: None, ..cfg };
+    let err = meta_train(&e, &mut learner, &md_suite(), &bad).unwrap_err().to_string();
+    assert!(err.contains("checkpoint_path"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -92,6 +92,23 @@ if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
         fi
     done
     echo "shard-throughput gate OK (same-seed runs identical; shard/serial bit-identity = 1)"
+
+    # Dispatch-pipeline gate: same shape as the shard gate (a
+    # deterministic pipelined/direct divergence would self-compare
+    # clean, so the identity metrics are asserted directly), plus the
+    # marshaling claim itself — the pipelined entries must have built
+    # strictly fewer data literals at equal executions.
+    "./$BIN" bench run --filter dispatch-throughput --seed 7 --json "$OUT/disp_base.json"
+    "./$BIN" bench run --filter dispatch-throughput --seed 7 --json "$OUT/disp_cand.json"
+    "./$BIN" bench compare "$OUT/disp_base.json" "$OUT/disp_cand.json" --tolerance-pct 0
+    for m in dispatch_train_bit_identical dispatch_eval_bit_identical \
+             dispatch_equal_executions dispatch_data_builds_reduced; do
+        if ! grep -A1 "\"$m\"" "$OUT/disp_cand.json" | grep -q '"value": 1'; then
+            echo "error: $m != 1 (dispatch pipeline diverged from the direct path)"
+            exit 1
+        fi
+    done
+    echo "dispatch-throughput gate OK (pipelined/direct bit-identity = 1; data-literal builds reduced)"
 else
-    echo "train/shard-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
+    echo "train/shard/dispatch-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
 fi
