@@ -20,6 +20,7 @@ Usage: ``python -m compile.aot --out-dir ../artifacts [--only prefix]``
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 import json
 import os
@@ -31,6 +32,7 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import specs as specs_mod
+from .models import common as models_common
 from .models import module_for
 
 
@@ -54,13 +56,35 @@ def param_group(spec) -> str | None:
     return f"{spec.model}_{spec.image_size}"
 
 
+def build_spec(spec):
+    """-> (fn, data_specs, out_names) for any artifact kind.
+
+    ``megatrain`` is handled centrally so no model module knows about
+    fusion: the base train graph is built once from the same spec with
+    ``kind="train"``, then wrapped ``extra["fuse"]`` times slot-major
+    (``common.fuse_train``). Everything downstream — lowering, manifest
+    emission, param groups — treats the fused fn like any other.
+    """
+    module = module_for(spec.model)
+    if spec.kind == "megatrain":
+        width = int(spec.extra["fuse"])
+        base = dataclasses.replace(spec, kind="train")
+        base_fn, base_specs = module.build(base)
+        fn = models_common.fuse_train(base_fn, len(base_specs), width)
+        data_specs = models_common.fused_data_specs(base_specs, width)
+        out_names = models_common.fused_output_names(module.output_names(base), width)
+        return fn, data_specs, out_names
+    fn, data_specs = module.build(spec)
+    return fn, data_specs, module.output_names(spec)
+
+
 def lower_spec(spec):
     """-> (hlo_text, manifest_entry, params_dict_or_None)."""
     module = module_for(spec.model)
     key = jax.random.PRNGKey(param_seed(spec.model, spec.image_size))
     params, learnable = module.init_params(key, spec)
     names = list(params.keys())
-    fn, data_specs = module.build(spec)
+    fn, data_specs, out_names = build_spec(spec)
 
     params_shapes = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in params.values()]
     data_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for (_, s, _) in data_specs]
@@ -68,7 +92,6 @@ def lower_spec(spec):
     hlo = to_hlo_text(lowered)
 
     out_shapes = jax.eval_shape(fn, params_shapes, *data_shapes)
-    out_names = module.output_names(spec)
     assert len(out_names) == len(out_shapes), (
         f"{spec.name}: {len(out_names)} output names vs {len(out_shapes)} outputs"
     )

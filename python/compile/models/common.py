@@ -76,3 +76,40 @@ def make_value_and_grad(names, learn_names, episode_loss):
 
 def train_output_names(learn_names) -> list:
     return ["loss", "acc"] + [f"grad.{n}" for n in learn_names]
+
+
+def fuse_train(fn, n_data: int, width: int):
+    """Fuse ``width`` independent train-step invocations into ONE callable.
+
+    Cross-episode megabatching (ROADMAP): LITE's unbiased-gradient
+    decomposition also holds across episodes inside one Adam accumulation
+    window, so query mini-batches from different episodes can share a
+    single device dispatch. Slot ``k``'s data inputs occupy positions
+    ``[k*n_data, (k+1)*n_data)`` and its outputs are the slot-major block
+    ``k`` of ``(loss, acc, *grads)`` tuples. Every slot applies the SAME
+    single-step ``fn`` to its own data — the per-slot subgraphs are
+    structurally identical to the unfused train artifact, which is what
+    lets the rust coordinator keep fused runs bit-identical to serial.
+    """
+
+    def fused(params_list, *data):
+        outs = []
+        for k in range(width):
+            outs.extend(fn(params_list, *data[k * n_data : (k + 1) * n_data]))
+        return tuple(outs)
+
+    return fused
+
+
+def fused_data_specs(data_specs, width: int) -> list:
+    """Slot-major input specs for a fused train step: ``s{k}.<name>``."""
+    return [
+        (f"s{k}.{name}", shape, dt)
+        for k in range(width)
+        for (name, shape, dt) in data_specs
+    ]
+
+
+def fused_output_names(out_names, width: int) -> list:
+    """Slot-major output names for a fused train step: ``s{k}.<name>``."""
+    return [f"s{k}.{n}" for k in range(width) for n in out_names]

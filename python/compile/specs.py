@@ -80,6 +80,11 @@ ORBIT_TEST_GEOM = TestGeometry(way=WAY, n_support=64, mq=16)
 META_MODELS = ("protonet", "cnaps", "simple_cnaps")
 GRADCHECK_GEOM = dict(way=10, n_support=100, mb=10)
 GRADCHECK_HS = (10, 20, 30, 40, 50, 60, 70, 80, 90)
+# Fusion widths for cross-episode megabatching: each megatrain artifact
+# packs W structurally-identical copies of the model's train step into
+# one device dispatch (slot-major s{k}.* inputs/outputs). The rust
+# coordinator resolves `--megabatch N` against these widths.
+MEGA_WIDTHS = (2, 4)
 
 
 def _train(model: str, size: int, geom: Geometry) -> ArtifactSpec:
@@ -89,6 +94,19 @@ def _train(model: str, size: int, geom: Geometry) -> ArtifactSpec:
         kind="train",
         image_size=size,
         geom=geom,
+    )
+
+
+def _megatrain(model: str, size: int, geom: Geometry, width: int, extra: dict | None = None) -> ArtifactSpec:
+    e = dict(extra or {})
+    e["fuse"] = width
+    return ArtifactSpec(
+        name=f"{model}_{size}_{geom.tag()}_mega{width}_train",
+        model=model,
+        kind="megatrain",
+        image_size=size,
+        geom=geom,
+        extra=e,
     )
 
 
@@ -128,6 +146,8 @@ def registry() -> list:
         # Meta-learners: LITE train step + adapt/classify pair.
         for model in META_MODELS:
             specs.append(_train(model, size, TRAIN_GEOM))
+            for w in MEGA_WIDTHS:
+                specs.append(_megatrain(model, size, TRAIN_GEOM, w))
             specs += _adapt_classify(model, size, TEST_GEOM)
             specs += _adapt_classify(model, size, ORBIT_TEST_GEOM)
         # First-order MAML baseline (no LITE; inner loop in-graph). h=0
@@ -143,6 +163,10 @@ def registry() -> list:
                 extra=dict(inner_steps=3, inner_lr=0.05),
             )
         )
+        for w in MEGA_WIDTHS:
+            specs.append(
+                _megatrain("maml", size, maml_geom, w, dict(inner_steps=3, inner_lr=0.05))
+            )
         for tg in (TEST_GEOM, ORBIT_TEST_GEOM):
             specs += [
                 ArtifactSpec(

@@ -1,0 +1,140 @@
+"""Cross-episode megabatching (fused `megatrain` artifacts).
+
+The fusion contract the rust coordinator relies on:
+  1. slot-major I/O — slot k's inputs/outputs are `s{k}.<base_name>` in
+     base order, shapes identical to the unfused train artifact;
+  2. bitwise identity — each slot's (loss, acc, *grads) from the fused
+     XLA executable equal the single-step executable's outputs exactly,
+     so fused training stays bit-identical to serial.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, specs
+from compile.models import common, module_for
+from compile.specs import ArtifactSpec, Geometry
+
+SIZE = 16
+WAY = 10
+
+
+def tiny_megatrain_spec(model, width, n=12, h=4, mb=4):
+    if model == "maml":
+        h = 0
+    return ArtifactSpec(
+        name=f"t_{model}_mega{width}",
+        model=model,
+        kind="megatrain",
+        image_size=SIZE,
+        geom=Geometry(way=WAY, n_support=n, h=h, mb=mb),
+        extra=dict(fuse=width, inner_steps=2, inner_lr=0.05),
+    )
+
+
+def rand_slot(rng, g, n_classes=3):
+    x = rng.normal(0.4, 0.2, size=(g.n_support, SIZE, SIZE, 3)).astype(np.float32).clip(0, 1)
+    oh = np.zeros((g.n_support, g.way), np.float32)
+    oh[np.arange(g.n_support), np.arange(g.n_support) % n_classes] = 1.0
+    qx = rng.normal(0.4, 0.2, size=(g.mb, SIZE, SIZE, 3)).astype(np.float32).clip(0, 1)
+    qoh = np.zeros((g.mb, g.way), np.float32)
+    qoh[np.arange(g.mb), np.arange(g.mb) % n_classes] = 1.0
+    if g.h == 0:
+        data = (x, oh, qx, qoh)
+    else:
+        data = (x[: g.h], oh[: g.h], x[g.h :], oh[g.h :], qx, qoh)
+    return [jnp.asarray(a) for a in data]
+
+
+def test_registry_has_megatrain_widths():
+    r = {s.name: s for s in specs.registry()}
+    for size in (specs.SMALL, specs.LARGE):
+        for model in specs.META_MODELS:
+            for w in specs.MEGA_WIDTHS:
+                name = f"{model}_{size}_{specs.TRAIN_GEOM.tag()}_mega{w}_train"
+                assert name in r, name
+                s = r[name]
+                assert s.kind == "megatrain"
+                assert s.extra["fuse"] == w
+                assert s.geom == specs.TRAIN_GEOM
+        for w in specs.MEGA_WIDTHS:
+            maml_geom = Geometry(specs.WAY, specs.TRAIN_GEOM.n_support, 0, specs.TRAIN_GEOM.mb)
+            assert f"maml_{size}_{maml_geom.tag()}_mega{w}_train" in r
+
+
+def test_fused_io_is_slot_major():
+    ds = [("a", (1, 2), "f32"), ("b", (3,), "f32")]
+    assert common.fused_data_specs(ds, 2) == [
+        ("s0.a", (1, 2), "f32"),
+        ("s0.b", (3,), "f32"),
+        ("s1.a", (1, 2), "f32"),
+        ("s1.b", (3,), "f32"),
+    ]
+    assert common.fused_output_names(["loss", "acc"], 2) == [
+        "s0.loss",
+        "s0.acc",
+        "s1.loss",
+        "s1.acc",
+    ]
+
+
+@pytest.mark.parametrize("model", ["protonet", "maml"])
+def test_fused_outputs_bitwise_match_single(model):
+    """The COMPILED fused executable must reproduce the single-step
+    executable's outputs bit for bit, slot by slot."""
+    spec = tiny_megatrain_spec(model, width=2)
+    mod = module_for(model)
+    params, _ = mod.init_params(jax.random.PRNGKey(0), spec)
+    plist = [params[k] for k in params]
+
+    fn, data_specs, out_names = aot.build_spec(spec)
+    import dataclasses
+
+    base = dataclasses.replace(spec, kind="train")
+    base_fn, base_specs = mod.build(base)
+    n_out = len(mod.output_names(base))
+    assert len(out_names) == 2 * n_out
+    assert len(data_specs) == 2 * len(base_specs)
+
+    rng = np.random.default_rng(7)
+    slots = [rand_slot(rng, spec.geom) for _ in range(2)]
+    fused_out = jax.jit(fn, keep_unused=True)(plist, *[a for s in slots for a in s])
+    single = jax.jit(base_fn, keep_unused=True)
+    for k, slot in enumerate(slots):
+        ref = single(plist, *slot)
+        got = fused_out[k * n_out : (k + 1) * n_out]
+        assert len(ref) == len(got)
+        for name, r, g in zip(out_names[k * n_out :], ref, got):
+            assert np.array_equal(np.asarray(r), np.asarray(g)), name
+
+
+def test_lower_megatrain_entry_is_slot_major():
+    """Manifest entry for a fused artifact: slot-major inputs/outputs with
+    per-slot shapes equal to the base train artifact's, shared param
+    group, kind `megatrain` (NOT `train` — rust consumers that resolve
+    train artifacts by kind must never pick up a fused one by accident)."""
+    spec = tiny_megatrain_spec("protonet", width=2)
+    hlo, entry, _ = aot.lower_spec(spec)
+    assert "ENTRY" in hlo and "ROOT" in hlo
+    assert entry["kind"] == "megatrain"
+    assert entry["extra"]["fuse"] == 2
+    assert entry["param_group"] == f"protonet_{SIZE}"
+
+    import dataclasses
+
+    base = dataclasses.replace(spec, kind="train", name="t_base")
+    _, base_entry, _ = aot.lower_spec(base)
+    n_in, n_out = len(base_entry["inputs"]), len(base_entry["outputs"])
+    assert len(entry["inputs"]) == 2 * n_in
+    assert len(entry["outputs"]) == 2 * n_out
+    for k in range(2):
+        for i, b in enumerate(base_entry["inputs"]):
+            f = entry["inputs"][k * n_in + i]
+            assert f["name"] == f"s{k}.{b['name']}"
+            assert f["shape"] == b["shape"]
+        for i, b in enumerate(base_entry["outputs"]):
+            f = entry["outputs"][k * n_out + i]
+            assert f["name"] == f"s{k}.{b['name']}"
+            assert f["shape"] == b["shape"]

@@ -24,7 +24,8 @@ use anyhow::Result;
 
 use crate::config::Args;
 use crate::coordinator::{
-    meta_train, meta_train_with, pretrained_backbone, FineTuner, MetaLearner, TrainConfig,
+    meta_train, meta_train_with, pretrained_backbone, BackgroundWriter, FineTuner, MetaLearner,
+    TrainConfig,
 };
 use crate::data::orbit::{OrbitSim, VideoMode};
 use crate::data::registry::{md_suite, vtab_suite, Group};
@@ -50,6 +51,7 @@ pub(crate) const ORBIT_DEFAULTS: &[(&str, &str)] = &[
     ("workers", "0"),
     ("shards", "1"),
     ("dispatch", "1"),
+    ("megabatch", "1"),
     ("sizes", "32,64"),
     ("models", "finetuner,maml,protonet,cnaps,simple_cnaps"),
 ];
@@ -61,24 +63,29 @@ pub(crate) const VTAB_DEFAULTS: &[(&str, &str)] = &[
     ("workers", "0"),
     ("shards", "1"),
     ("dispatch", "1"),
+    ("megabatch", "1"),
 ];
 pub(crate) const HSWEEP_DEFAULTS: &[(&str, &str)] = &[
     ("train-episodes", "40"),
     ("eval-episodes", "3"),
     ("shards", "1"),
     ("dispatch", "1"),
+    ("megabatch", "1"),
 ];
 pub(crate) const ABLATION_DEFAULTS: &[(&str, &str)] = &[
     ("train-episodes", "40"),
     ("eval-episodes", "3"),
     ("shards", "1"),
     ("dispatch", "1"),
+    ("megabatch", "1"),
 ];
 
 /// Meta-train a learner on ORBIT-sim train users (`workers` feeds the
 /// staged training pipeline, `dispatch` the per-episode pipeline
-/// depth, and the engine's shard count feeds the config; all
-/// bit-identical to their serial settings at the same seed).
+/// depth, `megabatch` the cross-episode fusion width, and the engine's
+/// shard count feeds the config; all bit-identical to their serial
+/// settings at the same seed).
+#[allow(clippy::too_many_arguments)]
 fn train_on_orbit(
     engine: &dyn EngineShards,
     learner: &mut MetaLearner,
@@ -87,6 +94,7 @@ fn train_on_orbit(
     seed: u64,
     workers: usize,
     dispatch: usize,
+    megabatch: usize,
 ) -> Result<()> {
     let cfg = TrainConfig {
         episodes,
@@ -98,6 +106,7 @@ fn train_on_orbit(
         workers,
         shards: engine.n_shards(),
         dispatch,
+        megabatch,
         ..Default::default()
     };
     let image_size = learner.image_size;
@@ -121,6 +130,7 @@ fn orbit_learner(
     seed: u64,
     workers: usize,
     dispatch: usize,
+    megabatch: usize,
 ) -> Result<MetaLearner> {
     let mut learner =
         MetaLearner::new(engine.primary(), model, size, None, Some(40), ORBIT_TEST_SUPPORT)?;
@@ -130,7 +140,7 @@ fn orbit_learner(
     let bb = pretrained_backbone(engine.primary(), size, 150, seed)?;
     learner.install_backbone(&bb);
     let lr = if model == "maml" { 1e-4 } else { 1e-3 };
-    train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers, dispatch)?;
+    train_on_orbit(engine, &mut learner, train_episodes, lr, seed, workers, dispatch, megabatch)?;
     Ok(learner)
 }
 
@@ -189,13 +199,26 @@ pub fn json_path(path: &str) -> Result<&str> {
     Ok(path)
 }
 
+/// Start a report-file write on the background writer and hand the
+/// writer back: the JSON is serialized up front (cheap next to any
+/// scenario), the file IO runs off the calling thread while the caller
+/// renders tables to the terminal, and the caller's `finish()` joins
+/// the writer and surfaces any IO error. This is the production home
+/// of the writer's text job kind (its other being the trainer's
+/// progress dumps).
+pub fn spawn_report_write(run: &RunReport, path: &Path) -> Result<BackgroundWriter> {
+    let w = BackgroundWriter::new(1);
+    w.write_text(path, run.to_json_string())?;
+    Ok(w)
+}
+
 /// Write a one-scenario run report when `--json path` was given.
 fn maybe_write_json(path: &str, rep: &ScenarioReport) -> Result<()> {
     if path.is_empty() {
         return Ok(());
     }
     let run = RunReport { reports: vec![rep.clone()] };
-    run.save(Path::new(json_path(path)?))?;
+    spawn_report_write(&run, Path::new(json_path(path)?))?.finish()?;
     eprintln!("[bench] wrote report to {path}");
     Ok(())
 }
@@ -249,6 +272,10 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
     // Like workers/shards, not recorded in the config: bit-identity
     // means it cannot change the metrics.
     let dispatch: usize = knobs.need("dispatch")?;
+    // Cross-episode fusion width for meta-training (1 = unfused); same
+    // bit-identity contract as workers/shards/dispatch, so also not
+    // part of the recorded config.
+    let megabatch: usize = knobs.need("megabatch")?;
     let sizes = parse_usize_list(knobs.need_str("sizes")?)?;
     let models: Vec<String> = knobs
         .need_str("models")?
@@ -284,8 +311,9 @@ pub(crate) fn orbit_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<
                 pred_holder = ft;
                 Predictor::Fine(&pred_holder)
             } else {
-                learner_holder =
-                    orbit_learner(engine, model, *size, train_episodes, seed, workers, dispatch)?;
+                learner_holder = orbit_learner(
+                    engine, model, *size, train_episodes, seed, workers, dispatch, megabatch,
+                )?;
                 Predictor::Meta(&learner_holder)
             };
             let clean = par_eval_orbit(engine, &pred, &test_sim, VideoMode::Clean, *size, tasks_per_user, 4, seed + 1, eval)?;
@@ -342,8 +370,9 @@ pub fn table1_orbit(args: &mut Args) -> Result<()> {
 /// Train a learner on the synthetic meta-training suite (VTAB+MD
 /// protocol stand-in) with a given train geometry. `workers` feeds the
 /// staged training pipeline, `dispatch` the per-episode pipeline
-/// depth, and the engine's shard count feeds the config (all
-/// bit-identical to their serial settings at the same seed).
+/// depth, `megabatch` the cross-episode fusion width, and the engine's
+/// shard count feeds the config (all bit-identical to their serial
+/// settings at the same seed).
 #[allow(clippy::too_many_arguments)]
 pub fn synth_learner(
     engine: &dyn EngineShards,
@@ -356,6 +385,7 @@ pub fn synth_learner(
     seed: u64,
     workers: usize,
     dispatch: usize,
+    megabatch: usize,
 ) -> Result<MetaLearner> {
     let mut learner =
         MetaLearner::new(engine.primary(), model, size, train_h, train_n, VTAB_TEST_SUPPORT)?;
@@ -371,6 +401,7 @@ pub fn synth_learner(
         workers,
         shards: engine.n_shards(),
         dispatch,
+        megabatch,
         ..Default::default()
     };
     meta_train(engine, &mut learner, &md_suite(), &cfg)?;
@@ -388,6 +419,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
     let workers: usize = knobs.need("workers")?;
     let shards: usize = knobs.need("shards")?;
     let dispatch: usize = knobs.need("dispatch")?;
+    let megabatch: usize = knobs.need("megabatch")?;
 
     let mut rep = ScenarioReport::new("vtab", seed);
     rep.config("train-episodes", train_episodes);
@@ -409,7 +441,7 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
         ("SC(small)", "simple_cnaps", small),
         ("ProtoNets+LITE", "protonet", size),
     ] {
-        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed, workers, dispatch) {
+        match synth_learner(engine, model, sz, None, Some(40), EpisodeConfig::train_default(), train_episodes, seed, workers, dispatch, megabatch) {
             Ok(l) => metas.push((label.to_string(), l)),
             Err(e) => eprintln!("skipping {label} at {sz}px: {e}"),
         }
@@ -510,6 +542,7 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
     let workers: usize = knobs.get("workers", 1)?;
     let shards: usize = knobs.need("shards")?;
     let dispatch: usize = knobs.need("dispatch")?;
+    let megabatch: usize = knobs.need("megabatch")?;
 
     let mut rep = ScenarioReport::new("hsweep", seed);
     rep.config("train-episodes", train_episodes);
@@ -539,7 +572,7 @@ pub(crate) fn hsweep_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result
         &["model", "px", "|H|", "MD-like", "VTAB-like"],
     );
     for (model, size, h) in cases {
-        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed, workers, dispatch)?;
+        let learner = synth_learner(engine, model, size, Some(h), Some(80), sweep_cfg, train_episodes, seed, workers, dispatch, megabatch)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];
@@ -588,6 +621,7 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
     let workers: usize = knobs.get("workers", 1)?;
     let shards: usize = knobs.need("shards")?;
     let dispatch: usize = knobs.need("dispatch")?;
+    let megabatch: usize = knobs.need("megabatch")?;
 
     let mut rep = ScenarioReport::new("ablation", seed);
     rep.config("train-episodes", train_episodes);
@@ -610,7 +644,7 @@ pub(crate) fn ablation_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Resu
         &["config", "MD-like", "VTAB-like"],
     );
     for (label, size, h, ep_cfg) in cases {
-        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed, workers, dispatch)?;
+        let learner = synth_learner(engine, "simple_cnaps", size, h, Some(80), ep_cfg, train_episodes, seed, workers, dispatch, megabatch)?;
         let cfg = EpisodeConfig::test_large(VTAB_TEST_SUPPORT);
         let mut md_acc = vec![];
         let mut vt_acc = vec![];

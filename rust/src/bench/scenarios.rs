@@ -170,6 +170,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(TrainThroughput),
         Box::new(ShardThroughput),
         Box::new(DispatchThroughput),
+        Box::new(MegabatchThroughput),
         Box::new(GradcheckRmse),
         Box::new(Orbit),
         Box::new(Vtab),
@@ -987,6 +988,177 @@ impl Scenario for DispatchThroughput {
             rep.metric(
                 "dispatch_data_builds_reduced",
                 if reduced { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+        }
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// Cross-episode megabatching: sweep `meta_train` over fusion widths
+/// (1 = the unfused per-episode path), gating the fused == serial
+/// bit-identity contract AND the tentpole claim itself — at equal
+/// episode counts, every fused entry must run strictly FEWER device
+/// executions than the unfused reference (query batches from all
+/// episodes of an accumulation window pack into width-sized fused
+/// dispatches). Workers/shards/dispatch stay at their serial settings
+/// so every engine counter in the payload is deterministic and
+/// gateable; widths whose `megatrain` artifact is missing are dropped
+/// from the sweep with a notice (stale artifacts dir), never silently.
+struct MegabatchThroughput;
+
+impl Scenario for MegabatchThroughput {
+    fn name(&self) -> &'static str {
+        "megabatch-throughput"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "episodes/sec across fusion widths + fused/serial bit-identity + execution-count reduction"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`megabatch-*`): the knob namespace
+        // is shared across every scenario in one `bench run` (cf.
+        // dispatch-throughput). 5 episodes at accum 2 leaves a
+        // 1-episode tail window, so the fused path's padding slots AND
+        // the ordered reducer's flush are both inside the gate;
+        // validation every 2 keeps the serial interleaving contract
+        // (validate/log between window steps) under test.
+        let episodes: usize = knobs.get("megabatch-bench-episodes", 5)?;
+        let accum: usize = knobs.get("megabatch-accum", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let sweep_raw = knobs.get_str("megabatch-sweep", "1,2");
+        let requested = parse_usize_list(&sweep_raw)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("megabatch-bench-episodes", episodes);
+        rep.config("megabatch-accum", accum);
+        rep.config("image-size", size);
+        rep.config("megabatch-sweep", &sweep_raw);
+
+        let mut learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        // Fused widths need their `megatrain` artifact; an artifacts dir
+        // built before megabatching landed has none. Drop those widths
+        // (loudly) instead of failing the whole registry walk — the
+        // identity/reduction gates below only emit when a fused entry
+        // actually ran, so a width-1-only sweep cannot vacuously pass.
+        let sweep: Vec<usize> = requested
+            .iter()
+            .copied()
+            .filter(|&m| {
+                m <= 1
+                    || learner
+                        .megatrain_artifact(engine, m)
+                        .map(|_| true)
+                        .unwrap_or_else(|e| {
+                            eprintln!("[bench] megabatch-throughput: dropping width {m}: {e}");
+                            false
+                        })
+            })
+            .collect();
+        if sweep.is_empty() {
+            bail!("megabatch-sweep `{sweep_raw}` left no runnable widths");
+        }
+        // Every sweep entry restarts from the same initial parameters
+        // (and a fresh Adam inside meta_train), so the runs are
+        // comparable bit for bit.
+        let init = learner.params.clone();
+        let suite = md_suite();
+        let s0 = engine.stats();
+        let mut table = Table::new(
+            "megabatch throughput (fusion-width sweep)",
+            &["megabatch", "train eps/s", "final loss", "identical", "executions", "data-builds", "data-hits"],
+        );
+        let mut reference: Option<(Vec<TrainLog>, Vec<crate::tensor::Tensor>)> = None;
+        let mut execs_per_entry: Vec<usize> = Vec::new();
+        let mut identical = true;
+        for &m in &sweep {
+            learner.params = init.clone();
+            let cfg = TrainConfig {
+                episodes,
+                accum_period: accum,
+                lr: 1e-3,
+                seed: seed + 1,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers: 1,
+                shards: 1,
+                dispatch: 1,
+                megabatch: m,
+                ..Default::default()
+            };
+            let sm0 = engine.stats();
+            let (res, secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
+            let logs = res?;
+            let sm1 = engine.stats();
+            let execs = sm1.executions - sm0.executions;
+            execs_per_entry.push(execs);
+            let final_params = learner.params.tensors().to_vec();
+            let run_identical = match &reference {
+                None => {
+                    reference = Some((logs.clone(), final_params));
+                    true
+                }
+                Some((ref_logs, ref_params)) => {
+                    let same = *ref_logs == logs && *ref_params == final_params;
+                    identical &= same;
+                    same
+                }
+            };
+            table.row(vec![
+                m.to_string(),
+                format!("{:.2}", episodes as f64 / secs.max(1e-9)),
+                format!("{:.4}", logs.last().map_or(f64::NAN, |l| l.loss as f64)),
+                if run_identical { "yes".into() } else { "NO".into() },
+                execs.to_string(),
+                (sm1.data_literal_builds - sm0.data_literal_builds).to_string(),
+                (sm1.data_cache_hits - sm0.data_cache_hits).to_string(),
+            ]);
+            rep.timing(&format!("train_wall_secs_m{m}"), secs);
+            // The ISSUE's timing split, per sweep entry: device execute
+            // vs host transfer (timings never gate).
+            rep.timing(&format!("device_execute_secs_m{m}"), sm1.execute_secs - sm0.execute_secs);
+            rep.timing(&format!("host_transfer_secs_m{m}"), sm1.transfer_secs - sm0.transfer_secs);
+            // Counters are serial here, hence deterministic and
+            // gateable per entry.
+            rep.metric(&format!("executions_m{m}"), execs as f64, Direction::Info);
+            rep.metric(
+                &format!("data_literal_builds_m{m}"),
+                (sm1.data_literal_builds - sm0.data_literal_builds) as f64,
+                Direction::Info,
+            );
+            rep.metric(
+                &format!("data_cache_hits_m{m}"),
+                (sm1.data_cache_hits - sm0.data_cache_hits) as f64,
+                Direction::Info,
+            );
+        }
+        rep.tables.push(table);
+        // Only claim the contracts when a fused-vs-serial comparison
+        // actually ran (cf. the other throughput scenarios' vacuity
+        // guards); the reference entry must be the unfused path.
+        if sweep.len() >= 2 && sweep[0] == 1 {
+            rep.metric(
+                "megabatch_train_bit_identical",
+                if identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            // The tentpole claim: same episodes, strictly fewer device
+            // executions on every fused entry than on the unfused
+            // reference.
+            let ref_execs = execs_per_entry[0];
+            let fewer = sweep
+                .iter()
+                .zip(&execs_per_entry)
+                .skip(1)
+                .all(|(&m, &e)| m == 1 || e < ref_execs);
+            rep.metric(
+                "megabatch_fewer_executions",
+                if fewer { 1.0 } else { 0.0 },
                 Direction::Higher,
             );
         }

@@ -321,6 +321,230 @@ pub fn n_query_batches(episode: &Episode, mq: usize) -> usize {
     episode.query.len().div_ceil(mq)
 }
 
+/// The pre-drawn per-batch state of one episode's train pass: the LITE
+/// split and query range of every query batch, in batch order.
+///
+/// Split RNG draws happen at PLAN time, in the same order the serial
+/// loop draws them, so a plan-driven pass consumes the episode RNG
+/// identically to the interleaved serial one — the pivot that lets the
+/// megabatch path fuse batches across episodes while staying
+/// bit-identical to serial.
+#[derive(Clone, Debug)]
+pub struct EpisodePlan {
+    pub splits: Vec<LiteSplit>,
+    pub ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl EpisodePlan {
+    pub fn n_batches(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Valid query count of batch `b` (the tail batch may be short).
+    pub fn n_queries(&self, b: usize) -> usize {
+        self.ranges[b].len()
+    }
+}
+
+/// Draw one episode's full train plan from its episode RNG (Algorithm 1
+/// lines 3-4, all batches up front).
+pub fn plan_episode(geom: &Geom, episode: &Episode, rng: &mut Rng) -> Result<EpisodePlan> {
+    if episode.query.is_empty() {
+        bail!("episode has no query examples");
+    }
+    let n_valid = episode.n_support().min(geom.n_support);
+    let n_batches = n_query_batches(episode, geom.mb);
+    let mut splits = Vec::with_capacity(n_batches);
+    let mut ranges = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let lo = b * geom.mb;
+        let hi = (lo + geom.mb).min(episode.query.len());
+        splits.push(sample_split(n_valid, geom.h.min(n_valid), rng));
+        ranges.push(lo..hi);
+    }
+    Ok(EpisodePlan { splits, ranges })
+}
+
+/// One fused device batch: for each of the megatrain artifact's `width`
+/// slots, the `(episode index, batch index)` it carries. `None` is a
+/// padding slot (tail of the window only); its outputs are discarded by
+/// the degather fold.
+#[derive(Clone, Debug)]
+pub struct FusedBatch {
+    pub slots: Vec<Option<(usize, usize)>>,
+}
+
+/// The window-level batch plan: every `(episode, batch)` pair of one
+/// accumulation window laid out episode-major across fused batches of
+/// `width` slots. Episode-major order means slot-major output blocks
+/// replay each episode's batches in serial order, so the degather fold
+/// reproduces `EpisodeAccum`'s float-add order exactly.
+#[derive(Clone, Debug)]
+pub struct WindowPlan {
+    pub width: usize,
+    pub fused: Vec<FusedBatch>,
+}
+
+impl WindowPlan {
+    /// Device executions this plan costs: ceil(total batches / width).
+    pub fn n_executions(&self) -> usize {
+        self.fused.len()
+    }
+}
+
+/// Lay out a window's query batches into fused slot sets. Exactly
+/// `ceil(sum(batches) / width)` fused batches; only the final one may
+/// contain padding slots.
+pub fn window_plan(width: usize, batches_per_episode: &[usize]) -> Result<WindowPlan> {
+    if width == 0 {
+        bail!("megabatch width must be >= 1");
+    }
+    let flat: Vec<(usize, usize)> = batches_per_episode
+        .iter()
+        .enumerate()
+        .flat_map(|(e, &n)| (0..n).map(move |b| (e, b)))
+        .collect();
+    let fused = flat
+        .chunks(width)
+        .map(|c| {
+            let mut slots: Vec<Option<(usize, usize)>> = c.iter().copied().map(Some).collect();
+            slots.resize(width, None);
+            FusedBatch { slots }
+        })
+        .collect();
+    Ok(WindowPlan { width, fused })
+}
+
+/// Check that `fused` really is `width` slot-major copies of `base`:
+/// `s{k}.<name>` at position `k * n + i` with the base shape, for both
+/// inputs and outputs. The megabatch path refuses to run against an
+/// artifact whose layout it cannot degather.
+pub fn validate_fused_entry(
+    fused: &ArtifactEntry,
+    base: &ArtifactEntry,
+    width: usize,
+) -> Result<()> {
+    let (n_in, n_out) = (base.inputs.len(), base.outputs.len());
+    if fused.inputs.len() != width * n_in || fused.outputs.len() != width * n_out {
+        bail!(
+            "{}: {} inputs / {} outputs, want {width}x `{}` = {} / {}",
+            fused.name,
+            fused.inputs.len(),
+            fused.outputs.len(),
+            base.name,
+            width * n_in,
+            width * n_out
+        );
+    }
+    for k in 0..width {
+        for (i, b) in base.inputs.iter().enumerate() {
+            let f = &fused.inputs[k * n_in + i];
+            if f.name != format!("s{k}.{}", b.name) || f.shape != b.shape {
+                bail!(
+                    "{}: input {} is `{}` {:?}, want `s{k}.{}` {:?}",
+                    fused.name,
+                    k * n_in + i,
+                    f.name,
+                    f.shape,
+                    b.name,
+                    b.shape
+                );
+            }
+        }
+        for (i, b) in base.outputs.iter().enumerate() {
+            let f = &fused.outputs[k * n_out + i];
+            if f.name != format!("s{k}.{}", b.name) || f.shape != b.shape {
+                bail!(
+                    "{}: output {} is `{}` {:?}, want `s{k}.{}` {:?}",
+                    fused.name,
+                    k * n_out + i,
+                    f.name,
+                    f.shape,
+                    b.name,
+                    b.shape
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Gather every episode's episode-constant inputs into ONE window
+/// spanning tensor pool. Returns the pool plus, per episode, the
+/// `(base input position, pool index)` pairs to bind at each fused slot
+/// that episode occupies. Empty bindings for LITE geometries (h > 0
+/// resamples everything per batch — there is nothing constant to pool).
+pub fn window_support_pool(
+    base: &ArtifactEntry,
+    geom: &Geom,
+    episodes: &[&Episode],
+) -> Result<(Vec<Tensor>, Vec<Vec<(usize, usize)>>)> {
+    let mut pool = Vec::new();
+    let mut binds = Vec::with_capacity(episodes.len());
+    for ep in episodes {
+        let slots = train_support_slots(base, geom, ep)?;
+        let mut bind = Vec::new();
+        for (pos, slot) in slots.into_iter().enumerate() {
+            if let Some(t) = slot {
+                bind.push((pos, pool.len()));
+                pool.push(t);
+            }
+        }
+        binds.push(bind);
+    }
+    Ok((pool, binds))
+}
+
+/// Assemble ONE fused batch: the fresh tensors (in fused input order)
+/// plus the pool binding over the megatrain artifact's full input list.
+/// Real slots bind their episode's pooled constants and gather their
+/// per-batch tensors; padding slots bind episode 0's pooled constants
+/// (any valid data — outputs are discarded) and zero-fill the rest.
+pub fn fused_batch_inputs(
+    base: &ArtifactEntry,
+    geom: &Geom,
+    episodes: &[&Episode],
+    plans: &[EpisodePlan],
+    fb: &FusedBatch,
+    const_bind: &[Vec<(usize, usize)>],
+) -> Result<(Vec<Tensor>, Vec<Option<usize>>)> {
+    let n_in = base.inputs.len();
+    let mut fresh = Vec::new();
+    let mut binding = vec![None; fb.slots.len() * n_in];
+    for (k, slot) in fb.slots.iter().enumerate() {
+        match slot {
+            Some((e, b)) => {
+                for &(pos, idx) in &const_bind[*e] {
+                    binding[k * n_in + pos] = Some(idx);
+                }
+                fresh.extend(train_batch_inputs(
+                    base,
+                    geom,
+                    episodes[*e],
+                    &plans[*e].splits[*b],
+                    plans[*e].ranges[*b].clone(),
+                )?);
+            }
+            None => {
+                let pad_bind = const_bind.first().map(Vec::as_slice).unwrap_or(&[]);
+                let mut bound = vec![false; n_in];
+                for &(pos, idx) in pad_bind {
+                    binding[k * n_in + pos] = Some(idx);
+                    bound[pos] = true;
+                }
+                for (pos, spec) in base.inputs.iter().enumerate() {
+                    if bound[pos] {
+                        continue;
+                    }
+                    let numel: usize = spec.shape.iter().product();
+                    fresh.push(Tensor::new(spec.shape.clone(), vec![0.0; numel])?);
+                }
+            }
+        }
+    }
+    Ok((fresh, binding))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -544,6 +768,185 @@ mod tests {
             train_inputs(&entry_l, &geom_l, &ep, &split_l, 0..3).unwrap(),
             "with nothing constant the per-batch subset is the full set"
         );
+    }
+
+    fn mk_entry_io(name: &str, inputs: &[(&str, Vec<usize>)], outputs: &[(&str, Vec<usize>)]) -> ArtifactEntry {
+        let spec = |(n, s): &(&str, Vec<usize>)| crate::runtime::manifest::IoSpec {
+            name: (*n).to_string(),
+            shape: s.clone(),
+        };
+        ArtifactEntry {
+            name: name.into(),
+            outputs: outputs.iter().map(spec).collect(),
+            inputs: inputs.iter().map(spec).collect(),
+            ..mk_entry(&[])
+        }
+    }
+
+    #[test]
+    fn window_plan_executions_are_exactly_ceil_of_total_batches() {
+        // The counter contract the megabatch-throughput scenario gates:
+        // executions per window == ceil(total query batches / width).
+        forall("window plan ceil", 60, |seed| {
+            let mut rng = Rng::new(seed);
+            let width = 1 + rng.below(5);
+            let n_eps = 1 + rng.below(6);
+            let batches: Vec<usize> = (0..n_eps).map(|_| 1 + rng.below(7)).collect();
+            let total: usize = batches.iter().sum();
+            let plan = window_plan(width, &batches).map_err(|e| e.to_string())?;
+            if plan.n_executions() != total.div_ceil(width) {
+                return Err(format!(
+                    "width={width} batches={batches:?}: {} executions, want {}",
+                    plan.n_executions(),
+                    total.div_ceil(width)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn window_plan_is_episode_major_with_tail_only_padding() {
+        let plan = window_plan(2, &[3, 2]).unwrap();
+        // 5 batches over width 2 -> 3 fused batches, last one padded.
+        let got: Vec<Vec<Option<(usize, usize)>>> =
+            plan.fused.iter().map(|f| f.slots.clone()).collect();
+        assert_eq!(
+            got,
+            vec![
+                vec![Some((0, 0)), Some((0, 1))],
+                vec![Some((0, 2)), Some((1, 0))],
+                vec![Some((1, 1)), None],
+            ]
+        );
+        // Width 1 degenerates to the serial layout: one batch per
+        // execution, zero padding.
+        let serial = window_plan(1, &[3, 2]).unwrap();
+        assert_eq!(serial.n_executions(), 5);
+        assert!(serial.fused.iter().all(|f| f.slots.len() == 1 && f.slots[0].is_some()));
+        assert!(window_plan(0, &[1]).is_err());
+    }
+
+    #[test]
+    fn validate_fused_entry_accepts_slot_major_and_rejects_mismatches() {
+        let base = mk_entry_io(
+            "toy_train",
+            &[("q_x", vec![3, 8, 8, 3]), ("q_oh", vec![3, 4])],
+            &[("loss", vec![]), ("grad.w", vec![4])],
+        );
+        let fused = mk_entry_io(
+            "toy_mega2_train",
+            &[
+                ("s0.q_x", vec![3, 8, 8, 3]),
+                ("s0.q_oh", vec![3, 4]),
+                ("s1.q_x", vec![3, 8, 8, 3]),
+                ("s1.q_oh", vec![3, 4]),
+            ],
+            &[
+                ("s0.loss", vec![]),
+                ("s0.grad.w", vec![4]),
+                ("s1.loss", vec![]),
+                ("s1.grad.w", vec![4]),
+            ],
+        );
+        validate_fused_entry(&fused, &base, 2).unwrap();
+        // Wrong width: counts don't divide.
+        assert!(validate_fused_entry(&fused, &base, 4).is_err());
+        // Input-major (all s0/s1 of one name grouped) instead of
+        // slot-major must be refused.
+        let mut swapped = fused.clone();
+        swapped.inputs.swap(1, 2);
+        assert!(validate_fused_entry(&swapped, &base, 2).is_err());
+        // Per-slot shape drift must be refused.
+        let mut bad_shape = fused.clone();
+        bad_shape.outputs[3].shape = vec![5];
+        assert!(validate_fused_entry(&bad_shape, &base, 2).is_err());
+    }
+
+    #[test]
+    fn plan_episode_draws_splits_in_serial_batch_order() {
+        let ep = toy_episode(6, 3, 7, 8, 21);
+        let geom = Geom { way: 4, n_support: 6, h: 2, mb: 3 };
+        let mut rng = Rng::new(42);
+        let plan = plan_episode(&geom, &ep, &mut rng).unwrap();
+        assert_eq!(plan.n_batches(), 3);
+        assert_eq!(plan.ranges, vec![0..3, 3..6, 6..7]);
+        assert_eq!(plan.n_queries(2), 1, "tail batch is short");
+        // Identical RNG consumption to the serial interleaved draws.
+        let mut serial = Rng::new(42);
+        for b in 0..3 {
+            let s = sample_split(6, 2, &mut serial);
+            assert_eq!(s.bp, plan.splits[b].bp, "batch {b}");
+        }
+        let mut empty = toy_episode(6, 3, 0, 8, 22);
+        empty.query.clear();
+        assert!(plan_episode(&geom, &empty, &mut rng).is_err());
+    }
+
+    #[test]
+    fn fused_batch_inputs_recombine_to_per_slot_train_inputs() {
+        // MAML geometry: sup_x/sup_oh pool per episode, query pair fresh.
+        let eps = [toy_episode(6, 3, 4, 8, 30), toy_episode(5, 3, 7, 8, 31)];
+        let eps: Vec<&Episode> = eps.iter().collect();
+        let geom = Geom { way: 4, n_support: 6, h: 0, mb: 3 };
+        let entry = mk_entry(&[
+            ("sup_x", vec![6, 8, 8, 3]),
+            ("sup_oh", vec![6, 4]),
+            ("q_x", vec![3, 8, 8, 3]),
+            ("q_oh", vec![3, 4]),
+        ]);
+        let plans: Vec<EpisodePlan> = eps
+            .iter()
+            .enumerate()
+            .map(|(i, ep)| plan_episode(&geom, ep, &mut Rng::new(100 + i as u64)).unwrap())
+            .collect();
+        let (pool, binds) = window_support_pool(&entry, &geom, &eps).unwrap();
+        assert_eq!(pool.len(), 4, "two constant inputs per episode");
+        assert_eq!(binds[0], vec![(0, 0), (1, 1)]);
+        assert_eq!(binds[1], vec![(0, 2), (1, 3)]);
+
+        let batches: Vec<usize> = plans.iter().map(|p| p.n_batches()).collect();
+        let wplan = window_plan(2, &batches).unwrap();
+        assert_eq!(batches, vec![2, 3]);
+        assert_eq!(wplan.n_executions(), 3); // ceil(5 / 2)
+        let n_in = entry.inputs.len();
+        for fb in &wplan.fused {
+            let (fresh, binding) = fused_batch_inputs(&entry, &geom, &eps, &plans, fb, &binds).unwrap();
+            assert_eq!(binding.len(), 2 * n_in);
+            let mut it = fresh.iter();
+            for (k, slot) in fb.slots.iter().enumerate() {
+                let got: Vec<&Tensor> = (0..n_in)
+                    .map(|pos| match binding[k * n_in + pos] {
+                        Some(i) => &pool[i],
+                        None => it.next().unwrap(),
+                    })
+                    .collect();
+                match slot {
+                    Some((e, b)) => {
+                        let want = train_inputs(
+                            &entry,
+                            &geom,
+                            eps[*e],
+                            &plans[*e].splits[*b],
+                            plans[*e].ranges[*b].clone(),
+                        )
+                        .unwrap();
+                        for (g, w) in got.iter().zip(&want) {
+                            assert_eq!(*g, w, "slot {k} episode {e} batch {b}");
+                        }
+                    }
+                    None => {
+                        // Padding: pooled constants from episode 0, zero
+                        // tensors elsewhere.
+                        assert_eq!(got[0], &pool[0]);
+                        assert_eq!(got[1], &pool[1]);
+                        assert!(got[2].data.iter().all(|&v| v == 0.0));
+                        assert!(got[3].data.iter().all(|&v| v == 0.0));
+                    }
+                }
+            }
+            assert!(it.next().is_none(), "every fresh tensor consumed");
+        }
     }
 
     #[test]

@@ -171,6 +171,18 @@ impl MetaLearner {
         self.params.overlay(pretrained, "bb.")
     }
 
+    /// Pre-draw one episode's LITE splits and query ranges from its
+    /// episode RNG, all batches in batch order. Every train path —
+    /// serial, dispatch-pipelined, megabatch-fused — consumes the RNG
+    /// through this one function, so the fused window layout cannot
+    /// change which splits an episode draws (bit-identity contract).
+    pub fn plan_episode(&self, episode: &Episode, rng: &mut Rng) -> Result<batch::EpisodePlan> {
+        if episode.n_support() == 0 || episode.query.is_empty() {
+            bail!("empty episode");
+        }
+        batch::plan_episode(&self.train_geom, episode, rng)
+    }
+
     /// Run Algorithm 1 on one episode: loop over query batches, sample a
     /// fresh H subset per batch, execute the LITE train step, and
     /// accumulate gradients. Returns (stats, task gradients in learnable
@@ -190,26 +202,20 @@ impl MetaLearner {
         rng: &mut Rng,
     ) -> Result<(TrainStats, Vec<Tensor>)> {
         let g = &self.train_geom;
-        if episode.n_support() == 0 || episode.query.is_empty() {
-            bail!("empty episode");
-        }
-        let n_valid = episode.n_support().min(g.n_support);
-        let n_batches = batch::n_query_batches(episode, g.mb);
+        // Plan phase: fresh H subset per query batch (Algorithm 1
+        // line 4), all batches drawn up front in batch order.
+        let plan = self.plan_episode(episode, rng)?;
         let mut acc = EpisodeAccum::default();
-        for b in 0..n_batches {
-            let lo = b * g.mb;
-            let hi = (lo + g.mb).min(episode.query.len());
-            // Fresh H subset per query batch (Algorithm 1 line 4).
-            let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
+        for b in 0..plan.n_batches() {
             let data = batch::train_inputs(
                 engine.entry(&self.train_artifact)?,
                 g,
                 episode,
-                &split,
-                lo..hi,
+                &plan.splits[b],
+                plan.ranges[b].clone(),
             )?;
             let out = engine.run_with_params(&self.train_artifact, &self.params, &data)?;
-            acc.fold(&out, hi - lo)?;
+            acc.fold(&out, plan.n_queries(b))?;
         }
         acc.finish()
     }
@@ -221,7 +227,7 @@ impl MetaLearner {
     /// cache instead of per batch. `dispatch` is the pipeline depth;
     /// 0 is the direct serial path above. Any depth is bit-identical to
     /// direct at the same seed: the H-subset draws happen in the same
-    /// order (at submit), the literals are the same bytes wherever they
+    /// order (at plan time), the literals are the same bytes wherever they
     /// are built, and results fold in submission order.
     pub fn train_episode_dispatch(
         &self,
@@ -236,12 +242,10 @@ impl MetaLearner {
             return self.train_episode(engine, episode, rng);
         }
         let g = &self.train_geom;
-        if episode.n_support() == 0 || episode.query.is_empty() {
-            bail!("empty episode");
-        }
         let entry = engine.entry(&self.train_artifact)?;
-        let n_valid = episode.n_support().min(g.n_support);
-        let n_batches = batch::n_query_batches(episode, g.mb);
+        // Plan phase: the H-subset draws happen here, in serial batch
+        // order, so the rng sequence matches the direct path.
+        let plan = self.plan_episode(episode, rng)?;
         // Episode-constant inputs -> data-literal cache, once.
         let slots = batch::train_support_slots(entry, g, episode)?;
         let prepared = if slots.iter().any(|s| s.is_some()) {
@@ -254,15 +258,11 @@ impl MetaLearner {
         let mut acc = EpisodeAccum::default();
         // (real query count, in-flight request) in submission order.
         let mut pending = VecDeque::with_capacity(2);
-        for b in 0..n_batches {
-            let lo = b * g.mb;
-            let hi = (lo + g.mb).min(episode.query.len());
-            // Fresh H subset per query batch (Algorithm 1 line 4) —
-            // drawn at submit, so the rng sequence matches serial.
-            let split = batch::sample_split(n_valid, g.h.min(n_valid), rng);
-            let fresh = batch::train_batch_inputs(entry, g, episode, &split, lo..hi)?;
+        for b in 0..plan.n_batches() {
+            let fresh =
+                batch::train_batch_inputs(entry, g, episode, &plan.splits[b], plan.ranges[b].clone())?;
             pending.push_back((
-                hi - lo,
+                plan.n_queries(b),
                 queue.submit(&self.train_artifact, &self.params, prepared.as_ref(), fresh)?,
             ));
             // Keep up to `dispatch` requests marshaling while the
@@ -277,6 +277,132 @@ impl MetaLearner {
             acc.fold(&ticket.wait()?, nq)?;
         }
         acc.finish()
+    }
+
+    /// Resolve the fused `megatrain` artifact of fusion width `width`
+    /// matching this learner's train geometry. The error lists the
+    /// widths that ARE available so a bad `--megabatch N` is
+    /// self-explanatory before any training starts.
+    pub fn megatrain_artifact(&self, engine: &Engine, width: usize) -> Result<String> {
+        let mut available: Vec<usize> = Vec::new();
+        for a in &engine.manifest.artifacts {
+            if a.kind != "megatrain"
+                || a.model != self.model
+                || a.image_size != self.image_size
+                || a.geom.as_ref() != Some(&self.train_geom)
+            {
+                continue;
+            }
+            let Some(w) = a.extra.get("fuse").and_then(|v| v.parse::<usize>().ok()) else {
+                continue;
+            };
+            if w == width {
+                return Ok(a.name.clone());
+            }
+            available.push(w);
+        }
+        available.sort_unstable();
+        let g = &self.train_geom;
+        bail!(
+            "no megatrain artifact of width {width} for {} at {}px (geometry w{}n{}h{}m{}); \
+             available widths: {available:?}",
+            self.model,
+            self.image_size,
+            g.way,
+            g.n_support,
+            g.h,
+            g.mb
+        )
+    }
+
+    /// Run one accumulation window's episodes through the fused
+    /// `megatrain` artifact: every query batch in the window is laid
+    /// out episode-major into `width`-slot fused executions — strictly
+    /// fewer device dispatches, `ceil(total batches / width)` instead
+    /// of one per batch — and the slot-major output blocks degather
+    /// into per-episode folds that sum the same floats in the same
+    /// order as the serial path. Returns per-episode `(stats, task
+    /// gradients)` in `episodes` order, bit-identical to
+    /// [`MetaLearner::train_episode`] run per episode.
+    ///
+    /// `plans` must come from [`MetaLearner::plan_episode`] with each
+    /// episode's own `episode_rng` stream. `dispatch` > 0 pipelines the
+    /// fused batches through one window-level [`DispatchQueue`]; every
+    /// request shares one window-spanning data-literal pool
+    /// (`Engine::prepare_data_pool`) holding the episode-constant
+    /// support buffers of ALL the window's episodes.
+    pub fn train_window_megabatch(
+        &self,
+        engine: &Engine,
+        dispatch: usize,
+        width: usize,
+        episodes: &[&Episode],
+        plans: &[batch::EpisodePlan],
+    ) -> Result<Vec<(TrainStats, Vec<Tensor>)>> {
+        if episodes.len() != plans.len() {
+            bail!("{} episodes with {} plans", episodes.len(), plans.len());
+        }
+        if width <= 1 {
+            bail!("megabatch width {width} has nothing to fuse; use the serial path");
+        }
+        let g = &self.train_geom;
+        let mega = self.megatrain_artifact(engine, width)?;
+        let base = engine.entry(&self.train_artifact)?;
+        batch::validate_fused_entry(engine.entry(&mega)?, base, width)?;
+        let batches: Vec<usize> = plans.iter().map(|p| p.n_batches()).collect();
+        let wplan = batch::window_plan(width, &batches)?;
+        let (pool, binds) = batch::window_support_pool(base, g, episodes)?;
+        let pool_refs: Vec<&Tensor> = pool.iter().collect();
+        let prepared = engine.prepare_data_pool(&mega, &pool_refs)?;
+        let n_out = base.outputs.len();
+        let mut accs: Vec<EpisodeAccum> =
+            episodes.iter().map(|_| EpisodeAccum::default()).collect();
+        // Degather one fused output into its episodes' accumulators:
+        // slot-major block k belongs to (episode e, batch b) of the
+        // window plan. Episode-major layout + submission-order waits =
+        // each episode folds its batches in serial order.
+        let fold_fused =
+            |accs: &mut [EpisodeAccum], fb: &batch::FusedBatch, out: &[Tensor]| -> Result<()> {
+                for (k, slot) in fb.slots.iter().enumerate() {
+                    if let Some((e, b)) = slot {
+                        accs[*e].fold(&out[k * n_out..(k + 1) * n_out], plans[*e].n_queries(*b))?;
+                    }
+                }
+                Ok(())
+            };
+        if dispatch == 0 {
+            for fb in &wplan.fused {
+                let (fresh, binding) =
+                    batch::fused_batch_inputs(base, g, episodes, plans, fb, &binds)?;
+                let lits = fresh
+                    .iter()
+                    .map(crate::runtime::engine::to_literal)
+                    .collect::<Result<Vec<_>>>()?;
+                let out =
+                    engine.run_with_params_bound(&mega, &self.params, &prepared, &binding, &lits)?;
+                fold_fused(&mut accs, fb, &out)?;
+            }
+        } else {
+            let queue = DispatchQueue::new(engine, dispatch);
+            // (window-plan index, in-flight request) in submission order.
+            let mut pending = VecDeque::with_capacity(2);
+            for (fi, fb) in wplan.fused.iter().enumerate() {
+                let (fresh, binding) =
+                    batch::fused_batch_inputs(base, g, episodes, plans, fb, &binds)?;
+                pending.push_back((
+                    fi,
+                    queue.submit_bound(&mega, &self.params, &prepared, binding, fresh)?,
+                ));
+                while pending.len() > dispatch {
+                    let (fi, ticket) = pending.pop_front().expect("len checked");
+                    fold_fused(&mut accs, &wplan.fused[fi], &ticket.wait()?)?;
+                }
+            }
+            for (fi, ticket) in pending {
+                fold_fused(&mut accs, &wplan.fused[fi], &ticket.wait()?)?;
+            }
+        }
+        accs.into_iter().map(|a| a.finish()).collect()
     }
 
     /// Single forward pass over the support set -> task state (the

@@ -9,7 +9,7 @@ pub mod learner;
 pub mod trainer;
 pub mod writer;
 
-pub use batch::{sample_split, LiteSplit};
+pub use batch::{sample_split, EpisodePlan, FusedBatch, LiteSplit, WindowPlan};
 pub use finetuner::FineTuner;
 pub use learner::{MetaLearner, TaskState, TrainStats};
 pub use trainer::{

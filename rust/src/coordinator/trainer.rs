@@ -46,12 +46,24 @@
 //! shards, any dispatch depth is bit-identical to the direct path at
 //! the same seed (the `dispatch-throughput` scenario gates this).
 //!
+//! `TrainConfig.megabatch > 1` switches window execution onto the
+//! fused cross-episode path: the paper's gradient decomposition holds
+//! across the episodes of one accumulation window (parameters are
+//! constant until the boundary Adam step), so the window's query
+//! batches are laid out into width-N `megatrain` executions —
+//! `ceil(total batches / N)` device dispatches instead of one per
+//! batch — grouped per shard so a fused chunk never spans engines.
+//! Every fused configuration is bit-identical to serial at the same
+//! seed (the `megabatch-throughput` scenario and the `megabatch_*`
+//! integration tests gate this).
+//!
 //! Checkpoint IO never blocks the training thread: when
 //! `TrainConfig.checkpoint_every / checkpoint_path` are set, the
 //! reducer snapshots the parameters at the due steps and hands them to
 //! a bounded [`BackgroundWriter`] (atomic tmp + fsync + rename saves,
 //! PR 4), which is joined at run exit — the first IO error surfaces
-//! there instead of mid-run.
+//! there instead of mid-run. The same writer carries the optional
+//! `progress_path` JSON dumps.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -106,6 +118,19 @@ pub struct TrainConfig {
     /// (1 = double buffering, the default). Any value is bit-identical
     /// to 0 at the same seed (see the module doc).
     pub dispatch: usize,
+    /// Cross-episode megabatch fusion width: 1 runs one device
+    /// execution per query batch (the classic path); N > 1 fuses each
+    /// accumulation window's query batches into `ceil(total / N)`
+    /// executions of the width-N `megatrain` artifact. The width must
+    /// have a matching fused artifact in the manifest — validated
+    /// before training starts, never silently ignored. Any width is
+    /// bit-identical to 1 at the same seed (see the module doc).
+    pub megabatch: usize,
+    /// Dump a one-line JSON progress snapshot here (through the
+    /// bounded background writer, never blocking the training thread)
+    /// at every `log_every` boundary and once at run end. `None`
+    /// disables dumps.
+    pub progress_path: Option<std::path::PathBuf>,
     /// Snapshot the parameters to `checkpoint_path` every this many
     /// episodes, through the bounded background writer (never blocking
     /// the training thread on IO). 0 disables periodic checkpoints.
@@ -130,6 +155,8 @@ impl Default for TrainConfig {
             workers: 1,
             shards: 1,
             dispatch: 1,
+            megabatch: 1,
+            progress_path: None,
             checkpoint_every: 0,
             checkpoint_path: None,
         }
@@ -194,13 +221,21 @@ pub fn meta_train_with(
     make_episode: impl Fn(&mut Rng) -> Episode + Send + Sync,
 ) -> Result<Vec<TrainLog>> {
     engine.check_shard_knob(cfg.shards, "TrainConfig.shards")?;
-    // Checkpoint IO runs off-thread: the reducer only snapshots and
-    // enqueues; the bounded writer (capacity 2: one in flight + one
-    // queued) performs the atomic saves and is joined at run exit.
+    anyhow::ensure!(cfg.megabatch >= 1, "TrainConfig.megabatch must be >= 1 (1 = unfused)");
+    if cfg.megabatch > 1 {
+        // Resolve the fused artifact up front: a bad --megabatch must
+        // fail with the available widths BEFORE any training happens,
+        // not mid-run (and never silently fall back to unfused).
+        learner.megatrain_artifact(engine.primary(), cfg.megabatch)?;
+    }
+    // Checkpoint and progress IO run off-thread: the reducer only
+    // snapshots and enqueues; the bounded writer (capacity 2: one in
+    // flight + one queued) performs the atomic saves and is joined at
+    // run exit.
     let writer = match (cfg.checkpoint_every, &cfg.checkpoint_path) {
-        (0, _) => None,
-        (_, None) => bail!("TrainConfig.checkpoint_every set without checkpoint_path"),
-        (_, Some(_)) => Some(BackgroundWriter::new(2)),
+        (n, None) if n > 0 => bail!("TrainConfig.checkpoint_every set without checkpoint_path"),
+        (0, _) if cfg.progress_path.is_none() => None,
+        _ => Some(BackgroundWriter::new(2)),
     };
     let workers = if cfg.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -321,8 +356,12 @@ pub fn meta_train_with(
     if let Some((_, params)) = st.best {
         learner.params = params;
     }
-    // Join the background writer; the run's FIRST checkpoint IO error
-    // surfaces here (training itself already completed).
+    // Final progress snapshot: the dump a consumer polls for completion.
+    if let (Some(w), Some(path)) = (writer.as_ref(), &cfg.progress_path) {
+        w.write_text(path, progress_json(cfg, &st.logs))?;
+    }
+    // Join the background writer; the run's FIRST IO error surfaces
+    // here (training itself already completed).
     if let Some(w) = writer {
         w.finish()?;
     }
@@ -435,7 +474,17 @@ fn reduce_loop(
     let mut lo = 0usize;
     while lo < cfg.episodes {
         let hi = (lo + period).min(cfg.episodes);
-        if workers <= 1 {
+        if cfg.megabatch > 1 {
+            // Megabatch path: the fusion unit IS the accumulation
+            // window, so the window is always assembled — even with a
+            // single worker — and executed through the fused artifact.
+            let window: Vec<(usize, Episode)> = (lo..hi)
+                .map(|s| Ok((s, next_episode(s)?)))
+                .collect::<Result<_>>()?;
+            run_window_megabatch(
+                engine, learner, cfg, make_episode, val_seed, workers, &window, st, writer,
+            )?;
+        } else if workers <= 1 {
             // Serial path: same per-step streams, same fold order, no
             // worker threads — and fully streaming: each episode is
             // consumed the moment it is next in order, so in-flight
@@ -451,7 +500,7 @@ fn reduce_loop(
                 for avg in st.accum.push_at(step, grads)? {
                     st.adam.step(&mut learner.params, &avg)?;
                 }
-                emit_log(learner, cfg, &mut st.logs, step, &stats);
+                emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
                 maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
                 maybe_checkpoint(learner, cfg, step, writer)?;
             }
@@ -565,21 +614,153 @@ fn run_window_parallel(
                 st.adam.step(&mut learner.params, &avg)?;
             }
         }
-        emit_log(learner, cfg, &mut st.logs, step, stats);
+        emit_log(learner, cfg, &mut st.logs, step, stats, writer)?;
         maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
         maybe_checkpoint(learner, cfg, step, writer)?;
     }
     Ok(())
 }
 
-/// Record one step's stats and print the running-mean progress line.
+/// Run one accumulation window through the fused `megatrain` artifact
+/// (`cfg.megabatch > 1`). The window's slots group by shard — episode
+/// `step` stays on shard `step % n_shards`, exactly the classic
+/// routing, so a fused chunk never spans engines — and each group's
+/// query batches fuse into width-N executions
+/// (`MetaLearner::train_window_megabatch`). Groups run concurrently
+/// when `workers > 1`; the reducer then replays the window in step
+/// order with the serial interleaving of Adam / logs / validation /
+/// checkpoints.
+#[allow(clippy::too_many_arguments)]
+fn run_window_megabatch(
+    engine: &dyn EngineShards,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    val_seed: u64,
+    workers: usize,
+    window: &[(usize, Episode)],
+    st: &mut ReducerState,
+    writer: Option<&BackgroundWriter>,
+) -> Result<()> {
+    let mut results: Vec<Option<(TrainStats, Vec<Tensor>)>> = vec![None; window.len()];
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    {
+        let lr: &MetaLearner = learner;
+        let n_shards = engine.n_shards().max(1);
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for (k, (step, _)) in window.iter().enumerate() {
+            groups[step % n_shards].push(k);
+        }
+        groups.retain(|g| !g.is_empty());
+        // One fused unit per group: plan every episode from its own
+        // (seed, step) stream — the same draws as the serial loop —
+        // then run the group's whole window plan on its shard.
+        let run_group = |ks: &[usize]| -> Result<Vec<(usize, TrainStats, Vec<Tensor>)>> {
+            let first_step = window[ks[0]].0;
+            let eng = engine.shard(first_step);
+            let eps: Vec<&Episode> = ks.iter().map(|&k| &window[k].1).collect();
+            let plans = ks
+                .iter()
+                .map(|&k| lr.plan_episode(&window[k].1, &mut episode_rng(cfg.seed, window[k].0)))
+                .collect::<Result<Vec<_>>>()?;
+            let out = lr
+                .train_window_megabatch(eng, cfg.dispatch, cfg.megabatch, &eps, &plans)
+                .with_context(|| {
+                    format!(
+                        "megabatch group on shard {} (episodes {}..={})",
+                        first_step % n_shards,
+                        first_step,
+                        window[*ks.last().expect("group non-empty")].0
+                    )
+                })?;
+            Ok(ks.iter().zip(out).map(|(&k, (s, g))| (k, s, g)).collect())
+        };
+        let mut land = |gk: usize,
+                        res: Result<Vec<(usize, TrainStats, Vec<Tensor>)>>,
+                        results: &mut Vec<Option<(TrainStats, Vec<Tensor>)>>| {
+            match res {
+                Ok(triples) => {
+                    for (k, s, g) in triples {
+                        results[k] = Some((s, g));
+                    }
+                }
+                Err(e) => {
+                    // Keep the LOWEST failing step (what the serial
+                    // loop would have hit first), keyed by each group's
+                    // first episode.
+                    let step = window[gk].0;
+                    if first_err.as_ref().map_or(true, |(s, _)| step < *s) {
+                        first_err = Some((step, e));
+                    }
+                }
+            }
+        };
+        if workers <= 1 || groups.len() <= 1 {
+            for g in &groups {
+                let res = run_group(g);
+                land(g[0], res, &mut results);
+            }
+        } else {
+            std::thread::scope(|ws| {
+                let (res_tx, res_rx) =
+                    channel::<(usize, Result<Vec<(usize, TrainStats, Vec<Tensor>)>>)>();
+                let run_group = &run_group;
+                for g in &groups {
+                    let res_tx = res_tx.clone();
+                    ws.spawn(move || {
+                        let _ = res_tx.send((g[0], run_group(g)));
+                    });
+                }
+                drop(res_tx);
+                while let Ok((gk, res)) = res_rx.recv() {
+                    land(gk, res, &mut results);
+                }
+            });
+        }
+    }
+    if let Some((step, e)) = first_err {
+        return Err(e.context(format!("train episode {step}")));
+    }
+    // Replay in step order: exactly the serial interleaving (push,
+    // boundary Adam, log, validate, checkpoint per step).
+    for (k, res) in results.into_iter().enumerate() {
+        let step = window[k].0;
+        let Some((stats, grads)) = res else {
+            bail!("train episode {step}: megabatch group terminated before reducing it");
+        };
+        for avg in st.accum.push_at(step, grads)? {
+            st.adam.step(&mut learner.params, &avg)?;
+        }
+        emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
+        maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
+        maybe_checkpoint(learner, cfg, step, writer)?;
+    }
+    Ok(())
+}
+
+/// One-line JSON snapshot of training progress. Goes through the
+/// background writer so the training thread never blocks on the dump
+/// IO; the trailing newline makes the file `tail`-friendly.
+fn progress_json(cfg: &TrainConfig, logs: &[TrainLog]) -> String {
+    let (step, loss, acc) =
+        logs.last().map_or((0, 0.0, 0.0), |l| (l.step + 1, l.loss, l.acc));
+    format!(
+        "{{\"step\": {step}, \"episodes\": {}, \"loss\": {loss}, \"acc\": {acc}}}\n",
+        cfg.episodes
+    )
+}
+
+/// Record one step's stats, print the running-mean progress line, and
+/// enqueue the `progress_path` JSON dump (both at the `log_every`
+/// cadence).
 fn emit_log(
     learner: &MetaLearner,
     cfg: &TrainConfig,
     logs: &mut Vec<TrainLog>,
     step: usize,
     stats: &TrainStats,
-) {
+    writer: Option<&BackgroundWriter>,
+) -> Result<()> {
     logs.push(TrainLog { step, loss: stats.loss, acc: stats.acc });
     if cfg.log_every > 0 && step % cfg.log_every == 0 {
         let recent: Vec<f64> =
@@ -591,7 +772,11 @@ fn emit_log(
             crate::util::mean(&recent),
             stats.acc
         );
+        if let (Some(w), Some(path)) = (writer, &cfg.progress_path) {
+            w.write_text(path, progress_json(cfg, logs))?;
+        }
     }
+    Ok(())
 }
 
 /// Run the validation round due after `step` (if any): score

@@ -86,11 +86,23 @@ fn cmd_bench(mut args: Args) -> Result<()> {
                 lite::bench::json_path(&json)?; // fail fast, before the run
             }
             let run = lite::bench::scenarios::run_filtered(&filter, &knobs, seed)?;
+            // Kick the report-file write off on the background writer
+            // BEFORE rendering: the file IO overlaps the terminal
+            // output, and finish() after the render surfaces any IO
+            // error with the run already on screen.
+            let writer = if json.is_empty() {
+                None
+            } else {
+                Some(lite::bench::spawn_report_write(
+                    &run,
+                    std::path::Path::new(lite::bench::json_path(&json)?),
+                )?)
+            };
             for rep in &run.reports {
                 lite::bench::render_report(rep);
             }
-            if !json.is_empty() {
-                run.save(std::path::Path::new(lite::bench::json_path(&json)?))?;
+            if let Some(w) = writer {
+                w.finish()?;
                 eprintln!("[bench] wrote {} scenario report(s) to {json}", run.reports.len());
             }
             Ok(())
@@ -179,6 +191,17 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // Bit-identical to --dispatch 0 at the same seed (the
     // dispatch-throughput bench scenario gates this).
     let dispatch: usize = args.get("dispatch", 1)?;
+    // Cross-episode megabatch fusion width (1 = unfused): N > 1 fuses
+    // each accumulation window's query batches into width-N device
+    // executions. Composes with --workers/--shards/--dispatch and is
+    // bit-identical to --megabatch 1 at the same seed (the
+    // megabatch-throughput bench scenario gates this); a width without
+    // a fused artifact in the manifest fails up front listing the
+    // available widths.
+    let megabatch: usize = args.get("megabatch", 1)?;
+    // Training-progress JSON dumps through the background writer
+    // ("" = none).
+    let progress_out = args.get_str("progress-out", "");
     // Periodic parameter snapshots through the bounded background
     // writer (0 = only the final save). IO never blocks training; the
     // saves are atomic, so a crash mid-write cannot corrupt the
@@ -186,6 +209,10 @@ fn cmd_train(mut args: Args) -> Result<()> {
     let checkpoint_every: usize = args.get("checkpoint-every", 0)?;
     let out = args.get_str("out", "");
     args.finish()?;
+    anyhow::ensure!(
+        megabatch >= 1,
+        "--megabatch must be >= 1 (1 = unfused; N > 1 fuses N query batches per device execution)"
+    );
     let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
     let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), 200)?;
     if model != "protonet" && model != "maml" {
@@ -210,6 +237,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
         workers,
         shards,
         dispatch,
+        megabatch,
+        progress_path: (!progress_out.is_empty()).then(|| progress_out.clone().into()),
         checkpoint_every,
         checkpoint_path: (checkpoint_every > 0).then(|| path.clone()),
         ..Default::default()

@@ -41,13 +41,13 @@
 //! twins in `coordinator::learner` (`train_episode_dispatch`,
 //! `predict_episode_dispatch`); this module owns the stage machinery.
 //!
-//! Queues are constructed per episode, on the episode's engine: one
-//! OS-thread spawn + join per episode (tens of microseconds) against
-//! episodes that each run several PJRT executions (milliseconds+). A
-//! long-lived per-engine stage would shave that constant but needs the
-//! engine behind an `Arc` or a scoped-pool redesign — the natural next
-//! step if cross-episode megabatching (ROADMAP) makes requests outlive
-//! one episode.
+//! Queues are constructed per work unit, on that unit's engine: one
+//! OS-thread spawn + join per unit (tens of microseconds) against units
+//! that each run several PJRT executions (milliseconds+). The unit is
+//! an episode on the classic path and a whole accumulation-window shard
+//! group on the megabatch path ([`DispatchQueue::submit_bound`]), where
+//! each request carries an explicit pool binding so one window-spanning
+//! [`DataLiterals`] pool serves every fused execution in the window.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::thread::JoinHandle;
@@ -130,7 +130,39 @@ impl<'e> DispatchQueue<'e> {
         if tx.send(MarshalJob { tensors: fresh, reply }).is_err() {
             bail!("dispatch marshal stage terminated");
         }
-        Ok(Ticket { engine: self.engine, name, params, prepared, rx })
+        Ok(Ticket { engine: self.engine, name, params, prepared, binding: None, rx })
+    }
+
+    /// Enqueue one execution request with an explicit pool `binding`
+    /// over `prepared` (megabatch path): `binding[pos] = Some(i)` maps
+    /// the artifact's data input `pos` to pool entry `i` — one pooled
+    /// literal may serve several fused slot positions — and `None`
+    /// positions consume `fresh` in order. Same pipelining and ordering
+    /// contract as [`DispatchQueue::submit`].
+    pub fn submit_bound<'t>(
+        &self,
+        name: &'t str,
+        params: &'t ParamStore,
+        prepared: &'t DataLiterals,
+        binding: Vec<Option<usize>>,
+        fresh: Vec<Tensor>,
+    ) -> Result<Ticket<'t>>
+    where
+        'e: 't,
+    {
+        let (reply, rx) = channel();
+        let tx = self.tx.as_ref().expect("sender lives until drop");
+        if tx.send(MarshalJob { tensors: fresh, reply }).is_err() {
+            bail!("dispatch marshal stage terminated");
+        }
+        Ok(Ticket {
+            engine: self.engine,
+            name,
+            params,
+            prepared: Some(prepared),
+            binding: Some(binding),
+            rx,
+        })
     }
 }
 
@@ -163,6 +195,7 @@ pub struct Ticket<'t> {
     name: &'t str,
     params: &'t ParamStore,
     prepared: Option<&'t DataLiterals>,
+    binding: Option<Vec<Option<usize>>>,
     rx: Receiver<Result<SendLits>>,
 }
 
@@ -174,8 +207,14 @@ impl Ticket<'_> {
             Ok(res) => res?,
             Err(_) => bail!("dispatch marshal stage terminated before replying"),
         };
-        self.engine
-            .run_with_params_lits(self.name, self.params, self.prepared, &lits.0)
+        match (&self.binding, self.prepared) {
+            (Some(binding), Some(p)) => self
+                .engine
+                .run_with_params_bound(self.name, self.params, p, binding, &lits.0),
+            _ => self
+                .engine
+                .run_with_params_lits(self.name, self.params, self.prepared, &lits.0),
+        }
     }
 }
 

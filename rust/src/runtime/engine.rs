@@ -98,16 +98,42 @@ static NEXT_DATA_KEY: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU6
 /// adapted task state, a full-support buffer) prepares its constant
 /// inputs ONCE via [`Engine::prepare_data`] and replays them across
 /// every query batch, so ownership is the cache and dropping the set
-/// is the eviction. Positions left `None` are the per-call inputs
-/// (e.g. the query batch) supplied fresh on each run.
+/// is the eviction.
+///
+/// Internally the set is a **pool + binding**: `pool` holds each
+/// distinct marshaled literal once, and `binding` maps every artifact
+/// data-input position to either a pool entry (`Some(i)`) or `None`
+/// for the per-call inputs (e.g. the query batch) supplied fresh on
+/// each run. [`Engine::prepare_data`] fixes one binding for the set's
+/// lifetime (the classic per-episode cache); a pool built with
+/// [`Engine::prepare_data_pool`] instead leaves the default binding
+/// empty and lets every execution bring its own — which is how one
+/// window-spanning pool (cross-episode megabatching) feeds a different
+/// subset of episodes' constants to each fused execution, including the
+/// SAME pooled literal at several fused slot positions.
 pub struct DataLiterals {
     /// Unique identity (fresh per preparation, like a `ParamStore`'s
     /// store id) — surfaces in mismatch errors so stale-set bugs name
     /// the exact preparation.
     key: u64,
     name: String,
-    slots: Vec<Option<xla::Literal>>,
+    /// Each distinct marshaled literal, once.
+    pool: Vec<xla::Literal>,
+    /// The pool entries' tensor shapes, for bind-time validation
+    /// against the manifest position a binding points them at.
+    pool_shapes: Vec<Vec<usize>>,
+    /// Default binding: pool entry (or `None` = fresh) per artifact
+    /// data-input position. Empty for pool-only sets, whose executions
+    /// each supply their own binding.
+    binding: Vec<Option<usize>>,
     cached: usize,
+}
+
+impl DataLiterals {
+    /// Number of marshaled literals in the pool.
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
 }
 
 pub struct Engine {
@@ -299,11 +325,12 @@ impl Engine {
                 entry.inputs.len()
             );
         }
-        let mut built = Vec::with_capacity(slots.len());
-        let mut cached = 0usize;
+        let mut pool = Vec::new();
+        let mut pool_shapes = Vec::new();
+        let mut binding = Vec::with_capacity(slots.len());
         for (slot, spec) in slots.iter().zip(&entry.inputs) {
             match slot {
-                None => built.push(None),
+                None => binding.push(None),
                 Some(t) => {
                     if t.shape != spec.shape {
                         bail!(
@@ -313,19 +340,55 @@ impl Engine {
                             spec.shape
                         );
                     }
-                    built.push(Some(to_literal(t).with_context(|| {
+                    binding.push(Some(pool.len()));
+                    pool.push(to_literal(t).with_context(|| {
                         format!("building prepared literal {} for {name}", spec.name)
-                    })?));
-                    cached += 1;
+                    })?);
+                    pool_shapes.push(t.shape.clone());
                 }
             }
         }
+        let cached = pool.len();
         self.stats.write().unwrap().data_literal_builds += cached;
         Ok(DataLiterals {
             key: NEXT_DATA_KEY.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             name: name.to_string(),
-            slots: built,
+            pool,
+            pool_shapes,
+            binding,
             cached,
+        })
+    }
+
+    /// Marshal a pool of data literals for `name` WITHOUT fixing which
+    /// input positions they serve: each execution supplies its own
+    /// binding (pool index per artifact data-input position) via
+    /// [`Engine::run_with_params_bound`] /
+    /// `DispatchQueue::submit_bound`. This is the window-spanning form
+    /// of [`Engine::prepare_data`]: cross-episode megabatching marshals
+    /// every episode's constant inputs once per accumulation window and
+    /// binds each fused execution to the subset (and repetition) of
+    /// pool entries its fused slots need. Shapes are validated at bind
+    /// time against the manifest position each entry lands on.
+    pub fn prepare_data_pool(&self, name: &str, pool: &[&Tensor]) -> Result<DataLiterals> {
+        self.manifest.get(name)?;
+        let mut lits = Vec::with_capacity(pool.len());
+        let mut pool_shapes = Vec::with_capacity(pool.len());
+        for (i, t) in pool.iter().enumerate() {
+            lits.push(
+                to_literal(t)
+                    .with_context(|| format!("building pooled literal {i} for {name}"))?,
+            );
+            pool_shapes.push(t.shape.clone());
+        }
+        self.stats.write().unwrap().data_literal_builds += lits.len();
+        Ok(DataLiterals {
+            key: NEXT_DATA_KEY.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            name: name.to_string(),
+            pool: lits,
+            pool_shapes,
+            binding: vec![],
+            cached: 0,
         })
     }
 
@@ -360,6 +423,40 @@ impl Engine {
         prepared: Option<&DataLiterals>,
         fresh: &[xla::Literal],
     ) -> Result<Vec<Tensor>> {
+        match prepared {
+            None => self.run_bound(name, params, None, fresh),
+            Some(p) => self.run_bound(name, params, Some((p, &p.binding)), fresh),
+        }
+    }
+
+    /// The binding-override run: execute `name` with the data inputs
+    /// resolved through an explicit `binding` over `prepared`'s pool
+    /// (`Some(i)` = pool entry `i`, `None` = next `fresh` literal). One
+    /// pooled literal may serve several positions — the fused-batch
+    /// path binds an episode's constant inputs at every fused slot that
+    /// episode occupies. Shapes are validated here against the manifest
+    /// position each pool entry lands on.
+    pub(crate) fn run_with_params_bound(
+        &self,
+        name: &str,
+        params: &ParamStore,
+        prepared: &DataLiterals,
+        binding: &[Option<usize>],
+        fresh: &[xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        self.run_bound(name, params, Some((prepared, binding)), fresh)
+    }
+
+    /// Shared tail of the two fronts above: validate the binding, count
+    /// builds/hits, interleave pool and fresh literals positionally,
+    /// execute.
+    fn run_bound(
+        &self,
+        name: &str,
+        params: &ParamStore,
+        bound: Option<(&DataLiterals, &[Option<usize>])>,
+        fresh: &[xla::Literal],
+    ) -> Result<Vec<Tensor>> {
         let entry = self.manifest.get(name)?;
         if params.tensors().len() != entry.params.len() {
             bail!(
@@ -368,9 +465,9 @@ impl Engine {
                 entry.params.len()
             );
         }
-        let cached_n = match prepared {
+        let cached_n = match bound {
             None => 0,
-            Some(p) => {
+            Some((p, binding)) => {
                 if p.name != name {
                     bail!(
                         "{name}: data literals were prepared for `{}` (key {})",
@@ -378,7 +475,37 @@ impl Engine {
                         p.key
                     );
                 }
-                p.cached
+                if binding.len() != entry.inputs.len() {
+                    bail!(
+                        "{name}: binding covers {} of {} data inputs (key {})",
+                        binding.len(),
+                        entry.inputs.len(),
+                        p.key
+                    );
+                }
+                let mut n = 0usize;
+                for (pos, slot) in binding.iter().enumerate() {
+                    let Some(i) = slot else { continue };
+                    let spec = &entry.inputs[pos];
+                    let shape = p.pool_shapes.get(*i).with_context(|| {
+                        format!(
+                            "{name}: input {} bound to pool entry {i} of {} (key {})",
+                            spec.name,
+                            p.pool.len(),
+                            p.key
+                        )
+                    })?;
+                    if *shape != spec.shape {
+                        bail!(
+                            "{name}: pool entry {i} shape {:?} bound at input {} wants {:?}",
+                            shape,
+                            spec.name,
+                            spec.shape
+                        );
+                    }
+                    n += 1;
+                }
+                n
             }
         };
         if cached_n + fresh.len() != entry.inputs.len() {
@@ -395,13 +522,13 @@ impl Engine {
             s.data_cache_hits += cached_n;
         }
         let mut refs: Vec<&xla::Literal> = plits.iter().collect();
-        match prepared {
+        match bound {
             None => refs.extend(fresh.iter()),
-            Some(p) => {
+            Some((p, binding)) => {
                 let mut it = fresh.iter();
-                for slot in &p.slots {
+                for slot in binding {
                     match slot {
-                        Some(lit) => refs.push(lit),
+                        Some(i) => refs.push(&p.pool[*i]),
                         None => refs.push(
                             it.next().context("fresh data literal count already validated")?,
                         ),

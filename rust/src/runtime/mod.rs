@@ -27,7 +27,12 @@
 //! query batches re-marshal only their varying tensors. Ownership is
 //! the cache key — the episode's driver prepares the set once and
 //! drops it with the episode — observable via
-//! `EngineStats::{data_literal_builds, data_cache_hits}`.
+//! `EngineStats::{data_literal_builds, data_cache_hits}`. The megabatch
+//! path generalizes the set to a window-spanning POOL
+//! (`Engine::prepare_data_pool`): each fused execution supplies its own
+//! pool binding (`Engine::run_with_params_bound` /
+//! `DispatchQueue::submit_bound`), so one pooled literal serves every
+//! fused slot that episode occupies across the window.
 //!
 //! ## Dispatch pipelining
 //!

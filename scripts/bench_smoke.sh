@@ -30,6 +30,16 @@ else
     echo "clippy gate skipped (clippy component not installed)"
 fi
 
+# Formatting gate, same skip policy: a toolchain without rustfmt can
+# still run the smoke, but where the component exists the tree must be
+# `cargo fmt` clean.
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+    echo "fmt gate OK (tree is cargo fmt clean)"
+else
+    echo "fmt gate skipped (rustfmt component not installed)"
+fi
+
 OUT="$(mktemp -d)"
 trap 'rm -rf "$OUT"' EXIT
 
@@ -109,6 +119,28 @@ if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
         fi
     done
     echo "dispatch-throughput gate OK (pipelined/direct bit-identity = 1; data-literal builds reduced)"
+
+    # Cross-episode megabatching gate: same shape again (a deterministic
+    # fused/serial divergence would self-compare clean, so the identity
+    # metric is asserted directly), plus the tentpole claim — the fused
+    # entries must have run strictly fewer device executions at equal
+    # episode counts. The scenario drops fused widths whose megatrain
+    # artifact is missing (pre-megabatch artifacts dir), in which case
+    # these metrics are absent and the assert block self-skips.
+    "./$BIN" bench run --filter megabatch-throughput --seed 7 --json "$OUT/mega_base.json"
+    "./$BIN" bench run --filter megabatch-throughput --seed 7 --json "$OUT/mega_cand.json"
+    "./$BIN" bench compare "$OUT/mega_base.json" "$OUT/mega_cand.json" --tolerance-pct 0
+    if grep -q '"megabatch_train_bit_identical"' "$OUT/mega_cand.json"; then
+        for m in megabatch_train_bit_identical megabatch_fewer_executions; do
+            if ! grep -A1 "\"$m\"" "$OUT/mega_cand.json" | grep -q '"value": 1'; then
+                echo "error: $m != 1 (fused megabatch path diverged from the serial path)"
+                exit 1
+            fi
+        done
+        echo "megabatch-throughput gate OK (fused/serial bit-identity = 1; executions reduced)"
+    else
+        echo "megabatch-throughput fusion gates skipped (no megatrain artifact; rerun \`make artifacts\`)"
+    fi
 else
-    echo "train/shard/dispatch-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
+    echo "train/shard/dispatch/megabatch-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
 fi
