@@ -168,6 +168,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(CacheEfficiency),
         Box::new(EvalThroughput),
         Box::new(TrainThroughput),
+        Box::new(ResumeFidelity),
         Box::new(ShardThroughput),
         Box::new(DispatchThroughput),
         Box::new(MegabatchThroughput),
@@ -659,6 +660,152 @@ impl Scenario for TrainThroughput {
             );
         }
         rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// Crash→restart fidelity: full-state `TrainState` snapshots taken at
+/// accumulation-window boundaries must resume to a final loss log AND
+/// final parameters bitwise-identical to the uninterrupted run — from
+/// EVERY mid-run boundary, under a parallel resume pipeline — and the
+/// rolling `keep` retention must leave exactly the newest snapshot on
+/// disk. This is the gate for the checkpoint lifecycle: if any piece
+/// of resumable state (Adam moments/step, step cursor, validation
+/// best, val stream position) were missing from the snapshot, the
+/// resumed trajectory would diverge and the identity metric drops.
+struct ResumeFidelity;
+
+impl Scenario for ResumeFidelity {
+    fn name(&self) -> &'static str {
+        "resume-fidelity"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "crash->resume bit-identity from every snapshot boundary + rolling retention"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`resume-episodes`, not
+        // train-throughput's `train-bench-episodes`): the knob
+        // namespace is shared across a `bench run`. 6 episodes at
+        // accum 2 with snapshots every 2 gives two MID-run boundaries
+        // (2 and 4) plus a final one — enough to gate re-entry both
+        // before and after a validation round (validate_every 2).
+        let episodes: usize = knobs.get("resume-episodes", 6)?;
+        let accum: usize = knobs.get("resume-accum", 2)?;
+        let every: usize = knobs.get("resume-checkpoint-every", 2)?;
+        let workers: usize = knobs.get("resume-workers", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("resume-episodes", episodes);
+        rep.config("resume-accum", accum);
+        rep.config("resume-checkpoint-every", every);
+        rep.config("resume-workers", workers);
+        rep.config("image-size", size);
+        let boundaries: Vec<usize> =
+            (1..).map(|k| k * every).take_while(|b| *b < episodes).collect();
+        if boundaries.is_empty() {
+            bail!(
+                "resume-checkpoint-every {every} leaves no mid-run snapshot before \
+                 {episodes} episodes — nothing to gate"
+            );
+        }
+
+        let dir = std::env::temp_dir()
+            .join(format!("lite_resume_bench_{}_{}", std::process::id(), seed));
+        std::fs::create_dir_all(&dir)?;
+        let base = dir.join("run.state");
+
+        let mut learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        // Every run restarts from the same initial parameters, so the
+        // comparisons are bit for bit.
+        let init = learner.params.clone();
+        let suite = md_suite();
+        let s0 = engine.stats();
+        let cfg = TrainConfig {
+            episodes,
+            accum_period: accum,
+            lr: 1e-3,
+            seed: seed + 1,
+            log_every: 0,
+            episode_cfg: EpisodeConfig::train_default(),
+            validate_every: 2,
+            validate_episodes: 1,
+            ..Default::default()
+        };
+
+        // Reference: one uninterrupted, snapshot-free run.
+        let (res, ref_secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
+        let ref_logs = res?;
+        let ref_params = learner.params.tensors().to_vec();
+        rep.timing("wall_secs_reference", ref_secs);
+
+        // Snapshotting run: same trajectory with full-state snapshots
+        // at every boundary — snapshotting itself must not perturb.
+        learner.params = init.clone();
+        let ckpt_cfg = TrainConfig {
+            checkpoint_every: every,
+            checkpoint_path: Some(base.clone()),
+            ..cfg.clone()
+        };
+        let snap_logs = meta_train(engine, &mut learner, &suite, &ckpt_cfg)?;
+        let mut identical = snap_logs == ref_logs && learner.params.tensors() == &ref_params[..];
+
+        // Resume from EVERY mid-run boundary — the crash could have
+        // happened at any of them — under a parallel pipeline, and
+        // compare the final loss log AND parameters at the bit level.
+        let mut table =
+            Table::new("resume fidelity (per snapshot boundary)", &["resume at", "logs", "params"]);
+        for &b in &boundaries {
+            learner.params = init.clone();
+            let resume_cfg = TrainConfig {
+                workers,
+                resume: Some(crate::coordinator::snapshot_path(&base, b)),
+                ..cfg.clone()
+            };
+            let (res, secs) = timed(|| meta_train(engine, &mut learner, &suite, &resume_cfg));
+            let logs = res?;
+            let logs_ok = logs == ref_logs;
+            let params_ok = learner.params.tensors() == &ref_params[..];
+            identical &= logs_ok && params_ok;
+            table.row(vec![
+                format!("step {b}"),
+                if logs_ok { "identical".into() } else { "DIVERGED".into() },
+                if params_ok { "identical".into() } else { "DIVERGED".into() },
+            ]);
+            rep.timing(&format!("wall_secs_resume_{b}"), secs);
+        }
+        rep.tables.push(table);
+        rep.metric("resume_bit_identical", if identical { 1.0 } else { 0.0 }, Direction::Higher);
+
+        // Rolling retention: a keep=1 run must leave exactly its
+        // newest snapshot on disk (older ones pruned only after a
+        // successor landed).
+        learner.params = init.clone();
+        let keep_base = dir.join("keep.state");
+        let keep_cfg = TrainConfig {
+            checkpoint_every: every,
+            checkpoint_path: Some(keep_base.clone()),
+            keep: 1,
+            ..cfg.clone()
+        };
+        meta_train(engine, &mut learner, &suite, &keep_cfg)?;
+        let all: Vec<usize> =
+            (1..).map(|k| k * every).take_while(|b| *b <= episodes).collect();
+        let newest = *all.last().expect("at least one boundary");
+        let retained_ok = all.iter().all(|&b| {
+            crate::coordinator::snapshot_path(&keep_base, b).exists() == (b == newest)
+        });
+        rep.metric(
+            "retention_newest_only",
+            if retained_ok { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        std::fs::remove_dir_all(&dir).ok();
         Ok(rep)
     }
 }

@@ -6,14 +6,16 @@
 pub mod batch;
 pub mod finetuner;
 pub mod learner;
+pub mod state;
 pub mod trainer;
 pub mod writer;
 
 pub use batch::{sample_split, EpisodePlan, FusedBatch, LiteSplit, WindowPlan};
 pub use finetuner::FineTuner;
 pub use learner::{MetaLearner, TaskState, TrainStats};
+pub use state::{run_fingerprint, snapshot_path, TrainState};
 pub use trainer::{
-    episode_rng, meta_train, meta_train_with, pretrain_backbone, pretrained_backbone, TrainConfig,
-    TrainLog,
+    episode_rng, generator_seed, meta_train, meta_train_storage, meta_train_with,
+    pretrain_backbone, pretrained_backbone, TrainConfig, TrainLog,
 };
 pub use writer::{BackgroundWriter, WriteJob};

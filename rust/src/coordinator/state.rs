@@ -1,0 +1,571 @@
+//! Full-state training snapshots (`LITESTATE1`): everything a resumed
+//! run needs to continue bit-identically to the uninterrupted one.
+//!
+//! A parameter-only checkpoint is NOT enough to resume meta-training:
+//! Adam's moments and step count, the validation-best selection, the
+//! validation-stream cursor, and the loss log all feed the final
+//! result, and restarting any of them from scratch silently diverges
+//! the trajectory. [`TrainState`] captures the lot — parameters, Adam
+//! `t`/`m`/`v`, the episode-step cursor, the best-validation accuracy
+//! and parameters, the loss curve so far, and a config fingerprint —
+//! and serializes it through the same atomic writer as parameter
+//! checkpoints (`params::atomic_write`: tmp + fsync + rename).
+//!
+//! Because every random draw in the training pipeline derives from
+//! `(seed, step)` alone (see `trainer::episode_rng`), a snapshot taken
+//! at an accumulation-window boundary is a complete description of the
+//! run's position: re-entering at `next_step` replays the exact
+//! remaining episode/validation streams, so crash → restart → final
+//! params (and loss log) are bitwise-identical to never crashing. The
+//! trainer enforces the boundary alignment (`checkpoint_every` must be
+//! a multiple of `accum_period`), which is what keeps the gradient
+//! accumulator out of the snapshot: at a boundary it is empty in every
+//! execution path (serial, parallel, megabatch).
+//!
+//! Wire format: a `LITESTATE1` header line, keyed metadata lines
+//! (fingerprint, cursors, Adam step, best accuracy as exact f64 bits),
+//! then four embedded `LITECKPT1` blocks — current params, Adam
+//! moments (`m.<name>` / `v.<name>` pairs in learnable order), best
+//! params (empty block when no validation round ran), and the loss log
+//! (two `[n]` tensors). Loading validates every block fully before
+//! anything is installed; [`TrainState::install`] additionally
+//! cross-checks shapes and learnable names against the live store and
+//! mutates nothing on any error path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::trainer::{TrainConfig, TrainLog};
+use crate::optim::Adam;
+use crate::params::{
+    atomic_write, bytes_to_f32, parse_ckpt_block, read_line, CkptTensor, ParamStore,
+};
+use crate::tensor::Tensor;
+
+/// The config fingerprint embedded in every snapshot and validated on
+/// resume. It covers everything that shapes the training *trajectory*
+/// (model, image size, episode count, accumulation period, exact lr
+/// bits, seed, validation protocol, episode geometry) and deliberately
+/// EXCLUDES the execution-strategy knobs (workers / shards / dispatch
+/// / megabatch): those are bit-identical by contract, so a run may
+/// resume under a different parallel configuration than it crashed in.
+pub fn run_fingerprint(cfg: &TrainConfig, model: &str, image_size: usize) -> String {
+    let e = &cfg.episode_cfg;
+    format!(
+        "model={model} size={image_size} episodes={} accum={} lr={:08x} seed={} \
+         val_every={} val_episodes={} way_max={} shot_min={} shot_max={} \
+         n_support_max={} query_per_class={}",
+        cfg.episodes,
+        cfg.accum_period.max(1),
+        cfg.lr.to_bits(),
+        cfg.seed,
+        cfg.validate_every,
+        cfg.validate_episodes,
+        e.way_max,
+        e.shot_min,
+        e.shot_max,
+        e.n_support_max,
+        e.query_per_class,
+    )
+}
+
+/// Where the periodic snapshot for `next_step` lands: `<base>.<step>`.
+/// Step-stamped names keep every retained snapshot addressable for
+/// `--resume`, and make rolling retention a pure file delete.
+pub fn snapshot_path(base: &Path, next_step: usize) -> PathBuf {
+    let mut os = base.as_os_str().to_os_string();
+    os.push(format!(".{next_step}"));
+    PathBuf::from(os)
+}
+
+/// One resumable training snapshot (see the module doc).
+pub struct TrainState {
+    /// `run_fingerprint` of the producing run; resume refuses to
+    /// install a snapshot whose fingerprint differs from the new run's.
+    pub fingerprint: String,
+    /// Episodes fully consumed (always an accumulation-window
+    /// boundary); the resumed run re-enters at this step.
+    pub next_step: usize,
+    /// Global validation-episode cursor (`split(k)` of the validation
+    /// seed), so resumed validation rounds draw the exact episodes the
+    /// uninterrupted run would have.
+    pub val_index: usize,
+    /// Adam step count at the snapshot.
+    pub adam_t: u64,
+    /// Adam first moments, learnable order (empty iff `adam_t == 0`).
+    pub adam_m: Vec<Vec<f32>>,
+    /// Adam second moments, learnable order.
+    pub adam_v: Vec<Vec<f32>>,
+    /// Learnable tensor names, in the order `adam_m`/`adam_v` index —
+    /// validated against the live store before installing.
+    pub learnable_names: Vec<String>,
+    /// Full parameter store at the snapshot.
+    pub params: ParamStore,
+    /// Best-validation accuracy + the parameters that scored it.
+    pub best: Option<(f64, ParamStore)>,
+    /// The loss log so far (steps `0..next_step`), so a resumed run's
+    /// final log is bitwise-identical to the uninterrupted run's.
+    pub logs: Vec<TrainLog>,
+}
+
+impl TrainState {
+    /// Snapshot the reducer's live state (called at checkpoint
+    /// boundaries, on the reducer thread; serialization itself happens
+    /// on the background writer).
+    pub fn capture(
+        fingerprint: String,
+        next_step: usize,
+        params: &ParamStore,
+        adam: &Adam,
+        best: Option<&(f64, ParamStore)>,
+        val_index: usize,
+        logs: &[TrainLog],
+    ) -> Self {
+        let (m, v) = adam.moments();
+        Self {
+            fingerprint,
+            next_step,
+            val_index,
+            adam_t: adam.t(),
+            adam_m: m.to_vec(),
+            adam_v: v.to_vec(),
+            learnable_names: params.learnable_names().iter().map(|s| s.to_string()).collect(),
+            params: params.clone(),
+            best: best.cloned(),
+            logs: logs.to_vec(),
+        }
+    }
+
+    /// Serialize to the `LITESTATE1` wire format.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        ensure!(
+            self.logs.iter().enumerate().all(|(i, l)| l.step == i),
+            "train state: log steps must be contiguous from 0 (got a gap or reorder)"
+        );
+        ensure!(
+            (self.adam_t == 0) == self.adam_m.is_empty(),
+            "train state: adam_t {} inconsistent with {} moment buffers",
+            self.adam_t,
+            self.adam_m.len()
+        );
+        if !self.adam_m.is_empty() {
+            ensure!(
+                self.adam_m.len() == self.learnable_names.len()
+                    && self.adam_v.len() == self.learnable_names.len(),
+                "train state: {} learnable names for {}/{} moment buffers",
+                self.learnable_names.len(),
+                self.adam_m.len(),
+                self.adam_v.len()
+            );
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(b"LITESTATE1\n");
+        out.extend_from_slice(format!("fingerprint {}\n", self.fingerprint).as_bytes());
+        out.extend_from_slice(format!("next_step {}\n", self.next_step).as_bytes());
+        out.extend_from_slice(format!("val_index {}\n", self.val_index).as_bytes());
+        out.extend_from_slice(format!("adam_t {}\n", self.adam_t).as_bytes());
+        match &self.best {
+            // Exact f64 bits: the resumed `va > best` comparisons must
+            // see the identical float, not a decimal round trip.
+            Some((acc, _)) => out
+                .extend_from_slice(format!("best_acc {:016x}\n", acc.to_bits()).as_bytes()),
+            None => out.extend_from_slice(b"best_acc none\n"),
+        }
+        out.extend(self.params.to_bytes());
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        if !self.adam_m.is_empty() {
+            for (k, name) in self.learnable_names.iter().enumerate() {
+                names.push(format!("m.{name}"));
+                tensors.push(Tensor::new(vec![self.adam_m[k].len()], self.adam_m[k].clone())?);
+                names.push(format!("v.{name}"));
+                tensors.push(Tensor::new(vec![self.adam_v[k].len()], self.adam_v[k].clone())?);
+            }
+        }
+        out.extend(ParamStore::from_tensors(names, tensors)?.to_bytes());
+        match &self.best {
+            Some((_, store)) => out.extend(store.to_bytes()),
+            None => out.extend(ParamStore::from_tensors(vec![], vec![])?.to_bytes()),
+        }
+        let n = self.logs.len();
+        let loss: Vec<f32> = self.logs.iter().map(|l| l.loss).collect();
+        let acc: Vec<f32> = self.logs.iter().map(|l| l.acc).collect();
+        out.extend(
+            ParamStore::from_tensors(
+                vec!["loss".into(), "acc".into()],
+                vec![Tensor::new(vec![n], loss)?, Tensor::new(vec![n], acc)?],
+            )?
+            .to_bytes(),
+        );
+        Ok(out)
+    }
+
+    /// Parse a `LITESTATE1` snapshot. The whole buffer is validated —
+    /// magic, metadata, all four blocks, cross-block consistency,
+    /// trailing bytes — before anything is returned, so a truncated or
+    /// corrupt snapshot fails loudly naming `label` (the source path).
+    pub fn from_bytes(buf: &[u8], label: &str) -> Result<Self> {
+        let mut pos = 0usize;
+        let magic =
+            read_line(buf, &mut pos).with_context(|| format!("{label}: state header"))?;
+        if magic.trim() != "LITESTATE1" {
+            bail!("{label}: bad train-state magic (expected LITESTATE1)");
+        }
+        let fingerprint = keyed_line(buf, &mut pos, "fingerprint", label)?;
+        let next_step: usize = keyed_line(buf, &mut pos, "next_step", label)?
+            .parse()
+            .with_context(|| format!("{label}: bad next_step"))?;
+        let val_index: usize = keyed_line(buf, &mut pos, "val_index", label)?
+            .parse()
+            .with_context(|| format!("{label}: bad val_index"))?;
+        let adam_t: u64 = keyed_line(buf, &mut pos, "adam_t", label)?
+            .parse()
+            .with_context(|| format!("{label}: bad adam_t"))?;
+        let best_raw = keyed_line(buf, &mut pos, "best_acc", label)?;
+        let best_acc = if best_raw == "none" {
+            None
+        } else {
+            Some(f64::from_bits(
+                u64::from_str_radix(&best_raw, 16)
+                    .with_context(|| format!("{label}: bad best_acc bits `{best_raw}`"))?,
+            ))
+        };
+
+        let params = block_store(buf, &mut pos, label)
+            .with_context(|| format!("{label}: params section"))?;
+        let adam_parsed = parse_ckpt_block(buf, &mut pos, label)
+            .with_context(|| format!("{label}: adam section"))?;
+        let best_parsed = parse_ckpt_block(buf, &mut pos, label)
+            .with_context(|| format!("{label}: best section"))?;
+        let logs_parsed = parse_ckpt_block(buf, &mut pos, label)
+            .with_context(|| format!("{label}: log section"))?;
+        if pos != buf.len() {
+            bail!("{label}: {} trailing byte(s) after the log section", buf.len() - pos);
+        }
+
+        // Adam section: m./v. pairs in learnable order.
+        ensure!(
+            adam_parsed.len() % 2 == 0,
+            "{label}: adam section must hold m./v. pairs ({} tensors)",
+            adam_parsed.len()
+        );
+        let mut learnable_names = Vec::new();
+        let mut adam_m = Vec::new();
+        let mut adam_v = Vec::new();
+        for pair in adam_parsed.chunks(2) {
+            let (mn, _, mr) = &pair[0];
+            let (vn, _, vr) = &pair[1];
+            let name = mn
+                .strip_prefix("m.")
+                .with_context(|| format!("{label}: adam tensor `{mn}` missing m. prefix"))?;
+            ensure!(
+                vn.strip_prefix("v.") == Some(name),
+                "{label}: adam pair mismatch: `{mn}` vs `{vn}`"
+            );
+            let m = bytes_to_f32(&buf[mr.clone()])?;
+            let v = bytes_to_f32(&buf[vr.clone()])?;
+            ensure!(m.len() == v.len(), "{label}: adam moment `{name}`: m/v length mismatch");
+            learnable_names.push(name.to_string());
+            adam_m.push(m);
+            adam_v.push(v);
+        }
+        ensure!(
+            (adam_t == 0) == adam_m.is_empty(),
+            "{label}: adam_t {adam_t} inconsistent with {} moment buffers",
+            adam_m.len()
+        );
+        // When no Adam step ran yet the learnable names live only in
+        // the store's flags (all-true from `from_tensors` here), and
+        // `install` validates against the live store instead.
+        if adam_m.is_empty() {
+            learnable_names.clear();
+        }
+
+        let best = match best_acc {
+            None => {
+                ensure!(
+                    best_parsed.is_empty(),
+                    "{label}: best params present but best_acc is none"
+                );
+                None
+            }
+            Some(acc) => {
+                ensure!(
+                    !best_parsed.is_empty(),
+                    "{label}: best_acc set but the best-params section is empty"
+                );
+                Some((acc, tensors_to_store(buf, &best_parsed)?))
+            }
+        };
+
+        // Log section: exactly `loss` + `acc`, equal length, one entry
+        // per consumed step (the emit-every-step invariant).
+        ensure!(
+            logs_parsed.len() == 2 && logs_parsed[0].0 == "loss" && logs_parsed[1].0 == "acc",
+            "{label}: log section must hold exactly `loss` and `acc`"
+        );
+        let loss = bytes_to_f32(&buf[logs_parsed[0].2.clone()])?;
+        let acc = bytes_to_f32(&buf[logs_parsed[1].2.clone()])?;
+        ensure!(
+            loss.len() == acc.len() && loss.len() == next_step,
+            "{label}: {} log entries for next_step {next_step}",
+            loss.len()
+        );
+        let logs = loss
+            .into_iter()
+            .zip(acc)
+            .enumerate()
+            .map(|(step, (loss, acc))| TrainLog { step, loss, acc })
+            .collect();
+
+        Ok(Self {
+            fingerprint,
+            next_step,
+            val_index,
+            adam_t,
+            adam_m,
+            adam_v,
+            learnable_names,
+            params,
+            best,
+            logs,
+        })
+    }
+
+    /// Atomic save (`params::atomic_write`): a crash mid-write never
+    /// corrupts an existing snapshot at `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.to_bytes()?)
+            .with_context(|| format!("saving train state {}", path.display()))
+    }
+
+    /// Load and fully validate a snapshot file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        Self::from_bytes(&buf, &path.display().to_string())
+    }
+
+    /// Install this snapshot into a live run: overlay the parameters
+    /// and restore the optimizer. EVERYTHING is cross-checked against
+    /// the live store first — learnable names, moment lengths, every
+    /// tensor's presence and shape (current and best params alike) —
+    /// and nothing is mutated on any error path. Returns the restored
+    /// best-validation entry (built on a clone of the live store, so
+    /// its learnable flags survive).
+    pub fn install(
+        &self,
+        params: &mut ParamStore,
+        adam: &mut Adam,
+    ) -> Result<Option<(f64, ParamStore)>> {
+        let live: Vec<&str> = params.learnable_names();
+        if !self.learnable_names.is_empty() {
+            ensure!(
+                self.learnable_names == live,
+                "train state learnable tensors {:?} do not match the live store's {:?}",
+                self.learnable_names,
+                live
+            );
+            for (k, name) in self.learnable_names.iter().enumerate() {
+                let t = params
+                    .get(name)
+                    .with_context(|| format!("learnable tensor {name} missing from store"))?;
+                ensure!(
+                    self.adam_m[k].len() == t.len(),
+                    "train state moment `{name}` has {} values for a {}-value tensor",
+                    self.adam_m[k].len(),
+                    t.len()
+                );
+            }
+        }
+        for source in std::iter::once(&self.params).chain(self.best.iter().map(|(_, s)| s)) {
+            for (name, t) in params.names().iter().zip(params.tensors()) {
+                let snap = source
+                    .get(name)
+                    .with_context(|| format!("snapshot is missing tensor {name}"))?;
+                ensure!(
+                    snap.shape == t.shape,
+                    "snapshot tensor {name} has shape {:?}, store expects {:?}",
+                    snap.shape,
+                    t.shape
+                );
+            }
+        }
+        // Fully validated: now mutate.
+        let n = params.overlay(&self.params, "");
+        ensure!(n == params.names().len(), "snapshot restored {n} tensors, store holds more");
+        adam.restore_state(self.adam_t, self.adam_m.clone(), self.adam_v.clone())?;
+        let best = match &self.best {
+            None => None,
+            Some((acc, store)) => {
+                let mut b = params.clone();
+                let nb = b.overlay(store, "");
+                ensure!(nb == b.names().len(), "best snapshot restored {nb} tensors");
+                Some((*acc, b))
+            }
+        };
+        Ok(best)
+    }
+}
+
+/// Parse a `key value...` metadata line, returning the value (which may
+/// itself contain spaces — the fingerprint does).
+fn keyed_line(buf: &[u8], pos: &mut usize, key: &str, label: &str) -> Result<String> {
+    let line = read_line(buf, pos).with_context(|| format!("{label}: {key} line"))?;
+    let (k, v) = line
+        .split_once(' ')
+        .with_context(|| format!("{label}: malformed metadata line `{line}`"))?;
+    ensure!(k == key, "{label}: expected `{key} ...`, got `{line}`");
+    Ok(v.to_string())
+}
+
+/// Decode one parsed `LITECKPT1` block into a standalone store.
+fn block_store(buf: &[u8], pos: &mut usize, label: &str) -> Result<ParamStore> {
+    let parsed = parse_ckpt_block(buf, pos, label)?;
+    tensors_to_store(buf, &parsed)
+}
+
+fn tensors_to_store(buf: &[u8], parsed: &[CkptTensor]) -> Result<ParamStore> {
+    let mut names = Vec::new();
+    let mut tensors = Vec::new();
+    for (name, shape, range) in parsed {
+        names.push(name.clone());
+        tensors.push(Tensor::new(shape.clone(), bytes_to_f32(&buf[range.clone()])?)?);
+    }
+    ParamStore::from_tensors(names, tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_store(scale: f32) -> ParamStore {
+        ParamStore::from_tensors(
+            vec!["bb.w".into(), "head.w".into()],
+            vec![
+                Tensor::new(vec![2], vec![1.0 * scale, 2.0 * scale]).unwrap(),
+                Tensor::new(vec![3], vec![3.0 * scale, 4.0 * scale, 5.0 * scale]).unwrap(),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn toy_state() -> TrainState {
+        TrainState {
+            fingerprint: "model=toy size=32 seed=7".into(),
+            next_step: 2,
+            val_index: 3,
+            adam_t: 1,
+            adam_m: vec![vec![0.5, -0.5], vec![0.25, 0.0, -1.0]],
+            adam_v: vec![vec![0.1, 0.2], vec![0.3, 0.4, 0.5]],
+            learnable_names: vec!["bb.w".into(), "head.w".into()],
+            params: toy_store(1.0),
+            best: Some((0.75, toy_store(2.0))),
+            logs: vec![
+                TrainLog { step: 0, loss: 1.5, acc: 0.25 },
+                TrainLog { step: 1, loss: 1.25, acc: 0.5 },
+            ],
+        }
+    }
+
+    #[test]
+    fn state_round_trips_bit_exactly() {
+        let st = toy_state();
+        let bytes = st.to_bytes().unwrap();
+        let back = TrainState::from_bytes(&bytes, "test").unwrap();
+        assert_eq!(back.fingerprint, st.fingerprint);
+        assert_eq!(back.next_step, 2);
+        assert_eq!(back.val_index, 3);
+        assert_eq!(back.adam_t, 1);
+        assert_eq!(back.adam_m, st.adam_m);
+        assert_eq!(back.adam_v, st.adam_v);
+        assert_eq!(back.learnable_names, st.learnable_names);
+        assert_eq!(back.params.tensors(), st.params.tensors());
+        let (acc, bp) = back.best.as_ref().unwrap();
+        assert_eq!(*acc, 0.75);
+        assert_eq!(bp.tensors(), st.best.as_ref().unwrap().1.tensors());
+        assert_eq!(back.logs, st.logs);
+        // Serialization is deterministic: same state, same bytes.
+        assert_eq!(bytes, back.to_bytes().unwrap());
+    }
+
+    #[test]
+    fn state_without_best_or_moments_round_trips() {
+        let mut st = toy_state();
+        st.best = None;
+        st.adam_t = 0;
+        st.adam_m.clear();
+        st.adam_v.clear();
+        st.learnable_names.clear();
+        st.next_step = 2;
+        let bytes = st.to_bytes().unwrap();
+        let back = TrainState::from_bytes(&bytes, "test").unwrap();
+        assert!(back.best.is_none());
+        assert_eq!(back.adam_t, 0);
+        assert!(back.adam_m.is_empty());
+    }
+
+    #[test]
+    fn state_rejects_corruption() {
+        let st = toy_state();
+        let good = st.to_bytes().unwrap();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[4] = b'X';
+        assert!(TrainState::from_bytes(&bad, "t").is_err());
+        // Truncation anywhere in the tensor payloads (here: the log
+        // section's trailing `acc` tensor).
+        let err =
+            format!("{:#}", TrainState::from_bytes(&good[..good.len() - 3], "t").unwrap_err());
+        assert!(err.contains("truncated"), "{err}");
+        // Trailing garbage.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0u8; 2]);
+        let err = format!("{:#}", TrainState::from_bytes(&trailing, "t").unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+        // Log-count / cursor mismatch.
+        let mut st2 = toy_state();
+        st2.next_step = 5;
+        let bytes = st2.to_bytes().unwrap();
+        let err = format!("{:#}", TrainState::from_bytes(&bytes, "t").unwrap_err());
+        assert!(err.contains("log entries"), "{err}");
+    }
+
+    #[test]
+    fn install_validates_before_mutating() {
+        let st = toy_state();
+        // A live store with a different shape for head.w: install must
+        // refuse AND leave params/version untouched.
+        let mut live = ParamStore::from_tensors(
+            vec!["bb.w".into(), "head.w".into()],
+            vec![
+                Tensor::new(vec![2], vec![9.0, 9.0]).unwrap(),
+                Tensor::new(vec![4], vec![9.0; 4]).unwrap(),
+            ],
+        )
+        .unwrap();
+        let v0 = live.version();
+        let mut adam = Adam::new(1e-3);
+        assert!(st.install(&mut live, &mut adam).is_err());
+        assert_eq!(live.version(), v0, "failed install must not touch the store");
+        assert_eq!(live.get("bb.w").unwrap().data, vec![9.0, 9.0]);
+        assert_eq!(adam.t(), 0);
+
+        // A matching store installs params, best, and optimizer state.
+        let mut ok = toy_store(0.0);
+        let best = st.install(&mut ok, &mut adam).unwrap();
+        assert_eq!(ok.get("bb.w").unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(adam.t(), 1);
+        assert_eq!(adam.moments().0, &st.adam_m[..]);
+        let (acc, bp) = best.unwrap();
+        assert_eq!(acc, 0.75);
+        assert_eq!(bp.get("head.w").unwrap().data, vec![6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn snapshot_paths_are_step_stamped() {
+        let base = Path::new("/tmp/run.state");
+        assert_eq!(snapshot_path(base, 16), PathBuf::from("/tmp/run.state.16"));
+    }
+}

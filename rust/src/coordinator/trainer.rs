@@ -59,11 +59,27 @@
 //!
 //! Checkpoint IO never blocks the training thread: when
 //! `TrainConfig.checkpoint_every / checkpoint_path` are set, the
-//! reducer snapshots the parameters at the due steps and hands them to
-//! a bounded [`BackgroundWriter`] (atomic tmp + fsync + rename saves,
-//! PR 4), which is joined at run exit — the first IO error surfaces
-//! there instead of mid-run. The same writer carries the optional
-//! `progress_path` JSON dumps.
+//! reducer captures a FULL [`TrainState`] snapshot at each due window
+//! boundary — parameters, Adam moments/step, the episode-step cursor,
+//! the best-validation accuracy+params, the loss log, and a config
+//! fingerprint — and hands it to a bounded [`BackgroundWriter`]
+//! (atomic tmp + fsync + rename saves), which is joined at run exit;
+//! the first IO error surfaces there instead of mid-run. Snapshots are
+//! step-stamped (`<checkpoint_path>.<next_step>`), rotated by
+//! `TrainConfig.keep` (the writer prunes an old snapshot only AFTER
+//! the new one landed, so the newest valid snapshot always survives a
+//! failed save), and re-entered by `TrainConfig.resume`: because every
+//! random draw derives from `(seed, step)` alone, a resumed run's
+//! remaining episode/validation streams are exactly the uninterrupted
+//! run's, so crash at any checkpoint boundary → restart → final
+//! params AND loss log bitwise-identical — under any
+//! workers/shards/dispatch/megabatch combination. The same writer
+//! carries the optional `progress_path` JSON dumps.
+//!
+//! Episodes reach the producer pool through the
+//! [`EpisodeStorage`](crate::data::storage::EpisodeStorage) trait —
+//! synthesized on demand, replayed from memory, or streamed from disk
+//! — with the pool's bounded run-ahead acting as the prefetcher.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -71,12 +87,14 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::learner::{MetaLearner, TrainStats};
-use crate::coordinator::writer::BackgroundWriter;
+use crate::coordinator::state::{run_fingerprint, snapshot_path, TrainState};
+use crate::coordinator::writer::{BackgroundWriter, WriteJob};
 use crate::data::registry::Dataset;
 use crate::data::rng::Rng;
+use crate::data::storage::{EpisodeStorage, SynthStorage};
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::data::PretrainCorpus;
 use crate::optim::{Adam, OrderedGradAccum};
@@ -131,14 +149,33 @@ pub struct TrainConfig {
     /// at every `log_every` boundary and once at run end. `None`
     /// disables dumps.
     pub progress_path: Option<std::path::PathBuf>,
-    /// Snapshot the parameters to `checkpoint_path` every this many
-    /// episodes, through the bounded background writer (never blocking
-    /// the training thread on IO). 0 disables periodic checkpoints.
+    /// Capture a full resumable [`TrainState`] snapshot (params + Adam
+    /// moments/step + step cursor + best-validation + loss log +
+    /// config fingerprint) every this many episodes, through the
+    /// bounded background writer (never blocking the training thread
+    /// on IO). Must be a multiple of `accum_period` — snapshots land
+    /// at accumulation-window boundaries, where the gradient
+    /// accumulator is empty in every execution path, which is what
+    /// keeps them resumable under any workers/shards/dispatch/
+    /// megabatch combination. 0 disables periodic snapshots.
     pub checkpoint_every: usize,
-    /// Where periodic checkpoints land (atomic save: a crash mid-write
-    /// never corrupts the previous checkpoint). Required when
+    /// Base path for periodic snapshots: each lands at
+    /// `<checkpoint_path>.<next_step>` (atomic save: a crash mid-write
+    /// never corrupts an existing snapshot). Required when
     /// `checkpoint_every > 0`.
     pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Rolling retention: keep at most this many of THIS run's
+    /// snapshots, pruning the oldest only after a newer one has safely
+    /// landed (the newest valid snapshot always survives a failed
+    /// save). 0 keeps every snapshot. Snapshots left by a previous
+    /// (crashed) run are never touched.
+    pub keep: usize,
+    /// Resume from a [`TrainState`] snapshot file: the snapshot's
+    /// config fingerprint is validated against this run (and the
+    /// store/optimizer cross-checked) BEFORE anything is mutated, then
+    /// training re-enters at the saved step cursor — bit-identical to
+    /// the run that wrote the snapshot having never stopped.
+    pub resume: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -159,6 +196,8 @@ impl Default for TrainConfig {
             progress_path: None,
             checkpoint_every: 0,
             checkpoint_path: None,
+            keep: 0,
+            resume: None,
         }
     }
 }
@@ -180,6 +219,16 @@ pub fn episode_rng(seed: u64, step: usize) -> Rng {
     Rng::new(seed).split(step as u64)
 }
 
+/// The episode-generator seed derived from a run's config seed: the
+/// stream `episode_rng(generator_seed(seed), step)` is what the
+/// producer pool hands the episode source for training step `step`.
+/// Exposed so out-of-band materialization (e.g.
+/// `DiskStorage::materialize` pre-building a run's episodes) can
+/// produce byte-identical episodes to the on-demand path.
+pub fn generator_seed(seed: u64) -> u64 {
+    seed ^ 0xE915_0DE5
+}
+
 /// Meta-train a learner episodically over a dataset suite; returns the
 /// per-episode loss curve. `engine` is any shard set — a plain
 /// `&Engine` coerces to the one-shard case.
@@ -199,14 +248,21 @@ pub fn meta_train(
 }
 
 /// Reducer-side mutable state threaded through one training run:
-/// optimizer, the ordered gradient accumulator, the loss curve, and
-/// validation-best tracking.
+/// optimizer, the ordered gradient accumulator, the loss curve,
+/// validation-best tracking, and the snapshot-retention ledger.
 struct ReducerState {
     adam: Adam,
     accum: OrderedGradAccum,
     logs: Vec<TrainLog>,
     best: Option<(f64, ParamStore)>,
     val_index: usize,
+    /// This run's config fingerprint, stamped into every snapshot.
+    fingerprint: String,
+    /// Snapshots THIS run has enqueued, oldest first — the `keep`
+    /// retention window. Snapshots from a previous (crashed) run are
+    /// deliberately not tracked: retention never deletes a file this
+    /// run didn't write.
+    snapshots: Vec<(usize, std::path::PathBuf)>,
 }
 
 /// Meta-train from an arbitrary episode source (ORBIT user tasks, custom
@@ -220,14 +276,47 @@ pub fn meta_train_with(
     cfg: &TrainConfig,
     make_episode: impl Fn(&mut Rng) -> Episode + Send + Sync,
 ) -> Result<Vec<TrainLog>> {
+    meta_train_storage(engine, learner, cfg, &SynthStorage(&make_episode), &make_episode)
+}
+
+/// Meta-train with the episode plane split out: training episodes come
+/// from an [`EpisodeStorage`] (on-demand synthesis, in-memory replay,
+/// or disk streaming — the bounded producer pool is the prefetcher for
+/// all of them), validation episodes from `make_val` (rounds are
+/// sparse and reducer-side, so they stay closure-fed). Both must be
+/// pure functions of the RNG stream they are handed.
+pub fn meta_train_storage(
+    engine: &dyn EngineShards,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    storage: &dyn EpisodeStorage,
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+) -> Result<Vec<TrainLog>> {
     engine.check_shard_knob(cfg.shards, "TrainConfig.shards")?;
-    anyhow::ensure!(cfg.megabatch >= 1, "TrainConfig.megabatch must be >= 1 (1 = unfused)");
+    ensure!(cfg.megabatch >= 1, "TrainConfig.megabatch must be >= 1 (1 = unfused)");
     if cfg.megabatch > 1 {
         // Resolve the fused artifact up front: a bad --megabatch must
         // fail with the available widths BEFORE any training happens,
         // not mid-run (and never silently fall back to unfused).
         learner.megatrain_artifact(engine.primary(), cfg.megabatch)?;
     }
+    let period = cfg.accum_period.max(1);
+    // Like the --megabatch width probe: every checkpoint/resume
+    // misconfiguration fails HERE, before any training happens.
+    if cfg.checkpoint_every > 0 {
+        ensure!(
+            cfg.checkpoint_every % period == 0,
+            "TrainConfig.checkpoint_every ({}) must be a multiple of the accumulation \
+             period ({}): full-state snapshots are taken at window boundaries, where \
+             the gradient accumulator is empty in every execution path",
+            cfg.checkpoint_every,
+            period
+        );
+    }
+    ensure!(
+        cfg.keep == 0 || cfg.checkpoint_every > 0,
+        "TrainConfig.keep set without checkpoint_every (no snapshots to retain)"
+    );
     // Checkpoint and progress IO run off-thread: the reducer only
     // snapshots and enqueues; the bounded writer (capacity 2: one in
     // flight + one queued) performs the atomic saves and is joined at
@@ -242,12 +331,12 @@ pub fn meta_train_with(
     } else {
         cfg.workers
     };
-    let period = cfg.accum_period.max(1);
     // Training episode `step` comes from `split(step)` of the generator
     // seed; validation episode `k` (numbered globally across rounds)
     // from `split(k)` of the validation seed — both independent of
-    // execution order, which is what lets the producer pool run ahead.
-    let gen_seed = cfg.seed ^ 0xE915_0DE5;
+    // execution order, which is what lets the producer pool run ahead
+    // (and what makes mid-run re-entry exact).
+    let gen_seed = generator_seed(cfg.seed);
     let val_seed = gen_seed ^ 0x5A11_DA7E;
 
     let mut st = ReducerState {
@@ -256,9 +345,44 @@ pub fn meta_train_with(
         logs: Vec::with_capacity(cfg.episodes),
         best: None,
         val_index: 0,
+        fingerprint: run_fingerprint(cfg, &learner.model, learner.image_size),
+        snapshots: Vec::new(),
     };
 
-    let producers = workers.min(cfg.episodes.max(1));
+    // Resume: validate the snapshot against THIS run's fingerprint and
+    // the live store before anything is mutated, then re-enter at the
+    // saved cursor. All state the snapshot carries is installed; all
+    // state it doesn't carry (the gradient accumulator) is empty at
+    // the boundary by construction.
+    let mut start_step = 0usize;
+    if let Some(path) = &cfg.resume {
+        let snap = TrainState::load(path)?;
+        ensure!(
+            snap.fingerprint == st.fingerprint,
+            "resume fingerprint mismatch — the snapshot came from a different run \
+             configuration:\n  snapshot: {}\n  this run: {}",
+            snap.fingerprint,
+            st.fingerprint
+        );
+        ensure!(
+            snap.next_step % period == 0,
+            "resume snapshot cursor {} is not an accumulation-window boundary (period {})",
+            snap.next_step,
+            period
+        );
+        ensure!(
+            snap.next_step <= cfg.episodes,
+            "resume snapshot cursor {} is beyond this run's {} episodes",
+            snap.next_step,
+            cfg.episodes
+        );
+        st.best = snap.install(&mut learner.params, &mut st.adam)?;
+        st.val_index = snap.val_index;
+        st.logs = snap.logs;
+        start_step = snap.next_step;
+    }
+
+    let producers = workers.min((cfg.episodes - start_step).max(1));
     // A window inherently holds `period` episodes at dispatch; the
     // channel only needs enough slack to keep the producer pool busy
     // about one window ahead, so it scales with the pool, not the
@@ -273,7 +397,7 @@ pub fn meta_train_with(
     // episodes are alive at once. The limit exceeds `period`, so the
     // current window can always be fully produced (no deadlock).
     let ahead_limit = period + chan_cap;
-    let progress = Mutex::new(0usize);
+    let progress = Mutex::new(start_step);
     let gate = Condvar::new();
     let done = AtomicBool::new(false);
     // Set by a producer's drop guard when it unwinds: a panicked
@@ -284,9 +408,8 @@ pub fn meta_train_with(
     let producer_panicked = AtomicBool::new(false);
 
     std::thread::scope(|scope| -> Result<()> {
-        let (ep_tx, ep_rx) = sync_channel::<(usize, Episode)>(chan_cap);
-        let next_to_produce = AtomicUsize::new(0);
-        let make_episode = &make_episode;
+        let (ep_tx, ep_rx) = sync_channel::<(usize, Result<Episode>)>(chan_cap);
+        let next_to_produce = AtomicUsize::new(start_step);
         let (progress, gate, done) = (&progress, &gate, &done);
         let producer_panicked = &producer_panicked;
         for _ in 0..producers {
@@ -315,9 +438,14 @@ pub fn meta_train_with(
                             }
                         }
                     }
-                    let ep = make_episode(&mut episode_rng(gen_seed, step));
-                    if ep_tx.send((step, ep)).is_err() {
-                        return; // reducer exited early (error path)
+                    // Storage errors (e.g. a corrupt on-disk episode)
+                    // travel the channel to the reducer, which surfaces
+                    // them with the failing step attached; this
+                    // producer then stops claiming steps.
+                    let res = storage.episode(step, &mut episode_rng(gen_seed, step));
+                    let failed = res.is_err();
+                    if ep_tx.send((step, res)).is_err() || failed {
+                        return;
                     }
                 }
             });
@@ -335,13 +463,14 @@ pub fn meta_train_with(
             engine,
             learner,
             cfg,
-            make_episode,
+            make_val,
             &ep_rx,
             (progress, gate, producer_panicked),
             &mut st,
             val_seed,
             workers,
             period,
+            start_step,
             writer.as_ref(),
         )
     })?;
@@ -368,25 +497,48 @@ pub fn meta_train_with(
     Ok(st.logs)
 }
 
-/// Enqueue a parameter snapshot on the background writer when `step`
-/// is a checkpoint boundary. Runs on the reducer, in step order, after
-/// the step's Adam/validation — so the snapshot is exactly the state a
-/// synchronous save at this point would have written.
+/// Enqueue a full-state [`TrainState`] snapshot on the background
+/// writer when `step` is a checkpoint boundary. Runs on the reducer,
+/// in step order, after the step's Adam/validation — so the snapshot
+/// is exactly the resumable state a synchronous save at this point
+/// would have captured. Rolling retention: with `cfg.keep > 0`, the
+/// oldest of this run's snapshots beyond the window ride along as the
+/// job's prune list, deleted by the writer only AFTER the new snapshot
+/// landed.
 fn maybe_checkpoint(
     learner: &MetaLearner,
     cfg: &TrainConfig,
     step: usize,
+    st: &mut ReducerState,
     writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
     let Some(writer) = writer else { return Ok(()) };
     if cfg.checkpoint_every == 0 || (step + 1) % cfg.checkpoint_every != 0 {
         return Ok(());
     }
-    let path = cfg
+    let base = cfg
         .checkpoint_path
         .as_ref()
-        .context("checkpoint_every set without checkpoint_path")?;
-    writer.save_checkpoint(&learner.params, path)
+        .context("checkpoint_every set without checkpoint_path (full-state snapshots need a base path)")?;
+    let next_step = step + 1;
+    let state = TrainState::capture(
+        st.fingerprint.clone(),
+        next_step,
+        &learner.params,
+        &st.adam,
+        st.best.as_ref(),
+        st.val_index,
+        &st.logs,
+    );
+    let path = snapshot_path(base, next_step);
+    st.snapshots.push((next_step, path.clone()));
+    let mut prune = Vec::new();
+    if cfg.keep > 0 {
+        while st.snapshots.len() > cfg.keep {
+            prune.push(st.snapshots.remove(0).1);
+        }
+    }
+    writer.submit(WriteJob::State { state, path, prune })
 }
 
 /// RAII flag raised when the owning thread unwinds (and only then).
@@ -425,13 +577,16 @@ impl Drop for GateRelease<'_> {
 /// Receive the next `(step, episode)`, surfacing producer death as an
 /// error: polls so a panicked producer (claimed step never sent, other
 /// senders still alive) cannot wedge the reducer in a blocking `recv`.
+/// A storage error travels the channel as the step's payload and
+/// surfaces here with the failing step attached.
 fn recv_episode(
-    ep_rx: &Receiver<(usize, Episode)>,
+    ep_rx: &Receiver<(usize, Result<Episode>)>,
     producer_panicked: &AtomicBool,
 ) -> Result<(usize, Episode)> {
     loop {
         match ep_rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(pair) => return Ok(pair),
+            Ok((step, Ok(ep))) => return Ok((step, ep)),
+            Ok((step, Err(e))) => return Err(e.context(format!("producing episode {step}"))),
             Err(RecvTimeoutError::Timeout) => {
                 if producer_panicked.load(Ordering::Relaxed) {
                     bail!("episode producer panicked");
@@ -452,13 +607,14 @@ fn reduce_loop(
     engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
-    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
-    ep_rx: &Receiver<(usize, Episode)>,
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    ep_rx: &Receiver<(usize, Result<Episode>)>,
     (progress, gate, producer_panicked): (&Mutex<usize>, &Condvar, &AtomicBool),
     st: &mut ReducerState,
     val_seed: u64,
     workers: usize,
     period: usize,
+    start_step: usize,
     writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
     // Producers race, so episodes can arrive out of step order; early
@@ -471,7 +627,7 @@ fn reduce_loop(
         }
         Ok(parked.remove(&step).unwrap())
     };
-    let mut lo = 0usize;
+    let mut lo = start_step;
     while lo < cfg.episodes {
         let hi = (lo + period).min(cfg.episodes);
         if cfg.megabatch > 1 {
@@ -482,7 +638,7 @@ fn reduce_loop(
                 .map(|s| Ok((s, next_episode(s)?)))
                 .collect::<Result<_>>()?;
             run_window_megabatch(
-                engine, learner, cfg, make_episode, val_seed, workers, &window, st, writer,
+                engine, learner, cfg, make_val, val_seed, workers, &window, st, writer,
             )?;
         } else if workers <= 1 {
             // Serial path: same per-step streams, same fold order, no
@@ -501,8 +657,8 @@ fn reduce_loop(
                     st.adam.step(&mut learner.params, &avg)?;
                 }
                 emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
-                maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
-                maybe_checkpoint(learner, cfg, step, writer)?;
+                maybe_validate(engine, learner, cfg, make_val, val_seed, step, st)?;
+                maybe_checkpoint(learner, cfg, step, st, writer)?;
             }
         } else {
             // Parallel path: assemble the whole window first — its
@@ -513,7 +669,7 @@ fn reduce_loop(
                 .map(|s| Ok((s, next_episode(s)?)))
                 .collect::<Result<_>>()?;
             run_window_parallel(
-                engine, learner, cfg, make_episode, val_seed, workers, &window, st, writer,
+                engine, learner, cfg, make_val, val_seed, workers, &window, st, writer,
             )?;
         }
         lo = hi;
@@ -537,7 +693,7 @@ fn run_window_parallel(
     engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
-    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
     val_seed: u64,
     workers: usize,
     window: &[(usize, Episode)],
@@ -615,8 +771,8 @@ fn run_window_parallel(
             }
         }
         emit_log(learner, cfg, &mut st.logs, step, stats, writer)?;
-        maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
-        maybe_checkpoint(learner, cfg, step, writer)?;
+        maybe_validate(engine, learner, cfg, make_val, val_seed, step, st)?;
+        maybe_checkpoint(learner, cfg, step, st, writer)?;
     }
     Ok(())
 }
@@ -635,7 +791,7 @@ fn run_window_megabatch(
     engine: &dyn EngineShards,
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
-    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
     val_seed: u64,
     workers: usize,
     window: &[(usize, Episode)],
@@ -732,8 +888,8 @@ fn run_window_megabatch(
             st.adam.step(&mut learner.params, &avg)?;
         }
         emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
-        maybe_validate(engine, learner, cfg, make_episode, val_seed, step, st)?;
-        maybe_checkpoint(learner, cfg, step, writer)?;
+        maybe_validate(engine, learner, cfg, make_val, val_seed, step, st)?;
+        maybe_checkpoint(learner, cfg, step, st, writer)?;
     }
     Ok(())
 }
@@ -794,7 +950,7 @@ fn maybe_validate(
     engine: &dyn EngineShards,
     learner: &MetaLearner,
     cfg: &TrainConfig,
-    make_episode: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
     val_seed: u64,
     step: usize,
     st: &mut ReducerState,
@@ -804,19 +960,23 @@ fn maybe_validate(
     }
     let mut accs = Vec::with_capacity(cfg.validate_episodes);
     for _ in 0..cfg.validate_episodes {
-        let vep = make_episode(&mut episode_rng(val_seed, st.val_index));
+        let vep = make_val(&mut episode_rng(val_seed, st.val_index));
         st.val_index += 1;
         let preds = learner.predict_episode_dispatch(engine.primary(), cfg.dispatch, &vep)?;
         accs.push(crate::eval::score_episode(&vep, &preds).frame_acc);
     }
     let va = crate::util::mean(&accs);
-    if st.best.as_ref().map_or(true, |(b, _)| va > *b) {
+    // Strict improvement only: on an exact tie the EARLIER snapshot is
+    // kept, and the log marker must say so — a round that merely
+    // matches the best is not the params the run will return.
+    let improved = st.best.as_ref().map_or(true, |(b, _)| va > *b);
+    if improved {
         st.best = Some((va, learner.params.clone()));
     }
     eprintln!(
         "[meta-train {}] step {step}: validation acc {va:.3}{}",
         learner.model,
-        if st.best.as_ref().map(|(b, _)| *b) == Some(va) { " (best)" } else { "" }
+        if improved { " (best)" } else { "" }
     );
     Ok(())
 }

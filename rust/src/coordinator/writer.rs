@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::state::TrainState;
 use crate::params::ParamStore;
 
 /// One unit of background IO.
@@ -33,6 +34,12 @@ pub enum WriteJob {
     /// Atomic checkpoint save (`ParamStore::save`: tmp + fsync +
     /// rename) of a parameter snapshot.
     Checkpoint { store: ParamStore, path: PathBuf },
+    /// Atomic full-state training snapshot (`TrainState::save`), then
+    /// rolling retention: `prune` paths (snapshots the trainer rotated
+    /// out of its `--keep` window) are deleted ONLY after the new
+    /// snapshot landed, so a failed save can never leave fewer valid
+    /// snapshots than before it — the newest valid one always survives.
+    State { state: TrainState, path: PathBuf, prune: Vec<PathBuf> },
     /// Whole-file text write (bench/report JSON, progress dumps).
     Text { contents: String, path: PathBuf },
 }
@@ -44,6 +51,18 @@ impl WriteJob {
             WriteJob::Checkpoint { store, path } => store
                 .save(&path)
                 .with_context(|| format!("background checkpoint {}", path.display())),
+            WriteJob::State { state, path, prune } => {
+                state
+                    .save(&path)
+                    .with_context(|| format!("background state snapshot {}", path.display()))?;
+                // Success-gated GC: prune failures are non-fatal (the
+                // stale file costs disk, not correctness), save
+                // failures above skip pruning entirely.
+                for old in prune {
+                    let _ = std::fs::remove_file(&old);
+                }
+                Ok(())
+            }
             WriteJob::Text { contents, path } => std::fs::write(&path, contents)
                 .with_context(|| format!("background report write {}", path.display())),
         }
@@ -194,12 +213,59 @@ mod tests {
                 Err(anyhow!("disk on fire"))
             }
             WriteJob::Text { .. } => Ok(()),
-            WriteJob::Checkpoint { .. } => Err(anyhow!("later failure must not mask the first")),
+            _ => Err(anyhow!("later failure must not mask the first")),
         });
         w.write_text("/dev/null", "fine".into()).unwrap();
         w.write_text("/dev/null", "bad".into()).unwrap();
         w.save_checkpoint(&toy_store(), "/dev/null").unwrap();
         let err = format!("{:#}", w.finish().unwrap_err());
         assert!(err.contains("disk on fire"), "first error must win: {err}");
+    }
+
+    fn toy_state() -> TrainState {
+        TrainState::capture(
+            "fp".into(),
+            0,
+            &toy_store(),
+            &crate::optim::Adam::new(1e-3),
+            None,
+            0,
+            &[],
+        )
+    }
+
+    #[test]
+    fn state_job_prunes_only_after_a_successful_save() {
+        let dir = std::env::temp_dir().join(format!("lite_bw_gc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("run.state.2");
+        std::fs::write(&old, b"stale snapshot").unwrap();
+
+        // Failed save (missing parent dir): the rotated-out snapshot
+        // must SURVIVE — retention never deletes ahead of a landing.
+        let w = BackgroundWriter::new(2);
+        w.submit(WriteJob::State {
+            state: toy_state(),
+            path: dir.join("no_such_subdir").join("run.state.4"),
+            prune: vec![old.clone()],
+        })
+        .unwrap();
+        assert!(w.finish().is_err(), "save into a missing dir must fail");
+        assert!(old.exists(), "failed save must not prune the previous snapshot");
+
+        // Successful save: now the rotated-out snapshot goes.
+        let newer = dir.join("run.state.4");
+        let w = BackgroundWriter::new(2);
+        w.submit(WriteJob::State {
+            state: toy_state(),
+            path: newer.clone(),
+            prune: vec![old.clone()],
+        })
+        .unwrap();
+        w.finish().unwrap();
+        assert!(newer.exists());
+        assert!(!old.exists(), "successful save prunes the rotated-out snapshot");
+        assert!(TrainState::load(&newer).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -6,6 +6,7 @@ pub mod image;
 pub mod orbit;
 pub mod registry;
 pub mod rng;
+pub mod storage;
 pub mod synth;
 #[cfg(test)]
 mod synth_tests;
@@ -13,4 +14,5 @@ pub mod task;
 
 pub use registry::{md_suite, vtab_suite, Dataset, Group, PretrainCorpus};
 pub use rng::Rng;
+pub use storage::{DiskStorage, EpisodeStorage, MemoryStorage, SynthStorage};
 pub use task::{sample_episode, Episode, EpisodeConfig};

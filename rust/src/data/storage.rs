@@ -1,0 +1,303 @@
+//! The episode storage plane: where training episodes come from.
+//!
+//! The trainer's bounded producer pool asks an [`EpisodeStorage`] for
+//! episode `step` and runs ahead of the reducer by a fixed prefetch
+//! window (`ahead_limit` in `coordinator::trainer`) — so the SAME pool
+//! is the prefetcher for every implementation: on-demand synthesis
+//! overlaps episode construction with device execution, and the
+//! disk-backed store overlaps file reads the same way, keeping at most
+//! a window-plus-channel of decoded episodes in memory regardless of
+//! how large the on-disk corpus is. This is the ROADMAP's memory/disk
+//! storage split: [`MemoryStorage`] replays a pre-materialized corpus
+//! from RAM, [`DiskStorage`] streams one validated episode file per
+//! step, and [`SynthStorage`] adapts the classic closure-based
+//! synthesis path.
+//!
+//! Implementations must be pure functions of `(step, rng)`: the
+//! producer pool calls them concurrently and out of order, and the
+//! pipeline's bit-identity contract (workers/shards/dispatch/
+//! megabatch/resume all equal serial) rests on episode `step` being
+//! the same bytes no matter who produces it when.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+use crate::params::{atomic_write, bytes_to_f32, read_line};
+
+/// A source of training episodes for the producer pool (see the module
+/// doc for the purity contract).
+pub trait EpisodeStorage: Send + Sync {
+    /// Produce training episode `step`. `rng` is the step's derived
+    /// stream (`episode_rng(generator_seed(seed), step)`); stores that
+    /// replay pre-materialized episodes ignore it.
+    fn episode(&self, step: usize, rng: &mut Rng) -> Result<Episode>;
+}
+
+/// On-demand synthesis: adapts the classic `Fn(&mut Rng) -> Episode`
+/// episode source (dataset suites, ORBIT user tasks, bench synth) to
+/// the storage plane. `meta_train_with` wraps its closure in this.
+pub struct SynthStorage<F>(pub F);
+
+impl<F: Fn(&mut Rng) -> Episode + Send + Sync> EpisodeStorage for SynthStorage<F> {
+    fn episode(&self, _step: usize, rng: &mut Rng) -> Result<Episode> {
+        Ok((self.0)(rng))
+    }
+}
+
+/// In-memory episode corpus: replays a pre-materialized set, episode
+/// `step` mapping to slot `step % len`. The whole corpus stays
+/// resident — the right trade when episodes are small or the run
+/// revisits them many times.
+pub struct MemoryStorage {
+    episodes: Vec<Episode>,
+}
+
+impl MemoryStorage {
+    pub fn new(episodes: Vec<Episode>) -> Result<Self> {
+        ensure!(!episodes.is_empty(), "memory storage needs at least one episode");
+        Ok(Self { episodes })
+    }
+}
+
+impl EpisodeStorage for MemoryStorage {
+    fn episode(&self, step: usize, _rng: &mut Rng) -> Result<Episode> {
+        Ok(self.episodes[step % self.episodes.len()].clone())
+    }
+}
+
+/// Disk-backed episode corpus: one validated `LITEEP1` file per
+/// episode (`ep_<i>.bin`), read on demand — in-flight memory is
+/// bounded by the producer pool's prefetch window, not the corpus
+/// size. Files are written atomically (`params::atomic_write`), so a
+/// crash mid-materialization never leaves a truncated episode where
+/// `open` would trust it.
+pub struct DiskStorage {
+    dir: PathBuf,
+    count: usize,
+}
+
+impl DiskStorage {
+    /// Write `episodes` into `dir` (created if needed) and open the
+    /// resulting store.
+    pub fn materialize(dir: &Path, episodes: &[Episode]) -> Result<Self> {
+        ensure!(!episodes.is_empty(), "disk storage needs at least one episode");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating episode dir {}", dir.display()))?;
+        for (i, ep) in episodes.iter().enumerate() {
+            atomic_write(&Self::episode_file(dir, i), &encode_episode(ep))
+                .with_context(|| format!("materializing episode {i}"))?;
+        }
+        Ok(Self { dir: dir.to_path_buf(), count: episodes.len() })
+    }
+
+    /// Open an existing store: counts the contiguous `ep_0.bin ..`
+    /// prefix (a gap ends the corpus — episodes are addressed by
+    /// index, so a missing file would silently shift every later one).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let mut count = 0;
+        while Self::episode_file(dir, count).exists() {
+            count += 1;
+        }
+        ensure!(count > 0, "no episodes (ep_0.bin ..) under {}", dir.display());
+        Ok(Self { dir: dir.to_path_buf(), count })
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    fn episode_file(dir: &Path, i: usize) -> PathBuf {
+        dir.join(format!("ep_{i}.bin"))
+    }
+}
+
+impl EpisodeStorage for DiskStorage {
+    fn episode(&self, step: usize, _rng: &mut Rng) -> Result<Episode> {
+        let path = Self::episode_file(&self.dir, step % self.count);
+        let buf =
+            std::fs::read(&path).with_context(|| format!("opening {}", path.display()))?;
+        decode_episode(&buf, &path.display().to_string())
+    }
+}
+
+/// Serialize one episode: a `LITEEP1` header line (image size, way,
+/// support/query counts), the query-video ids, then one
+/// `<label> <len>\n` + little-endian f32 payload per support and query
+/// item.
+pub fn encode_episode(ep: &Episode) -> Vec<u8> {
+    use std::fmt::Write as _;
+    let mut out = Vec::new();
+    out.extend_from_slice(
+        format!(
+            "LITEEP1 {} {} {} {}\n",
+            ep.image_size,
+            ep.way,
+            ep.support.len(),
+            ep.query.len()
+        )
+        .as_bytes(),
+    );
+    let mut video = String::from("video");
+    for v in &ep.query_video {
+        let _ = write!(video, " {v}");
+    }
+    video.push('\n');
+    out.extend_from_slice(video.as_bytes());
+    for (x, y) in ep.support.iter().chain(&ep.query) {
+        out.extend_from_slice(format!("{y} {}\n", x.len()).as_bytes());
+        for v in x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Parse a `LITEEP1` episode, validating every header against its
+/// payload — truncation, trailing bytes, and label corruption fail
+/// loudly naming `label` (the source path) instead of feeding garbage
+/// pixels into training.
+pub fn decode_episode(buf: &[u8], label: &str) -> Result<Episode> {
+    let mut pos = 0usize;
+    let header = read_line(buf, &mut pos).with_context(|| format!("{label}: episode header"))?;
+    let mut it = header.split_whitespace();
+    if it.next() != Some("LITEEP1") {
+        bail!("{label}: bad episode magic");
+    }
+    let mut field = |name: &str| -> Result<usize> {
+        it.next()
+            .with_context(|| format!("{label}: missing {name}"))?
+            .parse::<usize>()
+            .with_context(|| format!("{label}: bad {name}"))
+    };
+    let image_size = field("image_size")?;
+    let way = field("way")?;
+    let n_support = field("n_support")?;
+    let n_query = field("n_query")?;
+    ensure!(way > 0, "{label}: way must be positive");
+    let video_line =
+        read_line(buf, &mut pos).with_context(|| format!("{label}: video line"))?;
+    let mut vt = video_line.split_whitespace();
+    ensure!(vt.next() == Some("video"), "{label}: expected the video line");
+    let query_video: Vec<usize> = vt
+        .map(|t| t.parse::<usize>().with_context(|| format!("{label}: bad video id `{t}`")))
+        .collect::<Result<_>>()?;
+    let mut read_item = |kind: &str, k: usize| -> Result<(Vec<f32>, usize)> {
+        let line = read_line(buf, &mut pos)
+            .with_context(|| format!("{label}: {kind} {k}: header"))?;
+        let mut toks = line.split_whitespace();
+        let y: usize = toks
+            .next()
+            .with_context(|| format!("{label}: {kind} {k}: missing label"))?
+            .parse()
+            .with_context(|| format!("{label}: {kind} {k}: bad label"))?;
+        ensure!(y < way, "{label}: {kind} {k}: label {y} out of way {way}");
+        let len: usize = toks
+            .next()
+            .with_context(|| format!("{label}: {kind} {k}: missing length"))?
+            .parse()
+            .with_context(|| format!("{label}: {kind} {k}: bad length"))?;
+        let nbytes = len
+            .checked_mul(4)
+            .with_context(|| format!("{label}: {kind} {k}: length {len} overflows"))?;
+        let end = pos
+            .checked_add(nbytes)
+            .with_context(|| format!("{label}: {kind} {k}: length {len} overflows"))?;
+        let Some(payload) = buf.get(pos..end) else {
+            bail!(
+                "{label}: {kind} {k}: payload truncated (need {nbytes} bytes, {} left)",
+                buf.len().saturating_sub(pos)
+            );
+        };
+        pos = end;
+        Ok((bytes_to_f32(payload)?, y))
+    };
+    let support = (0..n_support).map(|k| read_item("support", k)).collect::<Result<_>>()?;
+    let query = (0..n_query).map(|k| read_item("query", k)).collect::<Result<_>>()?;
+    if pos != buf.len() {
+        bail!("{label}: {} trailing byte(s) after the last item", buf.len() - pos);
+    }
+    Ok(Episode { image_size, way, support, query, query_video })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_episode(scale: f32) -> Episode {
+        Episode {
+            image_size: 2,
+            way: 3,
+            support: vec![
+                (vec![0.5 * scale, -1.0 * scale], 0),
+                (vec![1.5 * scale, 2.0 * scale], 2),
+            ],
+            query: vec![(vec![0.25 * scale, 0.75 * scale], 1)],
+            query_video: vec![7],
+        }
+    }
+
+    fn assert_episodes_equal(a: &Episode, b: &Episode) {
+        assert_eq!(a.image_size, b.image_size);
+        assert_eq!(a.way, b.way);
+        assert_eq!(a.support, b.support);
+        assert_eq!(a.query, b.query);
+        assert_eq!(a.query_video, b.query_video);
+    }
+
+    #[test]
+    fn episode_codec_round_trips() {
+        let ep = toy_episode(1.0);
+        let bytes = encode_episode(&ep);
+        assert_episodes_equal(&decode_episode(&bytes, "t").unwrap(), &ep);
+    }
+
+    #[test]
+    fn episode_codec_rejects_corruption() {
+        let good = encode_episode(&toy_episode(1.0));
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode_episode(&bad, "t").is_err());
+        // Truncated payload.
+        let err = format!("{:#}", decode_episode(&good[..good.len() - 2], "t").unwrap_err());
+        assert!(err.contains("truncated"), "{err}");
+        // Trailing bytes.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0u8; 4]);
+        let err = format!("{:#}", decode_episode(&trailing, "t").unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+        // Out-of-way label.
+        let mut ep = toy_episode(1.0);
+        ep.support[0].1 = 9;
+        let err = format!("{:#}", decode_episode(&encode_episode(&ep), "t").unwrap_err());
+        assert!(err.contains("out of way"), "{err}");
+    }
+
+    #[test]
+    fn memory_and_disk_stores_replay_identically() {
+        let corpus = vec![toy_episode(1.0), toy_episode(2.0), toy_episode(3.0)];
+        let dir =
+            std::env::temp_dir().join(format!("lite_storage_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mem = MemoryStorage::new(corpus.clone()).unwrap();
+        let disk = DiskStorage::materialize(&dir, &corpus).unwrap();
+        let reopened = DiskStorage::open(&dir).unwrap();
+        assert_eq!(reopened.len(), 3);
+        let mut rng = Rng::new(0);
+        // Steps beyond the corpus wrap (step % len) on both stores.
+        for step in [0usize, 1, 2, 3, 7] {
+            let m = mem.episode(step, &mut rng).unwrap();
+            assert_episodes_equal(&m, &corpus[step % 3]);
+            assert_episodes_equal(&disk.episode(step, &mut rng).unwrap(), &m);
+            assert_episodes_equal(&reopened.episode(step, &mut rng).unwrap(), &m);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -202,11 +202,25 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // Training-progress JSON dumps through the background writer
     // ("" = none).
     let progress_out = args.get_str("progress-out", "");
-    // Periodic parameter snapshots through the bounded background
-    // writer (0 = only the final save). IO never blocks training; the
-    // saves are atomic, so a crash mid-write cannot corrupt the
-    // previous checkpoint.
+    // Periodic FULL-STATE snapshots (params + Adam + cursors + best +
+    // loss log) through the bounded background writer (0 = only the
+    // final save). Must be a multiple of --accum; IO never blocks
+    // training, and the saves are atomic, so a crash mid-write cannot
+    // corrupt the previous snapshot.
     let checkpoint_every: usize = args.get("checkpoint-every", 0)?;
+    // Base path for periodic snapshots (each lands at <base>.<step>).
+    // Defaults to <out>.state — deliberately DISTINCT from --out: the
+    // final save holds the best-validation model, while a mid-run
+    // snapshot holds resumable current state, and aliasing the two
+    // made them indistinguishable on disk.
+    let checkpoint_out = args.get_str("checkpoint-out", "");
+    // Rolling snapshot retention (0 = keep all): the writer prunes an
+    // old snapshot only after a newer one safely landed.
+    let keep: usize = args.get("keep", 0)?;
+    // Resume from a full-state snapshot (<base>.<step> file): the
+    // run's config fingerprint must match the snapshot's, and the
+    // result is bitwise-identical to never having stopped.
+    let resume = args.get_str("resume", "");
     let out = args.get_str("out", "");
     args.finish()?;
     anyhow::ensure!(
@@ -226,6 +240,20 @@ fn cmd_train(mut args: Args) -> Result<()> {
     } else {
         out.into()
     };
+    let state_base: std::path::PathBuf = if checkpoint_out.is_empty() {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".state");
+        os.into()
+    } else {
+        checkpoint_out.into()
+    };
+    anyhow::ensure!(
+        state_base != path,
+        "--checkpoint-out must differ from --out ({}): periodic snapshots hold resumable \
+         current state, the final save holds the best-validation model — aliasing them \
+         would overwrite one with the other",
+        path.display()
+    );
     let cfg = TrainConfig {
         episodes,
         accum_period: accum,
@@ -240,7 +268,9 @@ fn cmd_train(mut args: Args) -> Result<()> {
         megabatch,
         progress_path: (!progress_out.is_empty()).then(|| progress_out.clone().into()),
         checkpoint_every,
-        checkpoint_path: (checkpoint_every > 0).then(|| path.clone()),
+        checkpoint_path: (checkpoint_every > 0).then(|| state_base.clone()),
+        keep,
+        resume: (!resume.is_empty()).then(|| resume.clone().into()),
         ..Default::default()
     };
     let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;

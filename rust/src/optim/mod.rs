@@ -27,6 +27,42 @@ impl Adam {
         Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![], v: vec![] }
     }
 
+    /// Optimizer step count so far (bias-correction time). Part of the
+    /// full-state snapshot: restarting Adam at `t = 0` re-applies the
+    /// early-step bias correction and silently diverges the trajectory.
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// The first/second-moment buffers, in learnable-tensor order
+    /// (empty before the first step — they initialize lazily).
+    pub fn moments(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.m, &self.v)
+    }
+
+    /// Reinstall a state captured by [`Adam::t`] / [`Adam::moments`]
+    /// (resume-from-snapshot). The buffers are validated against each
+    /// other here; the caller is responsible for matching them to the
+    /// parameter store they will step (`TrainState` checks names and
+    /// lengths against the learnable tensors before calling this).
+    pub fn restore_state(&mut self, t: u64, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> Result<()> {
+        if m.len() != v.len() {
+            bail!("adam restore: {} m buffers vs {} v buffers", m.len(), v.len());
+        }
+        for (k, (mk, vk)) in m.iter().zip(&v).enumerate() {
+            if mk.len() != vk.len() {
+                bail!("adam restore: moment {k}: m len {} vs v len {}", mk.len(), vk.len());
+            }
+        }
+        if t == 0 && !m.is_empty() {
+            bail!("adam restore: non-empty moments at t = 0");
+        }
+        self.t = t;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// One step over the learnable tensors; `grads` in learnable order.
     pub fn step(&mut self, params: &mut ParamStore, grads: &[Tensor]) -> Result<()> {
         let idx = params.learnable_indices();
@@ -36,6 +72,8 @@ impl Adam {
         if self.m.is_empty() {
             self.m = grads.iter().map(|g| vec![0.0; g.len()]).collect();
             self.v = grads.iter().map(|g| vec![0.0; g.len()]).collect();
+        } else if self.m.len() != grads.len() {
+            bail!("adam: {} moment buffers for {} grads", self.m.len(), grads.len());
         }
         self.t += 1;
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
@@ -350,6 +388,44 @@ mod tests {
         ord.push_at(1, g(&[3.0])).unwrap();
         assert!(ord.flush().unwrap().is_none(), "window of 3 completed at the gap fill");
         assert_eq!(ord.next_index(), 3);
+    }
+
+    #[test]
+    fn adam_state_roundtrip_resumes_bit_identically() {
+        // The resume contract at the optimizer level: snapshot t/m/v
+        // mid-run, rebuild a FRESH Adam from them, and the remaining
+        // steps must land bit-for-bit where the uninterrupted run does.
+        let mk = || {
+            crate::params::ParamStore::from_tensors(
+                vec!["w".into()],
+                vec![Tensor::new(vec![2], vec![1.0, 2.0]).unwrap()],
+            )
+            .unwrap()
+        };
+        let grads = [g(&[0.3, -0.7]), g(&[-0.1, 0.4]), g(&[0.2, 0.2]), g(&[0.05, -0.9])];
+        let mut p_full = mk();
+        let mut full = Adam::new(1e-2);
+        for gr in &grads {
+            full.step(&mut p_full, gr).unwrap();
+        }
+        let mut p_res = mk();
+        let mut first = Adam::new(1e-2);
+        first.step(&mut p_res, &grads[0]).unwrap();
+        first.step(&mut p_res, &grads[1]).unwrap();
+        let (m, v) = first.moments();
+        let (t, m, v) = (first.t(), m.to_vec(), v.to_vec());
+        assert_eq!(t, 2);
+        let mut second = Adam::new(1e-2);
+        second.restore_state(t, m, v).unwrap();
+        second.step(&mut p_res, &grads[2]).unwrap();
+        second.step(&mut p_res, &grads[3]).unwrap();
+        assert_eq!(p_full.get("w").unwrap().data, p_res.get("w").unwrap().data);
+        // Inconsistent snapshots are rejected up front.
+        assert!(Adam::new(1e-2).restore_state(1, vec![vec![0.0]], vec![]).is_err());
+        assert!(Adam::new(1e-2)
+            .restore_state(1, vec![vec![0.0; 2]], vec![vec![0.0; 3]])
+            .is_err());
+        assert!(Adam::new(1e-2).restore_state(0, vec![vec![0.0]], vec![vec![0.0]]).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! optimizer step, overlay, or checkpoint restore.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -219,40 +219,30 @@ impl ParamStore {
     /// (last write wins, as it always did) — give concurrent runs
     /// distinct `--out` paths.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let tmp = tmp_sibling(path);
-        let write_tmp = || -> Result<()> {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            writeln!(f, "LITECKPT1 {}", self.names.len())?;
-            for (name, t) in self.names.iter().zip(&self.tensors) {
-                write!(f, "{} {}", name, t.shape.len())?;
-                for d in &t.shape {
-                    write!(f, " {d}")?;
-                }
-                writeln!(f)?;
-                let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-                f.write_all(&bytes)?;
+        atomic_write(path, &self.to_bytes())
+    }
+
+    /// Serialize to the `LITECKPT1` wire format `save` writes (one
+    /// header line per tensor + raw little-endian f32 payloads). The
+    /// same block embeds inside larger containers — `TrainState`
+    /// serializes its parameter, optimizer, and best-validation
+    /// sections through this exact encoder.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        use std::fmt::Write as _;
+        let mut out = Vec::new();
+        out.extend_from_slice(format!("LITECKPT1 {}\n", self.names.len()).as_bytes());
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            let mut header = format!("{} {}", name, t.shape.len());
+            for d in &t.shape {
+                let _ = write!(header, " {d}");
             }
-            // The rename below is only atomic for data that has reached
-            // the disk.
-            f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
-            Ok(())
-        };
-        if let Err(e) = write_tmp() {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(e);
-        }
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
-        // Best-effort fsync of the parent directory so the rename
-        // itself survives a crash; ignored where a directory cannot be
-        // opened or synced.
-        if let Some(dir) = path.parent() {
-            if let Ok(d) = std::fs::File::open(dir) {
-                let _ = d.sync_all();
+            header.push('\n');
+            out.extend_from_slice(header.as_bytes());
+            for v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        Ok(())
+        out
     }
 
     /// Load a checkpoint written by `save`, overlaying by name onto this
@@ -266,87 +256,31 @@ impl ParamStore {
     /// unchanged (never partially overlaid under a stale cache
     /// version).
     pub fn restore(&mut self, path: &Path) -> Result<usize> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
-        let mut buf = Vec::new();
-        f.read_to_end(&mut buf)?;
+        let buf =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        let label = path.display().to_string();
         let mut pos = 0usize;
-        let header = read_line(&buf, &mut pos)
-            .with_context(|| format!("{}: checkpoint header", path.display()))?;
-        let mut it = header.split_whitespace();
-        if it.next() != Some("LITECKPT1") {
-            bail!("{}: bad checkpoint magic", path.display());
-        }
-        let count: usize = it
-            .next()
-            .with_context(|| format!("{}: missing tensor count", path.display()))?
-            .parse()
-            .with_context(|| format!("{}: bad tensor count", path.display()))?;
-        // Byte ranges, not decoded payloads: pass 2 slices `buf`, so
-        // peak memory stays ~1x the file. No preallocation from the
-        // untrusted `count` — a corrupt header must surface as a parse
-        // error, not an allocator abort.
-        let mut parsed: Vec<(String, Vec<usize>, std::ops::Range<usize>)> = Vec::new();
-        for k in 0..count {
-            let line = read_line(&buf, &mut pos).with_context(|| {
-                format!("{}: tensor {}/{count}: header line", path.display(), k + 1)
-            })?;
-            let mut toks = line.split_whitespace();
-            let name = toks
-                .next()
-                .with_context(|| format!("{}: tensor {}/{count}: missing name", path.display(), k + 1))?
-                .to_string();
-            let ndim: usize = toks
-                .next()
-                .with_context(|| format!("{}: tensor {name}: missing ndim", path.display()))?
-                .parse()
-                .with_context(|| format!("{}: tensor {name}: bad ndim", path.display()))?;
-            let shape: Vec<usize> = (0..ndim)
-                .map(|_| {
-                    toks.next()
-                        .with_context(|| format!("{}: tensor {name}: missing dim", path.display()))?
-                        .parse::<usize>()
-                        .with_context(|| format!("{}: tensor {name}: bad dim", path.display()))
-                })
-                .collect::<Result<_>>()?;
-            // Overflow-checked header->payload accounting: corrupt dims
-            // must produce an error naming the tensor, not a wrapped
-            // length that slices the wrong bytes.
-            let n = shape
-                .iter()
-                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-                .with_context(|| {
-                    format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
-                })?;
-            let nbytes = n.checked_mul(4).with_context(|| {
-                format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
-            })?;
-            let end = pos.checked_add(nbytes).with_context(|| {
-                format!("{}: tensor {name}: shape {shape:?} overflows", path.display())
-            })?;
-            if buf.get(pos..end).is_none() {
-                bail!(
-                    "{}: tensor {name}: payload truncated (need {nbytes} bytes for shape {shape:?}, {} left)",
-                    path.display(),
-                    buf.len().saturating_sub(pos)
-                );
-            }
-            parsed.push((name, shape, pos..end));
-            pos = end;
-        }
+        let parsed = parse_ckpt_block(&buf, &mut pos, &label)?;
         if pos != buf.len() {
             bail!(
-                "{}: {} trailing byte(s) after the last tensor (corrupt or mismatched count)",
-                path.display(),
+                "{label}: {} trailing byte(s) after the last tensor (corrupt or mismatched count)",
                 buf.len() - pos
             );
         }
         // Fully validated: only now overlay onto the live store.
+        self.overlay_parsed(&buf, &parsed)
+    }
+
+    /// Overlay fully-parsed checkpoint tensors onto this store by
+    /// name + shape (pass 2 of `restore`, also the landing step for the
+    /// parameter sections of a `TrainState` snapshot). Returns the
+    /// number of tensors copied; bumps the cache version when > 0.
+    pub fn overlay_parsed(&mut self, buf: &[u8], parsed: &[CkptTensor]) -> Result<usize> {
         let mut restored = 0;
         for (name, shape, range) in parsed {
-            if let Some(&i) = self.index.get(&name) {
-                if self.tensors[i].shape == shape {
-                    self.tensors[i] = Tensor::new(shape, bytes_to_f32(&buf[range])?)?;
+            if let Some(&i) = self.index.get(name) {
+                if self.tensors[i].shape == *shape {
+                    self.tensors[i] = Tensor::new(shape.clone(), bytes_to_f32(&buf[range.clone()])?)?;
                     restored += 1;
                 }
             }
@@ -358,6 +292,115 @@ impl ParamStore {
     }
 }
 
+/// One parsed checkpoint tensor: name, shape, and the payload's byte
+/// range in the source buffer (ranges instead of decoded floats keep
+/// peak memory ~1x the file during validation).
+pub type CkptTensor = (String, Vec<usize>, std::ops::Range<usize>);
+
+/// Parse one `LITECKPT1` block starting at `*pos`, advancing `*pos`
+/// past it. Every tensor's payload length is validated against its
+/// header dims before anything is sliced — a truncated or corrupt
+/// block fails loudly, naming the offending tensor and `label` (the
+/// source path), instead of short-reading into garbage. Containers
+/// embedding several blocks (`TrainState`) call this per section; the
+/// caller owns the trailing-bytes check.
+pub fn parse_ckpt_block(buf: &[u8], pos: &mut usize, label: &str) -> Result<Vec<CkptTensor>> {
+    let header =
+        read_line(buf, pos).with_context(|| format!("{label}: checkpoint header"))?;
+    let mut it = header.split_whitespace();
+    if it.next() != Some("LITECKPT1") {
+        bail!("{label}: bad checkpoint magic");
+    }
+    let count: usize = it
+        .next()
+        .with_context(|| format!("{label}: missing tensor count"))?
+        .parse()
+        .with_context(|| format!("{label}: bad tensor count"))?;
+    // No preallocation from the untrusted `count` — a corrupt header
+    // must surface as a parse error, not an allocator abort.
+    let mut parsed: Vec<CkptTensor> = Vec::new();
+    for k in 0..count {
+        let line = read_line(buf, pos)
+            .with_context(|| format!("{label}: tensor {}/{count}: header line", k + 1))?;
+        let mut toks = line.split_whitespace();
+        let name = toks
+            .next()
+            .with_context(|| format!("{label}: tensor {}/{count}: missing name", k + 1))?
+            .to_string();
+        let ndim: usize = toks
+            .next()
+            .with_context(|| format!("{label}: tensor {name}: missing ndim"))?
+            .parse()
+            .with_context(|| format!("{label}: tensor {name}: bad ndim"))?;
+        let shape: Vec<usize> = (0..ndim)
+            .map(|_| {
+                toks.next()
+                    .with_context(|| format!("{label}: tensor {name}: missing dim"))?
+                    .parse::<usize>()
+                    .with_context(|| format!("{label}: tensor {name}: bad dim"))
+            })
+            .collect::<Result<_>>()?;
+        // Overflow-checked header->payload accounting: corrupt dims
+        // must produce an error naming the tensor, not a wrapped
+        // length that slices the wrong bytes.
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| format!("{label}: tensor {name}: shape {shape:?} overflows"))?;
+        let nbytes = n
+            .checked_mul(4)
+            .with_context(|| format!("{label}: tensor {name}: shape {shape:?} overflows"))?;
+        let end = pos
+            .checked_add(nbytes)
+            .with_context(|| format!("{label}: tensor {name}: shape {shape:?} overflows"))?;
+        if buf.get(*pos..end).is_none() {
+            bail!(
+                "{label}: tensor {name}: payload truncated (need {nbytes} bytes for shape {shape:?}, {} left)",
+                buf.len().saturating_sub(*pos)
+            );
+        }
+        parsed.push((name, shape, *pos..end));
+        *pos = end;
+    }
+    Ok(parsed)
+}
+
+/// Crash-safe whole-file write: `bytes` go to `<path>.tmp`, are
+/// fsynced, then renamed into place (with a best-effort parent-dir
+/// sync). A crash (or `kill -9`) at any point leaves at worst a stale
+/// tmp file — never a truncated file at `path`, and an existing file
+/// there survives a failed rewrite untouched. The guarantee is per
+/// writer: concurrent processes writing the SAME path share the tmp
+/// name and race the rename (last write wins) — give concurrent runs
+/// distinct paths.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    let write_tmp = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        // The rename below is only atomic for data that has reached
+        // the disk.
+        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+        Ok(())
+    };
+    if let Err(e) = write_tmp() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    // Best-effort fsync of the parent directory so the rename itself
+    // survives a crash; ignored where a directory cannot be opened or
+    // synced.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
 /// `<path>.tmp` — the sibling scratch file `save` writes before the
 /// atomic rename (same directory, so the rename never crosses a
 /// filesystem boundary).
@@ -367,7 +410,7 @@ fn tmp_sibling(path: &Path) -> std::path::PathBuf {
     std::path::PathBuf::from(os)
 }
 
-fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
+pub(crate) fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
     if bytes.len() % 4 != 0 {
         bail!("byte length {} not a multiple of 4", bytes.len());
     }
@@ -454,7 +497,7 @@ mod tests {
     // on it.
 }
 
-fn read_line(buf: &[u8], pos: &mut usize) -> Result<String> {
+pub(crate) fn read_line(buf: &[u8], pos: &mut usize) -> Result<String> {
     let start = *pos;
     while *pos < buf.len() && buf[*pos] != b'\n' {
         *pos += 1;

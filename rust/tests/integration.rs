@@ -7,10 +7,13 @@
 
 use lite::bench::scenarios::{run_filtered, Knobs};
 use lite::coordinator::{
-    batch, meta_train, pretrain_backbone, BackgroundWriter, FineTuner, MetaLearner, TrainConfig,
+    batch, episode_rng, generator_seed, meta_train, meta_train_storage, pretrain_backbone,
+    snapshot_path, BackgroundWriter, FineTuner, MetaLearner, TrainConfig, TrainState,
 };
 use lite::data::orbit::{OrbitSim, VideoMode};
-use lite::data::{md_suite, sample_episode, EpisodeConfig, Rng};
+use lite::data::{
+    md_suite, sample_episode, DiskStorage, EpisodeConfig, EpisodeStorage, MemoryStorage, Rng,
+};
 use lite::eval::{eval_dataset, par_eval_dataset, score_episode, EvalConfig, Predictor};
 use lite::optim::{Adam, GradAccum};
 use lite::params::ParamStore;
@@ -353,19 +356,21 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     let Some(_) = engine_opt() else { return };
     // cache-efficiency serially + eval-throughput across 1 vs 2 workers
     // + train-throughput across 1 vs 2 training workers +
+    // resume-fidelity across its snapshot boundaries +
     // shard-throughput across 1 vs 2 engine shards +
     // dispatch-throughput across direct vs pipelined dispatch +
     // megabatch-throughput across unfused vs width-2 fusion (each
     // run_filtered call loads its own engine, like the CLI).
     let knobs = Knobs::parse(
         "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2,\
+         resume-episodes=4,resume-checkpoint-every=2,resume-workers=2,\
          shard-bench-episodes=3,shard-sweep=1,2,shard-eval-episodes=2,\
          dispatch-bench-episodes=3,dispatch-eval-episodes=2,megabatch-bench-episodes=3",
     )
     .unwrap();
     let a = run_filtered("runtime", &knobs, 5).unwrap();
     let b = run_filtered("runtime", &knobs, 5).unwrap();
-    assert_eq!(a.reports.len(), 6);
+    assert_eq!(a.reports.len(), 7);
     assert_eq!(b.reports.len(), a.reports.len());
     for (x, y) in a.reports.iter().zip(&b.reports) {
         assert_eq!(
@@ -383,6 +388,12 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     let tt = a.get("train-throughput").unwrap();
     assert_eq!(tt.get_metric("train_parallel_bit_identical").unwrap().value, 1.0);
     assert!(tt.get_metric("serial_param_cache_hit_rate").unwrap().value > 0.0);
+    // ...the checkpoint lifecycle resumed from every mid-run snapshot
+    // boundary to a bitwise-identical run, and rolling retention kept
+    // exactly the newest snapshot...
+    let rf = a.get("resume-fidelity").unwrap();
+    assert_eq!(rf.get_metric("resume_bit_identical").unwrap().value, 1.0);
+    assert_eq!(rf.get_metric("retention_newest_only").unwrap().value, 1.0);
     // ...the engine-shard sweep agreed with serial on BOTH the training
     // trajectory and the eval metrics (the multi-engine contract)...
     let st = a.get("shard-throughput").unwrap();
@@ -875,13 +886,14 @@ fn background_writer_preserves_checkpoint_crash_safety() {
 
 #[test]
 fn meta_train_checkpoints_asynchronously() {
-    // TrainConfig.checkpoint_every hands snapshots to the background
-    // writer at the due steps; with episodes % accum == 0 and no
-    // validation-best override, the last snapshot IS the final
-    // parameters, so the file must restore to exactly them.
+    // TrainConfig.checkpoint_every hands FULL TrainState snapshots to
+    // the background writer at the due window boundaries, step-stamped
+    // `<base>.<next_step>`; with episodes % accum == 0 and no
+    // validation-best override, the last snapshot's parameters ARE the
+    // final parameters, and its log is the run's log.
     let Some(e) = engine_opt() else { return };
     let dir = ckpt_dir("async_train");
-    let path = dir.join("periodic.ckpt");
+    let base = dir.join("periodic.state");
     let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
     let cfg = TrainConfig {
         episodes: 4,
@@ -891,24 +903,230 @@ fn meta_train_checkpoints_asynchronously() {
         log_every: 0,
         episode_cfg: EpisodeConfig::train_default(),
         checkpoint_every: 2,
-        checkpoint_path: Some(path.clone()),
+        checkpoint_path: Some(base.clone()),
         ..Default::default()
     };
-    meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
-    assert!(path.exists(), "periodic checkpoint missing after the run-exit join");
-    assert!(!dir.join("periodic.ckpt.tmp").exists());
-    let mut restored = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
-    let n = restored.params.restore(&path).unwrap();
-    assert_eq!(n, restored.params.names().len());
+    let logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+    for step in [2usize, 4] {
+        assert!(
+            snapshot_path(&base, step).exists(),
+            "snapshot at step {step} missing after the run-exit join"
+        );
+        assert!(!dir.join(format!("periodic.state.{step}.tmp")).exists());
+    }
+    let snap = TrainState::load(&snapshot_path(&base, 4)).unwrap();
+    assert_eq!(snap.next_step, 4);
+    assert_eq!(snap.logs, logs, "last snapshot must carry the full loss log");
     assert_eq!(
-        restored.params.tensors(),
+        snap.params.tensors(),
         learner.params.tensors(),
         "last periodic snapshot must match the final parameters"
     );
-    // Misconfiguration fails loudly before training starts.
-    let bad = TrainConfig { checkpoint_every: 1, checkpoint_path: None, ..cfg };
+    // Misconfigurations fail loudly before training starts: a missing
+    // base path, a snapshot cadence off the accumulation-window grid,
+    // and retention with nothing to retain.
+    let bad = TrainConfig { checkpoint_every: 2, checkpoint_path: None, ..cfg.clone() };
     let err = meta_train(&e, &mut learner, &md_suite(), &bad).unwrap_err().to_string();
     assert!(err.contains("checkpoint_path"), "{err}");
+    let bad = TrainConfig { checkpoint_every: 3, ..cfg.clone() };
+    let err = meta_train(&e, &mut learner, &md_suite(), &bad).unwrap_err().to_string();
+    assert!(err.contains("multiple of the accumulation"), "{err}");
+    let bad = TrainConfig { checkpoint_every: 0, checkpoint_path: None, keep: 1, ..cfg };
+    let err = meta_train(&e, &mut learner, &md_suite(), &bad).unwrap_err().to_string();
+    assert!(err.contains("keep"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_resume_bit_identical_composed() {
+    // The checkpoint-lifecycle tentpole, in anger, across >= 2 seeds:
+    // crash at ANY snapshot boundary -> restart with `resume` -> final
+    // parameters AND loss log bitwise-identical to the uninterrupted
+    // run, with the resumed leg composed with workers=2 + shards=2 +
+    // dispatch=1 (and megabatch=2 when the fused artifact exists) —
+    // resuming may change the execution strategy, never the numbers.
+    let Some(e) = engine_opt() else { return };
+    let megabatch_ok = {
+        let probe = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+        probe.megatrain_artifact(&e, 2).is_ok()
+    };
+    let dir = ckpt_dir("resume");
+    for seed in [11u64, 29] {
+        let base = dir.join(format!("s{seed}.state"));
+        let cfg = TrainConfig {
+            episodes: 6,
+            accum_period: 2,
+            lr: 1e-3,
+            seed,
+            log_every: 0,
+            episode_cfg: EpisodeConfig::train_default(),
+            validate_every: 2,
+            validate_episodes: 1,
+            ..Default::default()
+        };
+        // Uninterrupted serial reference.
+        let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+        let ref_logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+        let ref_params = learner.params.tensors().to_vec();
+        // Snapshotting itself must not perturb the trajectory.
+        let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+        let ckpt_cfg =
+            TrainConfig { checkpoint_every: 2, checkpoint_path: Some(base.clone()), ..cfg.clone() };
+        let logs = meta_train(&e, &mut learner, &md_suite(), &ckpt_cfg).unwrap();
+        assert_eq!(ref_logs, logs, "seed {seed}: snapshotting perturbed the loss curve");
+        assert_eq!(
+            ref_params,
+            learner.params.tensors(),
+            "seed {seed}: snapshotting perturbed the final parameters"
+        );
+        // Re-enter from EVERY mid-run boundary (the crash could have
+        // happened at either), under the full parallel stack.
+        let sharded = ShardedEngine::load(e.dir(), 2).unwrap();
+        for b in [2usize, 4] {
+            let mut learner =
+                MetaLearner::new(sharded.primary(), "protonet", 32, None, Some(40), 64).unwrap();
+            let resume_cfg = TrainConfig {
+                workers: 2,
+                shards: 2,
+                dispatch: 1,
+                megabatch: if megabatch_ok { 2 } else { 1 },
+                resume: Some(snapshot_path(&base, b)),
+                ..cfg.clone()
+            };
+            let logs = meta_train(&sharded, &mut learner, &md_suite(), &resume_cfg).unwrap();
+            assert_eq!(ref_logs, logs, "seed {seed} resume@{b}: loss log diverged");
+            assert_eq!(
+                ref_params,
+                learner.params.tensors(),
+                "seed {seed} resume@{b}: final parameters diverged"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_retention_keeps_newest_snapshot_only() {
+    // keep=1 rolling retention: each older snapshot is pruned only
+    // after its successor safely landed, so the run ends with exactly
+    // the newest snapshot on disk — still loadable and carrying the
+    // final state. (The survives-a-failed-save half of the guarantee
+    // is pinned by the writer's own unit test, which needs no engine.)
+    let Some(e) = engine_opt() else { return };
+    let dir = ckpt_dir("retention");
+    let base = dir.join("rolling.state");
+    let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let cfg = TrainConfig {
+        episodes: 6,
+        accum_period: 2,
+        lr: 1e-3,
+        seed: 5,
+        log_every: 0,
+        episode_cfg: EpisodeConfig::train_default(),
+        checkpoint_every: 2,
+        checkpoint_path: Some(base.clone()),
+        keep: 1,
+        ..Default::default()
+    };
+    meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+    for old in [2usize, 4] {
+        assert!(!snapshot_path(&base, old).exists(), "snapshot {old} survived keep=1");
+    }
+    let newest = snapshot_path(&base, 6);
+    assert!(newest.exists(), "newest snapshot missing under keep=1");
+    let snap = TrainState::load(&newest).unwrap();
+    assert_eq!(snap.next_step, 6);
+    assert_eq!(snap.params.tensors(), learner.params.tensors());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_resume_rejects_fingerprint_mismatch() {
+    // A snapshot from a different run configuration must be rejected
+    // BEFORE anything is mutated: parameters, optimizer, and the
+    // store's literal-cache version are untouched after the failure.
+    let Some(e) = engine_opt() else { return };
+    let dir = ckpt_dir("fingerprint");
+    let base = dir.join("fp.state");
+    let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let cfg = TrainConfig {
+        episodes: 4,
+        accum_period: 2,
+        lr: 1e-3,
+        seed: 3,
+        log_every: 0,
+        episode_cfg: EpisodeConfig::train_default(),
+        checkpoint_every: 2,
+        checkpoint_path: Some(base.clone()),
+        ..Default::default()
+    };
+    meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+    let snap = snapshot_path(&base, 2);
+    let clean = TrainConfig { checkpoint_every: 0, checkpoint_path: None, ..cfg };
+    // A different seed and a different accumulation period: both are
+    // fingerprinted, so both resumes must fail loudly.
+    for bad in [
+        TrainConfig { seed: 4, resume: Some(snap.clone()), ..clean.clone() },
+        TrainConfig { accum_period: 4, resume: Some(snap.clone()), ..clean.clone() },
+    ] {
+        let mut fresh = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+        let before = fresh.params.tensors().to_vec();
+        let v = fresh.params.version();
+        let err = format!("{:#}", meta_train(&e, &mut fresh, &md_suite(), &bad).unwrap_err());
+        assert!(err.contains("fingerprint"), "{err}");
+        assert_eq!(fresh.params.tensors(), &before[..], "failed resume mutated the store");
+        assert_eq!(fresh.params.version(), v, "failed resume bumped the cache version");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn storage_backends_bit_identical_to_synthesis() {
+    // The storage plane: pre-materializing a run's episode stream out
+    // of band (via the exported generator_seed/episode_rng derivation)
+    // and replaying it from memory or disk must reproduce the
+    // on-demand synthesis run bit for bit — loss curve and final
+    // parameters — through the same producer-pool prefetcher.
+    let Some(e) = engine_opt() else { return };
+    let (seed, episodes) = (17u64, 5usize);
+    let suite = md_suite();
+    let ep_cfg = EpisodeConfig::train_default();
+    // The exact closure `meta_train` feeds the pipeline.
+    let synth = |rng: &mut Rng| {
+        let d = &suite[rng.below(suite.len())];
+        sample_episode(d, &ep_cfg, rng, 32)
+    };
+    let cfg = TrainConfig {
+        episodes,
+        accum_period: 2,
+        lr: 1e-3,
+        seed,
+        log_every: 0,
+        episode_cfg: ep_cfg,
+        validate_every: 2,
+        validate_episodes: 1,
+        workers: 2,
+        ..Default::default()
+    };
+    let run = |storage: &dyn EpisodeStorage| {
+        let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+        let logs = meta_train_storage(&e, &mut learner, &cfg, storage, &synth).unwrap();
+        (logs, learner.params.tensors().to_vec())
+    };
+    let mut learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let ref_logs = meta_train(&e, &mut learner, &md_suite(), &cfg).unwrap();
+    let ref_params = learner.params.tensors().to_vec();
+    let corpus: Vec<_> =
+        (0..episodes).map(|s| synth(&mut episode_rng(generator_seed(seed), s))).collect();
+    let (mem_logs, mem_params) = run(&MemoryStorage::new(corpus.clone()).unwrap());
+    assert_eq!(ref_logs, mem_logs, "memory-backed loss curve diverged");
+    assert_eq!(ref_params, mem_params, "memory-backed final parameters diverged");
+    let dir = ckpt_dir("storage");
+    let disk = DiskStorage::materialize(&dir.join("eps"), &corpus).unwrap();
+    assert_eq!(disk.len(), episodes);
+    let (disk_logs, disk_params) = run(&disk);
+    assert_eq!(ref_logs, disk_logs, "disk-backed loss curve diverged");
+    assert_eq!(ref_params, disk_params, "disk-backed final parameters diverged");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -141,6 +141,34 @@ if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
     else
         echo "megabatch-throughput fusion gates skipped (no megatrain artifact; rerun \`make artifacts\`)"
     fi
+
+    # Checkpoint-lifecycle gate: same shape once more (a deterministic
+    # resume divergence would self-compare clean, so the identity
+    # metrics are asserted directly) — crash->resume bit-identity from
+    # every snapshot boundary plus keep=N rolling retention.
+    "./$BIN" bench run --filter resume-fidelity --seed 7 --json "$OUT/resume_base.json"
+    "./$BIN" bench run --filter resume-fidelity --seed 7 --json "$OUT/resume_cand.json"
+    "./$BIN" bench compare "$OUT/resume_base.json" "$OUT/resume_cand.json" --tolerance-pct 0
+    for m in resume_bit_identical retention_newest_only; do
+        if ! grep -A1 "\"$m\"" "$OUT/resume_cand.json" | grep -q '"value": 1'; then
+            echo "error: $m != 1 (resumed run diverged from uninterrupted, or retention broke)"
+            exit 1
+        fi
+    done
+    echo "resume-fidelity gate OK (resume bit-identity = 1; retention keeps newest only)"
+
+    # CLI kill-and-resume smoke: train with periodic full-state
+    # snapshots, pretend the process died right after the mid-run
+    # snapshot landed, restart with --resume, and require the final
+    # saved parameters to be byte-identical to the uninterrupted run.
+    "./$BIN" train --episodes 4 --accum 2 --seed 7 --validate-every 2 \
+        --checkpoint-every 2 --checkpoint-out "$OUT/run.state" --out "$OUT/full.ckpt"
+    [ -f "$OUT/run.state.2" ] || { echo "error: mid-run snapshot run.state.2 missing"; exit 1; }
+    "./$BIN" train --episodes 4 --accum 2 --seed 7 --validate-every 2 \
+        --resume "$OUT/run.state.2" --out "$OUT/resumed.ckpt"
+    cmp "$OUT/full.ckpt" "$OUT/resumed.ckpt" \
+        || { echo "error: resumed run's final checkpoint differs from the uninterrupted run"; exit 1; }
+    echo "CLI resume smoke OK (resumed run reproduced the final checkpoint byte for byte)"
 else
-    echo "train/shard/dispatch/megabatch-throughput gates skipped (no AOT artifacts; run \`make artifacts\`)"
+    echo "train/shard/dispatch/megabatch/resume gates skipped (no AOT artifacts; run \`make artifacts\`)"
 fi
