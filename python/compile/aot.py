@@ -59,16 +59,21 @@ def param_group(spec) -> str | None:
 def build_spec(spec):
     """-> (fn, data_specs, out_names) for any artifact kind.
 
-    ``megatrain`` is handled centrally so no model module knows about
-    fusion: the base train graph is built once from the same spec with
-    ``kind="train"``, then wrapped ``extra["fuse"]`` times slot-major
-    (``common.fuse_train``). Everything downstream — lowering, manifest
-    emission, param groups — treats the fused fn like any other.
+    The ``mega*`` kinds are handled centrally so no model module knows
+    about fusion: the base graph is built once from the same spec with
+    the unfused kind (``megatrain`` -> ``train``, ``megaclassify`` ->
+    ``classify``), then wrapped ``extra["fuse"]`` times slot-major
+    (``common.fuse_train`` — generic over any tuple-returning
+    ``(params, *data)`` step, which every base fn is). Everything
+    downstream — lowering, manifest emission, param groups — treats the
+    fused fn like any other. ``megaclassify`` is the serving layer's
+    cross-USER batch: ``width`` query batches, each classified against
+    its own slot's adapted task state, in one device dispatch.
     """
     module = module_for(spec.model)
-    if spec.kind == "megatrain":
+    if spec.kind in ("megatrain", "megaclassify"):
         width = int(spec.extra["fuse"])
-        base = dataclasses.replace(spec, kind="train")
+        base = dataclasses.replace(spec, kind=spec.kind[len("mega"):])
         base_fn, base_specs = module.build(base)
         fn = models_common.fuse_train(base_fn, len(base_specs), width)
         data_specs = models_common.fused_data_specs(base_specs, width)

@@ -110,6 +110,17 @@ def _megatrain(model: str, size: int, geom: Geometry, width: int, extra: dict | 
     )
 
 
+def _megaclassify(model: str, size: int, tg: TestGeometry, width: int) -> ArtifactSpec:
+    return ArtifactSpec(
+        name=f"{model}_{size}_{tg.tag()}_mega{width}_classify",
+        model=model,
+        kind="megaclassify",
+        image_size=size,
+        test_geom=tg,
+        extra=dict(fuse=width),
+    )
+
+
 def _adapt_classify(model: str, size: int, tg: TestGeometry) -> list:
     return [
         ArtifactSpec(
@@ -150,6 +161,14 @@ def registry() -> list:
                 specs.append(_megatrain(model, size, TRAIN_GEOM, w))
             specs += _adapt_classify(model, size, TEST_GEOM)
             specs += _adapt_classify(model, size, ORBIT_TEST_GEOM)
+            # Serving-side cross-user fusion: W classify calls, each
+            # against its own slot's adapted state, in one dispatch
+            # (`lite serve`'s micro-batcher; MAML adapts per-user
+            # parameter trees too large to pin at scale, so only the
+            # amortized-adaptation meta-learners get fused classify).
+            for tg in (TEST_GEOM, ORBIT_TEST_GEOM):
+                for w in MEGA_WIDTHS:
+                    specs.append(_megaclassify(model, size, tg, w))
         # First-order MAML baseline (no LITE; inner loop in-graph). h=0
         # geometry => a single full support buffer, no LITE split.
         maml_geom = Geometry(way=WAY, n_support=TRAIN_GEOM.n_support, h=0, mb=TRAIN_GEOM.mb)

@@ -153,6 +153,9 @@ pub(crate) fn stats_delta(before: &EngineStats, after: &EngineStats) -> EngineSn
         param_cache_hits: (after.param_cache_hits - before.param_cache_hits) as u64,
         data_literal_builds: (after.data_literal_builds - before.data_literal_builds) as u64,
         data_cache_hits: (after.data_cache_hits - before.data_cache_hits) as u64,
+        resident_hits: (after.resident_hits - before.resident_hits) as u64,
+        resident_misses: (after.resident_misses - before.resident_misses) as u64,
+        resident_evictions: (after.resident_evictions - before.resident_evictions) as u64,
         compile_secs: after.compile_secs - before.compile_secs,
         execute_secs: after.execute_secs - before.execute_secs,
         transfer_secs: after.transfer_secs - before.transfer_secs,

@@ -13,14 +13,16 @@
 use anyhow::{bail, Context, Result};
 
 use crate::bench::{ablation_report, hsweep_report, orbit_report, stats_delta, vtab_report};
-use crate::coordinator::{meta_train, MetaLearner, TrainConfig, TrainLog};
+use crate::coordinator::{meta_train, MetaLearner, TaskState, TrainConfig, TrainLog};
+use crate::data::orbit::{OrbitSim, VideoMode};
 use crate::data::registry::md_suite;
 use crate::data::rng::Rng;
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
-use crate::eval::{adapt_cost, par_eval_dataset, EvalConfig, EvalSummary, Predictor};
+use crate::eval::{adapt_cost, par_eval_dataset, percentiles, EvalConfig, EvalSummary, Predictor};
 use crate::memory::{mib, peak_bytes, Mode};
 use crate::report::{Direction, RunReport, ScenarioReport, Table};
-use crate::runtime::{Engine, EngineShards, ShardView};
+use crate::runtime::{DataLiterals, Engine, EngineShards, ResidencyCache, ShardView};
+use crate::tensor::Tensor;
 use crate::util::{fmt_macs, parse_usize_list, timed};
 
 /// Ordered string config knobs (`key=value`): the scenario-facing
@@ -172,6 +174,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(ShardThroughput),
         Box::new(DispatchThroughput),
         Box::new(MegabatchThroughput),
+        Box::new(ServeLatency),
         Box::new(GradcheckRmse),
         Box::new(Orbit),
         Box::new(Vtab),
@@ -498,6 +501,23 @@ impl Scenario for EvalThroughput {
             rep.timing(&format!("wall_secs_w{w}"), secs);
         }
         rep.tables.push(table);
+        // Per-episode latency distribution: a serial pass over the
+        // same dataset, timed episode by episode and folded through the
+        // shared nearest-rank percentile helper — the same definition
+        // `serve-latency` reports, so tail latencies are comparable
+        // across the two reports. Timings, not metrics: wall-clock is
+        // not a determinism surface.
+        let mut samples = Vec::with_capacity(episodes);
+        for i in 0..episodes {
+            let ep = sample_episode(ds, &cfg, &mut Rng::new(seed + 1).split(i as u64), size);
+            let (res, secs) = timed(|| learner.predict_episode(engine, &ep));
+            res?;
+            samples.push(secs);
+        }
+        let (p50, p95, p99) = percentiles(&samples);
+        rep.timing("episode_p50_secs", p50);
+        rep.timing("episode_p95_secs", p95);
+        rep.timing("episode_p99_secs", p99);
         if let Some(r) = &reference {
             // Prefixed by the actual reference worker count — calling
             // it "serial" would lie whenever the sweep doesn't start
@@ -1284,6 +1304,67 @@ impl Scenario for MegabatchThroughput {
                 Direction::Info,
             );
         }
+        // `--megabatch auto` entry: the same training run with the
+        // fusion width resolved per accumulation window (largest
+        // manifest width dividing the window's batch count) instead of
+        // fixed. Skipped loudly when the manifest ships no fused train
+        // artifacts — auto could then only replay the reference entry
+        // and its gates would be vacuous.
+        if learner.megatrain_widths(engine).is_empty() {
+            eprintln!(
+                "[bench] megabatch-throughput: no fused train artifacts in the \
+                 manifest; skipping the `auto` entry"
+            );
+        } else if let Some((ref_logs, ref_params)) = &reference {
+            learner.params = init.clone();
+            let cfg = TrainConfig {
+                episodes,
+                accum_period: accum,
+                lr: 1e-3,
+                seed: seed + 1,
+                log_every: 0,
+                episode_cfg: EpisodeConfig::train_default(),
+                validate_every: 2,
+                validate_episodes: 1,
+                workers: 1,
+                shards: 1,
+                dispatch: 1,
+                megabatch_auto: true,
+                ..Default::default()
+            };
+            let sa0 = engine.stats();
+            let (res, secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
+            let logs = res?;
+            let sa1 = engine.stats();
+            let execs = sa1.executions - sa0.executions;
+            let same = *ref_logs == logs && learner.params.tensors() == &ref_params[..];
+            table.row(vec![
+                "auto".into(),
+                format!("{:.2}", episodes as f64 / secs.max(1e-9)),
+                format!("{:.4}", logs.last().map_or(f64::NAN, |l| l.loss as f64)),
+                if same { "yes".into() } else { "NO".into() },
+                execs.to_string(),
+                (sa1.data_literal_builds - sa0.data_literal_builds).to_string(),
+                (sa1.data_cache_hits - sa0.data_cache_hits).to_string(),
+            ]);
+            rep.timing("train_wall_secs_auto", secs);
+            rep.metric("executions_auto", execs as f64, Direction::Info);
+            rep.metric(
+                "megabatch_auto_bit_identical",
+                if same { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            // Auto can never run MORE executions than the unfused
+            // reference: a fused window runs fewer, a window no width
+            // divides runs exactly the unfused count.
+            if sweep[0] == 1 {
+                rep.metric(
+                    "megabatch_auto_no_more_executions",
+                    if execs <= execs_per_entry[0] { 1.0 } else { 0.0 },
+                    Direction::Higher,
+                );
+            }
+        }
         rep.tables.push(table);
         // Only claim the contracts when a fused-vs-serial comparison
         // actually ran (cf. the other throughput scenarios' vacuity
@@ -1309,6 +1390,256 @@ impl Scenario for MegabatchThroughput {
                 Direction::Higher,
             );
         }
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// Adapt a user on first contact and pin the result: a residency hit
+/// just bumps the counters; a miss runs the full adapt forward and
+/// inserts the prepared state through `insert_with` (construct first,
+/// so a failed adapt leaves the cache untouched), folding the
+/// hit/miss/eviction counts into the engine stats the report gates.
+fn ensure_resident(
+    learner: &MetaLearner,
+    engine: &Engine,
+    cache: &mut ResidencyCache<(TaskState, DataLiterals)>,
+    ep: &Episode,
+    key: &str,
+) -> Result<()> {
+    if cache.contains(key) {
+        engine.note_residency(1, 0, 0);
+        return Ok(());
+    }
+    let evicted = cache.insert_with(key, || {
+        let (state, prepared) = learner.prepare_adapted(engine, ep)?;
+        let bytes = state.bytes();
+        Ok(((state, prepared), bytes))
+    })?;
+    engine.note_residency(0, 1, evicted.len());
+    Ok(())
+}
+
+/// Online personalization serving, as a gate: adapt once per user,
+/// pin the adapted state as resident prepared literals in the
+/// byte-budgeted LRU, and serve repeated queries from the resident
+/// entry. Gates (a) cached == fresh-recompute logit bit-identity (the
+/// residency cache must be a pure latency optimization), and (b)
+/// fused cross-user batching == per-user sequential bit-identity in
+/// strictly FEWER device executions (the cross-user half of the
+/// tentpole). Adapt and cached-query latency distributions are
+/// reported as p50/p95/p99 timings (timings never gate). Everything
+/// runs serially on one engine, so every counter in the payload is
+/// deterministic and gateable.
+struct ServeLatency;
+
+impl Scenario for ServeLatency {
+    fn name(&self) -> &'static str {
+        "serve-latency"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["runtime"]
+    }
+    fn about(&self) -> &'static str {
+        "per-user adapt/query latency percentiles + cached and batched bit-identity"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`serve-*`): the knob namespace is
+        // shared across every scenario in one `bench run`. 3 users at
+        // fuse width 2 leaves a single-slot tail chunk, so the fused
+        // pass exercises padding alongside a full dispatch.
+        let users: usize = knobs.get("serve-users", 3)?;
+        let queries: usize = knobs.get("serve-queries", 2)?;
+        let budget_mb: usize = knobs.get("serve-budget-mb", 64)?;
+        let width: usize = knobs.get("serve-width", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        if users == 0 || queries == 0 {
+            bail!("serve-users and serve-queries must be >= 1");
+        }
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("serve-users", users);
+        rep.config("serve-queries", queries);
+        rep.config("serve-budget-mb", budget_mb);
+        rep.config("serve-width", width);
+        rep.config("image-size", size);
+
+        let learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        let mq = learner.test_geom.as_ref().context("model has no test geometry")?.mq;
+        // The same per-user episode derivation as `lite serve`'s sim
+        // requests, so the scenario measures the shapes the server
+        // actually sees.
+        let sim = OrbitSim::new(seed, users);
+        let episodes: Vec<Episode> = (0..users)
+            .map(|u| {
+                sim.user_episode(
+                    u,
+                    VideoMode::Clean,
+                    &mut Rng::new(seed).split(u as u64 + 1),
+                    size,
+                    2,
+                    1,
+                    2,
+                )
+            })
+            .collect();
+        let ranges: Vec<std::ops::Range<usize>> =
+            episodes.iter().map(|ep| 0..ep.query.len().min(mq)).collect();
+        let s0 = engine.stats();
+        let mut cache: ResidencyCache<(TaskState, DataLiterals)> =
+            ResidencyCache::new(budget_mb << 20);
+
+        // First requests: adapt once per user and pin the state.
+        let mut adapt_secs = Vec::with_capacity(users);
+        for (u, ep) in episodes.iter().enumerate() {
+            let key = format!("user-{u}");
+            let (res, secs) = timed(|| ensure_resident(&learner, engine, &mut cache, ep, &key));
+            res?;
+            adapt_secs.push(secs);
+        }
+
+        // Repeat requests: served from the resident entry — only the
+        // query batch marshals per request.
+        let mut query_secs = Vec::with_capacity(users * queries);
+        let mut cached: Vec<Tensor> = Vec::with_capacity(users);
+        for (u, ep) in episodes.iter().enumerate() {
+            let key = format!("user-{u}");
+            let mut last = None;
+            for _ in 0..queries {
+                let (res, secs) = timed(|| -> Result<Tensor> {
+                    ensure_resident(&learner, engine, &mut cache, ep, &key)?;
+                    let qx = learner.query_batch(engine, ep, ranges[u].clone())?;
+                    let (_, prepared) =
+                        cache.get(&key).expect("resident: ensure_resident just ran");
+                    learner.classify_prepared(engine, prepared, qx)
+                });
+                last = Some(res?);
+                query_secs.push(secs);
+            }
+            cached.push(last.expect("queries >= 1"));
+        }
+
+        // The cached path must be a pure latency optimization: a fresh
+        // adapt + classify from scratch, byte for byte.
+        let mut cached_identical = true;
+        for (u, ep) in episodes.iter().enumerate() {
+            let state = learner.adapt(engine, ep)?;
+            let fresh = learner.classify(engine, &state, ep, ranges[u].clone())?;
+            cached_identical &= fresh == cached[u];
+        }
+        rep.metric(
+            "serve_cached_bit_identical",
+            if cached_identical { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+
+        let mut table = Table::new(
+            "serving latency (per-user)",
+            &["user", "way", "adapt ms", "cached==fresh"],
+        );
+        for (u, ep) in episodes.iter().enumerate() {
+            table.row(vec![
+                format!("user-{u}"),
+                ep.way.to_string(),
+                format!("{:.2}", adapt_secs[u] * 1e3),
+                if cached_identical { "yes".into() } else { "CHECK".into() },
+            ]);
+        }
+        rep.tables.push(table);
+
+        // Cross-user batching: chunks of `width` users share one fused
+        // `megaclassify` dispatch. Probed like megabatch-throughput —
+        // an artifacts dir without fused classify artifacts skips the
+        // batched gates loudly instead of failing the registry walk
+        // (and the gates below never emit vacuously).
+        let widths = learner.megaclassify_widths(engine);
+        if !widths.contains(&width) {
+            eprintln!(
+                "[bench] serve-latency: no megaclassify artifact of width {width} \
+                 (available: {widths:?}); skipping the batched gates"
+            );
+        } else {
+            // Sequential reference: one dispatch per user.
+            let sq0 = engine.stats();
+            let (res, seq_secs) = timed(|| -> Result<Vec<Tensor>> {
+                let mut out = Vec::with_capacity(users);
+                for (u, ep) in episodes.iter().enumerate() {
+                    let key = format!("user-{u}");
+                    ensure_resident(&learner, engine, &mut cache, ep, &key)?;
+                    let qx = learner.query_batch(engine, ep, ranges[u].clone())?;
+                    let (_, prepared) =
+                        cache.get(&key).expect("resident: ensure_resident just ran");
+                    out.push(learner.classify_prepared(engine, prepared, qx)?);
+                }
+                Ok(out)
+            });
+            let sequential = res?;
+            let seq_execs = engine.stats().executions - sq0.executions;
+
+            // Fused: recency-bump every slot's entry, then collect the
+            // simultaneous shared borrows through the non-bumping peek.
+            let sf0 = engine.stats();
+            let user_ids: Vec<usize> = (0..users).collect();
+            let (res, fused_secs) = timed(|| -> Result<Vec<Tensor>> {
+                let mut out = Vec::with_capacity(users);
+                for chunk in user_ids.chunks(width) {
+                    let mut staged: Vec<(String, Tensor)> = Vec::with_capacity(chunk.len());
+                    for &u in chunk {
+                        let key = format!("user-{u}");
+                        ensure_resident(&learner, engine, &mut cache, &episodes[u], &key)?;
+                        cache.get(&key).expect("resident: ensure_resident just ran");
+                        let qx = learner.query_batch(engine, &episodes[u], ranges[u].clone())?;
+                        staged.push((key, qx));
+                    }
+                    let slots: Vec<(&DataLiterals, Tensor)> = staged
+                        .into_iter()
+                        .map(|(key, qx)| {
+                            let (_, prepared) =
+                                cache.peek(&key).expect("resident: bumped above");
+                            (prepared, qx)
+                        })
+                        .collect();
+                    out.extend(learner.classify_batch_fused(engine, width, &slots)?);
+                }
+                Ok(out)
+            });
+            let fused = res?;
+            let fused_execs = engine.stats().executions - sf0.executions;
+
+            let batched_identical = fused == sequential;
+            rep.metric(
+                "serve_batched_bit_identical",
+                if batched_identical { 1.0 } else { 0.0 },
+                Direction::Higher,
+            );
+            rep.metric("executions_sequential", seq_execs as f64, Direction::Info);
+            rep.metric("executions_batched", fused_execs as f64, Direction::Info);
+            // Strictly fewer dispatches needs a chunk with >= 2 real
+            // slots; with width or users at 1 the claim is vacuous and
+            // must not emit.
+            if users >= 2 && width >= 2 {
+                rep.metric(
+                    "serve_fewer_executions",
+                    if fused_execs < seq_execs { 1.0 } else { 0.0 },
+                    Direction::Higher,
+                );
+            }
+            rep.timing("serve_sequential_secs", seq_secs);
+            rep.timing("serve_batched_secs", fused_secs);
+            rep.timing("serve_batched_speedup", seq_secs / fused_secs.max(1e-9));
+        }
+
+        // Latency distributions through the shared nearest-rank
+        // helper (cf. eval-throughput's per-episode percentiles).
+        let (p50, p95, p99) = percentiles(&adapt_secs);
+        rep.timing("serve_adapt_p50", p50);
+        rep.timing("serve_adapt_p95", p95);
+        rep.timing("serve_adapt_p99", p99);
+        let (p50, p95, p99) = percentiles(&query_secs);
+        rep.timing("serve_query_p50", p50);
+        rep.timing("serve_query_p95", p95);
+        rep.timing("serve_query_p99", p99);
+
         rep.engine = Some(stats_delta(&s0, &engine.stats()));
         Ok(rep)
     }

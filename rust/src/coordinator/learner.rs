@@ -9,7 +9,7 @@ use crate::coordinator::batch;
 use crate::data::rng::Rng;
 use crate::data::task::Episode;
 use crate::params::ParamStore;
-use crate::runtime::{ArtifactEntry, DispatchQueue, Engine, Geom, TestGeom};
+use crate::runtime::{ArtifactEntry, DataLiterals, DispatchQueue, Engine, Geom, TestGeom};
 use crate::tensor::Tensor;
 
 /// Per-episode training statistics.
@@ -29,6 +29,15 @@ pub struct TrainStats {
 pub struct TaskState {
     pub names: Vec<String>,
     pub tensors: Vec<Tensor>,
+}
+
+impl TaskState {
+    /// Host bytes of the state tensors (f32), the residency-budget cost
+    /// of keeping this state pinned (the device-literal copy mirrors
+    /// the host tensors one-to-one, so one number serves both).
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len() * std::mem::size_of::<f32>()).sum()
+    }
 }
 
 /// The per-episode loss/acc/gradient fold of Algorithm 1, shared by the
@@ -315,6 +324,86 @@ impl MetaLearner {
         )
     }
 
+    /// Every fused `megatrain` width available for this learner's train
+    /// geometry, sorted ascending. `--megabatch auto` picks from this
+    /// list per accumulation window (largest width dividing the
+    /// window's batch count); empty when the manifest ships no fused
+    /// train artifacts at all.
+    pub fn megatrain_widths(&self, engine: &Engine) -> Vec<usize> {
+        let mut widths: Vec<usize> = engine
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "megatrain"
+                    && a.model == self.model
+                    && a.image_size == self.image_size
+                    && a.geom.as_ref() == Some(&self.train_geom)
+            })
+            .filter_map(|a| a.extra.get("fuse").and_then(|v| v.parse::<usize>().ok()))
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        widths
+    }
+
+    /// Resolve the fused `megaclassify` artifact of fusion width
+    /// `width` matching this learner's test geometry — the cross-USER
+    /// analogue of [`MetaLearner::megatrain_artifact`]: one execution
+    /// classifies `width` query batches, each against its own user's
+    /// adapted state. The error lists the widths that ARE available.
+    pub fn megaclassify_artifact(&self, engine: &Engine, width: usize) -> Result<String> {
+        let tg = self.test_geom.as_ref().context("model has no test geometry")?;
+        let mut available: Vec<usize> = Vec::new();
+        for a in &engine.manifest.artifacts {
+            if a.kind != "megaclassify"
+                || a.model != self.model
+                || a.image_size != self.image_size
+                || a.test_geom.as_ref() != Some(tg)
+            {
+                continue;
+            }
+            let Some(w) = a.extra.get("fuse").and_then(|v| v.parse::<usize>().ok()) else {
+                continue;
+            };
+            if w == width {
+                return Ok(a.name.clone());
+            }
+            available.push(w);
+        }
+        available.sort_unstable();
+        bail!(
+            "no megaclassify artifact of width {width} for {} at {}px \
+             (test geometry w{}n{}q{}); available widths: {available:?}",
+            self.model,
+            self.image_size,
+            tg.way,
+            tg.n_support,
+            tg.mq
+        )
+    }
+
+    /// Every fused `megaclassify` width available for this learner's
+    /// test geometry, sorted ascending (the serve batcher's menu).
+    pub fn megaclassify_widths(&self, engine: &Engine) -> Vec<usize> {
+        let Some(tg) = self.test_geom.as_ref() else { return Vec::new() };
+        let mut widths: Vec<usize> = engine
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "megaclassify"
+                    && a.model == self.model
+                    && a.image_size == self.image_size
+                    && a.test_geom.as_ref() == Some(tg)
+            })
+            .filter_map(|a| a.extra.get("fuse").and_then(|v| v.parse::<usize>().ok()))
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        widths
+    }
+
     /// Run one accumulation window's episodes through the fused
     /// `megatrain` artifact: every query batch in the window is laid
     /// out episode-major into `width`-slot fused executions — strictly
@@ -449,6 +538,118 @@ impl MetaLearner {
         }
         let out = engine.run_with_params(name, &self.params, &data)?;
         Ok(out[0].clone())
+    }
+
+    /// Adapt once and pin (the serving first-request path): run the
+    /// adapt forward, resolve the classify artifact's inputs against
+    /// the adapted state, and marshal the state tensors ONCE into a
+    /// prepared [`DataLiterals`] set. Queries against the returned set
+    /// via [`MetaLearner::classify_prepared`] marshal only the query
+    /// batch — and are bit-identical to [`MetaLearner::classify`]
+    /// recomputing from scratch, because the literals are the same
+    /// bytes wherever they were built.
+    pub fn prepare_adapted(
+        &self,
+        engine: &Engine,
+        episode: &Episode,
+    ) -> Result<(TaskState, DataLiterals)> {
+        let state = self.adapt(engine, episode)?;
+        let name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let entry = engine.entry(name)?;
+        let slots = classify_slots(name, entry, &state)?;
+        let prepared = engine.prepare_data(name, &slots)?;
+        Ok((state, prepared))
+    }
+
+    /// Gather one query batch's input tensor (padded to the classify
+    /// geometry's `mq`) — the fresh half of a prepared classify run.
+    pub fn query_batch(
+        &self,
+        engine: &Engine,
+        episode: &Episode,
+        range: std::ops::Range<usize>,
+    ) -> Result<Tensor> {
+        let name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let tg = engine
+            .entry(name)?
+            .test_geom
+            .clone()
+            .context("classify missing test geom")?;
+        let (qx, _) = batch::gather_query(episode, range, tg.mq, tg.way)?;
+        Ok(qx)
+    }
+
+    /// Classify one query batch against a PREPARED adapted state (the
+    /// serving hot path): only `qx` is marshaled; the state literals
+    /// come from the resident set. Returns the logits tensor.
+    pub fn classify_prepared(
+        &self,
+        engine: &Engine,
+        prepared: &DataLiterals,
+        qx: Tensor,
+    ) -> Result<Tensor> {
+        let name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let out = engine.run_with_params_prepared(name, &self.params, prepared, &[qx])?;
+        Ok(out[0].clone())
+    }
+
+    /// Execute one fused `megaclassify` dispatch over up to `width`
+    /// (resident state, query batch) slots from DIFFERENT users: slot
+    /// `k`'s state inputs bind to its user's resident pool inside one
+    /// concatenated-pool index space, its query tensor goes in fresh,
+    /// and fewer than `width` real slots are padded by replicating slot
+    /// 0 (padded outputs are dropped). Returns one logits tensor per
+    /// real slot — bit-identical to [`MetaLearner::classify_prepared`]
+    /// run per slot, in strictly fewer device executions once two or
+    /// more slots share a dispatch.
+    pub fn classify_batch_fused(
+        &self,
+        engine: &Engine,
+        width: usize,
+        slots: &[(&DataLiterals, Tensor)],
+    ) -> Result<Vec<Tensor>> {
+        if slots.is_empty() || slots.len() > width {
+            bail!("{} fused classify slots for width {width}", slots.len());
+        }
+        let mega = self.megaclassify_artifact(engine, width)?;
+        let base_name = self
+            .classify_artifact
+            .as_ref()
+            .context("model has no classify artifact")?;
+        let base = engine.entry(base_name)?;
+        batch::validate_fused_entry(engine.entry(&mega)?, base, width)?;
+        let n_in = base.inputs.len();
+        let mut pools: Vec<&DataLiterals> = Vec::with_capacity(width);
+        let mut binding: Vec<Option<usize>> = Vec::with_capacity(width * n_in);
+        let mut fresh: Vec<Tensor> = Vec::with_capacity(width);
+        let mut offset = 0usize;
+        for k in 0..width {
+            let (prepared, qx) = &slots[if k < slots.len() { k } else { 0 }];
+            if prepared.binding().len() != n_in {
+                bail!(
+                    "{mega}: slot {k}'s resident set covers {} of {n_in} base inputs",
+                    prepared.binding().len()
+                );
+            }
+            for slot in prepared.binding() {
+                binding.push(slot.map(|i| offset + i));
+            }
+            fresh.push(qx.clone());
+            pools.push(prepared);
+            offset += prepared.pool_len();
+        }
+        let out = engine.run_with_params_pools(&mega, &self.params, &pools, &binding, &fresh)?;
+        let n_out = base.outputs.len();
+        Ok((0..slots.len()).map(|k| out[k * n_out].clone()).collect())
     }
 
     /// Full evaluation of one episode: adapt once, classify all query

@@ -55,7 +55,11 @@
 //! batch — grouped per shard so a fused chunk never spans engines.
 //! Every fused configuration is bit-identical to serial at the same
 //! seed (the `megabatch-throughput` scenario and the `megabatch_*`
-//! integration tests gate this).
+//! integration tests gate this). `TrainConfig.megabatch_auto`
+//! (`--megabatch auto`) picks the width per window instead of fixing
+//! one: the largest manifest-available width exactly dividing the
+//! window's total query-batch count — a pure count, no RNG consumed —
+//! falling back to the classic path for windows no width divides.
 //!
 //! Checkpoint IO never blocks the training thread: when
 //! `TrainConfig.checkpoint_every / checkpoint_path` are set, the
@@ -144,6 +148,15 @@ pub struct TrainConfig {
     /// before training starts, never silently ignored. Any width is
     /// bit-identical to 1 at the same seed (see the module doc).
     pub megabatch: usize,
+    /// `--megabatch auto`: pick the fusion width per accumulation
+    /// window instead of fixing one — the largest `megatrain` width in
+    /// the manifest that exactly divides the window's total
+    /// query-batch count (so fused executions carry no padding slots),
+    /// falling back to the unfused path when none divides or the
+    /// manifest ships no fused train artifacts. Mutually exclusive
+    /// with an explicit `megabatch > 1`. Bit-identical to the unfused
+    /// run at the same seed, like every fixed width.
+    pub megabatch_auto: bool,
     /// Dump a one-line JSON progress snapshot here (through the
     /// bounded background writer, never blocking the training thread)
     /// at every `log_every` boundary and once at run end. `None`
@@ -193,6 +206,7 @@ impl Default for TrainConfig {
             shards: 1,
             dispatch: 1,
             megabatch: 1,
+            megabatch_auto: false,
             progress_path: None,
             checkpoint_every: 0,
             checkpoint_path: None,
@@ -294,12 +308,39 @@ pub fn meta_train_storage(
 ) -> Result<Vec<TrainLog>> {
     engine.check_shard_knob(cfg.shards, "TrainConfig.shards")?;
     ensure!(cfg.megabatch >= 1, "TrainConfig.megabatch must be >= 1 (1 = unfused)");
+    ensure!(
+        !(cfg.megabatch_auto && cfg.megabatch > 1),
+        "TrainConfig.megabatch_auto with an explicit width ({}) — pick one",
+        cfg.megabatch
+    );
     if cfg.megabatch > 1 {
         // Resolve the fused artifact up front: a bad --megabatch must
         // fail with the available widths BEFORE any training happens,
         // not mid-run (and never silently fall back to unfused).
         learner.megatrain_artifact(engine.primary(), cfg.megabatch)?;
     }
+    // `--megabatch auto` resolves its width menu up front too: the
+    // manifest is fixed for the run, only the per-window batch counts
+    // vary. An empty menu is loud (this run will never fuse), not an
+    // error — auto means "fuse when the manifest allows it".
+    let auto_widths: Vec<usize> = if cfg.megabatch_auto {
+        let widths = learner.megatrain_widths(engine.primary());
+        if widths.is_empty() {
+            eprintln!(
+                "[meta-train {}] --megabatch auto: manifest ships no fused train \
+                 artifacts for this geometry; every window runs unfused",
+                learner.model
+            );
+        } else {
+            eprintln!(
+                "[meta-train {}] --megabatch auto: fused widths available {widths:?}",
+                learner.model
+            );
+        }
+        widths
+    } else {
+        Vec::new()
+    };
     let period = cfg.accum_period.max(1);
     // Like the --megabatch width probe: every checkpoint/resume
     // misconfiguration fails HERE, before any training happens.
@@ -471,6 +512,7 @@ pub fn meta_train_storage(
             workers,
             period,
             start_step,
+            &auto_widths,
             writer.as_ref(),
         )
     })?;
@@ -615,6 +657,7 @@ fn reduce_loop(
     workers: usize,
     period: usize,
     start_step: usize,
+    auto_widths: &[usize],
     writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
     // Producers race, so episodes can arrive out of step order; early
@@ -630,16 +673,37 @@ fn reduce_loop(
     let mut lo = start_step;
     while lo < cfg.episodes {
         let hi = (lo + period).min(cfg.episodes);
-        if cfg.megabatch > 1 {
+        if cfg.megabatch > 1 || cfg.megabatch_auto {
             // Megabatch path: the fusion unit IS the accumulation
             // window, so the window is always assembled — even with a
             // single worker — and executed through the fused artifact.
+            // In auto mode the width is resolved per window (largest
+            // available width dividing the window's batch count; the
+            // count consumes no RNG) and a window no width divides
+            // falls back to the classic per-batch execution — every
+            // choice is bit-identical to serial at the same seed.
             let window: Vec<(usize, Episode)> = (lo..hi)
                 .map(|s| Ok((s, next_episode(s)?)))
                 .collect::<Result<_>>()?;
-            run_window_megabatch(
-                engine, learner, cfg, make_val, val_seed, workers, &window, st, writer,
-            )?;
+            let width = if cfg.megabatch_auto {
+                auto_window_width(auto_widths, learner, &window)
+            } else {
+                cfg.megabatch
+            };
+            if width > 1 {
+                run_window_megabatch(
+                    engine, learner, cfg, make_val, val_seed, workers, width, &window, st,
+                    writer,
+                )?;
+            } else if workers <= 1 {
+                for (step, ep) in &window {
+                    serial_step(engine, learner, cfg, make_val, val_seed, *step, ep, st, writer)?;
+                }
+            } else {
+                run_window_parallel(
+                    engine, learner, cfg, make_val, val_seed, workers, &window, st, writer,
+                )?;
+            }
         } else if workers <= 1 {
             // Serial path: same per-step streams, same fold order, no
             // worker threads — and fully streaming: each episode is
@@ -647,18 +711,7 @@ fn reduce_loop(
             // memory stays as flat as the old single producer thread.
             for step in lo..hi {
                 let ep = next_episode(step)?;
-                let (stats, grads) = learner.train_episode_dispatch(
-                    engine.shard(step),
-                    cfg.dispatch,
-                    &ep,
-                    &mut episode_rng(cfg.seed, step),
-                )?;
-                for avg in st.accum.push_at(step, grads)? {
-                    st.adam.step(&mut learner.params, &avg)?;
-                }
-                emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
-                maybe_validate(engine, learner, cfg, make_val, val_seed, step, st)?;
-                maybe_checkpoint(learner, cfg, step, st, writer)?;
+                serial_step(engine, learner, cfg, make_val, val_seed, step, &ep, st, writer)?;
             }
         } else {
             // Parallel path: assemble the whole window first — its
@@ -681,6 +734,63 @@ fn reduce_loop(
         gate.notify_all();
     }
     Ok(())
+}
+
+/// One step of the serial execution path: compute the episode's
+/// gradients on its shard, fold them, and run the step-order epilogue
+/// (boundary Adam, log, validation, checkpoint). Shared between the
+/// streaming serial loop and the auto-megabatch fallback (a window no
+/// available width divides runs through here, not a padded fusion).
+#[allow(clippy::too_many_arguments)]
+fn serial_step(
+    engine: &dyn EngineShards,
+    learner: &mut MetaLearner,
+    cfg: &TrainConfig,
+    make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    val_seed: u64,
+    step: usize,
+    ep: &Episode,
+    st: &mut ReducerState,
+    writer: Option<&BackgroundWriter>,
+) -> Result<()> {
+    let (stats, grads) = learner.train_episode_dispatch(
+        engine.shard(step),
+        cfg.dispatch,
+        ep,
+        &mut episode_rng(cfg.seed, step),
+    )?;
+    for avg in st.accum.push_at(step, grads)? {
+        st.adam.step(&mut learner.params, &avg)?;
+    }
+    emit_log(learner, cfg, &mut st.logs, step, &stats, writer)?;
+    maybe_validate(engine, learner, cfg, make_val, val_seed, step, st)?;
+    maybe_checkpoint(learner, cfg, step, st, writer)
+}
+
+/// The `--megabatch auto` width for one accumulation window: the
+/// largest manifest-available width that exactly divides the window's
+/// total query-batch count, so every fused execution runs full (no
+/// padding slots wasting device work), or 1 — the unfused path — when
+/// none divides. Counting batches consumes no RNG: `n_query_batches`
+/// is a pure function of each episode's query set and the learner's
+/// train geometry, so auto-width resolution cannot perturb the
+/// per-step random streams.
+fn auto_window_width(
+    widths: &[usize],
+    learner: &MetaLearner,
+    window: &[(usize, Episode)],
+) -> usize {
+    let mb = learner.train_geom.mb;
+    let total: usize = window
+        .iter()
+        .map(|(_, ep)| crate::coordinator::batch::n_query_batches(ep, mb))
+        .sum();
+    widths
+        .iter()
+        .copied()
+        .filter(|&w| w > 1 && total > 0 && total % w == 0)
+        .max()
+        .unwrap_or(1)
 }
 
 /// Fan one accumulation window over a scoped worker pool (pipeline
@@ -778,7 +888,8 @@ fn run_window_parallel(
 }
 
 /// Run one accumulation window through the fused `megatrain` artifact
-/// (`cfg.megabatch > 1`). The window's slots group by shard — episode
+/// at fusion width `width` (a fixed `cfg.megabatch > 1`, or the
+/// per-window auto resolution). The window's slots group by shard — episode
 /// `step` stays on shard `step % n_shards`, exactly the classic
 /// routing, so a fused chunk never spans engines — and each group's
 /// query batches fuse into width-N executions
@@ -794,6 +905,7 @@ fn run_window_megabatch(
     make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
     val_seed: u64,
     workers: usize,
+    width: usize,
     window: &[(usize, Episode)],
     st: &mut ReducerState,
     writer: Option<&BackgroundWriter>,
@@ -820,7 +932,7 @@ fn run_window_megabatch(
                 .map(|&k| lr.plan_episode(&window[k].1, &mut episode_rng(cfg.seed, window[k].0)))
                 .collect::<Result<Vec<_>>>()?;
             let out = lr
-                .train_window_megabatch(eng, cfg.dispatch, cfg.megabatch, &eps, &plans)
+                .train_window_megabatch(eng, cfg.dispatch, width, &eps, &plans)
                 .with_context(|| {
                     format!(
                         "megabatch group on shard {} (episodes {}..={})",

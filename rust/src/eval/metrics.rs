@@ -76,6 +76,29 @@ pub fn score_episode(episode: &Episode, preds: &[usize]) -> EpisodeMetrics {
     }
 }
 
+/// Latency percentiles `(p50, p95, p99)` over a sample set, by the
+/// nearest-rank definition: the p-th percentile of n sorted samples is
+/// the value at rank `ceil(p/100 * n)` (1-based) — an actual observed
+/// sample, never an interpolation, so a reported p99 is always a
+/// latency that really happened. Sorts a copy (callers keep their
+/// arrival order); an empty sample set reports zeros.
+///
+/// Shared between the serving scenarios (adapt/query latency
+/// distributions) and the throughput scenarios' per-item timings —
+/// one definition, so percentiles are comparable across reports.
+pub fn percentiles(samples: &[f64]) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must not be NaN"));
+    let at = |p: f64| {
+        let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    };
+    (at(50.0), at(95.0), at(99.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +162,23 @@ mod tests {
         let m = score_episode(&e, &[0, 1, 0]);
         assert!((m.frame_acc - 2.0 / 3.0).abs() < 1e-9);
         assert!((m.video_acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        assert_eq!(percentiles(&[]), (0.0, 0.0, 0.0));
+        // A single sample IS every percentile.
+        assert_eq!(percentiles(&[7.0]), (7.0, 7.0, 7.0));
+        // 1..=100 in arrival-scrambled order: nearest-rank percentiles
+        // are exactly the 50th/95th/99th values, and the input order
+        // must not matter (a copy is sorted, not the caller's slice).
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        v.reverse();
+        let before = v.clone();
+        assert_eq!(percentiles(&v), (50.0, 95.0, 99.0));
+        assert_eq!(v, before, "caller's sample order must be preserved");
+        // n=4: p50 -> ceil(2.0)=rank 2, p95 -> ceil(3.8)=rank 4, p99 ->
+        // ceil(3.96)=rank 4 — always observed samples, no interpolation.
+        assert_eq!(percentiles(&[10.0, 20.0, 30.0, 40.0]), (20.0, 40.0, 40.0));
     }
 }

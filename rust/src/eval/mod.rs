@@ -9,4 +9,4 @@ pub use harness::{
     eval_dataset, eval_orbit, par_eval_dataset, par_eval_orbit, EvalConfig, EvalSummary, Predictor,
 };
 pub use macs::{adapt_cost, backbone_macs, AdaptCost};
-pub use metrics::{score_episode, EpisodeMetrics};
+pub use metrics::{percentiles, score_episode, EpisodeMetrics};

@@ -17,5 +17,6 @@ pub mod optim;
 pub mod params;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

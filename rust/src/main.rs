@@ -5,6 +5,7 @@
 //!   pretrain       supervised backbone pretraining (ImageNet stand-in)
 //!   train          meta-train a model with LITE
 //!   eval           meta-test a trained checkpoint on a suite
+//!   serve          online personalization server (adapt-once + cached queries)
 //!   gradcheck      Fig 4 / D.7-D.8 gradient-estimator experiment
 //!   memory-report  E6 analytic memory model report
 //!   bench          scenario registry: list / run [--json] / compare
@@ -35,6 +36,7 @@ fn run(argv: &[String]) -> Result<()> {
         "pretrain" => cmd_pretrain(args),
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
         "gradcheck" => cmd_gradcheck(args),
         "memory-report" => cmd_memory(args),
         "bench" => cmd_bench(args),
@@ -44,12 +46,14 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-ablation" => lite::bench::d3_ablation(&mut args),
         "help" | _ => {
             println!(
-                "usage: lite <info|pretrain|train|eval|gradcheck|memory-report|\
+                "usage: lite <info|pretrain|train|eval|serve|gradcheck|memory-report|\
                  bench|bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]\n\
                  \n\
                  bench list                         registered scenarios\n\
                  bench run [--filter s] [--seed n] [--knobs k=v,..] [--json out.json]\n\
                  bench compare <baseline.json> <candidate.json> [--tolerance-pct n]\n\
+                 serve [--model m] [--image-size n] [--shards n] [--budget-mb n]\n\
+                 \x20     [--width n] [--window-ms n] [--socket path] [--ckpt file]\n\
                  (see BENCHMARKS.md for scenario names, the JSON schema, and gating rules)"
             );
             Ok(())
@@ -197,8 +201,19 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // bit-identical to --megabatch 1 at the same seed (the
     // megabatch-throughput bench scenario gates this); a width without
     // a fused artifact in the manifest fails up front listing the
-    // available widths.
-    let megabatch: usize = args.get("megabatch", 1)?;
+    // available widths. `--megabatch auto` picks the largest manifest
+    // width that divides each accumulation window's query-batch count,
+    // per window — still bit-identical, since width only changes how
+    // batches pack into dispatches.
+    let megabatch_str = args.get_str("megabatch", "1");
+    let megabatch_auto = megabatch_str == "auto";
+    let megabatch: usize = if megabatch_auto {
+        1
+    } else {
+        megabatch_str
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--megabatch {megabatch_str}: {e} (expected a width or `auto`)"))?
+    };
     // Training-progress JSON dumps through the background writer
     // ("" = none).
     let progress_out = args.get_str("progress-out", "");
@@ -266,6 +281,7 @@ fn cmd_train(mut args: Args) -> Result<()> {
         shards,
         dispatch,
         megabatch,
+        megabatch_auto,
         progress_path: (!progress_out.is_empty()).then(|| progress_out.clone().into()),
         checkpoint_every,
         checkpoint_path: (checkpoint_every > 0).then(|| state_base.clone()),
@@ -320,6 +336,51 @@ fn cmd_eval(mut args: Args) -> Result<()> {
         )?;
         println!("{:<20} {:>8.3} {:>10.3}", ds.name(), s.frame_acc.0, s.frame_acc.1);
     }
+    eprintln!("{}", engine.merged_stats().report_line());
+    Ok(())
+}
+
+/// `lite serve` — the online personalization server: line-delimited
+/// JSON over stdin/stdout (and optionally a unix socket), adapt-once
+/// residency per user, cross-user query micro-batching, stable
+/// user-hash shard routing (see `serve::protocol` for the wire format).
+fn cmd_serve(mut args: Args) -> Result<()> {
+    let model = args.get_str("model", "protonet");
+    let size: usize = args.get("image-size", 32)?;
+    // Test-support geometry (64 = ORBIT personalization, 200 = VTAB-like).
+    let support: usize = args.get("support", 64)?;
+    // Engine shards; users route to shards by stable user-key hash.
+    let shards: usize = args.get("shards", 1)?;
+    // Per-shard residency budget for pinned adapted states (MiB).
+    let budget_mb: usize = args.get("budget-mb", 64)?;
+    // Micro-batch flush width (1 = no cross-user batching).
+    let width: usize = args.get("width", 4)?;
+    // Micro-batch window deadline in milliseconds.
+    let window_ms: u64 = args.get("window-ms", 2)?;
+    let socket = args.get_str("socket", "");
+    let ckpt = args.get_str("ckpt", "");
+    args.finish()?;
+    let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
+    let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), support)?;
+    if !ckpt.is_empty() {
+        let n = learner.params.restore(std::path::Path::new(&ckpt))?;
+        eprintln!("restored {n} tensors from {ckpt}");
+    }
+    let cfg = lite::serve::ServeConfig {
+        budget_bytes: budget_mb << 20,
+        width,
+        window: std::time::Duration::from_millis(window_ms),
+    };
+    let engines: Vec<&Engine> = engine.engines().iter().collect();
+    eprintln!(
+        "[serve] {model} {size}px: {} shard(s), {budget_mb} MiB residency/shard, \
+         batch width {width} / {window_ms} ms window{}",
+        engines.len(),
+        if socket.is_empty() { String::new() } else { format!(", socket {socket}") }
+    );
+    lite::serve::with_server(&engines, &learner, &cfg, |h| {
+        lite::serve::run_frontends(h, (!socket.is_empty()).then(|| std::path::Path::new(&socket)))
+    })?;
     eprintln!("{}", engine.merged_stats().report_line());
     Ok(())
 }

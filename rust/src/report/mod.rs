@@ -1,4 +1,4 @@
-//! Machine-readable benchmark reports (schema v2).
+//! Machine-readable benchmark reports (schema v3).
 //!
 //! Every bench scenario produces a [`ScenarioReport`]: gateable
 //! `metrics` (deterministic for a fixed seed — accuracies, analytic
@@ -31,7 +31,9 @@ use self::json::Json;
 /// golden snapshot in `tests/report_roundtrip.rs`.
 /// v2: `engine` gained `data_literal_builds` / `data_cache_hits` and
 /// the `transfer_secs` half of the old aggregate execute time.
-pub const SCHEMA_VERSION: u64 = 2;
+/// v3: `engine` gained the serving residency counters
+/// `resident_hits` / `resident_misses` / `resident_evictions`.
+pub const SCHEMA_VERSION: u64 = 3;
 /// Sanity tag so `bench compare` rejects arbitrary JSON early.
 pub const REPORT_KIND: &str = "lite-bench-report";
 
@@ -143,6 +145,12 @@ pub struct EngineSnapshot {
     pub param_cache_hits: u64,
     pub data_literal_builds: u64,
     pub data_cache_hits: u64,
+    /// Serving residency-cache counters (schema v3): queries answered
+    /// from a user's resident adapted state, first-request misses, and
+    /// budget evictions. Zero outside `lite serve` / `serve-latency`.
+    pub resident_hits: u64,
+    pub resident_misses: u64,
+    pub resident_evictions: u64,
     pub compile_secs: f64,
     /// Device execution time only; host-side result transfer is the
     /// separate `transfer_secs` (schema v2 split), so perf deltas can
@@ -157,7 +165,7 @@ impl EngineSnapshot {
     /// below) and the bench rendering layer, so the two surfaces
     /// cannot drift when a counter is added.
     pub fn report_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "[engine] {} compiles ({:.1}s), {} executions ({:.1}s exec + {:.1}s transfer), \
              {} param-literal builds, {} cached-param runs, \
              {} data-literal builds, {} cached-data literals",
@@ -170,7 +178,16 @@ impl EngineSnapshot {
             self.param_cache_hits,
             self.data_literal_builds,
             self.data_cache_hits
-        )
+        );
+        // Residency counters only exist on the serving path; keep the
+        // line stable for every other command.
+        if self.resident_hits + self.resident_misses + self.resident_evictions > 0 {
+            line.push_str(&format!(
+                ", {} resident hits, {} resident misses, {} resident evictions",
+                self.resident_hits, self.resident_misses, self.resident_evictions
+            ));
+        }
+        line
     }
 }
 
@@ -183,6 +200,9 @@ impl From<&EngineStats> for EngineSnapshot {
             param_cache_hits: s.param_cache_hits as u64,
             data_literal_builds: s.data_literal_builds as u64,
             data_cache_hits: s.data_cache_hits as u64,
+            resident_hits: s.resident_hits as u64,
+            resident_misses: s.resident_misses as u64,
+            resident_evictions: s.resident_evictions as u64,
             compile_secs: s.compile_secs,
             execute_secs: s.execute_secs,
             transfer_secs: s.transfer_secs,
@@ -269,6 +289,9 @@ impl ScenarioReport {
                 eo.push("param_cache_hits", Json::UInt(e.param_cache_hits));
                 eo.push("data_literal_builds", Json::UInt(e.data_literal_builds));
                 eo.push("data_cache_hits", Json::UInt(e.data_cache_hits));
+                eo.push("resident_hits", Json::UInt(e.resident_hits));
+                eo.push("resident_misses", Json::UInt(e.resident_misses));
+                eo.push("resident_evictions", Json::UInt(e.resident_evictions));
                 eo.push("compile_secs", Json::Num(e.compile_secs));
                 eo.push("execute_secs", Json::Num(e.execute_secs));
                 eo.push("transfer_secs", Json::Num(e.transfer_secs));
@@ -352,6 +375,15 @@ impl ScenarioReport {
                         .need("data_cache_hits")?
                         .as_u64()
                         .context("data_cache_hits")?,
+                    resident_hits: e.need("resident_hits")?.as_u64().context("resident_hits")?,
+                    resident_misses: e
+                        .need("resident_misses")?
+                        .as_u64()
+                        .context("resident_misses")?,
+                    resident_evictions: e
+                        .need("resident_evictions")?
+                        .as_u64()
+                        .context("resident_evictions")?,
                     compile_secs: e.need("compile_secs")?.as_f64().context("compile_secs")?,
                     execute_secs: e.need("execute_secs")?.as_f64().context("execute_secs")?,
                     transfer_secs: e.need("transfer_secs")?.as_f64().context("transfer_secs")?,

@@ -49,6 +49,18 @@ pub struct EngineStats {
     /// Individual data literals served from a prepared [`DataLiterals`]
     /// set instead of being re-marshaled (summed per execution).
     pub data_cache_hits: usize,
+    /// Serving-layer residency cache: query requests answered from a
+    /// user's resident adapted state (no re-adapt, no re-marshal of the
+    /// task-state literals). Folded in via [`Engine::note_residency`] by
+    /// whichever serve worker owns the cache — the cache itself
+    /// (`runtime::residency::ResidencyCache`) is a pure policy object.
+    pub resident_hits: usize,
+    /// Requests that found no resident entry for their user (first
+    /// requests, or re-requests after an eviction) and paid an adapt.
+    pub resident_misses: usize,
+    /// Resident entries evicted by the byte budget (LRU-first). A
+    /// replaced entry (re-adapt for a resident user) counts here too.
+    pub resident_evictions: usize,
 }
 
 impl EngineStats {
@@ -65,6 +77,9 @@ impl EngineStats {
         self.param_cache_hits += other.param_cache_hits;
         self.data_literal_builds += other.data_literal_builds;
         self.data_cache_hits += other.data_cache_hits;
+        self.resident_hits += other.resident_hits;
+        self.resident_misses += other.resident_misses;
+        self.resident_evictions += other.resident_evictions;
     }
 
     /// One-line cache report shared by the CLI and the bench harnesses:
@@ -133,6 +148,14 @@ impl DataLiterals {
     /// Number of marshaled literals in the pool.
     pub fn pool_len(&self) -> usize {
         self.pool.len()
+    }
+
+    /// The default binding fixed at [`Engine::prepare_data`] time (pool
+    /// entry per artifact data-input position, `None` = fresh). The
+    /// serving batcher reads this to re-express a user's per-episode
+    /// binding in a fused execution's concatenated-pool index space.
+    pub(crate) fn binding(&self) -> &[Option<usize>] {
+        &self.binding
     }
 }
 
@@ -539,6 +562,112 @@ impl Engine {
         self.execute(name, entry, &refs)
     }
 
+    /// The multi-pool form of [`Engine::run_with_params_bound`]: execute
+    /// `name` with the data inputs resolved through `binding` over the
+    /// CONCATENATION of several prepared pools (entry `i` of pool `k`
+    /// sits at `offset_k + i`, offsets running in `pools` order). This
+    /// is the cross-USER analogue of the cross-episode megabatch run —
+    /// each user's resident adapted state stays its own [`DataLiterals`]
+    /// set (prepared once, owned by one serve worker), and a fused
+    /// `megaclassify` execution binds every fused slot to its user's
+    /// pool entries without copying literals between sets.
+    ///
+    /// Pool sets are deliberately NOT name-checked against `name`: the
+    /// resident sets were prepared for the base `classify` artifact and
+    /// are re-bound here into its fused counterpart. Safety comes from
+    /// the per-position shape validation below, exactly as in
+    /// [`Engine::run_with_params_bound`].
+    pub(crate) fn run_with_params_pools(
+        &self,
+        name: &str,
+        params: &ParamStore,
+        pools: &[&DataLiterals],
+        binding: &[Option<usize>],
+        fresh: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.get(name)?;
+        if params.tensors().len() != entry.params.len() {
+            bail!(
+                "{name}: store has {} tensors, artifact wants {} params",
+                params.tensors().len(),
+                entry.params.len()
+            );
+        }
+        if binding.len() != entry.inputs.len() {
+            bail!(
+                "{name}: binding covers {} of {} data inputs",
+                binding.len(),
+                entry.inputs.len()
+            );
+        }
+        let mut lits: Vec<&xla::Literal> = Vec::new();
+        let mut shapes: Vec<&Vec<usize>> = Vec::new();
+        for p in pools {
+            lits.extend(p.pool.iter());
+            shapes.extend(p.pool_shapes.iter());
+        }
+        let mut cached_n = 0usize;
+        for (pos, slot) in binding.iter().enumerate() {
+            let Some(i) = slot else { continue };
+            let spec = &entry.inputs[pos];
+            let shape = shapes.get(*i).with_context(|| {
+                format!(
+                    "{name}: input {} bound to entry {i} of a {}-literal concatenated pool",
+                    spec.name,
+                    lits.len()
+                )
+            })?;
+            if **shape != spec.shape {
+                bail!(
+                    "{name}: pool entry {i} shape {:?} bound at input {} wants {:?}",
+                    shape,
+                    spec.name,
+                    spec.shape
+                );
+            }
+            cached_n += 1;
+        }
+        if cached_n + fresh.len() != entry.inputs.len() {
+            bail!(
+                "{name}: {cached_n} pooled + {} fresh data literals for {} data inputs",
+                fresh.len(),
+                entry.inputs.len()
+            );
+        }
+        let fresh_lits: Vec<xla::Literal> = fresh
+            .iter()
+            .map(to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("building data literals for {name}"))?;
+        let plits = self.param_literals(name, params)?;
+        {
+            let mut s = self.stats.write().unwrap();
+            s.data_literal_builds += fresh_lits.len();
+            s.data_cache_hits += cached_n;
+        }
+        let mut refs: Vec<&xla::Literal> = plits.iter().collect();
+        let mut it = fresh_lits.iter();
+        for slot in binding {
+            match slot {
+                Some(i) => refs.push(lits[*i]),
+                None => {
+                    refs.push(it.next().context("fresh data literal count already validated")?)
+                }
+            }
+        }
+        self.execute(name, entry, &refs)
+    }
+
+    /// Fold a serve worker's residency-cache counters into the engine's
+    /// stats so `lite serve` / `serve-latency` reports surface them next
+    /// to the literal-cache counters they complement.
+    pub fn note_residency(&self, hits: usize, misses: usize, evictions: usize) {
+        let mut s = self.stats.write().unwrap();
+        s.resident_hits += hits;
+        s.resident_misses += misses;
+        s.resident_evictions += evictions;
+    }
+
     /// Fetch (or rebuild) the cached parameter literals for `name`.
     fn param_literals(&self, name: &str, params: &ParamStore) -> Result<Arc<Vec<xla::Literal>>> {
         let (sid, ver) = (params.store_id(), params.version());
@@ -643,6 +772,9 @@ mod tests {
             param_cache_hits: 3,
             data_literal_builds: 11,
             data_cache_hits: 4,
+            resident_hits: 5,
+            resident_misses: 2,
+            resident_evictions: 1,
         };
         let b = EngineStats {
             compiles: 2,
@@ -654,6 +786,9 @@ mod tests {
             param_cache_hits: 9,
             data_literal_builds: 6,
             data_cache_hits: 13,
+            resident_hits: 4,
+            resident_misses: 3,
+            resident_evictions: 2,
         };
         a.merge(&b);
         assert_eq!(a.compiles, 3);
@@ -662,6 +797,9 @@ mod tests {
         assert_eq!(a.param_cache_hits, 12);
         assert_eq!(a.data_literal_builds, 17);
         assert_eq!(a.data_cache_hits, 17);
+        assert_eq!(a.resident_hits, 9);
+        assert_eq!(a.resident_misses, 5);
+        assert_eq!(a.resident_evictions, 3);
         assert!((a.compile_secs - 2.0).abs() < 1e-12);
         assert!((a.execute_secs - 3.0).abs() < 1e-12);
         assert!((a.transfer_secs - 0.75).abs() < 1e-12);

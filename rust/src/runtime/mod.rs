@@ -51,13 +51,24 @@
 //! `Engine` is the one-shard set, so single-engine call sites are
 //! untouched; see the module doc of [`shard`] for the routing and
 //! bit-identity contract.
+//!
+//! ## Serving residency
+//!
+//! [`residency::ResidencyCache`] is the long-lived counterpart of the
+//! per-episode data cache: `lite serve` pins each user's adapted task
+//! state (as a resident [`engine::DataLiterals`] set) under an explicit
+//! byte budget with LRU eviction, instead of relying on ownership drop.
+//! Hit/miss/eviction counts fold into [`engine::EngineStats`] via
+//! `Engine::note_residency`.
 
 pub mod dispatch;
 pub mod engine;
 pub mod manifest;
+pub mod residency;
 pub mod shard;
 
 pub use dispatch::{DispatchQueue, Ticket};
 pub use engine::{DataLiterals, Engine, EngineStats};
 pub use manifest::{ArtifactEntry, Geom, Manifest, TestGeom};
+pub use residency::ResidencyCache;
 pub use shard::{shard_index, EngineShards, ShardView, ShardedEngine};

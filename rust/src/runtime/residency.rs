@@ -1,0 +1,251 @@
+//! Byte-budgeted LRU residency for per-user adapted state.
+//!
+//! The serving layer adapts once per user and pins the adapted task
+//! state (the [`super::DataLiterals`] entry plus its host tensors) for
+//! reuse across that user's query requests. Unlike the per-episode
+//! data-literal cache — whose only eviction mechanism is ownership
+//! drop at episode end — a long-lived server needs explicit budget
+//! accounting: every entry carries a byte cost, the cache holds at
+//! most `budget` bytes, and an insert past the budget evicts
+//! least-recently-used entries first.
+//!
+//! The policy is deliberately generic over the value type so it is
+//! unit-testable without any XLA state, and the API is
+//! construct-then-insert ([`ResidencyCache::insert_with`]): a value
+//! only enters the cache after it was fully built, so a failed adapt
+//! can never leak a partially-built resident entry — the cache's
+//! byte accounting and entry count are untouched on the error path
+//! (pinned by the `failed_build_leaks_nothing` test).
+//!
+//! Hit/miss/eviction counts are the caller's to fold into
+//! [`super::EngineStats`] (via `Engine::note_residency`): the cache
+//! itself stays a pure policy object.
+
+use anyhow::{bail, Result};
+
+struct Entry<V> {
+    key: String,
+    value: V,
+    bytes: usize,
+    /// Monotonic recency stamp; the smallest stamp is the LRU entry.
+    used: u64,
+}
+
+/// A byte-budgeted LRU map from user keys to resident values.
+pub struct ResidencyCache<V> {
+    entries: Vec<Entry<V>>,
+    budget: usize,
+    used_bytes: usize,
+    clock: u64,
+}
+
+impl<V> ResidencyCache<V> {
+    /// A cache that will hold at most `budget` bytes of entries.
+    pub fn new(budget: usize) -> Self {
+        Self { entries: Vec::new(), budget, used_bytes: 0, clock: 0 }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently resident (always <= `budget`).
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<&V> {
+        let e = self.entries.iter_mut().find(|e| e.key == key)?;
+        self.clock += 1;
+        e.used = self.clock;
+        Some(&e.value)
+    }
+
+    /// Look up `key` WITHOUT refreshing recency. The fused query
+    /// batcher needs simultaneous `&V` borrows of several residents
+    /// (one per fused slot); it bumps each entry via [`Self::get`]
+    /// first, then collects the shared borrows through this view.
+    pub fn peek(&self, key: &str) -> Option<&V> {
+        self.entries.iter().find(|e| e.key == key).map(|e| &e.value)
+    }
+
+    /// Keys from least to most recently used (test/introspection view).
+    pub fn keys_lru_order(&self) -> Vec<String> {
+        let mut order: Vec<(u64, &str)> =
+            self.entries.iter().map(|e| (e.used, e.key.as_str())).collect();
+        order.sort_unstable_by_key(|&(used, _)| used);
+        order.into_iter().map(|(_, k)| k.to_string()).collect()
+    }
+
+    /// Insert a fully-built value under `key`, evicting LRU entries
+    /// until it fits. Replaces (and returns, among the evictions) any
+    /// existing entry for the same key. Errors — touching nothing — if
+    /// `bytes` exceeds the whole budget: such an entry could never
+    /// become resident and silently evicting the entire cache for it
+    /// would be worse than failing the request.
+    pub fn insert(&mut self, key: &str, value: V, bytes: usize) -> Result<Vec<(String, V)>> {
+        if bytes > self.budget {
+            bail!(
+                "resident entry `{key}` needs {bytes} bytes but the residency budget \
+                 is {} bytes",
+                self.budget
+            );
+        }
+        let mut evicted = Vec::new();
+        // A re-adapt for a resident user replaces its entry: release
+        // the old bytes first so the fit loop below sees the truth.
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            let old = self.entries.remove(i);
+            self.used_bytes -= old.bytes;
+            evicted.push((old.key, old.value));
+        }
+        while self.used_bytes + bytes > self.budget {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.used)
+                .map(|(i, _)| i)
+                .expect("over budget with no entries is unreachable (bytes <= budget)");
+            let old = self.entries.remove(lru);
+            self.used_bytes -= old.bytes;
+            evicted.push((old.key, old.value));
+        }
+        self.clock += 1;
+        self.entries.push(Entry { key: key.to_string(), value, bytes, used: self.clock });
+        self.used_bytes += bytes;
+        Ok(evicted)
+    }
+
+    /// Construct-then-insert: run `build`, and only on success insert
+    /// its value. A failed build leaves the cache byte-for-byte
+    /// untouched — the no-partial-entry contract the serving path
+    /// relies on when an adapt fails mid-request.
+    pub fn insert_with(
+        &mut self,
+        key: &str,
+        build: impl FnOnce() -> Result<(V, usize)>,
+    ) -> Result<Vec<(String, V)>> {
+        let (value, bytes) = build()?;
+        self.insert(key, value, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with(budget: usize, entries: &[(&str, usize)]) -> ResidencyCache<u32> {
+        let mut c = ResidencyCache::new(budget);
+        for (i, (k, b)) in entries.iter().enumerate() {
+            c.insert(k, i as u32, *b).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut c = cache_with(100, &[("a", 40), ("b", 40)]);
+        // Touch `a`: `b` becomes the LRU entry.
+        assert!(c.get("a").is_some());
+        assert_eq!(c.keys_lru_order(), vec!["b", "a"]);
+        let evicted = c.insert("c", 9, 40).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, "b", "eviction must follow recency, not insertion");
+        assert!(c.contains("a") && c.contains("c") && !c.contains("b"));
+        assert_eq!(c.used_bytes(), 80);
+    }
+
+    #[test]
+    fn evicts_as_many_entries_as_the_budget_needs() {
+        let mut c = cache_with(100, &[("a", 30), ("b", 30), ("c", 30)]);
+        let evicted = c.insert("d", 9, 90).unwrap();
+        let keys: Vec<&str> = evicted.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b", "c"], "multi-eviction proceeds LRU-first");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 90);
+    }
+
+    #[test]
+    fn budget_edges() {
+        // An entry exactly the budget fits (evicting everything else).
+        let mut c = cache_with(100, &[("a", 60)]);
+        c.insert("b", 9, 100).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), 100);
+        // An entry over the budget is rejected WITHOUT evicting.
+        let before = c.keys_lru_order();
+        assert!(c.insert("huge", 9, 101).is_err());
+        assert_eq!(c.keys_lru_order(), before, "failed insert must not evict");
+        assert_eq!(c.used_bytes(), 100);
+        // Zero-byte entries always fit, even into a zero-byte budget.
+        let mut z = ResidencyCache::new(0);
+        z.insert("free", 1u32, 0).unwrap();
+        assert_eq!(z.len(), 1);
+        assert!(z.insert("paid", 2u32, 1).is_err());
+    }
+
+    #[test]
+    fn reinsert_replaces_and_releases_old_bytes() {
+        let mut c = cache_with(100, &[("a", 80), ("b", 10)]);
+        // Re-adapting `a` down to 10 bytes must release the 80 first:
+        // nothing else needs evicting.
+        let evicted = c.insert("a", 9, 10).unwrap();
+        assert_eq!(evicted.len(), 1, "only the replaced entry comes back");
+        assert_eq!(evicted[0].0, "a");
+        assert_eq!(c.used_bytes(), 20);
+        assert!(c.contains("a") && c.contains("b"));
+        // And the replacement is now the most recently used entry.
+        assert_eq!(c.keys_lru_order(), vec!["b", "a"]);
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut c = cache_with(90, &[("a", 30), ("b", 30), ("c", 30)]);
+        assert!(c.get("a").is_some());
+        assert!(c.get("b").is_some());
+        // `c` is now LRU despite being the newest insert.
+        let evicted = c.insert("d", 9, 30).unwrap();
+        assert_eq!(evicted[0].0, "c");
+        assert!(c.get("missing").is_none());
+        // peek is the non-bumping view: reading the LRU entry through
+        // it must not rescue that entry from the next eviction.
+        let lru = c.keys_lru_order()[0].clone();
+        assert!(c.peek(&lru).is_some());
+        assert!(c.peek("missing").is_none());
+        assert_eq!(c.keys_lru_order()[0], lru, "peek must not bump recency");
+    }
+
+    #[test]
+    fn failed_build_leaks_nothing() {
+        // The regression the serving path pins: an adapt that fails
+        // mid-build must leave no partially-built resident entry — not
+        // in the entry count, not in the byte accounting — and the
+        // user's next (successful) request must proceed normally.
+        let mut c = cache_with(100, &[("a", 40)]);
+        let err = c.insert_with("b", || {
+            bail!("adapt failed mid-build");
+        });
+        assert!(err.is_err());
+        assert_eq!(c.len(), 1, "failed build inserted an entry");
+        assert_eq!(c.used_bytes(), 40, "failed build leaked bytes");
+        assert!(!c.contains("b"));
+        // Retry succeeds and accounts normally.
+        c.insert_with("b", || Ok((9u32, 40))).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.used_bytes(), 80);
+    }
+}

@@ -1,0 +1,619 @@
+//! `lite serve` — the online personalization serving layer.
+//!
+//! The paper's test-time protocol (adapt once per user on their support
+//! clips, then classify query batches against the adapted state) turned
+//! into a long-lived request loop:
+//!
+//! - **Adapted-state residency.** A user's first request runs the adapt
+//!   forward once ([`MetaLearner::prepare_adapted`]) and pins the result
+//!   — host task state + pre-marshaled [`DataLiterals`] — in a
+//!   byte-budgeted [`ResidencyCache`] keyed by the user. Later queries
+//!   marshal only their query batch. Hits / misses / evictions fold
+//!   into the engine stats (`Engine::note_residency`), so the
+//!   `serve-latency` scenario and the CLI report line can see them.
+//! - **Cross-user query batching.** Each shard worker micro-batches
+//!   query requests: the batch flushes when it reaches `width` requests
+//!   or the window deadline passes, and groups of two or more go
+//!   through ONE fused `megaclassify` dispatch
+//!   ([`MetaLearner::classify_batch_fused`]) — bit-identical answers in
+//!   strictly fewer device executions. Without a fused artifact the
+//!   flush degrades to per-request [`MetaLearner::classify_prepared`]
+//!   calls, same bytes either way.
+//! - **Shard routing.** Users map to engine-shard workers by a stable
+//!   FNV-1a hash of the user key ([`user_shard`]): a user's resident
+//!   state lives on exactly one shard, so no cross-shard coherence is
+//!   needed and the mapping survives restarts.
+//!
+//! Frontends speak the line protocol of [`protocol`] over stdin/stdout
+//! and (optionally) a unix socket with one handler thread per
+//! connection. Requests enter through [`Handle::submit`], which routes
+//! to the owning shard worker and answers `stats` / `shutdown` inline;
+//! in-process tests drive the same entry point the frontends use.
+//!
+//! Ordering contract: one connection's requests are answered in order
+//! (the frontends are synchronous per line); across connections only
+//! per-user state transitions are meaningful, and those serialize on
+//! the user's single shard worker — which is also why two concurrent
+//! first requests for one user adapt exactly once.
+
+pub mod protocol;
+
+use std::collections::HashMap;
+use std::io::{BufRead, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{MetaLearner, TaskState};
+use crate::data::task::Episode;
+use crate::runtime::{DataLiterals, Engine, EngineStats, ResidencyCache};
+use crate::tensor::Tensor;
+use protocol::{QueryData, Request, SimSpec};
+
+/// FNV-1a 64-bit hash of a user key. Chosen for shard routing because
+/// it is trivially stable — no per-process seed, no std hasher version
+/// dependence — so a user routes to the same shard across runs,
+/// builds, and machines (pinned by `user_hash_is_stable`).
+pub fn user_hash(user: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in user.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Stable user -> shard routing: the shard that owns this user's
+/// resident state and serves all their requests.
+pub fn user_shard(user: &str, n_shards: usize) -> usize {
+    (user_hash(user) % n_shards.max(1) as u64) as usize
+}
+
+/// Serving knobs (per shard worker).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Residency budget in bytes per shard; adapted states past it
+    /// evict LRU-first.
+    pub budget_bytes: usize,
+    /// Micro-batch flush width: a shard's pending queries flush when
+    /// this many are waiting (1 disables batching).
+    pub width: usize,
+    /// Micro-batch window: pending queries flush at this deadline even
+    /// below `width`, bounding the latency cost of batching.
+    pub window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { budget_bytes: 64 << 20, width: 4, window: Duration::from_millis(2) }
+    }
+}
+
+/// One user's pinned adapted state: the host task state (its `bytes()`
+/// is the budget cost) plus the pre-marshaled device literals every
+/// query against this user reuses.
+struct Resident {
+    state: TaskState,
+    prepared: DataLiterals,
+}
+
+/// One queued request on a shard worker.
+enum Job {
+    Adapt { id: u64, user: String, sim: SimSpec, reply: mpsc::Sender<String> },
+    Query { id: u64, user: String, data: QueryData, reply: mpsc::Sender<String> },
+}
+
+struct PendingQuery {
+    id: u64,
+    user: String,
+    data: QueryData,
+    reply: mpsc::Sender<String>,
+}
+
+/// A staged query: resident state ensured, query tensor built, ready
+/// for the classify phase of a flush.
+struct Ready {
+    id: u64,
+    user: String,
+    reply: mpsc::Sender<String>,
+    qx: Tensor,
+    cached: bool,
+    n: usize,
+}
+
+/// One shard's worker: owns the shard's residency cache and retained
+/// episodes (literals and cache never cross threads), and runs the
+/// micro-batching request loop.
+struct Worker<'e> {
+    engine: &'e Engine,
+    learner: &'e MetaLearner,
+    cache: ResidencyCache<Resident>,
+    /// Retained sim episodes per user: the data plane for `range`
+    /// queries and for transparent re-adaptation after an eviction.
+    /// Host-side request context, deliberately outside the residency
+    /// budget (which accounts the pinned adapted state).
+    episodes: HashMap<String, Episode>,
+    /// Largest available `megaclassify` fusion width <= the flush
+    /// width; 1 means fused dispatch is unavailable and flushes
+    /// classify sequentially.
+    fuse_width: usize,
+    width: usize,
+    window: Duration,
+}
+
+impl<'e> Worker<'e> {
+    fn new(engine: &'e Engine, learner: &'e MetaLearner, cfg: &ServeConfig) -> Self {
+        let fuse_width = if cfg.width > 1 {
+            learner
+                .megaclassify_widths(engine)
+                .into_iter()
+                .filter(|w| *w <= cfg.width)
+                .max()
+                .unwrap_or(1)
+        } else {
+            1
+        };
+        Self {
+            engine,
+            learner,
+            cache: ResidencyCache::new(cfg.budget_bytes),
+            episodes: HashMap::new(),
+            fuse_width,
+            width: cfg.width.max(1),
+            window: cfg.window,
+        }
+    }
+
+    /// The micro-batching loop: adapt requests run immediately; query
+    /// requests pool until `width` of them wait or the window deadline
+    /// passes, then flush as one batch.
+    fn run(mut self, rx: mpsc::Receiver<Job>) {
+        let mut pending: Vec<PendingQuery> = Vec::new();
+        let mut deadline = Instant::now();
+        loop {
+            let job = if pending.is_empty() {
+                match rx.recv() {
+                    Ok(j) => Some(j),
+                    Err(_) => break,
+                }
+            } else {
+                let now = Instant::now();
+                if now >= deadline {
+                    None
+                } else {
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(j) => Some(j),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            self.flush(&mut pending);
+                            break;
+                        }
+                    }
+                }
+            };
+            match job {
+                Some(Job::Adapt { id, user, sim, reply }) => {
+                    let line = self
+                        .do_adapt(id, &user, &sim)
+                        .unwrap_or_else(|e| protocol::error_response(id, &format!("{e:#}")));
+                    let _ = reply.send(line);
+                }
+                Some(Job::Query { id, user, data, reply }) => {
+                    if pending.is_empty() {
+                        deadline = Instant::now() + self.window;
+                    }
+                    pending.push(PendingQuery { id, user, data, reply });
+                }
+                None => self.flush(&mut pending),
+            }
+            if pending.len() >= self.width {
+                self.flush(&mut pending);
+            }
+        }
+    }
+
+    /// First-request adaptation. Idempotent: an already-resident user
+    /// gets `cached: true` without recomputing (or touching their
+    /// retained episode) — which is exactly what the second of two
+    /// concurrent first requests sees.
+    fn do_adapt(&mut self, id: u64, user: &str, sim: &SimSpec) -> Result<String> {
+        if self.cache.get(user).is_some() {
+            self.engine.note_residency(1, 0, 0);
+            let way = self.episodes.get(user).map(|e| e.way).unwrap_or(0);
+            let bytes = self.cache.peek(user).map(|r| r.state.bytes()).unwrap_or(0);
+            return Ok(protocol::adapt_response(id, user, true, way, bytes));
+        }
+        let episode = sim.episode(self.learner.image_size);
+        let way = episode.way;
+        self.adapt_user(user, &episode)?;
+        self.episodes.insert(user.to_string(), episode);
+        let bytes = self.cache.peek(user).map(|r| r.state.bytes()).unwrap_or(0);
+        Ok(protocol::adapt_response(id, user, false, way, bytes))
+    }
+
+    /// Adapt `episode` and pin the result for `user`: one residency
+    /// miss, plus eviction counts when pinning pushed others out. Built
+    /// through [`ResidencyCache::insert_with`], so a failed adapt
+    /// leaves the cache untouched.
+    fn adapt_user(&mut self, user: &str, episode: &Episode) -> Result<()> {
+        let (learner, engine) = (self.learner, self.engine);
+        engine.note_residency(0, 1, 0);
+        let evicted = self.cache.insert_with(user, || {
+            let (state, prepared) = learner.prepare_adapted(engine, episode)?;
+            let bytes = state.bytes();
+            Ok((Resident { state, prepared }, bytes))
+        })?;
+        if !evicted.is_empty() {
+            engine.note_residency(0, 0, evicted.len());
+        }
+        Ok(())
+    }
+
+    /// Ensure `user` is resident (hit bumps recency; an evicted user
+    /// re-adapts transparently from their retained episode) and build
+    /// the padded query tensor. `cached` reports whether the resident
+    /// state predated this request.
+    fn stage_query(&mut self, user: &str, data: &QueryData) -> Result<(Tensor, bool)> {
+        let cached = if self.cache.get(user).is_some() {
+            self.engine.note_residency(1, 0, 0);
+            true
+        } else {
+            self.readapt(user)?;
+            false
+        };
+        let qx = match data {
+            QueryData::Range { lo, hi } => {
+                let ep = self
+                    .episodes
+                    .get(user)
+                    .context("range query without a retained episode")?;
+                self.learner.query_batch(self.engine, ep, *lo..*hi)?
+            }
+            QueryData::Rows(rows) => self.rows_tensor(rows)?,
+        };
+        Ok((qx, cached))
+    }
+
+    /// Re-adapt an evicted (or never-adapted) user from their retained
+    /// episode. Errors if the user never sent an adapt request to this
+    /// shard.
+    fn readapt(&mut self, user: &str) -> Result<()> {
+        let ep = self.episodes.remove(user).with_context(|| {
+            format!("user `{user}` has no adapted state on this shard: send an adapt request first")
+        })?;
+        let res = self.adapt_user(user, &ep);
+        self.episodes.insert(user.to_string(), ep);
+        res
+    }
+
+    /// Raw query rows -> the classify artifact's padded `[mq, s, s, 3]`
+    /// input tensor.
+    fn rows_tensor(&self, rows: &[Vec<f32>]) -> Result<Tensor> {
+        let tg = self.learner.test_geom.as_ref().context("model has no test geometry")?;
+        let s = self.learner.image_size;
+        let px = s * s * 3;
+        if rows.len() > tg.mq {
+            anyhow::bail!("{} query rows for {} slots", rows.len(), tg.mq);
+        }
+        let mut x = vec![0f32; tg.mq * px];
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != px {
+                anyhow::bail!("query row {i} has {} values, want {px}", r.len());
+            }
+            x[i * px..(i + 1) * px].copy_from_slice(r);
+        }
+        Tensor::new(vec![tg.mq, s, s, 3], x)
+    }
+
+    /// Flush the pending batch: stage every query (residency + query
+    /// tensor), then classify — groups of >= 2 through one fused
+    /// dispatch, the rest (and any fused fallback) sequentially.
+    /// Response bytes are identical on either path.
+    fn flush(&mut self, pending: &mut Vec<PendingQuery>) {
+        if pending.is_empty() {
+            return;
+        }
+        let mut ready: Vec<Ready> = Vec::with_capacity(pending.len());
+        for q in pending.drain(..) {
+            let n = q.data.n_real();
+            match self.stage_query(&q.user, &q.data) {
+                Ok((qx, cached)) => {
+                    ready.push(Ready { id: q.id, user: q.user, reply: q.reply, qx, cached, n })
+                }
+                Err(e) => {
+                    let _ = q.reply.send(protocol::error_response(q.id, &format!("{e:#}")));
+                }
+            }
+        }
+        for group in ready.chunks(self.fuse_width.max(1)) {
+            if group.len() >= 2 {
+                if let Some(outs) = self.try_fused(group) {
+                    for (r, logits) in group.iter().zip(outs) {
+                        let _ = r
+                            .reply
+                            .send(protocol::query_response(r.id, &r.user, r.cached, r.n, &logits));
+                    }
+                    continue;
+                }
+            }
+            for r in group {
+                let line = match self.classify_one(&r.user, &r.qx) {
+                    Ok(logits) => protocol::query_response(r.id, &r.user, r.cached, r.n, &logits),
+                    Err(e) => protocol::error_response(r.id, &format!("{e:#}")),
+                };
+                let _ = r.reply.send(line);
+            }
+        }
+    }
+
+    /// Fused path: borrow every group member's resident literals at
+    /// once and run one megaclassify dispatch. `None` — fall back to
+    /// the sequential path, bit-identical by construction — if a
+    /// member lost residency to an intra-batch eviction or the fused
+    /// dispatch itself failed.
+    fn try_fused(&self, group: &[Ready]) -> Option<Vec<Tensor>> {
+        let mut slots: Vec<(&DataLiterals, Tensor)> = Vec::with_capacity(group.len());
+        for r in group {
+            slots.push((&self.cache.peek(&r.user)?.prepared, r.qx.clone()));
+        }
+        match self.learner.classify_batch_fused(self.engine, self.fuse_width, &slots) {
+            Ok(outs) => Some(outs),
+            Err(e) => {
+                eprintln!("[serve] fused classify failed ({e:#}); answering sequentially");
+                None
+            }
+        }
+    }
+
+    /// Sequential classify against the user's resident state,
+    /// re-ensuring residency first (a flush-mate's adaptation may have
+    /// evicted this user between staging and classify).
+    fn classify_one(&mut self, user: &str, qx: &Tensor) -> Result<Tensor> {
+        if self.cache.get(user).is_none() {
+            self.readapt(user)?;
+        }
+        let r = self.cache.peek(user).expect("resident: ensured above");
+        self.learner.classify_prepared(self.engine, &r.prepared, qx.clone())
+    }
+}
+
+/// A running server's request entry point: routes adapt/query lines to
+/// the owning shard worker, answers stats/shutdown inline. Clone one
+/// per frontend thread.
+#[derive(Clone)]
+pub struct Handle<'e> {
+    txs: Vec<mpsc::Sender<Job>>,
+    engines: Vec<&'e Engine>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Handle<'_> {
+    /// True once a shutdown request was accepted; frontends drain and
+    /// exit.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Request a server stop (the shutdown op does this; frontends may
+    /// also call it on fatal IO errors).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    fn merged_stats(&self) -> EngineStats {
+        let mut out = EngineStats::default();
+        for e in &self.engines {
+            out.merge(&e.stats());
+        }
+        out
+    }
+
+    /// Submit one request line; the response line arrives on the
+    /// returned channel. Submission never blocks on model execution,
+    /// which is what lets concurrent requests pool into one
+    /// micro-batch; parse errors and stats/shutdown answer immediately.
+    pub fn submit(&self, line: &str) -> mpsc::Receiver<String> {
+        let (tx, rx) = mpsc::channel();
+        match protocol::parse_request(line) {
+            Err(e) => {
+                let _ = tx.send(protocol::error_response(0, &format!("{e:#}")));
+            }
+            Ok(Request::Stats { id }) => {
+                let _ = tx.send(protocol::stats_response(id, &self.merged_stats()));
+            }
+            Ok(Request::Shutdown { id }) => {
+                self.stop();
+                let _ = tx.send(protocol::shutdown_response(id));
+            }
+            Ok(Request::Adapt { id, user, sim }) => {
+                let shard = user_shard(&user, self.txs.len());
+                let job = Job::Adapt { id, user, sim, reply: tx.clone() };
+                if self.txs[shard].send(job).is_err() {
+                    let _ = tx.send(protocol::error_response(id, "server is shutting down"));
+                }
+            }
+            Ok(Request::Query { id, user, data }) => {
+                let shard = user_shard(&user, self.txs.len());
+                let job = Job::Query { id, user, data, reply: tx.clone() };
+                if self.txs[shard].send(job).is_err() {
+                    let _ = tx.send(protocol::error_response(id, "server is shutting down"));
+                }
+            }
+        }
+        rx
+    }
+
+    /// Submit and wait for the single response line (the synchronous
+    /// per-connection frontend path and most tests).
+    pub fn request(&self, line: &str) -> String {
+        self.submit(line)
+            .recv()
+            .unwrap_or_else(|_| protocol::error_response(0, "server worker gone"))
+    }
+}
+
+/// Run shard workers for the given engines (one worker per shard, each
+/// owning its residency cache) and hand the request [`Handle`] to `f`.
+/// Workers drain and join when `f` returns — so the CLI passes its
+/// frontend loop, and tests pass their request script.
+pub fn with_server<'e, R>(
+    engines: &[&'e Engine],
+    learner: &MetaLearner,
+    cfg: &ServeConfig,
+    f: impl FnOnce(&Handle) -> Result<R>,
+) -> Result<R> {
+    anyhow::ensure!(!engines.is_empty(), "serve needs at least one engine shard");
+    std::thread::scope(|s| {
+        let mut txs = Vec::with_capacity(engines.len());
+        for &engine in engines {
+            let (tx, rx) = mpsc::channel::<Job>();
+            txs.push(tx);
+            let worker = Worker::new(engine, learner, cfg);
+            s.spawn(move || worker.run(rx));
+        }
+        let handle =
+            Handle { txs, engines: engines.to_vec(), stop: Arc::new(AtomicBool::new(false)) };
+        let out = f(&handle);
+        // Dropping the handle drops the last senders: workers flush
+        // their pending batches, drain, and exit; the scope joins them.
+        drop(handle);
+        out
+    })
+}
+
+/// Run the line-protocol frontends until shutdown: stdin/stdout always,
+/// plus a unix socket when `socket_path` is given (one handler thread
+/// per connection). With a socket, the process keeps serving after
+/// stdin EOF until a shutdown request arrives.
+pub fn run_frontends(handle: &Handle, socket_path: Option<&std::path::Path>) -> Result<()> {
+    match socket_path {
+        None => {
+            stdin_loop(handle);
+            Ok(())
+        }
+        Some(path) => {
+            // A stale socket file from a previous run would fail bind.
+            let _ = std::fs::remove_file(path);
+            let listener = UnixListener::bind(path)
+                .with_context(|| format!("binding unix socket {}", path.display()))?;
+            listener.set_nonblocking(true).context("socket nonblocking accept")?;
+            std::thread::scope(|s| {
+                s.spawn(|| stdin_loop(handle));
+                accept_loop(&listener, handle);
+            });
+            let _ = std::fs::remove_file(path);
+            Ok(())
+        }
+    }
+}
+
+/// stdin frontend: one request line in, one response line out. Returns
+/// on EOF or shutdown.
+fn stdin_loop(handle: &Handle) {
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout().lock();
+    for line in stdin.lock().lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if !line.is_empty() {
+            let reply = handle.request(line);
+            if writeln!(out, "{reply}").and_then(|_| out.flush()).is_err() {
+                break;
+            }
+        }
+        if handle.stopped() {
+            break;
+        }
+    }
+}
+
+/// Nonblocking accept loop; connection handlers are scoped threads that
+/// poll the stop flag through short read timeouts, so shutdown joins
+/// promptly even with idle connections open.
+fn accept_loop(listener: &UnixListener, handle: &Handle) {
+    std::thread::scope(|s| {
+        while !handle.stopped() {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let h = handle.clone();
+                    s.spawn(move || conn_loop(stream, &h));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+}
+
+/// One socket connection: manual newline framing (a read timeout can
+/// split a line across reads, so partial bytes stay buffered).
+fn conn_loop(mut stream: UnixStream, handle: &Handle) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = buf.drain(..=pos).collect();
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim();
+                    if text.is_empty() {
+                        continue;
+                    }
+                    let reply = handle.request(text);
+                    if stream
+                        .write_all(reply.as_bytes())
+                        .and_then(|_| stream.write_all(b"\n"))
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+        if handle.stopped() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn user_hash_is_stable() {
+        // Pinned FNV-1a 64 values: shard routing must never move users
+        // across builds (their resident state lives on one shard).
+        assert_eq!(user_hash("alice"), 0x508b_2abb_65a0_3907);
+        assert_eq!(user_hash("bob"), 0x004d_4419_134a_0a54);
+        assert_eq!(user_hash(""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn user_shard_is_stable_and_total() {
+        assert_eq!(user_shard("alice", 4), 3);
+        assert_eq!(user_shard("bob", 4), 0);
+        for n in 1..=5usize {
+            for u in ["alice", "bob", "carol", ""] {
+                let s = user_shard(u, n);
+                assert!(s < n);
+                assert_eq!(s, user_shard(u, n), "routing must be a pure function");
+            }
+        }
+        // Degenerate shard counts clamp instead of dividing by zero.
+        assert_eq!(user_shard("alice", 0), 0);
+    }
+}

@@ -1,0 +1,346 @@
+//! Line-delimited JSON wire protocol for `lite serve`.
+//!
+//! One request per line in, one response per line out, over stdin/
+//! stdout or a unix socket — both frontends speak exactly this module.
+//! The JSON layer is the hand-rolled `report::json` value (insertion-
+//! ordered objects, shortest-round-trip numbers), so responses are
+//! BYTE-deterministic: the same logits produce the same response line
+//! whether they came from a resident cache hit, a recompute, or a
+//! fused cross-user dispatch. The serving bit-identity checks compare
+//! response lines directly.
+//!
+//! Requests (`id` is optional everywhere and echoed back; default 0):
+//!
+//! ```text
+//! {"op":"adapt","id":1,"user":"alice","sim":{"seed":7,"users":2,"user":0,
+//!  "support_clips":2,"query_videos":1,"frames":2}}
+//! {"op":"query","id":2,"user":"alice","range":[0,8]}
+//! {"op":"query","id":3,"user":"alice","x":[[...image floats...],...]}
+//! {"op":"stats","id":4}
+//! {"op":"shutdown","id":5}
+//! ```
+//!
+//! `sim` is the deterministic data plane of the harness: the server
+//! regenerates the user's ORBIT-sim personalization episode from the
+//! spec (a production ingest would attach raw frames instead — the
+//! `x` query form is that path's shape). `range` queries address the
+//! retained sim episode's query frames; `x` queries carry raw rows of
+//! `image_size * image_size * 3` floats.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::orbit::{OrbitSim, VideoMode};
+use crate::data::rng::Rng;
+use crate::data::task::Episode;
+use crate::report::json::{self, Json};
+use crate::runtime::EngineStats;
+use crate::tensor::Tensor;
+
+/// Deterministic ORBIT-sim episode spec: the request-side shortcut for
+/// a user's personalization data. The same spec always regenerates the
+/// same episode (world and camera paths are pure functions of the
+/// seeds), which is what makes evicted-state re-adaptation and the
+/// cached-vs-recomputed gates exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSpec {
+    pub seed: u64,
+    /// World size (how many users the sim world holds).
+    pub users: usize,
+    /// Which sim user's objects this episode films.
+    pub user: usize,
+    pub support_clips: usize,
+    pub query_videos: usize,
+    pub frames: usize,
+}
+
+impl SimSpec {
+    /// Regenerate the episode this spec describes. Deterministic: the
+    /// episode RNG is derived from `(seed, user)` alone, so every
+    /// re-generation (first adapt, post-eviction re-adapt, recompute
+    /// checks) films the identical frames.
+    pub fn episode(&self, image_size: usize) -> Episode {
+        let sim = OrbitSim::new(self.seed, self.users);
+        let mut rng = Rng::new(self.seed).split(self.user as u64 + 1);
+        sim.user_episode(
+            self.user,
+            VideoMode::Clean,
+            &mut rng,
+            image_size,
+            self.support_clips,
+            self.query_videos,
+            self.frames,
+        )
+    }
+}
+
+/// What a query request classifies: a range into the user's retained
+/// sim episode, or raw image rows carried by the request itself.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryData {
+    Range { lo: usize, hi: usize },
+    Rows(Vec<Vec<f32>>),
+}
+
+impl QueryData {
+    /// Real (unpadded) query count of this payload.
+    pub fn n_real(&self) -> usize {
+        match self {
+            QueryData::Range { lo, hi } => hi.saturating_sub(*lo),
+            QueryData::Rows(rows) => rows.len(),
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Adapt { id: u64, user: String, sim: SimSpec },
+    Query { id: u64, user: String, data: QueryData },
+    Stats { id: u64 },
+    Shutdown { id: u64 },
+}
+
+fn as_usize(v: &Json, what: &str) -> Result<usize> {
+    let u = v.as_u64().with_context(|| format!("`{what}` is not an unsigned integer"))?;
+    Ok(u as usize)
+}
+
+fn opt_usize(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => as_usize(v, key),
+    }
+}
+
+fn parse_sim(v: &Json) -> Result<SimSpec> {
+    let user = opt_usize(v, "user", 0)?;
+    let spec = SimSpec {
+        seed: match v.get("seed") {
+            None => 0,
+            Some(s) => s.as_u64().context("`seed` is not a u64")?,
+        },
+        users: opt_usize(v, "users", user + 1)?,
+        user,
+        support_clips: opt_usize(v, "support_clips", 2)?,
+        query_videos: opt_usize(v, "query_videos", 1)?,
+        frames: opt_usize(v, "frames", 2)?,
+    };
+    if spec.user >= spec.users {
+        bail!("sim user {} out of range for a {}-user world", spec.user, spec.users);
+    }
+    if spec.support_clips == 0 || spec.frames == 0 {
+        bail!("sim needs support_clips >= 1 and frames >= 1");
+    }
+    Ok(spec)
+}
+
+/// Parse one request line. Errors carry enough context to go straight
+/// into an `error_response`.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = json::parse(line).context("request is not valid JSON")?;
+    let id = match v.get("id") {
+        None => 0,
+        Some(j) => j.as_u64().context("`id` is not a u64")?,
+    };
+    let op = v.need("op")?.as_str().context("`op` is not a string")?;
+    let user = |v: &Json| -> Result<String> {
+        Ok(v.need("user")?.as_str().context("`user` is not a string")?.to_string())
+    };
+    match op {
+        "adapt" => Ok(Request::Adapt {
+            id,
+            user: user(&v)?,
+            sim: parse_sim(v.need("sim").context("adapt needs a `sim` episode spec")?)?,
+        }),
+        "query" => {
+            let data = match (v.get("range"), v.get("x")) {
+                (Some(r), None) => {
+                    let arr = r.as_arr().context("`range` is not an array")?;
+                    if arr.len() != 2 {
+                        bail!("`range` must be [lo, hi]");
+                    }
+                    let (lo, hi) = (as_usize(&arr[0], "range.lo")?, as_usize(&arr[1], "range.hi")?);
+                    if lo >= hi {
+                        bail!("empty query range {lo}..{hi}");
+                    }
+                    QueryData::Range { lo, hi }
+                }
+                (None, Some(x)) => {
+                    let rows = x.as_arr().context("`x` is not an array")?;
+                    if rows.is_empty() {
+                        bail!("`x` carries no query rows");
+                    }
+                    let mut out = Vec::with_capacity(rows.len());
+                    for (i, row) in rows.iter().enumerate() {
+                        let vals = row.as_arr().with_context(|| format!("x[{i}] is not an array"))?;
+                        let mut r = Vec::with_capacity(vals.len());
+                        for v in vals {
+                            r.push(v.as_f64().with_context(|| format!("x[{i}] holds a non-number"))? as f32);
+                        }
+                        out.push(r);
+                    }
+                    QueryData::Rows(out)
+                }
+                _ => bail!("query needs exactly one of `range` or `x`"),
+            };
+            Ok(Request::Query { id, user: user(&v)?, data })
+        }
+        "stats" => Ok(Request::Stats { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        other => bail!("unknown op `{other}` (expected adapt|query|stats|shutdown)"),
+    }
+}
+
+fn base(ok: bool, op: &str, id: u64) -> Json {
+    let mut o = Json::obj();
+    o.push("ok", Json::Bool(ok));
+    o.push("op", Json::Str(op.to_string()));
+    o.push("id", Json::UInt(id));
+    o
+}
+
+pub fn adapt_response(id: u64, user: &str, cached: bool, way: usize, state_bytes: usize) -> String {
+    let mut o = base(true, "adapt", id);
+    o.push("user", Json::Str(user.to_string()));
+    o.push("cached", Json::Bool(cached));
+    o.push("way", Json::UInt(way as u64));
+    o.push("state_bytes", Json::UInt(state_bytes as u64));
+    o.to_compact()
+}
+
+/// Serialize a query answer: predicted label + full logits row for each
+/// of the `n` real queries. The floats go through the shortest-round-
+/// trip writer, so identical logits — cached, recomputed, or fused —
+/// yield byte-identical lines.
+pub fn query_response(id: u64, user: &str, cached: bool, n: usize, logits: &Tensor) -> String {
+    let mut o = base(true, "query", id);
+    o.push("user", Json::Str(user.to_string()));
+    o.push("cached", Json::Bool(cached));
+    o.push("n", Json::UInt(n as u64));
+    let mut preds = Vec::with_capacity(n);
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        preds.push(Json::UInt(logits.row_argmax(i) as u64));
+        rows.push(Json::Arr(logits.row(i).iter().map(|&v| Json::Num(v as f64)).collect()));
+    }
+    o.push("predictions", Json::Arr(preds));
+    o.push("logits", Json::Arr(rows));
+    o.to_compact()
+}
+
+/// Merged engine counters (the report-line numbers, as JSON). Not a
+/// determinism surface: timings vary run to run.
+pub fn stats_response(id: u64, s: &EngineStats) -> String {
+    let mut o = base(true, "stats", id);
+    let mut e = Json::obj();
+    e.push("compiles", Json::UInt(s.compiles as u64));
+    e.push("executions", Json::UInt(s.executions as u64));
+    e.push("param_literal_builds", Json::UInt(s.param_literal_builds as u64));
+    e.push("param_cache_hits", Json::UInt(s.param_cache_hits as u64));
+    e.push("data_literal_builds", Json::UInt(s.data_literal_builds as u64));
+    e.push("data_cache_hits", Json::UInt(s.data_cache_hits as u64));
+    e.push("resident_hits", Json::UInt(s.resident_hits as u64));
+    e.push("resident_misses", Json::UInt(s.resident_misses as u64));
+    e.push("resident_evictions", Json::UInt(s.resident_evictions as u64));
+    e.push("compile_secs", Json::Num(s.compile_secs));
+    e.push("execute_secs", Json::Num(s.execute_secs));
+    e.push("transfer_secs", Json::Num(s.transfer_secs));
+    o.push("engine", e);
+    o.to_compact()
+}
+
+pub fn shutdown_response(id: u64) -> String {
+    base(true, "shutdown", id).to_compact()
+}
+
+pub fn error_response(id: u64, msg: &str) -> String {
+    let mut o = Json::obj();
+    o.push("ok", Json::Bool(false));
+    o.push("id", Json::UInt(id));
+    o.push("error", Json::Str(msg.to_string()));
+    o.to_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapt_request_parses_with_defaults() {
+        let r = parse_request(r#"{"op":"adapt","user":"alice","sim":{"seed":7,"user":1,"users":3}}"#)
+            .unwrap();
+        match r {
+            Request::Adapt { id, user, sim } => {
+                assert_eq!(id, 0, "missing id defaults to 0");
+                assert_eq!(user, "alice");
+                assert_eq!(
+                    sim,
+                    SimSpec { seed: 7, users: 3, user: 1, support_clips: 2, query_videos: 1, frames: 2 }
+                );
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn query_forms_parse_and_conflict_is_rejected() {
+        let r = parse_request(r#"{"op":"query","id":9,"user":"u","range":[4,12]}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Query { id: 9, user: "u".into(), data: QueryData::Range { lo: 4, hi: 12 } }
+        );
+        let r = parse_request(r#"{"op":"query","user":"u","x":[[0.5,1.0],[0.25,0]]}"#).unwrap();
+        match r {
+            Request::Query { data: QueryData::Rows(rows), .. } => {
+                assert_eq!(rows, vec![vec![0.5, 1.0], vec![0.25, 0.0]]);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert!(parse_request(r#"{"op":"query","user":"u"}"#).is_err());
+        assert!(parse_request(r#"{"op":"query","user":"u","range":[0,2],"x":[[1]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"query","user":"u","range":[3,3]}"#).is_err());
+    }
+
+    #[test]
+    fn bad_requests_are_errors_not_panics() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"transmogrify"}"#).is_err());
+        assert!(parse_request(r#"{"op":"adapt","user":"u"}"#).is_err(), "adapt needs sim");
+        assert!(
+            parse_request(r#"{"op":"adapt","user":"u","sim":{"user":5,"users":2}}"#).is_err(),
+            "sim user out of world range"
+        );
+    }
+
+    #[test]
+    fn responses_are_byte_deterministic() {
+        let logits = Tensor::new(vec![2, 3], vec![0.5, 2.0, -1.0, 0.0, 0.25, 4.0]).unwrap();
+        let a = query_response(3, "alice", true, 2, &logits);
+        assert_eq!(
+            a,
+            r#"{"ok":true,"op":"query","id":3,"user":"alice","cached":true,"n":2,"predictions":[1,2],"logits":[[0.5,2,-1],[0,0.25,4]]}"#
+        );
+        assert_eq!(a, query_response(3, "alice", true, 2, &logits.clone()));
+        assert_eq!(
+            adapt_response(1, "bob", false, 5, 2560),
+            r#"{"ok":true,"op":"adapt","id":1,"user":"bob","cached":false,"way":5,"state_bytes":2560}"#
+        );
+        assert_eq!(
+            error_response(7, "nope"),
+            r#"{"ok":false,"id":7,"error":"nope"}"#
+        );
+    }
+
+    #[test]
+    fn sim_episode_regeneration_is_deterministic() {
+        let spec =
+            SimSpec { seed: 11, users: 2, user: 1, support_clips: 1, query_videos: 1, frames: 2 };
+        let a = spec.episode(32);
+        let b = spec.episode(32);
+        assert_eq!(a.way, b.way);
+        assert_eq!(a.n_support(), b.n_support());
+        assert_eq!(a.support[0].0, b.support[0].0, "frames must regenerate bit-identically");
+        assert_eq!(a.query.len(), b.query.len());
+        assert_eq!(a.query[0].0, b.query[0].0);
+    }
+}

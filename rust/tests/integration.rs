@@ -18,7 +18,9 @@ use lite::eval::{eval_dataset, par_eval_dataset, score_episode, EvalConfig, Pred
 use lite::optim::{Adam, GradAccum};
 use lite::params::ParamStore;
 use lite::runtime::{Engine, EngineShards, ShardedEngine};
+use lite::serve::{user_shard, with_server, ServeConfig};
 use lite::tensor::Tensor;
+use std::time::Duration;
 
 fn engine() -> Engine {
     Engine::load(Engine::default_dir()).expect("artifacts present (run `make artifacts`)")
@@ -359,18 +361,20 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
     // resume-fidelity across its snapshot boundaries +
     // shard-throughput across 1 vs 2 engine shards +
     // dispatch-throughput across direct vs pipelined dispatch +
-    // megabatch-throughput across unfused vs width-2 fusion (each
-    // run_filtered call loads its own engine, like the CLI).
+    // megabatch-throughput across unfused vs width-2 fusion vs auto +
+    // serve-latency across cached vs fresh and batched vs sequential
+    // (each run_filtered call loads its own engine, like the CLI).
     let knobs = Knobs::parse(
         "episodes=3,worker-sweep=1,2,train-bench-episodes=3,accum=2,train-worker-sweep=1,2,\
          resume-episodes=4,resume-checkpoint-every=2,resume-workers=2,\
          shard-bench-episodes=3,shard-sweep=1,2,shard-eval-episodes=2,\
-         dispatch-bench-episodes=3,dispatch-eval-episodes=2,megabatch-bench-episodes=3",
+         dispatch-bench-episodes=3,dispatch-eval-episodes=2,megabatch-bench-episodes=3,\
+         serve-users=2,serve-queries=2",
     )
     .unwrap();
     let a = run_filtered("runtime", &knobs, 5).unwrap();
     let b = run_filtered("runtime", &knobs, 5).unwrap();
-    assert_eq!(a.reports.len(), 7);
+    assert_eq!(a.reports.len(), 8);
     assert_eq!(b.reports.len(), a.reports.len());
     for (x, y) in a.reports.iter().zip(&b.reports) {
         assert_eq!(
@@ -417,6 +421,26 @@ fn bench_run_payloads_are_deterministic_and_self_compare_passes() {
             assert_eq!(mt.get_metric("megabatch_fewer_executions").unwrap().value, 1.0);
         }
         None => eprintln!("megabatch fusion gates skipped: no megatrain artifact"),
+    }
+    match mt.get_metric("megabatch_auto_bit_identical") {
+        Some(m) => {
+            assert_eq!(m.value, 1.0);
+            assert_eq!(mt.get_metric("megabatch_auto_no_more_executions").unwrap().value, 1.0);
+        }
+        None => eprintln!("megabatch auto gates skipped: no megatrain artifact"),
+    }
+    // ...the serving layer answered from the residency cache bit-identically
+    // to a from-scratch adapt+classify, and (when a fused classify artifact
+    // ships) cross-user batching matched sequential answers with strictly
+    // fewer device executions...
+    let sl = a.get("serve-latency").unwrap();
+    assert_eq!(sl.get_metric("serve_cached_bit_identical").unwrap().value, 1.0);
+    match sl.get_metric("serve_batched_bit_identical") {
+        Some(m) => {
+            assert_eq!(m.value, 1.0);
+            assert_eq!(sl.get_metric("serve_fewer_executions").unwrap().value, 1.0);
+        }
+        None => eprintln!("serve batching gates skipped: no megaclassify artifact"),
     }
     // ...and steady-state prediction never rebuilt parameter literals.
     let ce = a.get("cache-efficiency").unwrap();
@@ -1148,6 +1172,126 @@ fn finetuner_rejects_out_of_way_support_labels() {
     let res = ft.predict_episode(&e, &ep);
     let msg = format!("{:#}", res.expect_err("out-of-way label must be an Err, not a panic"));
     assert!(msg.contains("way"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn serve_adapts_once_under_concurrent_first_requests() {
+    // Two racing first requests for one user must adapt exactly once:
+    // they serialize on the user's single shard worker, and whichever
+    // lands second finds the pinned state (`cached: true`) instead of
+    // recomputing. Both still get a well-formed answer.
+    let Some(e) = engine_opt() else { return };
+    let learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let cfg = ServeConfig { width: 1, ..Default::default() };
+    let adapt = r#"{"op":"adapt","id":1,"user":"alice","sim":{"seed":7,"users":2,"user":0}}"#;
+    let m0 = e.stats().resident_misses;
+    with_server(&[&e], &learner, &cfg, |h| {
+        // submit (not request) both before reading either response, so
+        // the two jobs are queued on the shard worker simultaneously.
+        let (rx1, rx2) = (h.submit(adapt), h.submit(adapt));
+        let (a, b) = (rx1.recv().unwrap(), rx2.recv().unwrap());
+        for line in [&a, &b] {
+            assert!(line.contains(r#""ok":true"#), "adapt failed: {line}");
+        }
+        let reused = [&a, &b].iter().filter(|l| l.contains(r#""cached":true"#)).count();
+        assert_eq!(reused, 1, "exactly one of the racing requests reuses: {a} / {b}");
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(e.stats().resident_misses - m0, 1, "one adaptation for two racing requests");
+}
+
+#[test]
+fn serve_responses_byte_identical_cached_and_batched() {
+    // The serving determinism contract at the wire level: repeat
+    // queries answered from the residency cache, a fresh server's
+    // from-scratch recompute, and the fused cross-user batch all
+    // produce byte-identical response lines — and the fused flush runs
+    // strictly fewer device executions (when the fused classify
+    // artifact ships; without it the batch degrades sequentially and
+    // only the bytes are checked).
+    let Some(e) = engine_opt() else { return };
+    let learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let adapt = |u: usize| {
+        format!(r#"{{"op":"adapt","user":"u{u}","sim":{{"seed":7,"users":2,"user":{u}}}}}"#)
+    };
+    let query = |u: usize| format!(r#"{{"op":"query","user":"u{u}","range":[0,2]}}"#);
+
+    // Sequential reference: width 1 disables batching outright.
+    let seq_cfg = ServeConfig { width: 1, ..Default::default() };
+    let x0 = e.stats().executions;
+    let seq: Vec<String> = with_server(&[&e], &learner, &seq_cfg, |h| {
+        for u in 0..2 {
+            assert!(h.request(&adapt(u)).contains(r#""ok":true"#));
+        }
+        Ok((0..2).map(|u| h.request(&query(u))).collect())
+    })
+    .unwrap();
+    let seq_execs = e.stats().executions - x0;
+
+    // Resident-cache answers must not drift across repeats, and a
+    // fresh server recomputing from scratch must emit the same bytes.
+    let again: Vec<String> = with_server(&[&e], &learner, &seq_cfg, |h| {
+        for u in 0..2 {
+            h.request(&adapt(u));
+        }
+        let first: Vec<String> = (0..2).map(|u| h.request(&query(u))).collect();
+        let second: Vec<String> = (0..2).map(|u| h.request(&query(u))).collect();
+        assert_eq!(first, second, "resident-cache answers must not drift");
+        Ok(first)
+    })
+    .unwrap();
+    assert_eq!(seq, again, "fresh-server recompute diverged from the reference run");
+
+    // Batched: a wide window lets both queries pool into one flush.
+    let bat_cfg =
+        ServeConfig { width: 2, window: Duration::from_millis(500), ..Default::default() };
+    let x1 = e.stats().executions;
+    let bat: Vec<String> = with_server(&[&e], &learner, &bat_cfg, |h| {
+        for u in 0..2 {
+            h.request(&adapt(u));
+        }
+        let rx: Vec<_> = (0..2).map(|u| h.submit(&query(u))).collect();
+        Ok(rx.into_iter().map(|r| r.recv().unwrap()).collect())
+    })
+    .unwrap();
+    let bat_execs = e.stats().executions - x1;
+    assert_eq!(seq, bat, "fused answers diverged from sequential");
+    if learner.megaclassify_widths(&e).contains(&2) {
+        assert!(
+            bat_execs < seq_execs,
+            "fused flush must run fewer executions ({bat_execs} vs {seq_execs})"
+        );
+    } else {
+        eprintln!("skipping fused execution-count check: no width-2 megaclassify artifact");
+    }
+}
+
+#[test]
+fn serve_routes_users_to_stable_shards() {
+    // alice -> shard 1, bob -> shard 0 of 2 (the pinned FNV-1a
+    // routing): each user's adaptation must land only on the owning
+    // shard's engine, and the stats op merges counters across shards.
+    let Some(e0) = engine_opt() else { return };
+    let Some(e1) = engine_opt() else { return };
+    assert_eq!(user_shard("alice", 2), 1);
+    assert_eq!(user_shard("bob", 2), 0);
+    let learner = MetaLearner::new(&e0, "protonet", 32, None, Some(40), 64).unwrap();
+    let cfg = ServeConfig { width: 1, ..Default::default() };
+    let (m0, m1) = (e0.stats().resident_misses, e1.stats().resident_misses);
+    with_server(&[&e0, &e1], &learner, &cfg, |h| {
+        let adapt = |user: &str, u: usize| {
+            format!(r#"{{"op":"adapt","user":"{user}","sim":{{"seed":7,"users":2,"user":{u}}}}}"#)
+        };
+        assert!(h.request(&adapt("alice", 0)).contains(r#""ok":true"#));
+        assert!(h.request(&adapt("bob", 1)).contains(r#""ok":true"#));
+        let stats = h.request(r#"{"op":"stats"}"#);
+        assert!(stats.contains(r#""resident_misses":"#), "stats line: {stats}");
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(e1.stats().resident_misses - m1, 1, "alice's adaptation must land on shard 1");
+    assert_eq!(e0.stats().resident_misses - m0, 1, "bob's adaptation must land on shard 0");
 }
 
 #[test]

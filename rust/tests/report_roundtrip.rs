@@ -1,6 +1,6 @@
 //! Report-layer tests that need no AOT artifacts: property-style
 //! JSON round-trip (incl. NaN/±inf and string escaping), a golden
-//! snapshot pinning schema v2 byte-for-byte, a schema snapshot of a
+//! snapshot pinning schema v3 byte-for-byte, a schema snapshot of a
 //! seeded analytic scenario, and the `bench compare` gating matrix.
 
 use lite::bench::scenarios::{run_filtered, Knobs};
@@ -91,6 +91,9 @@ fn random_report(seed: u64) -> ScenarioReport {
             param_cache_hits: rng.below(1000) as u64,
             data_literal_builds: rng.below(1000) as u64,
             data_cache_hits: rng.next_u64() >> 13,
+            resident_hits: rng.below(1000) as u64,
+            resident_misses: rng.below(1000) as u64,
+            resident_evictions: rng.next_u64() >> 14,
             // Dyadic, hence exactly representable and != NaN (the
             // engine snapshot derives PartialEq, so NaN here would make
             // the equality assertion fail for the wrong reason).
@@ -132,14 +135,15 @@ fn report_json_round_trip_is_lossless() {
     });
 }
 
-/// Golden snapshot of schema v2, byte for byte: if the writer's field
+/// Golden snapshot of schema v3, byte for byte: if the writer's field
 /// names, ordering, number formatting, or escaping drift, this fails
-/// before any downstream consumer notices. (v2 extended the engine
-/// section with the data-literal counters and the transfer_secs half
-/// of the old aggregate execute time.)
+/// before any downstream consumer notices. (v3 extended the engine
+/// section with the serving residency counters; v2 added the
+/// data-literal counters and the transfer_secs half of the old
+/// aggregate execute time.)
 #[test]
-fn schema_v2_golden_snapshot() {
-    const GOLDEN: &str = "{\"schema_version\":2,\"kind\":\"lite-bench-report\",\"reports\":[{\"scenario\":\"synthetic\",\"seed\":7,\"config\":{\"episodes\":\"3\"},\"metrics\":[{\"name\":\"acc\",\"value\":0.875,\"direction\":\"higher\"},{\"name\":\"cost\",\"value\":12,\"direction\":\"lower\"},{\"name\":\"oddball\",\"value\":\"NaN\",\"direction\":\"info\"},{\"name\":\"peak\",\"value\":\"Infinity\",\"direction\":\"info\"}],\"timings\":[{\"name\":\"wall\",\"secs\":0.5}],\"engine\":{\"compiles\":2,\"executions\":10,\"param_literal_builds\":4,\"param_cache_hits\":8,\"data_literal_builds\":20,\"data_cache_hits\":16,\"compile_secs\":1.5,\"execute_secs\":0.25,\"transfer_secs\":0.125},\"tables\":[{\"title\":\"t\",\"headers\":[\"a\",\"b\"],\"rows\":[[\"x\",\"1\"],[\"y\\n\\\"z\\\"\",\"2\"]]}]}]}";
+fn schema_v3_golden_snapshot() {
+    const GOLDEN: &str = "{\"schema_version\":3,\"kind\":\"lite-bench-report\",\"reports\":[{\"scenario\":\"synthetic\",\"seed\":7,\"config\":{\"episodes\":\"3\"},\"metrics\":[{\"name\":\"acc\",\"value\":0.875,\"direction\":\"higher\"},{\"name\":\"cost\",\"value\":12,\"direction\":\"lower\"},{\"name\":\"oddball\",\"value\":\"NaN\",\"direction\":\"info\"},{\"name\":\"peak\",\"value\":\"Infinity\",\"direction\":\"info\"}],\"timings\":[{\"name\":\"wall\",\"secs\":0.5}],\"engine\":{\"compiles\":2,\"executions\":10,\"param_literal_builds\":4,\"param_cache_hits\":8,\"data_literal_builds\":20,\"data_cache_hits\":16,\"resident_hits\":6,\"resident_misses\":3,\"resident_evictions\":1,\"compile_secs\":1.5,\"execute_secs\":0.25,\"transfer_secs\":0.125},\"tables\":[{\"title\":\"t\",\"headers\":[\"a\",\"b\"],\"rows\":[[\"x\",\"1\"],[\"y\\n\\\"z\\\"\",\"2\"]]}]}]}";
     // The exemplar parses under the current schema...
     let run = RunReport::parse(GOLDEN).unwrap();
     let rep = &run.reports[0];
@@ -154,18 +158,21 @@ fn schema_v2_golden_snapshot() {
     assert_eq!(rep.engine.as_ref().unwrap().param_cache_hits, 8);
     assert_eq!(rep.engine.as_ref().unwrap().data_literal_builds, 20);
     assert_eq!(rep.engine.as_ref().unwrap().data_cache_hits, 16);
+    assert_eq!(rep.engine.as_ref().unwrap().resident_hits, 6);
+    assert_eq!(rep.engine.as_ref().unwrap().resident_misses, 3);
+    assert_eq!(rep.engine.as_ref().unwrap().resident_evictions, 1);
     assert_eq!(rep.engine.as_ref().unwrap().transfer_secs, 0.125);
     assert_eq!(rep.tables[0].rows[1][0], "y\n\"z\"");
     // ...and the writer reproduces it byte-for-byte.
     assert_eq!(run.to_json().to_compact(), GOLDEN);
-    assert_eq!(SCHEMA_VERSION, 2, "schema bumped: regenerate GOLDEN + extend this test");
+    assert_eq!(SCHEMA_VERSION, 3, "schema bumped: regenerate GOLDEN + extend this test");
 
-    // A v1 report (no data counters, aggregate execute time) must be
-    // rejected up front with the version in the error, not half-parsed
-    // into a snapshot missing fields.
-    let v1 = GOLDEN.replace("\"schema_version\":2", "\"schema_version\":1");
-    let err = RunReport::parse(&v1).unwrap_err().to_string();
-    assert!(err.contains("schema v1"), "{err}");
+    // A v2 report (no residency counters) must be rejected up front
+    // with the version in the error, not half-parsed into a snapshot
+    // missing fields.
+    let v2 = GOLDEN.replace("\"schema_version\":3", "\"schema_version\":2");
+    let err = RunReport::parse(&v2).unwrap_err().to_string();
+    assert!(err.contains("schema v2"), "{err}");
 }
 
 /// Schema snapshot of a real seeded scenario: the analytic memory-model

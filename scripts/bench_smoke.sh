@@ -169,6 +169,68 @@ if [ -f "artifacts/manifest.txt" ] || [ -f "../artifacts/manifest.txt" ]; then
     cmp "$OUT/full.ckpt" "$OUT/resumed.ckpt" \
         || { echo "error: resumed run's final checkpoint differs from the uninterrupted run"; exit 1; }
     echo "CLI resume smoke OK (resumed run reproduced the final checkpoint byte for byte)"
+
+    # Serving-layer gate: same shape as the other scenario gates (a
+    # deterministic cached/fresh divergence would self-compare clean,
+    # so the bit-identity metrics are asserted directly). The batching
+    # metrics are absent when no megaclassify artifact ships, in which
+    # case that half self-skips.
+    "./$BIN" bench run --filter serve-latency --seed 7 --json "$OUT/serve_base.json"
+    "./$BIN" bench run --filter serve-latency --seed 7 --json "$OUT/serve_cand.json"
+    "./$BIN" bench compare "$OUT/serve_base.json" "$OUT/serve_cand.json" --tolerance-pct 0
+    if ! grep -A1 '"serve_cached_bit_identical"' "$OUT/serve_cand.json" | grep -q '"value": 1'; then
+        echo "error: serve_cached_bit_identical != 1 (resident answers diverged from recompute)"
+        exit 1
+    fi
+    if grep -q '"serve_batched_bit_identical"' "$OUT/serve_cand.json"; then
+        for m in serve_batched_bit_identical serve_fewer_executions; do
+            if ! grep -A1 "\"$m\"" "$OUT/serve_cand.json" | grep -q '"value": 1'; then
+                echo "error: $m != 1 (fused cross-user batch diverged from sequential)"
+                exit 1
+            fi
+        done
+        echo "serve-latency gate OK (cached and batched bit-identity = 1; executions reduced)"
+    else
+        echo "serve-latency batching gates skipped (no megaclassify artifact; rerun \`make artifacts\`)"
+    fi
+
+    # CLI serve smoke: boot `lite serve` on a unix socket, drive two
+    # users through adapt + repeated queries from a python client, and
+    # require the repeated query answers byte-identical (the resident
+    # cache must not change the wire bytes). Shutdown over the socket
+    # ends the server; the stdin frontend gets EOF from /dev/null.
+    SOCK="$OUT/serve.sock"
+    "./$BIN" serve --socket "$SOCK" --width 2 < /dev/null > "$OUT/serve.out" 2> "$OUT/serve.err" &
+    SERVE_PID=$!
+    for _ in $(seq 150); do [ -S "$SOCK" ] && break; sleep 0.1; done
+    [ -S "$SOCK" ] || { echo "error: serve socket never appeared"; cat "$OUT/serve.err"; exit 1; }
+    python3 - "$SOCK" <<'EOF'
+import json, socket, sys
+
+sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+sock.connect(sys.argv[1])
+f = sock.makefile("rw")
+
+def rpc(obj):
+    f.write(json.dumps(obj) + "\n")
+    f.flush()
+    line = f.readline().strip()
+    assert line, "server closed the connection mid-request"
+    return line
+
+for u in (0, 1):
+    resp = json.loads(rpc({"op": "adapt", "user": f"u{u}",
+                           "sim": {"seed": 7, "users": 2, "user": u}}))
+    assert resp["ok"] and not resp["cached"], resp
+first = [rpc({"op": "query", "user": f"u{u}", "range": [0, 2]}) for u in (0, 1)]
+second = [rpc({"op": "query", "user": f"u{u}", "range": [0, 2]}) for u in (0, 1)]
+assert first == second, "repeated resident-cache answers changed bytes:\n%s\n%s" % (first, second)
+stats = json.loads(rpc({"op": "stats"}))
+assert stats["engine"]["resident_hits"] >= 4, stats
+assert json.loads(rpc({"op": "shutdown"}))["ok"]
+EOF
+    wait "$SERVE_PID" || { echo "error: serve exited nonzero"; cat "$OUT/serve.err"; exit 1; }
+    echo "CLI serve smoke OK (socket protocol served; repeated answers byte-identical)"
 else
-    echo "train/shard/dispatch/megabatch/resume gates skipped (no AOT artifacts; run \`make artifacts\`)"
+    echo "train/shard/dispatch/megabatch/resume/serve gates skipped (no AOT artifacts; run \`make artifacts\`)"
 fi
