@@ -1,0 +1,230 @@
+//! `lite lint`: static determinism & concurrency invariant analysis.
+//!
+//! The reproduction's core claim — LITE's gradient decomposition is an
+//! unbiased approximation — is operationalized as a bit-identity
+//! contract: every parallel axis (`--workers`, `--shards`,
+//! `--dispatch`, `--megabatch`, `--resume`, serve) must produce
+//! byte-identical results to serial. The runtime tests sample that
+//! contract at a few seeds; this pass makes the invariants behind it
+//! machine-checked on every commit:
+//!
+//! - **hash-iter** — no `HashMap`/`HashSet` iteration in modules that
+//!   assemble deterministic payloads (reports, serve responses, bench
+//!   metrics, CLI errors).
+//! - **lock-order** — extract per-fn lock acquisition sequences,
+//!   propagate across same-crate call edges, and reject cycles in the
+//!   resulting lock graph (see [`lockorder`]).
+//! - **rng-discipline** — RNG streams in parallel-region modules must
+//!   derive from `(seed, index)` via `Rng::new(..).split(..)`.
+//! - **unsafe-audit** — every `unsafe` carries an adjacent
+//!   `// SAFETY:` comment.
+//! - **panic-path** — no `unwrap`/`expect`/panic-family macros in
+//!   thread-body modules (trainer, writer, dispatch, serve).
+//!
+//! A finding can be suppressed on its line with a trailing comment
+//! pragma naming the rule (ANALYSIS.md documents the syntax); the
+//! suppression is part of the diff and reviewable. `lite lint --deny`
+//! is wired into `scripts/bench_smoke.sh` so the tree stays clean.
+
+pub mod lockorder;
+pub mod rules;
+pub mod source;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::report::json::Json;
+use source::SourceFile;
+
+/// One lint finding. `line` is 1-based; `file` is relative to the
+/// lint root with `/` separators, so reports are machine-stable
+/// across checkouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Rule registry: name + one-line summary, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    ("hash-iter", "no HashMap/HashSet iteration in determinism-gated modules"),
+    ("lock-order", "lock acquisition graph across call edges must be acyclic"),
+    ("rng-discipline", "RNG streams derive from (seed, index) via split"),
+    ("unsafe-audit", "every unsafe block/impl has an adjacent SAFETY comment"),
+    ("panic-path", "no unwrap/expect/panic! in thread-body modules"),
+];
+
+/// Run `rule_filter` (or all rules) over already-loaded sources.
+/// Findings come back sorted by (file, line, rule) — byte-stable.
+pub fn analyze_sources(files: &[SourceFile], rule_filter: Option<&str>) -> Vec<Finding> {
+    let active = |name: &str| match rule_filter {
+        None => true,
+        Some(r) => r == name,
+    };
+    let mut out = Vec::new();
+    for f in files {
+        if active("hash-iter") {
+            rules::hash_iter(f, &mut out);
+        }
+        if active("rng-discipline") {
+            rules::rng_discipline(f, &mut out);
+        }
+        if active("unsafe-audit") {
+            rules::unsafe_audit(f, &mut out);
+        }
+        if active("panic-path") {
+            rules::panic_path(f, &mut out);
+        }
+    }
+    if active("lock-order") {
+        lockorder::check(files, &mut out);
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Load every `.rs` file under `root` (sorted walk, so findings are
+/// ordered identically everywhere) and run the rules.
+pub fn run_lint(root: &Path, rule_filter: Option<&str>) -> Result<Vec<Finding>> {
+    if let Some(r) = rule_filter {
+        if !RULES.iter().any(|(n, _)| *n == r) {
+            let names: Vec<&str> = RULES.iter().map(|(n, _)| *n).collect();
+            bail!("unknown rule `{r}` (rules: {})", names.join(", "));
+        }
+    }
+    let mut paths = Vec::new();
+    walk(root, &mut paths).with_context(|| format!("walking {}", root.display()))?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let text =
+            fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::from_source(&rel, &text));
+    }
+    Ok(analyze_sources(&files, rule_filter))
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The default lint root: `src/` beside the running binary's crate —
+/// probe `src/lib.rs` then `rust/src/lib.rs` upward from the current
+/// directory, so `lite lint` works from the repo root and from
+/// `rust/`.
+pub fn default_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir().context("resolving current dir")?;
+    for _ in 0..4 {
+        for probe in ["src", "rust/src"] {
+            let cand = dir.join(probe);
+            if cand.join("lib.rs").is_file() {
+                return Ok(cand);
+            }
+        }
+        let Some(parent) = dir.parent() else { break };
+        dir = parent.to_path_buf();
+    }
+    bail!("no src/lib.rs found near the current directory; pass --root <dir>")
+}
+
+/// Findings as a schema-versioned report object, through the same
+/// hand-rolled JSON layer every other `lite` report uses.
+pub fn findings_json(root: &Path, rule_filter: Option<&str>, findings: &[Finding]) -> Json {
+    let mut rules_arr = Vec::new();
+    for (name, summary) in RULES {
+        if !matches!(rule_filter, Some(r) if r != *name) {
+            let mut o = Json::obj();
+            o.push("name", Json::Str(name.to_string()));
+            o.push("summary", Json::Str(summary.to_string()));
+            rules_arr.push(o);
+        }
+    }
+    let mut arr = Vec::new();
+    for f in findings {
+        let mut o = Json::obj();
+        o.push("file", Json::Str(f.file.clone()));
+        o.push("line", Json::UInt(f.line as u64));
+        o.push("rule", Json::Str(f.rule.to_string()));
+        o.push("message", Json::Str(f.message.clone()));
+        arr.push(o);
+    }
+    let mut top = Json::obj();
+    top.push("schema", Json::Str("lite-lint-v1".to_string()));
+    top.push("root", Json::Str(root.to_string_lossy().into_owned()));
+    top.push("rules", Json::Arr(rules_arr));
+    top.push("findings", Json::Arr(arr));
+    top.push("count", Json::UInt(findings.len() as u64));
+    top
+}
+
+/// Human-readable finding lines: `file:line: [rule] message`.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_filter_limits_scope() {
+        let bad = "fn f(x: Option<u8>) {\n    let mut rng = Rng::new(7);\n    x.unwrap();\n}\n";
+        let f = SourceFile::from_source("coordinator/trainer.rs", bad);
+        let all = analyze_sources(std::slice::from_ref(&f), None);
+        assert_eq!(all.len(), 2, "{all:?}");
+        let only_rng = analyze_sources(std::slice::from_ref(&f), Some("rng-discipline"));
+        assert_eq!(only_rng.len(), 1);
+        assert_eq!(only_rng[0].rule, "rng-discipline");
+    }
+
+    #[test]
+    fn findings_sorted_and_json_stable() {
+        let bad = "fn f(x: Option<u8>) {\n    x.unwrap();\n    let mut rng = Rng::new(7);\n}\n";
+        let f = SourceFile::from_source("serve/mod.rs", bad);
+        let fs = analyze_sources(std::slice::from_ref(&f), None);
+        assert_eq!(fs.len(), 2);
+        assert!(fs[0].line <= fs[1].line);
+        let j = findings_json(Path::new("src"), None, &fs);
+        let text = j.to_pretty();
+        assert!(text.contains("\"schema\": \"lite-lint-v1\""), "{text}");
+        assert!(text.contains("\"count\": 2"));
+        let reparsed = crate::report::json::parse(&text).expect("round-trip");
+        assert_eq!(reparsed.need("count").ok().and_then(|c| c.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn rendered_findings_name_file_line_rule() {
+        let f = Finding {
+            file: "serve/mod.rs".to_string(),
+            line: 42,
+            rule: "panic-path",
+            message: "boom".to_string(),
+        };
+        assert_eq!(render_text(&[f]), "serve/mod.rs:42: [panic-path] boom\n");
+    }
+}

@@ -1,0 +1,568 @@
+//! Per-file lint rules: hash-iter, rng-discipline, unsafe-audit,
+//! panic-path. (lock-order is cross-file and lives in
+//! [`crate::analysis::lockorder`].)
+//!
+//! Every rule is scoped to the modules whose invariants it guards —
+//! the bit-identity contract (every parallel axis byte-identical to
+//! serial) and PR 4's poisoned-lock crash-safety hardening. Scoping is
+//! by module-path prefix so new submodules inherit the gate
+//! automatically. All matching runs on the comment/string-blanked mask
+//! from [`crate::analysis::source`], skips `#[cfg(test)]` regions
+//! (except unsafe-audit, which applies everywhere), and honors per-line
+//! allow pragmas.
+
+use super::source::{is_ident, SourceFile};
+use super::Finding;
+
+/// Modules whose output feeds deterministic payloads (reports, serve
+/// responses, bench metrics, CLI errors): hash iteration here is
+/// ordering nondeterminism on the wire.
+const HASH_GATED: &[&str] = &["bench", "config", "coordinator", "report", "serve"];
+
+/// Modules with parallel regions: every RNG stream must be derived
+/// from `(seed, index)` via `split` so draw order can't depend on
+/// scheduling. `data::rng` itself (the splittable generator) is the
+/// one legitimate construction site and is outside this scope.
+const RNG_SCOPED: &[&str] = &["coordinator", "eval", "serve"];
+
+/// Modules whose code runs on spawned threads (trainer pipeline,
+/// dispatch marshal stage, background writer, serve workers): a panic
+/// here poisons locks and wedges channel peers instead of surfacing an
+/// error.
+const PANIC_SCOPED: &[&str] =
+    &["coordinator::trainer", "coordinator::writer", "runtime::dispatch", "serve"];
+
+fn in_scope(module: &str, prefixes: &[&str]) -> bool {
+    prefixes
+        .iter()
+        .any(|p| module == *p || module.starts_with(&format!("{p}::")))
+}
+
+/// True when `mask[pos..]` starts the token `tok` (preceding and
+/// following bytes are not identifier bytes).
+fn token_at(mask: &str, pos: usize, tok: &str) -> bool {
+    let mb = mask.as_bytes();
+    if pos > 0 && is_ident(mb[pos - 1]) {
+        return false;
+    }
+    let end = pos + tok.len();
+    if end < mb.len() && is_ident(mb[end]) {
+        return false;
+    }
+    mask[pos..].starts_with(tok)
+}
+
+/// All byte offsets where `tok` occurs as a whole token.
+fn token_positions(mask: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = mask[from..].find(tok) {
+        let p = from + off;
+        if token_at(mask, p, tok) {
+            out.push(p);
+        }
+        from = p + 1;
+    }
+    out
+}
+
+fn emit(
+    file: &SourceFile,
+    line0: usize,
+    rule: &'static str,
+    message: String,
+    out: &mut Vec<Finding>,
+) {
+    if file.allowed(line0, rule) {
+        return;
+    }
+    out.push(Finding { file: file.rel.clone(), line: line0 + 1, rule, message });
+}
+
+// ---------------------------------------------------------------- hash-iter
+
+/// Iteration methods whose visit order on `HashMap`/`HashSet` depends
+/// on the hasher, not the data.
+const HASH_ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+/// hash-iter: in determinism-gated modules, find names bound to
+/// `HashMap`/`HashSet` (let bindings, fields, params) and flag any
+/// order-dependent traversal of them. Keyed access (`get`/`insert`/
+/// `remove`/`entry`) stays legal — only iteration order is
+/// hasher-dependent.
+pub fn hash_iter(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_scope(&file.module, HASH_GATED) {
+        return;
+    }
+    let mask = &file.mask;
+    let mb = mask.as_bytes();
+    // 1. collect hash-container binding names
+    let mut names: Vec<String> = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        for p in token_positions(mask, ty) {
+            if let Some(name) = binding_name(file, p) {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    // 2. flag order-dependent traversals of those names
+    for name in &names {
+        for p in token_positions(mask, name) {
+            let l = file.line_of(p);
+            if file.test_line[l] {
+                continue;
+            }
+            let after = &mask[p + name.len()..];
+            if HASH_ITER_METHODS.iter().any(|m| after.starts_with(m)) {
+                emit(
+                    file,
+                    l,
+                    "hash-iter",
+                    format!(
+                        "iteration over hash container `{name}` in determinism-gated module \
+                         `{}`: visit order depends on the hasher — use BTreeMap/BTreeSet or \
+                         collect-and-sort",
+                        file.module
+                    ),
+                    out,
+                );
+                continue;
+            }
+            // `for x in name` / `for x in &name` / `for x in &mut name`
+            if is_for_in_target(mb, p) && !after.starts_with('.') {
+                emit(
+                    file,
+                    l,
+                    "hash-iter",
+                    format!(
+                        "`for .. in {name}` over a hash container in determinism-gated module \
+                         `{}`: visit order depends on the hasher — use BTreeMap/BTreeSet or \
+                         collect-and-sort",
+                        file.module
+                    ),
+                    out,
+                );
+            }
+        }
+    }
+}
+
+/// For a `HashMap`/`HashSet` type token at `p`, recover the bound name:
+/// `let [mut] NAME ... HashMap` on one line, or `NAME: [&[mut]]
+/// [path::]HashMap` (field / param / annotated let). Returns `None`
+/// for return types and other positions with no binding.
+fn binding_name(file: &SourceFile, p: usize) -> Option<String> {
+    let mask = &file.mask;
+    let mb = mask.as_bytes();
+    let l = file.line_of(p);
+    if file.test_line[l] {
+        return None;
+    }
+    let line_start = file.line_starts[l];
+    let line = file.mask_line(l);
+    let col = p - line_start;
+    // `let [mut] NAME` anywhere before the type on the same line
+    if let Some(let_off) = line[..col].find("let ") {
+        let boundary_ok = let_off == 0 || !is_ident(line.as_bytes()[let_off - 1]);
+        if boundary_ok {
+            let mut rest = line[let_off + 4..].trim_start();
+            if let Some(r) = rest.strip_prefix("mut ") {
+                rest = r.trim_start();
+            }
+            let end = rest.bytes().position(|b| !is_ident(b)).unwrap_or(rest.len());
+            if end > 0 {
+                return Some(rest[..end].to_string());
+            }
+        }
+    }
+    // `NAME: [&[mut]] [path::]HashMap` — walk back over the path, `&`,
+    // `mut`, then expect `:` then the identifier.
+    let mut k = p;
+    loop {
+        // skip a leading `path::` segment
+        if k >= 2 && &mask[k - 2..k] == "::" {
+            k -= 2;
+            while k > 0 && is_ident(mb[k - 1]) {
+                k -= 1;
+            }
+            continue;
+        }
+        break;
+    }
+    while k > 0 && mb[k - 1] == b' ' {
+        k -= 1;
+    }
+    // the space walk already consumed the separator, so `mut` ends at k
+    if k >= 3 && &mask[k - 3..k] == "mut" && (k == 3 || !is_ident(mb[k - 4])) {
+        k -= 3;
+    }
+    while k > 0 && (mb[k - 1] == b'&' || mb[k - 1] == b' ') {
+        k -= 1;
+    }
+    if k == 0 || mb[k - 1] != b':' {
+        return None;
+    }
+    k -= 1;
+    while k > 0 && mb[k - 1] == b' ' {
+        k -= 1;
+    }
+    let end = k;
+    while k > 0 && is_ident(mb[k - 1]) {
+        k -= 1;
+    }
+    if end > k {
+        Some(mask[k..end].to_string())
+    } else {
+        None
+    }
+}
+
+/// True when the token at `p` is the target of a `for .. in` (scan
+/// back over a `receiver.` chain, then `&`/`&mut`/whitespace, to the
+/// `in` keyword — so `for v in &self.slots` attributes to `slots`).
+fn is_for_in_target(mb: &[u8], p: usize) -> bool {
+    let mut k = p;
+    while k > 1 && mb[k - 1] == b'.' {
+        k -= 1;
+        while k > 0 && is_ident(mb[k - 1]) {
+            k -= 1;
+        }
+    }
+    while k > 0 && (mb[k - 1] == b' ' || mb[k - 1] == b'&') {
+        k -= 1;
+    }
+    // separators are consumed above, so the keywords end exactly at k
+    if k >= 3 && &mb[k - 3..k] == b"mut" && (k == 3 || !is_ident(mb[k - 4])) {
+        k -= 3;
+        while k > 0 && (mb[k - 1] == b' ' || mb[k - 1] == b'&') {
+            k -= 1;
+        }
+    }
+    k >= 2 && &mb[k - 2..k] == b"in" && (k == 2 || !is_ident(mb[k - 3]))
+}
+
+// ---------------------------------------------------------- rng-discipline
+
+/// rng-discipline: in parallel-region modules, every `Rng::new(..)`
+/// must derive per-unit streams via `.split(..)` — either inline
+/// (`Rng::new(seed).split(index)`) or as a let-bound *root stream*
+/// whose every later use is a `.split(` call and which is therefore
+/// never drawn from directly. Both shapes keep draw order independent
+/// of scheduling; anything else advances a stream shared across
+/// scheduling-dependent consumers.
+pub fn rng_discipline(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_scope(&file.module, RNG_SCOPED) {
+        return;
+    }
+    let mask = &file.mask;
+    let mb = mask.as_bytes();
+    for p in token_positions(mask, "Rng") {
+        if !mask[p + 3..].starts_with("::new") {
+            continue;
+        }
+        let l = file.line_of(p);
+        if file.test_line[l] {
+            continue;
+        }
+        // find the closing paren of `new(...)`
+        let mut k = p + "Rng::new".len();
+        while k < mb.len() && mb[k] != b'(' {
+            k += 1;
+        }
+        let mut depth = 0i64;
+        while k < mb.len() {
+            match mb[k] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let mut j = k + 1;
+        while j < mb.len() && mb[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if mask[j.min(mask.len())..].starts_with(".split(") {
+            continue;
+        }
+        if is_split_only_root(file, p) {
+            continue;
+        }
+        emit(
+            file,
+            l,
+            "rng-discipline",
+            format!(
+                "`Rng::new` in parallel-scoped module `{}` that is neither split \
+                 inline (`Rng::new(seed).split(index)`) nor a split-only root \
+                 stream: derive per-episode/per-user streams via `.split(index)` \
+                 so draw order is scheduling-independent",
+                file.module
+            ),
+            out,
+        );
+    }
+}
+
+/// True when the `Rng::new` at `p` is let-bound to a name whose every
+/// later non-test use is a `.split(` call — a root stream that is
+/// never drawn from directly (`let rng = Rng::new(seed); ...
+/// rng.split(j)` per task is the canonical fan-out shape).
+fn is_split_only_root(file: &SourceFile, p: usize) -> bool {
+    let mask = &file.mask;
+    let mb = mask.as_bytes();
+    // walk back to the statement start and require `let [mut] NAME =`
+    let mut k = p;
+    while k > 0 && !matches!(mb[k - 1], b';' | b'{' | b'}') {
+        k -= 1;
+    }
+    while k < mb.len() && mb[k].is_ascii_whitespace() {
+        k += 1;
+    }
+    let Some(rest) = mask[k..].strip_prefix("let ") else {
+        return false;
+    };
+    let rest = rest.trim_start().trim_start_matches("mut ").trim_start();
+    let end = rest.bytes().take_while(|&c| is_ident(c)).count();
+    if end == 0 || !rest[end..].trim_start().starts_with('=') {
+        return false;
+    }
+    let name = &rest[..end];
+    for q in token_positions(mask, name) {
+        if q <= p {
+            continue;
+        }
+        if file.test_line[file.line_of(q)] {
+            continue;
+        }
+        if !mask[q + name.len()..].starts_with(".split(") {
+            return false;
+        }
+    }
+    true
+}
+
+// ------------------------------------------------------------ unsafe-audit
+
+/// unsafe-audit: every `unsafe` block or impl needs a `// SAFETY:`
+/// comment on the same line or contiguously above it (blank lines,
+/// attributes, and sibling `unsafe impl` lines don't break
+/// contiguity). Applies everywhere, tests included.
+pub fn unsafe_audit(file: &SourceFile, out: &mut Vec<Finding>) {
+    let mut seen: Vec<usize> = Vec::new();
+    for p in token_positions(&file.mask, "unsafe") {
+        let l = file.line_of(p);
+        if seen.contains(&l) {
+            continue;
+        }
+        seen.push(l);
+        if has_adjacent_safety(file, l) {
+            continue;
+        }
+        emit(
+            file,
+            l,
+            "unsafe-audit",
+            "`unsafe` without an adjacent `// SAFETY:` comment documenting the invariant"
+                .to_string(),
+            out,
+        );
+    }
+}
+
+fn has_adjacent_safety(file: &SourceFile, l: usize) -> bool {
+    if file.raw_lines[l].contains("SAFETY:") {
+        return true;
+    }
+    let mut k = l;
+    while k > 0 {
+        k -= 1;
+        let t = file.raw_lines[k].trim();
+        let comment = t.starts_with("//");
+        let bridges = t.is_empty() || comment || t.starts_with("#[") || t.starts_with("#![")
+            || t.contains("unsafe impl");
+        if !bridges {
+            return false;
+        }
+        if comment && t.contains("SAFETY:") {
+            return true;
+        }
+        if t.contains("unsafe impl") && t.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+// -------------------------------------------------------------- panic-path
+
+const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// panic-path: in thread-body modules, no `.unwrap()` / `.expect(..)`
+/// / panic-family macros outside tests — a panic on a worker thread
+/// poisons shared locks and strands channel peers; return an error and
+/// let the coordinator's recovery path (PR 4) surface it.
+pub fn panic_path(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_scope(&file.module, PANIC_SCOPED) {
+        return;
+    }
+    let mask = &file.mask;
+    let mut hits: Vec<(usize, &'static str)> = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = mask[from..].find(".unwrap()") {
+        let p = from + off;
+        from = p + 1;
+        hits.push((p, "`.unwrap()`"));
+    }
+    from = 0;
+    while let Some(off) = mask[from..].find(".expect(") {
+        let p = from + off;
+        from = p + 1;
+        hits.push((p, "`.expect(..)`"));
+    }
+    for m in PANIC_MACROS {
+        let bare = &m[..m.len() - 1];
+        for p in token_positions(mask, bare) {
+            if mask[p + bare.len()..].starts_with('!') {
+                hits.push((p, "panic-family macro"));
+            }
+        }
+    }
+    hits.sort_unstable();
+    for (p, what) in hits {
+        let l = file.line_of(p);
+        if file.test_line[l] {
+            continue;
+        }
+        emit(
+            file,
+            l,
+            "panic-path",
+            format!(
+                "{what} in thread-body module `{}`: a worker panic poisons locks and wedges \
+                 channel peers — propagate a Result instead",
+                file.module
+            ),
+            out,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::SourceFile;
+
+    fn run(rule: fn(&SourceFile, &mut Vec<Finding>), rel: &str, src: &str) -> Vec<Finding> {
+        let f = SourceFile::from_source(rel, src);
+        let mut out = Vec::new();
+        rule(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn hash_iter_flags_iteration_not_access() {
+        let bad = "use std::collections::HashMap;\nfn f() {\n    let mut m: HashMap<String, u32> = HashMap::new();\n    m.insert(String::new(), 1);\n    for k in m.keys() {\n        let _ = k;\n    }\n}\n";
+        let fs = run(hash_iter, "serve/mod.rs", bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 5);
+        assert_eq!(fs[0].rule, "hash-iter");
+        // keyed access alone is fine
+        let good =
+            bad.replace("for k in m.keys() {\n        let _ = k;\n    }", "let _ = m.get(\"k\");");
+        assert!(run(hash_iter, "serve/mod.rs", &good).is_empty());
+        // out of scope: data modules may iterate
+        assert!(run(hash_iter, "data/orbit.rs", bad).is_empty());
+        // pragma suppresses
+        let allowed =
+            bad.replace("for k in m.keys() {", "for k in m.keys() { // lint: allow(hash-iter)");
+        assert!(run(hash_iter, "serve/mod.rs", &allowed).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_sees_fields_params_and_for_loops() {
+        let bad = "struct S { slots: std::collections::HashSet<u32> }\nfn f(s: &S) {\n    for v in &s.slots {\n        let _ = v;\n    }\n}\n";
+        let fs = run(hash_iter, "report/mod.rs", bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 3);
+    }
+
+    #[test]
+    fn rng_discipline_requires_split() {
+        let bad = "fn f(seed: u64) {\n    let mut rng = Rng::new(seed);\n    let _ = rng;\n}\n";
+        let fs = run(rng_discipline, "coordinator/trainer.rs", bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].line, fs[0].rule), (2, "rng-discipline"));
+        let good = bad.replace("Rng::new(seed)", "Rng::new(seed).split(7)");
+        assert!(run(rng_discipline, "coordinator/trainer.rs", &good).is_empty());
+        // data/rng.rs itself is out of scope
+        assert!(run(rng_discipline, "data/rng.rs", bad).is_empty());
+        let allowed =
+            bad.replace("Rng::new(seed);", "Rng::new(seed); // lint: allow(rng-discipline)");
+        assert!(run(rng_discipline, "coordinator/trainer.rs", &allowed).is_empty());
+    }
+
+    #[test]
+    fn rng_split_only_root_stream_is_legal() {
+        // the eval fan-out shape: one root, every use a `.split(j)`
+        let root = "fn fan(seed: u64, n: u64) {\n    let rng = Rng::new(seed);\n    for j in 0..n {\n        let mut r = rng.split(j);\n        let _ = r.next_u64();\n    }\n}\n";
+        assert!(run(rng_discipline, "eval/harness.rs", root).is_empty());
+        // drawing from the root directly re-couples draw order to
+        // scheduling — flagged even though splits also happen
+        let drawn = root.replace("let _ = r.next_u64();", "let _ = rng.next_u64();");
+        let fs = run(rng_discipline, "eval/harness.rs", &drawn);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_audit_wants_adjacent_safety() {
+        let bad = "struct W(*mut u8);\nunsafe impl Send for W {}\n";
+        let fs = run(unsafe_audit, "runtime/dispatch.rs", bad);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!((fs[0].line, fs[0].rule), (2, "unsafe-audit"));
+        let good = bad.replace(
+            "unsafe impl Send",
+            "// SAFETY: W is moved whole; no aliasing.\nunsafe impl Send",
+        );
+        assert!(run(unsafe_audit, "runtime/dispatch.rs", &good).is_empty());
+        // comment bridges across a sibling unsafe impl (Engine pattern)
+        let pair = "// SAFETY: documented for both impls.\nunsafe impl Send for W {}\nunsafe impl Sync for W {}\n";
+        assert!(run(unsafe_audit, "runtime/engine.rs", pair).is_empty());
+    }
+
+    #[test]
+    fn panic_path_flags_unwrap_expect_macros() {
+        let bad = "fn f(x: Option<u8>) -> u8 {\n    let v = x.unwrap();\n    if v > 9 { panic!() }\n    v\n}\n";
+        let fs = run(panic_path, "coordinator/writer.rs", bad);
+        assert_eq!(fs.len(), 2, "{fs:?}");
+        assert_eq!((fs[0].line, fs[0].rule), (2, "panic-path"));
+        assert_eq!(fs[1].line, 3);
+        // unwrap_or_else is the sanctioned alternative
+        let good = "fn f(x: Option<u8>) -> u8 { x.unwrap_or_else(|| 0) }\n";
+        assert!(run(panic_path, "coordinator/writer.rs", good).is_empty());
+        // tests inside scoped modules may unwrap
+        let tests = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(run(panic_path, "serve/mod.rs", tests).is_empty());
+        // out-of-scope module untouched
+        assert!(run(panic_path, "data/orbit.rs", bad).is_empty());
+    }
+}

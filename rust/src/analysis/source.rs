@@ -1,0 +1,530 @@
+//! Source model for `lite lint`: a line-preserving lexical view of one
+//! Rust file that every rule consumes.
+//!
+//! The scanner is deliberately hand-rolled (no syn/proc-macro
+//! dependency, matching the repo's offline no-serde style): we blank
+//! out comments, string/char literals, and raw strings byte-for-byte —
+//! preserving line structure and byte offsets — and run all token
+//! matching against that *mask*. That makes `.unwrap()` inside a log
+//! message invisible, keeps `//` inside a string from eating the rest
+//! of the line, and lets rules use plain substring scans with token
+//! boundary checks instead of a full parser.
+//!
+//! On top of the mask we precompute the three scoping facts rules need:
+//!
+//! - **test regions**: lines covered by a `#[cfg(test)]` item (the
+//!   attribute through its brace-matched body or terminating `;`) —
+//!   most rules skip them, since tests legitimately unwrap.
+//! - **allow pragmas**: `lint: allow(<rule>)` inside a `//` comment
+//!   suppresses that rule on its own line; a comment-only line also
+//!   covers the next code line.
+//! - **fn spans**: `fn name ... { body }` byte ranges via brace
+//!   matching, used by the lock-order pass to attribute acquisitions
+//!   and call sites to the innermost enclosing function.
+
+use std::collections::BTreeSet;
+
+/// Byte span of one named function body (the `{`..`}` of `fn name`).
+/// Closure bodies are *not* split out: code inside a closure belongs to
+/// the innermost named fn, which is exactly the attribution the
+/// lock-order pass wants (a thread closure's locks are charged to the
+/// function that spawned it).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Byte offset (into the mask) of the opening `{`.
+    pub body_start: usize,
+    /// Byte offset of the matching `}` (or end of file if unbalanced).
+    pub body_end: usize,
+}
+
+/// One scanned file: raw text, mask, and the precomputed scoping facts.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated (used in findings).
+    pub rel: String,
+    /// Module path relative to the crate root: `coordinator::trainer`
+    /// for `coordinator/trainer.rs`, `serve` for `serve/mod.rs`, empty
+    /// for `lib.rs`/`main.rs`.
+    pub module: String,
+    /// Original text, split into lines (for SAFETY-comment and pragma
+    /// scans that must see comment text the mask blanks out).
+    pub raw_lines: Vec<String>,
+    /// Comment/string-blanked text, byte-aligned with the original.
+    pub mask: String,
+    /// Byte offset of each line start within `mask`.
+    pub line_starts: Vec<usize>,
+    /// `true` for lines inside a `#[cfg(test)]` item.
+    pub test_line: Vec<bool>,
+    /// Per-line set of rule names suppressed by an allow pragma.
+    allows: Vec<BTreeSet<String>>,
+    /// Named fn body spans, in source order.
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    pub fn from_source(rel: &str, text: &str) -> SourceFile {
+        let rel = rel.replace('\\', "/");
+        let module = module_path(&rel);
+        let mask = mask_source(text);
+        let line_starts = line_starts(&mask);
+        let test_line = test_lines(&mask, &line_starts);
+        let raw_lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let allows = allow_pragmas(&raw_lines, &mask, &line_starts);
+        let fns = extract_fns(&mask);
+        SourceFile { rel, module, raw_lines, mask, line_starts, test_line, allows, fns }
+    }
+
+    /// 0-based line number containing byte `pos` of the mask.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(l) => l,
+            Err(l) => l.saturating_sub(1),
+        }
+    }
+
+    /// The mask text of 0-based line `l`.
+    pub fn mask_line(&self, l: usize) -> &str {
+        let start = self.line_starts[l];
+        let end = self
+            .line_starts
+            .get(l + 1)
+            .map_or(self.mask.len(), |&e| e.saturating_sub(1));
+        &self.mask[start..end.max(start)]
+    }
+
+    /// True when an allow pragma suppresses `rule` on 0-based line `l`.
+    pub fn allowed(&self, l: usize, rule: &str) -> bool {
+        self.allows.get(l).is_some_and(|s| s.contains(rule))
+    }
+
+    /// Index into `fns` of the innermost named fn containing byte `pos`.
+    pub fn innermost_fn(&self, pos: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, f) in self.fns.iter().enumerate() {
+            if f.body_start < pos && pos < f.body_end {
+                let tighter = match best {
+                    None => true,
+                    Some(b) => {
+                        let cur = &self.fns[b];
+                        f.body_end - f.body_start < cur.body_end - cur.body_start
+                    }
+                };
+                if tighter {
+                    best = Some(i);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// `coordinator/trainer.rs` -> `coordinator::trainer`; `serve/mod.rs`
+/// -> `serve`; `lib.rs`/`main.rs` -> `` (crate root).
+fn module_path(rel: &str) -> String {
+    let mut parts: Vec<&str> = rel.trim_end_matches(".rs").split('/').collect();
+    if matches!(parts.last().copied(), Some("mod")) {
+        parts.pop();
+    }
+    if parts.len() == 1 && matches!(parts[0], "lib" | "main") {
+        parts.clear();
+    }
+    parts.join("::")
+}
+
+pub(crate) fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && is_ident(b[i - 1])
+}
+
+/// Length of the UTF-8 sequence starting with lead byte `b`.
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b >> 5 == 0b110 {
+        2
+    } else if b >> 4 == 0b1110 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Blank out comments (line, nested block), string literals (plain,
+/// byte, raw), and char literals, preserving every newline so byte
+/// offsets and line numbers survive. Lifetimes (`'a`) are left intact.
+fn mask_source(text: &str) -> String {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                out[i] = b' ';
+                i += 1;
+            }
+        // nested block comment
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            out[i] = b' ';
+            out[i + 1] = b' ';
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                } else {
+                    if b[i] != b'\n' {
+                        out[i] = b' ';
+                    }
+                    i += 1;
+                }
+            }
+        // raw (byte) string: r"..", r#".."#, br#".."#
+        } else if (c == b'r' || c == b'b')
+            && !prev_is_ident(b, i)
+            && raw_string_hashes(b, i).is_some()
+        {
+            let hashes = raw_string_hashes(b, i).unwrap_or(0);
+            let mut j = i;
+            while j < n && b[j] != b'"' {
+                out[j] = b' ';
+                j += 1;
+            }
+            if j < n {
+                out[j] = b' ';
+                j += 1;
+            }
+            while j < n {
+                if b[j] == b'"'
+                    && j + hashes < n
+                    && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#')
+                {
+                    for o in out.iter_mut().take(j + 1 + hashes).skip(j) {
+                        *o = b' ';
+                    }
+                    j += 1 + hashes;
+                    break;
+                }
+                if b[j] != b'\n' {
+                    out[j] = b' ';
+                }
+                j += 1;
+            }
+            i = j;
+        // plain or byte string
+        } else if c == b'"'
+            || (c == b'b' && !prev_is_ident(b, i) && i + 1 < n && b[i + 1] == b'"')
+        {
+            if c == b'b' {
+                out[i] = b' ';
+                i += 1;
+            }
+            out[i] = b' ';
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' && i + 1 < n {
+                    out[i] = b' ';
+                    if b[i + 1] != b'\n' {
+                        out[i + 1] = b' ';
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    out[i] = b' ';
+                    i += 1;
+                    break;
+                }
+                if b[i] != b'\n' {
+                    out[i] = b' ';
+                }
+                i += 1;
+            }
+        // char literal vs lifetime
+        } else if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                out[i] = b' ';
+                i += 1;
+                while i < n && b[i] != b'\'' {
+                    if b[i] != b'\n' {
+                        out[i] = b' ';
+                    }
+                    i += 1;
+                }
+                if i < n {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            } else {
+                let k = if i + 1 < n { utf8_len(b[i + 1]) } else { 1 };
+                if i + 1 + k < n && b[i + 1 + k] == b'\'' && b[i + 1] != b'\'' {
+                    for o in out.iter_mut().take(i + 2 + k).skip(i) {
+                        *o = b' ';
+                    }
+                    i += k + 2;
+                } else {
+                    // lifetime (or label): keep, rules never match it
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// `Some(hash_count)` when `b[i..]` starts a raw string literal
+/// (`r"`, `r#"`, `br##"` ...), else `None`.
+fn raw_string_hashes(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn line_starts(mask: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, c) in mask.bytes().enumerate() {
+        if c == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+fn line_of(starts: &[usize], pos: usize) -> usize {
+    match starts.binary_search(&pos) {
+        Ok(l) => l,
+        Err(l) => l.saturating_sub(1),
+    }
+}
+
+/// Index of the `}` matching the `{` at `open` (or last byte if the
+/// file is unbalanced).
+pub(crate) fn match_brace(mb: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < mb.len() {
+        match mb[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    mb.len().saturating_sub(1)
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item: from the
+/// attribute, the item extends to its first `{` (brace-matched) or to a
+/// terminating `;` at bracket depth zero — which covers `mod tests {}`
+/// blocks, single fns, `thread_local! {}` invocations, and
+/// statement-level attributes alike.
+fn test_lines(mask: &str, starts: &[usize]) -> Vec<bool> {
+    let mut test = vec![false; starts.len()];
+    let mb = mask.as_bytes();
+    let needle = "#[cfg(test)]";
+    let mut from = 0usize;
+    while let Some(off) = mask[from..].find(needle) {
+        let p = from + off;
+        from = p + 1;
+        let mut j = p + needle.len();
+        let mut depth = 0i64;
+        let mut end = mask.len().saturating_sub(1);
+        while j < mb.len() {
+            match mb[j] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b';' if depth == 0 => {
+                    end = j;
+                    break;
+                }
+                b'{' if depth == 0 => {
+                    end = match_brace(mb, j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let (ls, le) = (line_of(starts, p), line_of(starts, end));
+        for t in test.iter_mut().take(le + 1).skip(ls) {
+            *t = true;
+        }
+    }
+    test
+}
+
+/// Collect per-line allow pragmas from comment text. A pragma on a
+/// code line covers that line; a pragma on a comment-only line also
+/// covers the next line that carries code.
+fn allow_pragmas(raw_lines: &[String], mask: &str, starts: &[usize]) -> Vec<BTreeSet<String>> {
+    let mut allows: Vec<BTreeSet<String>> = vec![BTreeSet::new(); starts.len()];
+    let mask_lines: Vec<&str> = mask.split('\n').collect();
+    for (l, raw) in raw_lines.iter().enumerate() {
+        let Some(slash) = raw.find("//") else { continue };
+        let comment = &raw[slash..];
+        let mut rest = comment;
+        while let Some(off) = rest.find("lint: allow(") {
+            let tail = &rest[off + "lint: allow(".len()..];
+            let Some(close) = tail.find(')') else { break };
+            let rule = tail[..close].trim().to_string();
+            if !rule.is_empty() && l < allows.len() {
+                allows[l].insert(rule);
+            }
+            rest = &tail[close..];
+        }
+        // comment-only line: extend to the next code-bearing line
+        if !allows[l].is_empty() && mask_lines.get(l).is_some_and(|m| m.trim().is_empty()) {
+            let names: Vec<String> = allows[l].iter().cloned().collect();
+            for (nl, ml) in mask_lines.iter().enumerate().skip(l + 1) {
+                if !ml.trim().is_empty() {
+                    if nl < allows.len() {
+                        for n in &names {
+                            allows[nl].insert(n.clone());
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    allows
+}
+
+/// Extract named fn body spans: find the `fn` keyword, read the name,
+/// then scan at bracket depth zero for the body `{` (brace-matched) or
+/// a `;` (trait method / extern decl — no body, skipped).
+fn extract_fns(mask: &str) -> Vec<FnSpan> {
+    let mb = mask.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < mb.len() {
+        if mb[i] == b'f' && mb[i + 1] == b'n' && !prev_is_ident(mb, i) && !is_ident(mb[i + 2]) {
+            let mut j = i + 2;
+            while j < mb.len() && mb[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            let ns = j;
+            while j < mb.len() && is_ident(mb[j]) {
+                j += 1;
+            }
+            if j > ns {
+                let name = mask[ns..j].to_string();
+                let mut depth = 0i64;
+                let mut k = j;
+                let mut body = None;
+                while k < mb.len() {
+                    match mb[k] {
+                        b'(' | b'[' => depth += 1,
+                        b')' | b']' => depth -= 1,
+                        b';' if depth == 0 => break,
+                        b'{' if depth == 0 => {
+                            body = Some(k);
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                if let Some(bs) = body {
+                    out.push(FnSpan { name, body_start: bs, body_end: match_brace(mb, bs) });
+                }
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_strings_chars() {
+        let src = "let a = \"x.unwrap()\"; // b.lock()\nlet c = 'x'; let lt: &'static str = r#\"panic!\"#;\n/* block\n.read() */ let d = 1;\n";
+        let m = mask_source(src);
+        assert!(!m.contains("unwrap"));
+        assert!(!m.contains("lock"));
+        assert!(!m.contains("panic"));
+        assert!(!m.contains(".read()"));
+        assert!(m.contains("'static"), "lifetime survives: {m}");
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+        assert_eq!(m.len(), src.len());
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path("coordinator/trainer.rs"), "coordinator::trainer");
+        assert_eq!(module_path("serve/mod.rs"), "serve");
+        assert_eq!(module_path("config.rs"), "config");
+        assert_eq!(module_path("lib.rs"), "");
+    }
+
+    #[test]
+    fn test_regions_cover_mod_and_fn() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(!f.test_line[0]);
+        assert!(f.test_line[1] && f.test_line[2] && f.test_line[3] && f.test_line[4]);
+        assert!(!f.test_line[5]);
+    }
+
+    #[test]
+    fn pragmas_cover_line_and_next() {
+        let src = "let a = 1; // lint: allow(hash-iter)\n// lint: allow(rng-discipline)\nlet b = 2;\n";
+        let f = SourceFile::from_source("x.rs", src);
+        assert!(f.allowed(0, "hash-iter"));
+        assert!(!f.allowed(0, "rng-discipline"));
+        assert!(f.allowed(1, "rng-discipline"));
+        assert!(f.allowed(2, "rng-discipline"), "comment-only pragma covers next code line");
+        assert!(!f.allowed(2, "hash-iter"));
+    }
+
+    #[test]
+    fn fn_spans_nest() {
+        let src = "fn outer() {\n    let c = || 1;\n    inner_call();\n}\nimpl T {\n    fn method(&self) -> u8 { 0 }\n}\n";
+        let f = SourceFile::from_source("x.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "method"]);
+        let pos = src.find("inner_call").expect("fixture");
+        assert_eq!(f.innermost_fn(pos), Some(0));
+    }
+}

@@ -478,7 +478,9 @@ pub(crate) fn vtab_report(engine: &Engine, knobs: &Knobs, seed: u64) -> Result<S
         headers.push(name);
     }
     let mut table = Table::new("Fig 3 / Table D.2 — synthetic VTAB+MD accuracy (%)", &headers);
-    let mut group_acc: std::collections::HashMap<(usize, &str), Vec<f64>> = Default::default();
+    // BTreeMap: the summary rows below read per-group accumulators and
+    // must stay byte-identical across runs (lint: hash-iter).
+    let mut group_acc: std::collections::BTreeMap<(usize, &str), Vec<f64>> = Default::default();
     for ds in &suite {
         let mut row = vec![ds.name().to_string(), short_group(ds.group).to_string()];
         for (k, (_, p)) in preds.iter().enumerate() {

@@ -1,16 +1,20 @@
 //! Minimal CLI flag parsing (`--key value` / `--flag`), since the
 //! offline crate set has no clap. Unknown flags are an error so typos
 //! don't silently fall back to defaults.
+//!
+//! Ordered maps, not hash maps: `finish()` iterates the flag set to
+//! report the first unknown flag, and that message must not depend on
+//! the hasher (lint: hash-iter).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: HashMap<String, String>,
-    consumed: std::collections::HashSet<String>,
+    flags: BTreeMap<String, String>,
+    consumed: BTreeSet<String>,
 }
 
 impl Args {

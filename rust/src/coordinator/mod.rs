@@ -7,7 +7,13 @@ pub mod batch;
 pub mod finetuner;
 pub mod learner;
 pub mod state;
+// The trainer pipeline and background writer run on spawned threads:
+// a panic there poisons the progress lock / strands channel peers.
+// Enforced both by `lite lint` (panic-path) and, through the clippy
+// smoke gate, by these deny-sets (test builds exempt).
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod trainer;
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod writer;
 
 pub use batch::{sample_split, EpisodePlan, FusedBatch, LiteSplit, WindowPlan};

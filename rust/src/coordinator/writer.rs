@@ -109,11 +109,13 @@ impl BackgroundWriter {
     /// Enqueue a job. Blocks only when `capacity` jobs are already
     /// queued; never waits for the IO itself.
     pub fn submit(&self, job: WriteJob) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("sender lives until drop")
-            .send(job)
-            .map_err(|_| anyhow!("background writer terminated"))
+        // tx is Some from construction until finish/drop take it; a
+        // submit after finish is a caller bug, surfaced as an error
+        // rather than a panic (this writer runs under live training).
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(anyhow!("background writer already finished"));
+        };
+        tx.send(job).map_err(|_| anyhow!("background writer terminated"))
     }
 
     /// Enqueue an atomic checkpoint save of a parameter snapshot.
@@ -132,7 +134,10 @@ impl BackgroundWriter {
     /// joins but swallows the error.
     pub fn finish(mut self) -> Result<()> {
         self.tx.take();
-        match self.worker.take().expect("worker lives until drop").join() {
+        let Some(worker) = self.worker.take() else {
+            return Err(anyhow!("background writer already joined"));
+        };
+        match worker.join() {
             Ok(res) => res,
             Err(panic) => std::panic::resume_unwind(panic),
         }

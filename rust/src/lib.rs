@@ -6,6 +6,7 @@
 //! evaluation needs. The compute graphs themselves are AOT-compiled JAX +
 //! Pallas HLO artifacts executed through PJRT (`runtime`).
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
@@ -17,6 +18,11 @@ pub mod optim;
 pub mod params;
 pub mod report;
 pub mod runtime;
+// The serve workers run user traffic on spawned threads: a panic there
+// poisons shared state instead of failing one request. Enforced both
+// by `lite lint` (panic-path) and, through the clippy smoke gate, by
+// this deny-set (test builds exempt — tests assert by unwrapping).
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod serve;
 pub mod tensor;
 pub mod util;

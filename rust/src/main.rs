@@ -40,6 +40,7 @@ fn run(argv: &[String]) -> Result<()> {
         "gradcheck" => cmd_gradcheck(args),
         "memory-report" => cmd_memory(args),
         "bench" => cmd_bench(args),
+        "lint" => cmd_lint(args),
         "bench-orbit" => lite::bench::table1_orbit(&mut args),
         "bench-vtab" => lite::bench::fig3_vtabmd(&mut args),
         "bench-hsweep" => lite::bench::table2_hsweep(&mut args),
@@ -47,14 +48,15 @@ fn run(argv: &[String]) -> Result<()> {
         "help" | _ => {
             println!(
                 "usage: lite <info|pretrain|train|eval|serve|gradcheck|memory-report|\
-                 bench|bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]\n\
+                 bench|lint|bench-orbit|bench-vtab|bench-hsweep|bench-ablation> [--flags]\n\
                  \n\
                  bench list                         registered scenarios\n\
                  bench run [--filter s] [--seed n] [--knobs k=v,..] [--json out.json]\n\
                  bench compare <baseline.json> <candidate.json> [--tolerance-pct n]\n\
+                 lint [--deny] [--json out.json] [--rule name] [--root dir]\n\
                  serve [--model m] [--image-size n] [--shards n] [--budget-mb n]\n\
                  \x20     [--width n] [--window-ms n] [--socket path] [--ckpt file]\n\
-                 (see BENCHMARKS.md for scenario names, the JSON schema, and gating rules)"
+                 (see BENCHMARKS.md for scenario names and gating rules, ANALYSIS.md for lint)"
             );
             Ok(())
         }
@@ -136,6 +138,46 @@ fn cmd_bench(mut args: Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown bench subcommand `{other}` (expected list|run|compare)"),
     }
+}
+
+/// `lite lint` — the determinism & concurrency invariant analyzer
+/// (see ANALYSIS.md for the rules, pragma syntax, and JSON schema).
+/// `--deny` exits nonzero on any finding (the smoke-script gate);
+/// `--rule` restricts to one rule; `--root` overrides the scanned
+/// source tree (used by the injected-violation self-test).
+fn cmd_lint(mut args: Args) -> Result<()> {
+    let deny = args.has("deny");
+    let json = args.get_str("json", "");
+    let rule = args.get_str("rule", "");
+    let root = args.get_str("root", "");
+    args.finish()?;
+    let rule_filter = (!rule.is_empty()).then_some(rule.as_str());
+    let root: std::path::PathBuf = if root.is_empty() {
+        lite::analysis::default_root()?
+    } else {
+        root.into()
+    };
+    let findings = lite::analysis::run_lint(&root, rule_filter)?;
+    if !json.is_empty() {
+        let report = lite::analysis::findings_json(&root, rule_filter, &findings);
+        let w = lite::coordinator::BackgroundWriter::new(1);
+        w.write_text(&json, report.to_pretty())?;
+        w.finish()?;
+        eprintln!("[lint] wrote {} finding(s) to {json}", findings.len());
+    }
+    print!("{}", lite::analysis::render_text(&findings));
+    let n_rules = if rule_filter.is_some() { 1 } else { lite::analysis::RULES.len() };
+    eprintln!(
+        "[lint] {} file-tree `{}`: {} rule(s), {} finding(s)",
+        if findings.is_empty() { "clean" } else { "dirty" },
+        root.display(),
+        n_rules,
+        findings.len()
+    );
+    if deny && !findings.is_empty() {
+        std::process::exit(3);
+    }
+    Ok(())
 }
 
 fn cmd_info(args: Args) -> Result<()> {

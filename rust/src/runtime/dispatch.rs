@@ -68,6 +68,11 @@ use crate::tensor::Tensor;
 /// consumed there — never aliased across threads.
 struct SendLits(Vec<xla::Literal>);
 
+// SAFETY: an `xla::Literal` is plain host memory, immutable once
+// built (see the struct doc above — same contract as `Engine`'s
+// impls); a `SendLits` is built on the marshal stage, moved exactly
+// once through the reply channel, and consumed by the submitting
+// thread — never aliased across threads.
 unsafe impl Send for SendLits {}
 
 /// One marshal request: the per-call data tensors of a single
@@ -126,7 +131,10 @@ impl<'e> DispatchQueue<'e> {
         'e: 't,
     {
         let (reply, rx) = channel();
-        let tx = self.tx.as_ref().expect("sender lives until drop");
+        // tx is Some from construction until drop takes it.
+        let Some(tx) = self.tx.as_ref() else {
+            bail!("dispatch queue already shut down");
+        };
         if tx.send(MarshalJob { tensors: fresh, reply }).is_err() {
             bail!("dispatch marshal stage terminated");
         }
@@ -151,7 +159,10 @@ impl<'e> DispatchQueue<'e> {
         'e: 't,
     {
         let (reply, rx) = channel();
-        let tx = self.tx.as_ref().expect("sender lives until drop");
+        // tx is Some from construction until drop takes it.
+        let Some(tx) = self.tx.as_ref() else {
+            bail!("dispatch queue already shut down");
+        };
         if tx.send(MarshalJob { tensors: fresh, reply }).is_err() {
             bail!("dispatch marshal stage terminated");
         }

@@ -61,6 +61,11 @@
 //! Hit/miss/eviction counts fold into [`engine::EngineStats`] via
 //! `Engine::note_residency`.
 
+// The dispatch marshal stage runs on a spawned thread: a panic there
+// wedges the submitting trainer. Enforced both by `lite lint`
+// (panic-path) and, through the clippy smoke gate, by this deny-set
+// (test builds exempt).
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod dispatch;
 pub mod engine;
 pub mod manifest;

@@ -38,7 +38,7 @@
 
 pub mod protocol;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{BufRead, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -134,8 +134,10 @@ struct Worker<'e> {
     /// Retained sim episodes per user: the data plane for `range`
     /// queries and for transparent re-adaptation after an eviction.
     /// Host-side request context, deliberately outside the residency
-    /// budget (which accounts the pinned adapted state).
-    episodes: HashMap<String, Episode>,
+    /// budget (which accounts the pinned adapted state). BTreeMap so
+    /// any future traversal is user-ordered, not hasher-ordered
+    /// (lint: hash-iter).
+    episodes: BTreeMap<String, Episode>,
     /// Largest available `megaclassify` fusion width <= the flush
     /// width; 1 means fused dispatch is unavailable and flushes
     /// classify sequentially.
@@ -160,7 +162,7 @@ impl<'e> Worker<'e> {
             engine,
             learner,
             cache: ResidencyCache::new(cfg.budget_bytes),
-            episodes: HashMap::new(),
+            episodes: BTreeMap::new(),
             fuse_width,
             width: cfg.width.max(1),
             window: cfg.window,
@@ -375,7 +377,9 @@ impl<'e> Worker<'e> {
         if self.cache.get(user).is_none() {
             self.readapt(user)?;
         }
-        let r = self.cache.peek(user).expect("resident: ensured above");
+        // readapt() above guarantees residency, but a worker panic
+        // would take the whole shard down — keep this a served error.
+        let r = self.cache.peek(user).context("resident state missing after readapt")?;
         self.learner.classify_prepared(self.engine, &r.prepared, qx.clone())
     }
 }

@@ -1,0 +1,50 @@
+//! Self-application gate for `lite lint`: the crate's own source tree
+//! must scan clean under every rule. Any PR that reintroduces hash
+//! iteration in a determinism-gated module, an unordered lock pair, an
+//! unsplit RNG root, an undocumented `unsafe`, or a panic path in a
+//! thread-body module fails this test before it ever reaches review.
+
+use lite::analysis;
+use std::path::Path;
+
+fn crate_src() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[test]
+fn shipped_tree_scans_clean_under_all_rules() {
+    let findings = analysis::run_lint(&crate_src(), None).expect("scan crate sources");
+    assert!(
+        findings.is_empty(),
+        "lint findings on the shipped tree:\n{}",
+        analysis::render_text(&findings)
+    );
+}
+
+#[test]
+fn per_rule_scans_are_clean_and_rule_names_are_valid() {
+    for &(name, _) in analysis::RULES {
+        let findings = analysis::run_lint(&crate_src(), Some(name))
+            .unwrap_or_else(|e| panic!("scan with --rule {name}: {e:#}"));
+        assert!(
+            findings.is_empty(),
+            "[{name}] findings on the shipped tree:\n{}",
+            analysis::render_text(&findings)
+        );
+    }
+    assert!(analysis::run_lint(&crate_src(), Some("no-such-rule")).is_err());
+}
+
+#[test]
+fn clean_report_json_round_trips() -> anyhow::Result<()> {
+    let findings = analysis::run_lint(&crate_src(), None)?;
+    let report = analysis::findings_json(&crate_src(), None, &findings);
+    let parsed = lite::report::json::parse(&report.to_pretty())?;
+    assert_eq!(parsed.need("schema")?.as_str(), Some("lite-lint-v1"));
+    assert_eq!(parsed.need("count")?.as_u64(), Some(0));
+    assert_eq!(
+        parsed.need("rules")?.as_arr().map(|rules| rules.len()),
+        Some(analysis::RULES.len())
+    );
+    Ok(())
+}

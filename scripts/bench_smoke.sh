@@ -43,6 +43,33 @@ fi
 OUT="$(mktemp -d)"
 trap 'rm -rf "$OUT"' EXIT
 
+# Static invariant gate: the in-tree determinism/concurrency analyzer
+# (hash-iter, lock-order, rng-discipline, unsafe-audit, panic-path —
+# see ANALYSIS.md) must pass the shipped sources at --deny. Runs on
+# every machine: the analyzer is part of the crate, no component needed.
+"./$BIN" lint --deny --json "$OUT/lint.json"
+grep -q '"schema": "lite-lint-v1"' "$OUT/lint.json" \
+    || { echo "error: lint report missing lite-lint-v1 schema"; exit 1; }
+echo "lint gate OK (shipped tree clean under all rules)"
+
+# And the gate must actually bite: append a hash-iteration to a scratch
+# copy of the tree and require a nonzero exit naming file, line, rule.
+cp -r src "$OUT/lintsrc"
+cat >> "$OUT/lintsrc/config.rs" <<'EOF'
+
+fn lint_canary(m: &std::collections::HashMap<u32, u32>) -> u32 {
+    m.values().sum()
+}
+EOF
+if "./$BIN" lint --root "$OUT/lintsrc" --deny > "$OUT/lint_injected.txt"; then
+    echo "error: lint --deny passed an injected hash-iteration"
+    exit 1
+fi
+grep -Eq '^config\.rs:[0-9]+: \[hash-iter\]' "$OUT/lint_injected.txt" \
+    || { echo "error: injected violation not named by file:line and rule"; \
+         cat "$OUT/lint_injected.txt"; exit 1; }
+echo "lint deny gate OK (injected violation caught with file:line and rule)"
+
 "./$BIN" bench run --filter smoke --seed 7 --json "$OUT/baseline.json"
 "./$BIN" bench run --filter smoke --seed 7 --json "$OUT/candidate.json"
 
