@@ -26,11 +26,19 @@ const HASH_GATED: &[&str] = &["bench", "config", "coordinator", "report", "serve
 const RNG_SCOPED: &[&str] = &["coordinator", "eval", "serve"];
 
 /// Modules whose code runs on spawned threads (trainer pipeline,
-/// dispatch marshal stage, background writer, serve workers): a panic
-/// here poisons locks and wedges channel peers instead of surfacing an
-/// error.
-const PANIC_SCOPED: &[&str] =
-    &["coordinator::trainer", "coordinator::writer", "runtime::dispatch", "serve"];
+/// dispatch marshal stage, background writer, serve workers) or on a
+/// fault-recovery path (failpoint registry, episode storage IO): a
+/// panic here poisons locks and wedges channel peers instead of
+/// surfacing an error — and a recovery path that panics defeats the
+/// retry that was supposed to absorb the failure.
+const PANIC_SCOPED: &[&str] = &[
+    "coordinator::trainer",
+    "coordinator::writer",
+    "runtime::dispatch",
+    "serve",
+    "fault",
+    "data::storage",
+];
 
 fn in_scope(module: &str, prefixes: &[&str]) -> bool {
     prefixes

@@ -175,6 +175,7 @@ pub fn registry() -> Vec<Box<dyn Scenario>> {
         Box::new(DispatchThroughput),
         Box::new(MegabatchThroughput),
         Box::new(ServeLatency),
+        Box::new(FaultRecovery),
         Box::new(GradcheckRmse),
         Box::new(Orbit),
         Box::new(Vtab),
@@ -1641,6 +1642,169 @@ impl Scenario for ServeLatency {
         rep.timing("serve_query_p99", p99);
 
         rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        Ok(rep)
+    }
+}
+
+/// The chaos gate: deterministic fault injection + supervised recovery
+/// (tag `chaos`, not `runtime` — it runs only when asked for). Two
+/// halves:
+///
+/// (a) **Training recovery is bit-identical.** A run with an injected
+/// gradient-worker crash, a transient episode-read failure, and a
+/// failed snapshot write — all at fixed steps, so the chaos itself is
+/// reproducible — must finish with the SAME loss log and final
+/// parameters as the clean run at the same seed: crashed episodes
+/// re-run from their `(seed, step)` derivation, IO retries re-run only
+/// the failed write, and the retried snapshot still lands on disk.
+///
+/// (b) **Serve survives a worker death.** A shard worker killed
+/// mid-request leaves its client a structured error (never a hung
+/// connection), and after the supervisor restarts the worker the
+/// user's NEXT resident query is answered byte-identically to a
+/// never-crashed server.
+struct FaultRecovery;
+
+impl Scenario for FaultRecovery {
+    fn name(&self) -> &'static str {
+        "fault-recovery"
+    }
+    fn tags(&self) -> &'static [&'static str] {
+        &["chaos"]
+    }
+    fn about(&self) -> &'static str {
+        "injected crash/IO faults: bit-identical training recovery + serve worker restart"
+    }
+    fn run(&self, engine: Option<&Engine>, knobs: &Knobs, seed: u64) -> Result<ScenarioReport> {
+        let engine = need_engine(engine, self.name())?;
+        // Scenario-scoped knob names (`fault-*`): the knob namespace is
+        // shared across a `bench run`. 4 episodes at accum 2 with a
+        // crash in window one and IO faults at the first snapshot
+        // boundary covers recovery both mid-window and at the
+        // checkpoint edge.
+        let episodes: usize = knobs.get("fault-episodes", 4)?;
+        let accum: usize = knobs.get("fault-accum", 2)?;
+        let workers: usize = knobs.get("fault-workers", 2)?;
+        let size: usize = knobs.get("image-size", 32)?;
+        let mut rep = ScenarioReport::new(self.name(), seed);
+        rep.config("fault-episodes", episodes);
+        rep.config("fault-accum", accum);
+        rep.config("fault-workers", workers);
+        rep.config("image-size", size);
+
+        let mut learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        let init = learner.params.clone();
+        let suite = md_suite();
+        let s0 = engine.stats();
+        let cfg = TrainConfig {
+            episodes,
+            accum_period: accum,
+            lr: 1e-3,
+            seed: seed + 1,
+            log_every: 0,
+            episode_cfg: EpisodeConfig::train_default(),
+            workers,
+            ..Default::default()
+        };
+
+        // Clean reference run.
+        let (res, clean_secs) = timed(|| meta_train(engine, &mut learner, &suite, &cfg));
+        let ref_logs = res?;
+        let ref_params = learner.params.tensors().to_vec();
+        rep.timing("wall_secs_clean", clean_secs);
+
+        // Faulted run: worker crash at step 1, transient episode-read
+        // failure at step 2, failed snapshot write at the step-2
+        // boundary — with checkpointing on, so the writer failpoint has
+        // IO to fail (snapshotting itself must not perturb; the
+        // resume-fidelity scenario gates that separately).
+        let dir = std::env::temp_dir()
+            .join(format!("lite_fault_bench_{}_{}", std::process::id(), seed));
+        std::fs::create_dir_all(&dir)?;
+        let base = dir.join("run.state");
+        let spec = "trainer.worker@step=1,storage.read@step=2,writer.save@step=2";
+        rep.config("fault-spec", spec);
+        learner.params = init.clone();
+        let faulted_cfg = TrainConfig {
+            checkpoint_every: accum,
+            checkpoint_path: Some(base.clone()),
+            faults: crate::fault::FaultPlane::parse(spec, seed + 1)?,
+            ..cfg.clone()
+        };
+        let (res, faulted_secs) = timed(|| meta_train(engine, &mut learner, &suite, &faulted_cfg));
+        let logs = res?;
+        rep.timing("wall_secs_faulted", faulted_secs);
+        let identical = logs == ref_logs && learner.params.tensors() == &ref_params[..];
+        rep.metric(
+            "recovery_bit_identical",
+            if identical { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+        // The snapshot whose write failed once must still be on disk —
+        // the retry re-ran the failed IO, nothing else.
+        let landed = crate::coordinator::snapshot_path(&base, accum).exists();
+        rep.metric(
+            "faulted_snapshot_landed",
+            if landed { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+
+        // Serve half. Clean reference first: adapt, then one resident
+        // query — every later resident answer must match it byte for
+        // byte.
+        let serve_learner = MetaLearner::new(engine, "protonet", size, None, Some(40), 64)?;
+        let adapt = r#"{"op":"adapt","user":"alice","sim":{"seed":7,"users":2,"user":0}}"#;
+        let query = r#"{"op":"query","user":"alice","range":[0,2]}"#;
+        let clean_cfg = crate::serve::ServeConfig { width: 1, ..Default::default() };
+        let clean_answer = crate::serve::with_server(&[engine], &serve_learner, &clean_cfg, |h| {
+            anyhow::ensure!(h.request(adapt).contains(r#""ok":true"#), "clean adapt failed");
+            Ok(h.request(query))
+        })?;
+
+        // Chaos server: the worker dies on its 3rd job (the second
+        // query), mid-request. Job 4 re-adapts on the restarted worker
+        // from the retained episode; job 5 is resident again and must
+        // equal the clean answer exactly.
+        let chaos_cfg = crate::serve::ServeConfig {
+            width: 1,
+            faults: crate::fault::FaultPlane::parse("serve.worker@nth=3", seed)?,
+            ..Default::default()
+        };
+        let (killed, healed, after) =
+            crate::serve::with_server(&[engine], &serve_learner, &chaos_cfg, |h| {
+                anyhow::ensure!(h.request(adapt).contains(r#""ok":true"#), "chaos adapt failed");
+                let first = h.request(query);
+                anyhow::ensure!(first == clean_answer, "pre-crash answer diverged: {first}");
+                Ok((h.request(query), h.request(query), h.request(query)))
+            })?;
+        let killed_structured = killed.contains(r#""ok":false"#);
+        let healed_ok = healed.contains(r#""ok":true"#);
+        let survived = killed_structured && healed_ok && after == clean_answer;
+        rep.metric(
+            "serve_survives_worker_crash",
+            if survived { 1.0 } else { 0.0 },
+            Direction::Higher,
+        );
+        let mut table = Table::new("serve worker-crash timeline", &["job", "outcome"]);
+        table.row(vec!["query during crash".into(), if killed_structured {
+            "structured error".into()
+        } else {
+            format!("UNEXPECTED: {killed}")
+        }]);
+        table.row(vec!["query after restart".into(), if healed_ok {
+            "re-adapted".into()
+        } else {
+            format!("FAILED: {healed}")
+        }]);
+        table.row(vec!["resident query".into(), if after == clean_answer {
+            "byte-identical".into()
+        } else {
+            "DIVERGED".into()
+        }]);
+        rep.tables.push(table);
+
+        rep.engine = Some(stats_delta(&s0, &engine.stats()));
+        std::fs::remove_dir_all(&dir).ok();
         Ok(rep)
     }
 }

@@ -101,6 +101,7 @@ use crate::data::rng::Rng;
 use crate::data::storage::{EpisodeStorage, SynthStorage};
 use crate::data::task::{sample_episode, Episode, EpisodeConfig};
 use crate::data::PretrainCorpus;
+use crate::fault::{with_retry, FaultPlane, RetryPolicy};
 use crate::optim::{Adam, OrderedGradAccum};
 use crate::params::ParamStore;
 use crate::runtime::{Engine, EngineShards};
@@ -189,6 +190,17 @@ pub struct TrainConfig {
     /// training re-enters at the saved step cursor — bit-identical to
     /// the run that wrote the snapshot having never stopped.
     pub resume: Option<std::path::PathBuf>,
+    /// Deterministic fault-injection plane (`--faults SPEC`). Disabled
+    /// by default — every consult is a no-op, so the production path
+    /// is byte-identical with or without the plane. See [`crate::fault`]
+    /// for the spec grammar and failpoint names.
+    pub faults: FaultPlane,
+    /// Bounded retry-with-backoff for transient storage/writer IO:
+    /// episode reads in the producer pool and background snapshot
+    /// saves. Exhaustion surfaces the FIRST attempt's error with the
+    /// failing step named. `RetryPolicy::none()` restores single-shot
+    /// IO.
+    pub retry: RetryPolicy,
 }
 
 impl Default for TrainConfig {
@@ -212,6 +224,8 @@ impl Default for TrainConfig {
             checkpoint_path: None,
             keep: 0,
             resume: None,
+            faults: FaultPlane::disabled(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -365,7 +379,7 @@ pub fn meta_train_storage(
     let writer = match (cfg.checkpoint_every, &cfg.checkpoint_path) {
         (n, None) if n > 0 => bail!("TrainConfig.checkpoint_every set without checkpoint_path"),
         (0, _) if cfg.progress_path.is_none() => None,
-        _ => Some(BackgroundWriter::new(2)),
+        _ => Some(BackgroundWriter::with_faults(2, cfg.faults.clone(), cfg.retry)),
     };
     let workers = if cfg.workers == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -397,7 +411,7 @@ pub fn meta_train_storage(
     // the boundary by construction.
     let mut start_step = 0usize;
     if let Some(path) = &cfg.resume {
-        let snap = TrainState::load(path)?;
+        let snap = load_resume_snapshot(path, &learner.model)?;
         ensure!(
             snap.fingerprint == st.fingerprint,
             "resume fingerprint mismatch — the snapshot came from a different run \
@@ -447,12 +461,19 @@ pub fn meta_train_storage(
     // reducer polls this flag instead of hanging (the panic itself
     // then resurfaces at scope join, like it would serially).
     let producer_panicked = AtomicBool::new(false);
+    // Set by an INJECTED producer death (`trainer.producer` failpoint):
+    // unlike a real panic — which must still abort the run at scope
+    // join — an injected crash is recoverable, so the reducer
+    // regenerates the dead producer's claimed step inline
+    // (bit-identical: the episode derives from `(seed, step)` alone).
+    let producer_crashed = AtomicBool::new(false);
 
     std::thread::scope(|scope| -> Result<()> {
         let (ep_tx, ep_rx) = sync_channel::<(usize, Result<Episode>)>(chan_cap);
         let next_to_produce = AtomicUsize::new(start_step);
         let (progress, gate, done) = (&progress, &gate, &done);
         let producer_panicked = &producer_panicked;
+        let producer_crashed = &producer_crashed;
         for _ in 0..producers {
             let ep_tx = ep_tx.clone();
             let next_to_produce = &next_to_produce;
@@ -479,11 +500,26 @@ pub fn meta_train_storage(
                             }
                         }
                     }
-                    // Storage errors (e.g. a corrupt on-disk episode)
-                    // travel the channel to the reducer, which surfaces
-                    // them with the failing step attached; this
-                    // producer then stops claiming steps.
-                    let res = storage.episode(step, &mut episode_rng(gen_seed, step));
+                    // Injected producer death: raise the recoverable
+                    // flag and vanish WITHOUT sending the claimed step
+                    // — exactly the hole a dying thread leaves; the
+                    // reducer regenerates the step inline.
+                    if cfg.faults.crash("trainer.producer", step) {
+                        producer_crashed.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    // Storage reads ride the retry policy (consulting
+                    // the `storage.read` failpoint per attempt): a
+                    // transient disk error costs a backoff, not the
+                    // run. The RNG re-derives per attempt, so a retried
+                    // read is byte-identical. Persistent errors travel
+                    // the channel to the reducer, which surfaces them
+                    // with the failing step attached; this producer
+                    // then stops claiming steps.
+                    let res = with_retry(cfg.retry, &format!("reading episode {step}"), || {
+                        cfg.faults.check("storage.read", step)?;
+                        storage.episode(step, &mut episode_rng(gen_seed, step))
+                    });
                     let failed = res.is_err();
                     if ep_tx.send((step, res)).is_err() || failed {
                         return;
@@ -505,8 +541,10 @@ pub fn meta_train_storage(
             learner,
             cfg,
             make_val,
+            storage,
+            gen_seed,
             &ep_rx,
-            (progress, gate, producer_panicked),
+            (progress, gate, producer_panicked, producer_crashed),
             &mut st,
             val_seed,
             workers,
@@ -537,6 +575,66 @@ pub fn meta_train_storage(
         w.finish()?;
     }
     Ok(st.logs)
+}
+
+/// Resolve the `--resume` snapshot. Loading `path` normally succeeds;
+/// when the file fails validation (truncated, corrupt, half-written by
+/// a dying machine) and `--keep > 1` retention left older step-stamped
+/// siblings (`<base>.<M>`), fall back to the NEWEST sibling that still
+/// loads, warning with the corrupt file named — a crash during the
+/// final save should cost one checkpoint interval, not the run.
+/// Only load failures fall back: a fingerprint mismatch on a loaded
+/// snapshot stays a hard error downstream (that is a configuration
+/// problem, not corruption, and silently resuming an older snapshot
+/// would mask it).
+fn load_resume_snapshot(path: &std::path::Path, model: &str) -> Result<TrainState> {
+    let primary_err = match TrainState::load(path) {
+        Ok(snap) => return Ok(snap),
+        Err(e) => e,
+    };
+    // Siblings only exist for step-stamped snapshots: `<base>.<N>`.
+    let mut candidates: Vec<(usize, std::path::PathBuf)> = Vec::new();
+    if let (Some(dir), Some(name)) = (path.parent(), path.file_name().and_then(|n| n.to_str())) {
+        if let Some((base, step)) = name.rsplit_once('.') {
+            if step.parse::<usize>().is_ok() {
+                let prefix = format!("{base}.");
+                let dir = if dir.as_os_str().is_empty() {
+                    std::path::Path::new(".")
+                } else {
+                    dir
+                };
+                if let Ok(entries) = std::fs::read_dir(dir) {
+                    for entry in entries.flatten() {
+                        let fname = entry.file_name();
+                        let Some(fname) = fname.to_str() else { continue };
+                        if fname == name {
+                            continue; // the corrupt snapshot itself
+                        }
+                        let Some(suffix) = fname.strip_prefix(&prefix) else { continue };
+                        let Ok(step) = suffix.parse::<usize>() else { continue };
+                        candidates.push((step, entry.path()));
+                    }
+                }
+            }
+        }
+    }
+    // Newest first: resume as little lost work as possible.
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, cand) in &candidates {
+        if let Ok(snap) = TrainState::load(cand) {
+            eprintln!(
+                "[meta-train {model}] resume: snapshot {} failed validation \
+                 ({primary_err:#}); falling back to {}",
+                path.display(),
+                cand.display()
+            );
+            return Ok(snap);
+        }
+    }
+    Err(primary_err.context(format!(
+        "resuming from {} (and no valid sibling snapshot to fall back to)",
+        path.display()
+    )))
 }
 
 /// Enqueue a full-state [`TrainState`] snapshot on the background
@@ -583,6 +681,18 @@ fn maybe_checkpoint(
     writer.submit(WriteJob::State { state, path, prune })
 }
 
+/// Best-effort text of a caught panic payload (for the recovery log
+/// line; `panic!` carries `&str` or `String` in practice).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// RAII flag raised when the owning thread unwinds (and only then).
 struct PanicFlag<'a>(&'a AtomicBool);
 
@@ -616,25 +726,52 @@ impl Drop for GateRelease<'_> {
     }
 }
 
-/// Receive the next `(step, episode)`, surfacing producer death as an
-/// error: polls so a panicked producer (claimed step never sent, other
-/// senders still alive) cannot wedge the reducer in a blocking `recv`.
-/// A storage error travels the channel as the step's payload and
+/// Receive the next `(step, episode)`, surfacing producer death:
+/// polls so a dead producer (claimed step never sent, other senders
+/// still alive) cannot wedge the reducer in a blocking `recv`. A
+/// storage error travels the channel as the step's payload and
 /// surfaces here with the failing step attached.
+///
+/// `Ok(None)` means "no producer will ever send the wanted step, but
+/// the loss is RECOVERABLE": an injected `trainer.producer` crash (the
+/// `producer_crashed` flag) left a hole in the stream — the caller
+/// regenerates the step inline. A REAL producer panic
+/// (`producer_panicked`) stays a hard error: its panic must resurface
+/// at scope join, and silently completing the run first would discard
+/// the result anyway.
 fn recv_episode(
     ep_rx: &Receiver<(usize, Result<Episode>)>,
     producer_panicked: &AtomicBool,
-) -> Result<(usize, Episode)> {
+    producer_crashed: &AtomicBool,
+) -> Result<Option<(usize, Episode)>> {
+    let mut crashed_polls = 0u32;
     loop {
         match ep_rx.recv_timeout(Duration::from_millis(50)) {
-            Ok((step, Ok(ep))) => return Ok((step, ep)),
+            Ok((step, Ok(ep))) => return Ok(Some((step, ep))),
             Ok((step, Err(e))) => return Err(e.context(format!("producing episode {step}"))),
             Err(RecvTimeoutError::Timeout) => {
                 if producer_panicked.load(Ordering::Relaxed) {
                     bail!("episode producer panicked");
                 }
+                if producer_crashed.load(Ordering::Relaxed) {
+                    // Two consecutive empty polls after the crash flag:
+                    // the surviving producers had a full poll interval
+                    // to deliver, so whatever is still missing died
+                    // with the crashed producer.
+                    crashed_polls += 1;
+                    if crashed_polls >= 2 {
+                        return Ok(None);
+                    }
+                } else {
+                    crashed_polls = 0;
+                }
             }
-            Err(RecvTimeoutError::Disconnected) => bail!("episode producer terminated early"),
+            Err(RecvTimeoutError::Disconnected) => {
+                if producer_crashed.load(Ordering::Relaxed) {
+                    return Ok(None);
+                }
+                bail!("episode producer terminated early");
+            }
         }
     }
 }
@@ -650,8 +787,15 @@ fn reduce_loop(
     learner: &mut MetaLearner,
     cfg: &TrainConfig,
     make_val: &(impl Fn(&mut Rng) -> Episode + Send + Sync),
+    storage: &dyn EpisodeStorage,
+    gen_seed: u64,
     ep_rx: &Receiver<(usize, Result<Episode>)>,
-    (progress, gate, producer_panicked): (&Mutex<usize>, &Condvar, &AtomicBool),
+    (progress, gate, producer_panicked, producer_crashed): (
+        &Mutex<usize>,
+        &Condvar,
+        &AtomicBool,
+        &AtomicBool,
+    ),
     st: &mut ReducerState,
     val_seed: u64,
     workers: usize,
@@ -662,14 +806,40 @@ fn reduce_loop(
 ) -> Result<()> {
     // Producers race, so episodes can arrive out of step order; early
     // arrivals park here (bounded by the producer-side prefetch gate).
+    // (The model name is cloned so the closure does not hold a borrow
+    // of `learner` across the loop's mutable uses.)
+    let learner_model_for_log = learner.model.clone();
     let mut parked: BTreeMap<usize, Episode> = BTreeMap::new();
     let mut next_episode = |step: usize| -> Result<Episode> {
         loop {
             if let Some(ep) = parked.remove(&step) {
                 return Ok(ep);
             }
-            let (s, ep) = recv_episode(ep_rx, producer_panicked)?;
-            parked.insert(s, ep);
+            match recv_episode(ep_rx, producer_panicked, producer_crashed)? {
+                Some((s, ep)) => {
+                    parked.insert(s, ep);
+                }
+                None => {
+                    // The producer that claimed this step died (an
+                    // injected crash left a hole in the stream). Every
+                    // draw derives from `(seed, step)`, so regenerating
+                    // inline is bit-identical to the episode the dead
+                    // producer would have sent.
+                    eprintln!(
+                        "[meta-train {}] episode producer died before sending step \
+                         {step}; regenerating inline",
+                        learner_model_for_log
+                    );
+                    return with_retry(
+                        cfg.retry,
+                        &format!("regenerating episode {step}"),
+                        || {
+                            cfg.faults.check("storage.read", step)?;
+                            storage.episode(step, &mut episode_rng(gen_seed, step))
+                        },
+                    );
+                }
+            }
         }
     };
     let mut lo = start_step;
@@ -755,12 +925,31 @@ fn serial_step(
     st: &mut ReducerState,
     writer: Option<&BackgroundWriter>,
 ) -> Result<()> {
-    let (stats, grads) = learner.train_episode_dispatch(
-        engine.shard(step),
-        cfg.dispatch,
-        ep,
-        &mut episode_rng(cfg.seed, step),
-    )?;
+    let run = |lr: &MetaLearner| -> Result<(TrainStats, Vec<Tensor>)> {
+        if cfg.faults.crash("trainer.worker", step) {
+            bail!("injected worker crash at step {step}");
+        }
+        lr.train_episode_dispatch(
+            engine.shard(step),
+            cfg.dispatch,
+            ep,
+            &mut episode_rng(cfg.seed, step),
+        )
+    };
+    let (stats, grads) = match run(learner) {
+        Ok(out) => out,
+        Err(e) => {
+            // Supervised recovery, serial edition: one inline re-run.
+            // The episode's draws re-derive from `(seed, step)`, so a
+            // recovered step is bit-identical; a second failure
+            // surfaces with the step named.
+            eprintln!(
+                "[meta-train {}] step {step}: episode failed ({e:#}); re-running inline",
+                learner.model
+            );
+            run(learner).with_context(|| format!("train episode {step} (re-run)"))?
+        }
+    };
     for avg in st.accum.push_at(step, grads)? {
         st.adam.step(&mut learner.params, &avg)?;
     }
@@ -815,7 +1004,9 @@ fn run_window_parallel(
     let lr: &MetaLearner = learner;
     let mut stats_buf: Vec<Option<TrainStats>> = vec![None; window.len()];
     let mut window_avgs: Vec<Vec<Tensor>> = Vec::new();
-    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    // Slots whose worker failed (an injected crash, a caught panic, or
+    // a plain episode error), for the inline re-run pass below.
+    let mut failed: Vec<(usize, anyhow::Error)> = Vec::new();
     std::thread::scope(|ws| -> Result<()> {
         let (res_tx, res_rx) = channel::<(usize, Result<(TrainStats, Vec<Tensor>)>)>();
         let next_slot = AtomicUsize::new(0);
@@ -828,12 +1019,26 @@ fn run_window_parallel(
                     return;
                 }
                 let (step, ep) = &window[k];
-                let res = lr.train_episode_dispatch(
-                    engine.shard(*step),
-                    cfg.dispatch,
-                    ep,
-                    &mut episode_rng(cfg.seed, *step),
-                );
+                // A worker death — injected via the `trainer.worker`
+                // failpoint or a real panic in the episode body — lands
+                // as this slot's error instead of killing the run: the
+                // reducer re-runs the slot inline (bit-identical, every
+                // draw derives from `(seed, step)`).
+                let res = if cfg.faults.crash("trainer.worker", *step) {
+                    Err(anyhow::anyhow!("injected worker crash at step {step}"))
+                } else {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        lr.train_episode_dispatch(
+                            engine.shard(*step),
+                            cfg.dispatch,
+                            ep,
+                            &mut episode_rng(cfg.seed, *step),
+                        )
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!("gradient worker panicked: {}", panic_msg(&p)))
+                    })
+                };
                 if res_tx.send((k, res)).is_err() {
                     return;
                 }
@@ -842,32 +1047,49 @@ fn run_window_parallel(
         drop(res_tx);
         for _ in 0..window.len() {
             // Every sender gone with results still missing means a
-            // worker panicked before sending: stop draining instead of
-            // panicking on the recv. The worker's ORIGINAL panic
-            // resurfaces at the scope join right below; the missing-
-            // slot check in the replay loop backstops the impossible
-            // case where it somehow does not.
+            // worker died before sending (panics are caught above, so
+            // this is belt-and-braces): stop draining instead of
+            // panicking on the recv; the missing-slot re-run pass
+            // below covers the hole.
             let Ok((k, res)) = res_rx.recv() else { break };
             match res {
                 Ok((stats, grads)) => {
                     stats_buf[k] = Some(stats);
                     window_avgs.extend(st.accum.push_at(window[k].0, grads)?);
                 }
-                Err(e) => {
-                    // Keep draining so the surfaced error is the LOWEST
-                    // failing step (what the serial loop would have hit
-                    // first), not whichever worker lost the race.
-                    let step = window[k].0;
-                    if first_err.as_ref().map_or(true, |(s, _)| step < *s) {
-                        first_err = Some((step, e));
-                    }
-                }
+                Err(e) => failed.push((k, e)),
             }
         }
         Ok(())
     })?;
-    if let Some((step, e)) = first_err {
-        return Err(e.context(format!("train episode {step}")));
+    // Supervised recovery: re-run every failed or missing slot inline,
+    // in step order. The re-run draws from the same `(seed, step)`
+    // stream the crashed worker would have, so a recovered window is
+    // bit-identical to the fault-free one; a slot failing AGAIN
+    // surfaces with the lowest step named — what the serial loop would
+    // have hit first.
+    for (k, stats) in stats_buf.iter().enumerate() {
+        if stats.is_none() && !failed.iter().any(|(fk, _)| *fk == k) {
+            failed.push((k, anyhow::anyhow!("gradient worker terminated before reducing it")));
+        }
+    }
+    failed.sort_by_key(|(k, _)| window[*k].0);
+    for (k, e) in failed {
+        let (step, ep) = &window[k];
+        eprintln!(
+            "[meta-train {}] step {step}: gradient worker failed ({e:#}); re-running inline",
+            lr.model
+        );
+        let (stats, grads) = lr
+            .train_episode_dispatch(
+                engine.shard(*step),
+                cfg.dispatch,
+                ep,
+                &mut episode_rng(cfg.seed, *step),
+            )
+            .with_context(|| format!("train episode {step} (re-run after worker crash)"))?;
+        stats_buf[k] = Some(stats);
+        window_avgs.extend(st.accum.push_at(*step, grads)?);
     }
     let mut avgs = window_avgs.into_iter();
     for (k, stats) in stats_buf.iter().enumerate() {
@@ -927,6 +1149,12 @@ fn run_window_megabatch(
         // then run the group's whole window plan on its shard.
         let run_group = |ks: &[usize]| -> Result<Vec<(usize, TrainStats, Vec<Tensor>)>> {
             let first_step = window[ks[0]].0;
+            // The `trainer.worker` failpoint's unit on this path is the
+            // fused group; the retry pass below re-runs it (the one-shot
+            // `step=` latch makes the re-run succeed).
+            if cfg.faults.crash("trainer.worker", first_step) {
+                bail!("injected worker crash at step {first_step}");
+            }
             let eng = engine.shard(first_step);
             let eps: Vec<&Episode> = ks.iter().map(|&k| &window[k].1).collect();
             let plans = ks
@@ -945,9 +1173,12 @@ fn run_window_megabatch(
                 })?;
             Ok(ks.iter().zip(out).map(|(&k, (s, g))| (k, s, g)).collect())
         };
-        let mut land = |gk: usize,
-                        res: Result<Vec<(usize, TrainStats, Vec<Tensor>)>>,
-                        results: &mut Vec<Option<(TrainStats, Vec<Tensor>)>>| {
+        // Non-capturing over the error slot so the retry pass below can
+        // inspect and reset it between landing rounds.
+        let land = |gk: usize,
+                    res: Result<Vec<(usize, TrainStats, Vec<Tensor>)>>,
+                    results: &mut Vec<Option<(TrainStats, Vec<Tensor>)>>,
+                    first_err: &mut Option<(usize, anyhow::Error)>| {
             match res {
                 Ok(triples) => {
                     for (k, s, g) in triples {
@@ -960,7 +1191,7 @@ fn run_window_megabatch(
                     // first episode.
                     let step = window[gk].0;
                     if first_err.as_ref().map_or(true, |(s, _)| step < *s) {
-                        first_err = Some((step, e));
+                        *first_err = Some((step, e));
                     }
                 }
             }
@@ -968,7 +1199,7 @@ fn run_window_megabatch(
         if workers <= 1 || groups.len() <= 1 {
             for g in &groups {
                 let res = run_group(g);
-                land(g[0], res, &mut results);
+                land(g[0], res, &mut results, &mut first_err);
             }
         } else {
             std::thread::scope(|ws| {
@@ -978,14 +1209,49 @@ fn run_window_megabatch(
                 for g in &groups {
                     let res_tx = res_tx.clone();
                     ws.spawn(move || {
-                        let _ = res_tx.send((g[0], run_group(g)));
+                        // A real panic in the fused body lands as the
+                        // group's error (and its retry) instead of
+                        // killing the run at scope join.
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || run_group(g),
+                        ))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow::anyhow!(
+                                "megabatch group worker panicked: {}",
+                                panic_msg(&p)
+                            ))
+                        });
+                        let _ = res_tx.send((g[0], res));
                     });
                 }
                 drop(res_tx);
                 while let Ok((gk, res)) = res_rx.recv() {
-                    land(gk, res, &mut results);
+                    land(gk, res, &mut results, &mut first_err);
                 }
             });
+        }
+        // Supervised recovery: any group that did not land re-runs once
+        // inline, in step order. Plans re-derive from `(seed, step)`,
+        // so a recovered window is bit-identical to the fault-free one;
+        // a group failing AGAIN surfaces below with its step named.
+        let retry: Vec<Vec<usize>> = groups
+            .iter()
+            .filter(|g| results[g[0]].is_none())
+            .cloned()
+            .collect();
+        if !retry.is_empty() {
+            first_err = None;
+            for g in &retry {
+                let step = window[g[0]].0;
+                eprintln!(
+                    "[meta-train {}] megabatch group at step {step}: worker failed; \
+                     re-running inline",
+                    lr.model
+                );
+                let res = run_group(g)
+                    .with_context(|| format!("megabatch group re-run at step {step}"));
+                land(g[0], res, &mut results, &mut first_err);
+            }
         }
     }
     if let Some((step, e)) = first_err {

@@ -27,6 +27,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::state::TrainState;
+use crate::fault::{with_retry, FaultPlane, RetryPolicy};
 use crate::params::ParamStore;
 
 /// One unit of background IO.
@@ -45,8 +46,19 @@ pub enum WriteJob {
 }
 
 impl WriteJob {
-    /// The default sink: perform the IO this job describes.
-    fn perform(self) -> Result<()> {
+    /// The training step this job belongs to: state snapshots carry
+    /// their cursor, other jobs report 0. Names the failing step in
+    /// fault/retry errors.
+    fn step(&self) -> usize {
+        match self {
+            WriteJob::State { state, .. } => state.next_step,
+            _ => 0,
+        }
+    }
+
+    /// The default sink: perform the IO this job describes. Takes
+    /// `&self` so the retry wrapper can re-run one job.
+    fn perform(&self) -> Result<()> {
         match self {
             WriteJob::Checkpoint { store, path } => store
                 .save(&path)
@@ -81,7 +93,24 @@ impl BackgroundWriter {
     /// backpressure that keeps a slow disk from hoarding parameter
     /// snapshots.
     pub fn new(capacity: usize) -> Self {
-        Self::with_sink(capacity, WriteJob::perform)
+        Self::with_sink(capacity, |job| job.perform())
+    }
+
+    /// [`BackgroundWriter::new`] under the fault plane: each job
+    /// consults the `writer.save` failpoint (at the job's step) and is
+    /// retried per `retry`, so a transient ENOSPC-shaped error costs a
+    /// backoff instead of the run. Exhaustion surfaces the first
+    /// attempt's error at [`BackgroundWriter::finish`] with the step
+    /// named, and — because retention prunes only after a successful
+    /// save — the previous snapshot stays intact.
+    pub fn with_faults(capacity: usize, faults: FaultPlane, retry: RetryPolicy) -> Self {
+        Self::with_sink(capacity, move |job| {
+            let step = job.step();
+            with_retry(retry, &format!("background writer job (step {step})"), || {
+                faults.check("writer.save", step)?;
+                job.perform()
+            })
+        })
     }
 
     /// Test seam: like [`BackgroundWriter::new`] but every job is
@@ -237,6 +266,64 @@ mod tests {
             0,
             &[],
         )
+    }
+
+    #[test]
+    fn injected_writer_fault_is_absorbed_by_retry() {
+        use crate::fault::FaultPlane;
+        let dir = std::env::temp_dir().join(format!("lite_bw_fi_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.state.2");
+        // step= faults fire once; a 2-attempt policy rides through.
+        let faults = FaultPlane::parse("writer.save@step=2", 0).unwrap();
+        let retry = RetryPolicy { attempts: 2, backoff: std::time::Duration::ZERO };
+        let w = BackgroundWriter::with_faults(2, faults, retry);
+        w.submit(WriteJob::State {
+            state: {
+                let mut s = toy_state();
+                s.next_step = 2;
+                s
+            },
+            path: path.clone(),
+            prune: vec![],
+        })
+        .unwrap();
+        w.finish().unwrap();
+        assert!(TrainState::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_retry_exhaustion_names_step_and_keeps_previous_checkpoint() {
+        use crate::fault::FaultPlane;
+        let dir = std::env::temp_dir().join(format!("lite_bw_fx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = dir.join("run.state.3");
+        std::fs::write(&old, b"previous snapshot").unwrap();
+        // always-faults exhaust every retry; the first error surfaces
+        // at finish() naming the step, and retention must not have
+        // pruned the previous snapshot (save never succeeded).
+        let faults = FaultPlane::parse("writer.save@always", 0).unwrap();
+        let retry = RetryPolicy { attempts: 3, backoff: std::time::Duration::ZERO };
+        let w = BackgroundWriter::with_faults(2, faults, retry);
+        let newer = dir.join("run.state.7");
+        w.submit(WriteJob::State {
+            state: {
+                let mut s = toy_state();
+                s.next_step = 7;
+                s
+            },
+            path: newer.clone(),
+            prune: vec![old.clone()],
+        })
+        .unwrap();
+        let err = format!("{:#}", w.finish().unwrap_err());
+        assert!(err.contains("step 7"), "must name the failing step: {err}");
+        assert!(err.contains("3 attempt(s)"), "{err}");
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(!newer.exists(), "the faulted save must not land");
+        assert!(old.exists(), "exhausted retries must not prune the previous checkpoint");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

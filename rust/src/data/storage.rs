@@ -25,6 +25,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::data::rng::Rng;
 use crate::data::task::Episode;
+use crate::fault::{with_retry, FaultPlane, RetryPolicy};
 use crate::params::{atomic_write, bytes_to_f32, read_line};
 
 /// A source of training episodes for the producer pool (see the module
@@ -83,12 +84,27 @@ impl DiskStorage {
     /// Write `episodes` into `dir` (created if needed) and open the
     /// resulting store.
     pub fn materialize(dir: &Path, episodes: &[Episode]) -> Result<Self> {
+        Self::materialize_with(dir, episodes, &FaultPlane::disabled(), RetryPolicy::none())
+    }
+
+    /// [`Self::materialize`] under the fault plane: each episode write
+    /// consults the `storage.write` failpoint and retries per `retry`,
+    /// so a transient disk error costs a backoff instead of the run.
+    pub fn materialize_with(
+        dir: &Path,
+        episodes: &[Episode],
+        faults: &FaultPlane,
+        retry: RetryPolicy,
+    ) -> Result<Self> {
         ensure!(!episodes.is_empty(), "disk storage needs at least one episode");
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating episode dir {}", dir.display()))?;
         for (i, ep) in episodes.iter().enumerate() {
-            atomic_write(&Self::episode_file(dir, i), &encode_episode(ep))
-                .with_context(|| format!("materializing episode {i}"))?;
+            let bytes = encode_episode(ep);
+            with_retry(retry, &format!("materializing episode {i}"), || {
+                faults.check("storage.write", i)?;
+                atomic_write(&Self::episode_file(dir, i), &bytes)
+            })?;
         }
         Ok(Self { dir: dir.to_path_buf(), count: episodes.len() })
     }
@@ -278,6 +294,34 @@ mod tests {
         ep.support[0].1 = 9;
         let err = format!("{:#}", decode_episode(&encode_episode(&ep), "t").unwrap_err());
         assert!(err.contains("out of way"), "{err}");
+    }
+
+    #[test]
+    fn materialize_retries_through_transient_write_faults() {
+        let corpus = vec![toy_episode(1.0), toy_episode(2.0)];
+        let dir = std::env::temp_dir()
+            .join(format!("lite_storage_faults_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        // A step= fault fires once, so one retry absorbs it.
+        let faults = FaultPlane::parse("storage.write@step=1", 0).unwrap();
+        let retry =
+            RetryPolicy { attempts: 2, backoff: std::time::Duration::ZERO };
+        let store =
+            DiskStorage::materialize_with(&dir, &corpus, &faults, retry).unwrap();
+        assert_eq!(store.len(), 2);
+        let mut rng = Rng::new(0);
+        assert_episodes_equal(&store.episode(1, &mut rng).unwrap(), &corpus[1]);
+        std::fs::remove_dir_all(&dir).ok();
+        // Without retries the same fault surfaces, naming the episode.
+        let faults = FaultPlane::parse("storage.write@step=1", 0).unwrap();
+        let err = format!(
+            "{:#}",
+            DiskStorage::materialize_with(&dir, &corpus, &faults, RetryPolicy::none())
+                .unwrap_err()
+        );
+        assert!(err.contains("materializing episode 1"), "{err}");
+        assert!(err.contains("injected fault"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

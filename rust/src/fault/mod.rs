@@ -1,0 +1,485 @@
+//! Deterministic fault-injection plane.
+//!
+//! Long LITE runs die in production for boring reasons — a flaky disk,
+//! a full partition, a worker thread that hits a driver bug — and the
+//! recovery machinery (retrying IO, re-running a crashed worker's
+//! episodes, restarting a serve shard) is only trustworthy if it is
+//! exercised continuously, not once at a PR boundary. This module is
+//! the lever: a seeded registry of *named failpoints* that production
+//! code consults at the exact sites that can fail for real. With no
+//! spec installed (the default) every consult is a no-op on an
+//! `Option::None` — zero behavior change. With `--faults SPEC` the
+//! plane deterministically injects errors, panics, or latency so the
+//! recovery paths run under test and in the `fault-recovery` bench
+//! scenario.
+//!
+//! ## Spec grammar
+//!
+//! `SPEC := point@clause[+clause...][,SPEC...]`, where `point` is one
+//! of [`POINTS`] and each clause is one of:
+//!
+//! - `always` — trigger on every consult
+//! - `p=F` — trigger with probability `F` per consult, derived from
+//!   `(fault seed, point name, consult index)` so the same spec + seed
+//!   reproduces the same fault sequence
+//! - `step=N` — trigger **once**, the first time the failpoint is
+//!   consulted at step `N`. The once-latch is what makes a `step=`
+//!   fault *transient*: the retry / re-run path consults again at the
+//!   same step and succeeds, which is exactly the shape of fault the
+//!   recovery gates need.
+//! - `nth=N` — trigger on the Nth consult of this spec (1-based),
+//!   regardless of step
+//! - `slow:MS` — inject latency instead of an error: when the trigger
+//!   fires, sleep `MS` milliseconds and carry on. A spec with only a
+//!   `slow:` clause triggers on every consult.
+//!
+//! Examples: `storage.read@p=0.05`, `writer.save@step=7`,
+//! `serve.worker@nth=3`, `storage.write@always+slow:20`.
+//!
+//! ## Consult API
+//!
+//! [`FaultPlane::check`] is for IO-shaped sites: it returns an `Err`
+//! naming the point and step when a fault fires (or sleeps, for
+//! `slow:`). [`FaultPlane::crash`] is for thread-body sites that model
+//! a worker death: it returns `true` when the caller should panic or
+//! bail out of its loop. [`with_retry`] is the bounded
+//! retry-with-backoff wrapper the storage/writer paths use; on
+//! exhaustion it surfaces the *first* attempt's error with the
+//! attempt count attached.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Every failpoint name the plane recognizes, i.e. every site in the
+/// tree that consults it. `parse` rejects unknown names so a typo'd
+/// `--faults` spec fails loudly instead of silently injecting nothing.
+pub const POINTS: &[&str] = &[
+    "storage.read",    // data::storage — reading an episode from the backend
+    "storage.write",   // data::storage — materializing an episode file
+    "writer.save",     // coordinator::writer — performing a background IO job
+    "trainer.worker",  // coordinator::trainer — a gradient worker mid-window
+    "trainer.producer", // coordinator::trainer — the episode producer thread
+    "dispatch.marshal", // runtime::dispatch — the literal-marshaling stage
+    "serve.worker",    // serve — a shard worker processing a job
+    "serve.resident",  // serve — resident adapted state consulted on a hit
+];
+
+/// When a spec fires relative to its consults.
+#[derive(Clone, Copy, Debug)]
+enum Trigger {
+    /// Every consult.
+    Always,
+    /// Per-consult coin flip at this probability, seeded.
+    Prob(f64),
+    /// The first consult at this step — once, so retries succeed.
+    Step(u64),
+    /// The Nth consult (1-based) of this spec.
+    Nth(u64),
+}
+
+/// One parsed `point@clauses` spec with its trigger bookkeeping.
+#[derive(Debug)]
+struct Spec {
+    point: &'static str,
+    trigger: Trigger,
+    /// Nonzero: sleep this long instead of erroring when triggered.
+    slow_ms: u64,
+    /// Once-latch for `step=` triggers.
+    fired: AtomicBool,
+    /// Consult counter for `nth=` and `p=` triggers.
+    calls: AtomicU64,
+}
+
+impl Spec {
+    /// Did this consult trip the trigger? Updates the latch/counter.
+    fn triggered(&self, seed: u64, step: usize) -> bool {
+        match self.trigger {
+            Trigger::Always => true,
+            Trigger::Step(n) => {
+                step as u64 == n && !self.fired.swap(true, Ordering::Relaxed)
+            }
+            Trigger::Nth(n) => self.calls.fetch_add(1, Ordering::Relaxed) + 1 == n,
+            Trigger::Prob(p) => {
+                let call = self.calls.fetch_add(1, Ordering::Relaxed);
+                let h = splitmix64(seed ^ fnv1a(self.point.as_bytes()) ^ call);
+                // Top 53 bits -> uniform f64 in [0, 1).
+                ((h >> 11) as f64) / ((1u64 << 53) as f64) < p
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    seed: u64,
+    specs: Vec<Spec>,
+}
+
+/// The installed fault registry. `Default`/[`FaultPlane::disabled`] is
+/// the production state: no allocation, every consult an immediate
+/// no-op. Cloning shares the trigger bookkeeping (an `Arc`), so the
+/// plane threads through configs and worker threads while `nth=` /
+/// `step=` latches stay global to the run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlane {
+    inner: Option<Arc<Inner>>,
+}
+
+impl FaultPlane {
+    /// The no-op plane (same as `Default`): nothing ever fires.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Whether any spec is installed. Recovery paths that are
+    /// observable (e.g. warnings) can stay silent when this is false.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Parse a `--faults` spec string. Empty/whitespace input yields
+    /// the disabled plane; unknown points or malformed clauses error.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut specs = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, clauses)) = part.split_once('@') else {
+                bail!(
+                    "fault spec `{part}`: expected POINT@CLAUSE[+CLAUSE...] \
+                     (e.g. writer.save@step=7)"
+                );
+            };
+            let name = name.trim();
+            let Some(point) = POINTS.iter().copied().find(|p| *p == name) else {
+                bail!(
+                    "fault spec `{part}`: unknown failpoint `{name}` (known: {})",
+                    POINTS.join(", ")
+                );
+            };
+            let mut trigger: Option<Trigger> = None;
+            let mut slow_ms = 0u64;
+            let mut set = |t: Trigger, slot: &mut Option<Trigger>| -> Result<()> {
+                ensure!(
+                    slot.is_none(),
+                    "fault spec `{part}`: more than one trigger clause"
+                );
+                *slot = Some(t);
+                Ok(())
+            };
+            for clause in clauses.split('+') {
+                let clause = clause.trim();
+                if clause == "always" {
+                    set(Trigger::Always, &mut trigger)?;
+                } else if let Some(v) = clause.strip_prefix("p=") {
+                    let p: f64 = v.parse().with_context(|| {
+                        format!("fault spec `{part}`: bad probability `{v}`")
+                    })?;
+                    ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "fault spec `{part}`: probability {p} outside [0, 1]"
+                    );
+                    set(Trigger::Prob(p), &mut trigger)?;
+                } else if let Some(v) = clause.strip_prefix("step=") {
+                    let n: u64 = v.parse().with_context(|| {
+                        format!("fault spec `{part}`: bad step `{v}`")
+                    })?;
+                    set(Trigger::Step(n), &mut trigger)?;
+                } else if let Some(v) = clause.strip_prefix("nth=") {
+                    let n: u64 = v.parse().with_context(|| {
+                        format!("fault spec `{part}`: bad consult index `{v}`")
+                    })?;
+                    ensure!(n >= 1, "fault spec `{part}`: nth is 1-based");
+                    set(Trigger::Nth(n), &mut trigger)?;
+                } else if let Some(v) = clause.strip_prefix("slow:") {
+                    slow_ms = v.parse().with_context(|| {
+                        format!("fault spec `{part}`: bad latency `{v}`")
+                    })?;
+                } else {
+                    bail!(
+                        "fault spec `{part}`: unknown clause `{clause}` \
+                         (expected always, p=F, step=N, nth=N, or slow:MS)"
+                    );
+                }
+            }
+            // A bare `point@slow:MS` injects latency on every consult.
+            let trigger = trigger.unwrap_or(Trigger::Always);
+            specs.push(Spec {
+                point,
+                trigger,
+                slow_ms,
+                fired: AtomicBool::new(false),
+                calls: AtomicU64::new(0),
+            });
+        }
+        if specs.is_empty() {
+            return Ok(Self::default());
+        }
+        Ok(Self {
+            inner: Some(Arc::new(Inner { seed, specs })),
+        })
+    }
+
+    /// Consult an IO-shaped failpoint. Returns `Err` naming the point
+    /// and step when an error fault fires; sleeps for `slow:` faults.
+    pub fn check(&self, point: &str, step: usize) -> Result<()> {
+        let Some(inner) = &self.inner else {
+            return Ok(());
+        };
+        for spec in inner.specs.iter().filter(|s| s.point == point) {
+            if spec.triggered(inner.seed, step) {
+                if spec.slow_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(spec.slow_ms));
+                } else {
+                    bail!("injected fault at `{point}` (step {step})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Consult a thread-death failpoint: `true` means the caller
+    /// should die (panic / bail out of its loop) now. `slow:` specs
+    /// sleep here too but never ask for a crash.
+    pub fn crash(&self, point: &str, step: usize) -> bool {
+        let Some(inner) = &self.inner else {
+            return false;
+        };
+        let mut hit = false;
+        for spec in inner.specs.iter().filter(|s| s.point == point) {
+            if spec.triggered(inner.seed, step) {
+                if spec.slow_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(spec.slow_ms));
+                } else {
+                    hit = true;
+                }
+            }
+        }
+        hit
+    }
+}
+
+/// Bounded retry-with-backoff for transient IO. `attempts` is the
+/// total number of tries (min 1); `backoff` is the sleep before the
+/// second try and doubles after each failure.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub attempts: usize,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 3,
+            backoff: Duration::from_millis(10),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A single attempt, no retries — the pre-fault-plane behavior.
+    pub fn none() -> Self {
+        Self {
+            attempts: 1,
+            backoff: Duration::ZERO,
+        }
+    }
+}
+
+/// Run `f` up to `policy.attempts` times with doubling backoff between
+/// tries. On exhaustion the *first* attempt's error surfaces (it is
+/// the root cause; later attempts usually repeat it) with the attempt
+/// count and `what` attached so the failing step is named.
+pub fn with_retry<T>(
+    policy: RetryPolicy,
+    what: &str,
+    mut f: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let attempts = policy.attempts.max(1);
+    let mut backoff = policy.backoff;
+    let mut first_err = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            backoff = backoff.saturating_mul(2);
+        }
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => {
+            Err(e.context(format!("{what}: still failing after {attempts} attempt(s)")))
+        }
+        // attempts >= 1, so the loop ran and recorded an error; this
+        // arm is unreachable but keeps the signature total.
+        None => bail!("{what}: retry loop made no attempts"),
+    }
+}
+
+/// FNV-1a 64-bit — stable input mixing for the probability trigger.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer — decorrelates the seed/point/call mix.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plane_is_inert() {
+        let p = FaultPlane::disabled();
+        assert!(!p.is_active());
+        for step in 0..32 {
+            assert!(p.check("storage.read", step).is_ok());
+            assert!(!p.crash("trainer.worker", step));
+        }
+    }
+
+    #[test]
+    fn empty_spec_parses_to_disabled() {
+        assert!(!FaultPlane::parse("", 1).unwrap().is_active());
+        assert!(!FaultPlane::parse("  , ,", 1).unwrap().is_active());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "writer.save",              // no clause separator
+            "nope.nope@always",         // unknown point
+            "writer.save@wat",          // unknown clause
+            "writer.save@p=1.5",        // probability out of range
+            "writer.save@nth=0",        // nth is 1-based
+            "writer.save@step=x",       // non-numeric
+            "writer.save@step=1+nth=2", // two triggers
+        ] {
+            assert!(FaultPlane::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn step_trigger_fires_exactly_once() {
+        let p = FaultPlane::parse("writer.save@step=7", 0).unwrap();
+        assert!(p.check("writer.save", 6).is_ok());
+        let err = p.check("writer.save", 7).unwrap_err();
+        assert!(err.to_string().contains("writer.save"), "{err}");
+        assert!(err.to_string().contains("step 7"), "{err}");
+        // The latch: a retry at the same step succeeds.
+        assert!(p.check("writer.save", 7).is_ok());
+        assert!(p.check("writer.save", 8).is_ok());
+        // Other points are untouched.
+        assert!(p.check("storage.read", 7).is_ok());
+    }
+
+    #[test]
+    fn nth_trigger_counts_consults_not_steps() {
+        let p = FaultPlane::parse("serve.worker@nth=3", 9).unwrap();
+        assert!(!p.crash("serve.worker", 100));
+        assert!(!p.crash("serve.worker", 100));
+        assert!(p.crash("serve.worker", 100));
+        assert!(!p.crash("serve.worker", 100));
+    }
+
+    #[test]
+    fn prob_trigger_is_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let p = FaultPlane::parse("storage.read@p=0.5", seed).unwrap();
+            (0..64).map(|s| p.check("storage.read", s).is_err()).collect()
+        };
+        let a = run(42);
+        assert_eq!(a, run(42), "same seed must replay the same faults");
+        assert_ne!(a, run(43), "different seeds should differ");
+        let fired = a.iter().filter(|&&x| x).count();
+        assert!((10..=54).contains(&fired), "p=0.5 fired {fired}/64");
+    }
+
+    #[test]
+    fn slow_clause_sleeps_instead_of_erroring() {
+        let p = FaultPlane::parse("storage.write@slow:5", 0).unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(p.check("storage.write", 0).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert!(!p.crash("storage.write", 0));
+    }
+
+    #[test]
+    fn comma_specs_are_independent() {
+        let p =
+            FaultPlane::parse("writer.save@step=2, serve.worker@nth=1", 0).unwrap();
+        assert!(p.crash("serve.worker", 0));
+        assert!(p.check("writer.save", 2).is_err());
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_failures() {
+        let mut left = 2;
+        let got = with_retry(
+            RetryPolicy { attempts: 3, backoff: Duration::ZERO },
+            "reading episode 4",
+            || {
+                if left > 0 {
+                    left -= 1;
+                    bail!("transient");
+                }
+                Ok(17)
+            },
+        )
+        .unwrap();
+        assert_eq!(got, 17);
+    }
+
+    #[test]
+    fn retry_exhaustion_surfaces_first_error_with_context() {
+        let mut n = 0;
+        let err = with_retry(
+            RetryPolicy { attempts: 3, backoff: Duration::ZERO },
+            "saving snapshot step 7",
+            || -> Result<()> {
+                n += 1;
+                bail!("failure #{n}")
+            },
+        )
+        .unwrap_err();
+        assert_eq!(n, 3, "must stop at the attempt bound");
+        let chain = format!("{err:#}");
+        assert!(chain.contains("saving snapshot step 7"), "{chain}");
+        assert!(chain.contains("3 attempt(s)"), "{chain}");
+        assert!(chain.contains("failure #1"), "first error must win: {chain}");
+    }
+
+    #[test]
+    fn retry_none_is_single_shot() {
+        let mut n = 0;
+        let _ = with_retry(RetryPolicy::none(), "x", || -> Result<()> {
+            n += 1;
+            bail!("no")
+        });
+        assert_eq!(n, 1);
+    }
+}

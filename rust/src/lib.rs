@@ -12,6 +12,11 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+// The fault plane is consulted from thread bodies (producer, workers,
+// serve shards): a panic inside a consult would masquerade as the very
+// crash it injects. Same deny-set as the other thread-body modules.
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+pub mod fault;
 pub mod gradcheck;
 pub mod memory;
 pub mod optim;

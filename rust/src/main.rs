@@ -56,6 +56,10 @@ fn run(argv: &[String]) -> Result<()> {
                  lint [--deny] [--json out.json] [--rule name] [--root dir]\n\
                  serve [--model m] [--image-size n] [--shards n] [--budget-mb n]\n\
                  \x20     [--width n] [--window-ms n] [--socket path] [--ckpt file]\n\
+                 \x20     [--faults spec] [--fault-seed n]\n\
+                 train/serve --faults \"point@p=0.05,point@step=7[,slow:ms]\" injects\n\
+                 \x20     deterministic faults (see FAULTS.md for failpoint names);\n\
+                 \x20     train --retry-attempts n --retry-backoff-ms n bound IO retries\n\
                  (see BENCHMARKS.md for scenario names and gating rules, ANALYSIS.md for lint)"
             );
             Ok(())
@@ -278,13 +282,34 @@ fn cmd_train(mut args: Args) -> Result<()> {
     // run's config fingerprint must match the snapshot's, and the
     // result is bitwise-identical to never having stopped.
     let resume = args.get_str("resume", "");
+    // Deterministic fault injection ("" = disabled, which is a no-op
+    // on every failpoint consult): comma-separated `point@trigger`
+    // specs seeded by --seed, e.g. `storage.read@p=0.05` or
+    // `writer.save@step=7` (see FAULTS.md). Recovery from injected
+    // faults is bit-identical to the clean run at the same seed.
+    let faults_spec = args.get_str("faults", "");
+    // Bounded retry for transient storage/writer IO failures: total
+    // attempts per operation and the initial backoff (doubles per
+    // retry). Retries only re-run failed IO — they never change what a
+    // successful run computes.
+    let retry_attempts: usize = args.get("retry-attempts", 3)?;
+    let retry_backoff_ms: u64 = args.get("retry-backoff-ms", 10)?;
     let out = args.get_str("out", "");
     args.finish()?;
+    let faults = lite::fault::FaultPlane::parse(&faults_spec, seed)?;
+    let retry = lite::fault::RetryPolicy {
+        attempts: retry_attempts.max(1),
+        backoff: std::time::Duration::from_millis(retry_backoff_ms),
+    };
     anyhow::ensure!(
         megabatch >= 1,
         "--megabatch must be >= 1 (1 = unfused; N > 1 fuses N query batches per device execution)"
     );
     let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
+    // One shared plane across every shard: `dispatch.marshal` consults
+    // happen inside the engines' marshal stages, and sharing keeps
+    // `step=`/`nth=` latches global rather than per shard.
+    engine.set_faults(&faults);
     let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), 200)?;
     if model != "protonet" && model != "maml" {
         // Frozen-extractor protocol: install the pretrained backbone.
@@ -329,6 +354,8 @@ fn cmd_train(mut args: Args) -> Result<()> {
         checkpoint_path: (checkpoint_every > 0).then(|| state_base.clone()),
         keep,
         resume: (!resume.is_empty()).then(|| resume.clone().into()),
+        faults,
+        retry,
         ..Default::default()
     };
     let logs = meta_train(&engine, &mut learner, &md_suite(), &cfg)?;
@@ -401,8 +428,17 @@ fn cmd_serve(mut args: Args) -> Result<()> {
     let window_ms: u64 = args.get("window-ms", 2)?;
     let socket = args.get_str("socket", "");
     let ckpt = args.get_str("ckpt", "");
+    // Deterministic fault injection for the chaos suite ("" =
+    // disabled): `serve.worker@nth=3` kills the owning shard worker on
+    // its 3rd job (the supervisor restarts it), `serve.resident@nth=2`
+    // corrupts a resident adapted state (healed transparently). Seeded
+    // separately from training since serve has no --seed.
+    let faults_spec = args.get_str("faults", "");
+    let fault_seed: u64 = args.get("fault-seed", 0)?;
     args.finish()?;
+    let faults = lite::fault::FaultPlane::parse(&faults_spec, fault_seed)?;
     let engine = ShardedEngine::load(Engine::default_dir(), shards)?;
+    engine.set_faults(&faults);
     let mut learner = MetaLearner::new(engine.primary(), &model, size, None, Some(40), support)?;
     if !ckpt.is_empty() {
         let n = learner.params.restore(std::path::Path::new(&ckpt))?;
@@ -412,6 +448,7 @@ fn cmd_serve(mut args: Args) -> Result<()> {
         budget_bytes: budget_mb << 20,
         width,
         window: std::time::Duration::from_millis(window_ms),
+        faults,
     };
     let engines: Vec<&Engine> = engine.engines().iter().collect();
     eprintln!(

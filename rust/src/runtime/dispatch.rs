@@ -96,15 +96,24 @@ impl<'e> DispatchQueue<'e> {
     /// flight (clamped to >= 1); 1 is classic double buffering — the
     /// stage builds batch `b + 1` while batch `b` executes.
     pub fn new(engine: &'e Engine, depth: usize) -> Self {
+        // The engine's fault plane rides into the stage: a
+        // `dispatch.marshal` fault surfaces as this request's error
+        // through the reply channel (the ticket's waiter sees it as a
+        // failed episode and the trainer's window recovery re-runs it)
+        // — never as a stage panic. The consult index is the queue's
+        // job ordinal, since the stage does not know training steps.
+        let faults = engine.faults();
         let (tx, rx) = sync_channel::<MarshalJob>(depth.max(1));
         let worker = std::thread::spawn(move || {
+            let mut jobs = 0usize;
             while let Ok(job) = rx.recv() {
-                let lits = job
-                    .tensors
-                    .iter()
-                    .map(to_literal)
-                    .collect::<Result<Vec<_>>>()
+                let lits = faults
+                    .check("dispatch.marshal", jobs)
+                    .and_then(|()| {
+                        job.tensors.iter().map(to_literal).collect::<Result<Vec<_>>>()
+                    })
                     .map(SendLits);
+                jobs += 1;
                 // A dropped ticket is a caller that bailed early; the
                 // stage just moves on to the next request.
                 let _ = job.reply.send(lits);

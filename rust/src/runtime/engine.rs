@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::FaultPlane;
 use crate::params::ParamStore;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::tensor::Tensor;
@@ -166,6 +167,11 @@ pub struct Engine {
     cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     param_cache: RwLock<HashMap<String, ParamLiterals>>,
     stats: RwLock<EngineStats>,
+    /// Fault plane for the failpoints that live below the coordinator
+    /// (the dispatch marshal stage). Interior mutability so the CLI /
+    /// bench runners can install a plane on a shared registry engine;
+    /// defaults to disabled — a no-op on every consult.
+    faults: RwLock<FaultPlane>,
 }
 
 // SAFETY: all interior mutability (executable cache, parameter-literal
@@ -203,7 +209,19 @@ impl Engine {
             cache: RwLock::new(HashMap::new()),
             param_cache: RwLock::new(HashMap::new()),
             stats: RwLock::new(EngineStats::default()),
+            faults: RwLock::new(FaultPlane::disabled()),
         })
+    }
+
+    /// Install a fault plane on this engine (consulted by the dispatch
+    /// marshal stage). The default is the disabled plane.
+    pub fn set_faults(&self, faults: FaultPlane) {
+        *self.faults.write().unwrap() = faults;
+    }
+
+    /// The engine's installed fault plane (cheap clone — shared `Arc`).
+    pub fn faults(&self) -> FaultPlane {
+        self.faults.read().unwrap().clone()
     }
 
     /// The artifacts directory this engine was loaded from. Anything

@@ -130,6 +130,16 @@ impl<V> ResidencyCache<V> {
         Ok(evicted)
     }
 
+    /// Drop `key` from the cache, releasing its bytes. The serving
+    /// layer's corruption-recovery path uses this to invalidate a
+    /// resident entry detected as bad before re-adapting the user.
+    pub fn remove(&mut self, key: &str) -> Option<V> {
+        let i = self.entries.iter().position(|e| e.key == key)?;
+        let old = self.entries.remove(i);
+        self.used_bytes -= old.bytes;
+        Some(old.value)
+    }
+
     /// Construct-then-insert: run `build`, and only on success insert
     /// its value. A failed build leaves the cache byte-for-byte
     /// untouched — the no-partial-entry contract the serving path
@@ -227,6 +237,18 @@ mod tests {
         assert!(c.peek(&lru).is_some());
         assert!(c.peek("missing").is_none());
         assert_eq!(c.keys_lru_order()[0], lru, "peek must not bump recency");
+    }
+
+    #[test]
+    fn remove_releases_bytes_and_misses_are_none() {
+        let mut c = cache_with(100, &[("a", 40), ("b", 30)]);
+        assert_eq!(c.remove("a"), Some(0));
+        assert_eq!(c.used_bytes(), 30);
+        assert!(!c.contains("a") && c.contains("b"));
+        assert_eq!(c.remove("a"), None, "double remove is a miss");
+        // The released budget is usable again.
+        c.insert("d", 9, 70).unwrap();
+        assert_eq!(c.used_bytes(), 100);
     }
 
     #[test]

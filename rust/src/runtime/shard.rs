@@ -136,6 +136,15 @@ impl ShardedEngine {
     pub fn engines(&self) -> &[Engine] {
         &self.engines
     }
+
+    /// Install one fault plane on every shard (shared `Arc`, so
+    /// `nth=`/`step=` latches stay global across shards — a fault
+    /// sequence does not restart per shard).
+    pub fn set_faults(&self, faults: &crate::fault::FaultPlane) {
+        for e in &self.engines {
+            e.set_faults(faults.clone());
+        }
+    }
 }
 
 impl EngineShards for ShardedEngine {

@@ -49,6 +49,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{MetaLearner, TaskState};
 use crate::data::task::Episode;
+use crate::fault::FaultPlane;
 use crate::runtime::{DataLiterals, Engine, EngineStats, ResidencyCache};
 use crate::tensor::Tensor;
 use protocol::{QueryData, Request, SimSpec};
@@ -84,11 +85,22 @@ pub struct ServeConfig {
     /// Micro-batch window: pending queries flush at this deadline even
     /// below `width`, bounding the latency cost of batching.
     pub window: Duration,
+    /// Fault-injection plane shared by every shard worker (disabled by
+    /// default — a disabled plane is a no-op on every consult). The
+    /// `serve.worker` point kills a shard worker mid-request and the
+    /// `serve.resident` point corrupts a user's resident adapted state;
+    /// both are exercised by the chaos suite, never in normal serving.
+    pub faults: FaultPlane,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { budget_bytes: 64 << 20, width: 4, window: Duration::from_millis(2) }
+        Self {
+            budget_bytes: 64 << 20,
+            width: 4,
+            window: Duration::from_millis(2),
+            faults: FaultPlane::disabled(),
+        }
     }
 }
 
@@ -124,6 +136,18 @@ struct Ready {
     n: usize,
 }
 
+/// How one worker incarnation ended: its supervisor restarts a crashed
+/// worker (rebuilding residency on demand) and joins a drained one.
+enum RunExit {
+    /// Every sender dropped and the final batch flushed: clean server
+    /// shutdown.
+    Drained,
+    /// An injected `serve.worker` fault killed this incarnation
+    /// mid-request; the in-flight job (and any pooled batch) dropped,
+    /// so those clients get structured "server worker gone" errors.
+    Crashed,
+}
+
 /// One shard's worker: owns the shard's residency cache and retained
 /// episodes (literals and cache never cross threads), and runs the
 /// micro-batching request loop.
@@ -144,6 +168,11 @@ struct Worker<'e> {
     fuse_width: usize,
     width: usize,
     window: Duration,
+    faults: FaultPlane,
+    /// Jobs received by THIS incarnation: the consult index for the
+    /// `serve.worker` failpoint (`nth=` counters live in the shared
+    /// plane and keep counting across restarts).
+    jobs_seen: usize,
 }
 
 impl<'e> Worker<'e> {
@@ -166,20 +195,24 @@ impl<'e> Worker<'e> {
             fuse_width,
             width: cfg.width.max(1),
             window: cfg.window,
+            faults: cfg.faults.clone(),
+            jobs_seen: 0,
         }
     }
 
     /// The micro-batching loop: adapt requests run immediately; query
     /// requests pool until `width` of them wait or the window deadline
-    /// passes, then flush as one batch.
-    fn run(mut self, rx: mpsc::Receiver<Job>) {
+    /// passes, then flush as one batch. Returns how the incarnation
+    /// ended; `&mut self` (not `self`) so the supervisor can recover
+    /// the retained episodes from a crashed worker.
+    fn run(&mut self, rx: &mpsc::Receiver<Job>) -> RunExit {
         let mut pending: Vec<PendingQuery> = Vec::new();
         let mut deadline = Instant::now();
         loop {
             let job = if pending.is_empty() {
                 match rx.recv() {
                     Ok(j) => Some(j),
-                    Err(_) => break,
+                    Err(_) => return RunExit::Drained,
                 }
             } else {
                 let now = Instant::now();
@@ -191,23 +224,36 @@ impl<'e> Worker<'e> {
                         Err(mpsc::RecvTimeoutError::Timeout) => None,
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             self.flush(&mut pending);
-                            break;
+                            return RunExit::Drained;
                         }
                     }
                 }
             };
             match job {
-                Some(Job::Adapt { id, user, sim, reply }) => {
-                    let line = self
-                        .do_adapt(id, &user, &sim)
-                        .unwrap_or_else(|e| protocol::error_response(id, &format!("{e:#}")));
-                    let _ = reply.send(line);
-                }
-                Some(Job::Query { id, user, data, reply }) => {
-                    if pending.is_empty() {
-                        deadline = Instant::now() + self.window;
+                Some(job) => {
+                    let ord = self.jobs_seen;
+                    self.jobs_seen += 1;
+                    if self.faults.crash("serve.worker", ord) {
+                        // Injected shard-worker death: the in-flight
+                        // job and any pooled batch drop here, so their
+                        // clients see structured errors, and the
+                        // supervisor builds the next incarnation.
+                        return RunExit::Crashed;
                     }
-                    pending.push(PendingQuery { id, user, data, reply });
+                    match job {
+                        Job::Adapt { id, user, sim, reply } => {
+                            let line = self.do_adapt(id, &user, &sim).unwrap_or_else(|e| {
+                                protocol::error_response(id, &format!("{e:#}"))
+                            });
+                            let _ = reply.send(line);
+                        }
+                        Job::Query { id, user, data, reply } => {
+                            if pending.is_empty() {
+                                deadline = Instant::now() + self.window;
+                            }
+                            pending.push(PendingQuery { id, user, data, reply });
+                        }
+                    }
                 }
                 None => self.flush(&mut pending),
             }
@@ -260,7 +306,17 @@ impl<'e> Worker<'e> {
     /// state predated this request.
     fn stage_query(&mut self, user: &str, data: &QueryData) -> Result<(Tensor, bool)> {
         let cached = if self.cache.get(user).is_some() {
-            self.engine.note_residency(1, 0, 0);
+            if self.faults.crash("serve.resident", 0) {
+                // Injected resident-state corruption: drop the bad
+                // entry and transparently re-adapt from the retained
+                // episode. The client still sees `cached: true` —
+                // healing is invisible, so the response bytes match a
+                // healthy hit (gated by the chaos integration test).
+                self.cache.remove(user);
+                self.readapt(user)?;
+            } else {
+                self.engine.note_residency(1, 0, 0);
+            }
             true
         } else {
             self.readapt(user)?;
@@ -472,11 +528,10 @@ pub fn with_server<'e, R>(
     anyhow::ensure!(!engines.is_empty(), "serve needs at least one engine shard");
     std::thread::scope(|s| {
         let mut txs = Vec::with_capacity(engines.len());
-        for &engine in engines {
+        for (shard, &engine) in engines.iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Job>();
             txs.push(tx);
-            let worker = Worker::new(engine, learner, cfg);
-            s.spawn(move || worker.run(rx));
+            s.spawn(move || supervise_worker(shard, engine, learner, cfg, rx));
         }
         let handle =
             Handle { txs, engines: engines.to_vec(), stop: Arc::new(AtomicBool::new(false)) };
@@ -486,6 +541,41 @@ pub fn with_server<'e, R>(
         drop(handle);
         out
     })
+}
+
+/// Per-shard supervisor: owns the shard's job queue and restarts the
+/// worker whenever an incarnation dies, so queued jobs survive a crash
+/// (the receiver lives here, not in the worker). A cleanly crashed
+/// worker (injected `serve.worker` death) hands its retained episodes
+/// to the next incarnation — the residency cache dies with it and is
+/// rebuilt on demand by `readapt` — while a real panic loses the
+/// episodes too and restarts fully cold; either way clients get
+/// structured error responses, never a hung connection or dead server.
+fn supervise_worker(
+    shard: usize,
+    engine: &Engine,
+    learner: &MetaLearner,
+    cfg: &ServeConfig,
+    rx: mpsc::Receiver<Job>,
+) {
+    let mut retained: BTreeMap<String, Episode> = BTreeMap::new();
+    loop {
+        let mut worker = Worker::new(engine, learner, cfg);
+        worker.episodes = std::mem::take(&mut retained);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| worker.run(&rx))) {
+            Ok(RunExit::Drained) => return,
+            Ok(RunExit::Crashed) => {
+                retained = std::mem::take(&mut worker.episodes);
+                eprintln!("[serve] shard {shard} worker crashed (injected fault); restarting");
+            }
+            Err(_) => {
+                // The worker's state may be torn mid-panic: drop it
+                // and restart with a cold cache — users re-adapt on
+                // their next request.
+                eprintln!("[serve] shard {shard} worker panicked; restarting with a cold cache");
+            }
+        }
+    }
 }
 
 /// Run the line-protocol frontends until shutdown: stdin/stdout always,
@@ -499,8 +589,20 @@ pub fn run_frontends(handle: &Handle, socket_path: Option<&std::path::Path>) -> 
             Ok(())
         }
         Some(path) => {
-            // A stale socket file from a previous run would fail bind.
-            let _ = std::fs::remove_file(path);
+            // Socket hygiene: a stale file left by a crashed server
+            // would fail bind, so remove it — but only after probing
+            // that nothing answers on it. If a connect succeeds, a
+            // LIVE server holds the path; refuse rather than yank its
+            // socket out from under it.
+            if path.exists() {
+                if UnixStream::connect(path).is_ok() {
+                    anyhow::bail!(
+                        "socket {} is held by a live server; refusing to replace it",
+                        path.display()
+                    );
+                }
+                let _ = std::fs::remove_file(path);
+            }
             let listener = UnixListener::bind(path)
                 .with_context(|| format!("binding unix socket {}", path.display()))?;
             listener.set_nonblocking(true).context("socket nonblocking accept")?;
@@ -508,6 +610,8 @@ pub fn run_frontends(handle: &Handle, socket_path: Option<&std::path::Path>) -> 
                 s.spawn(|| stdin_loop(handle));
                 accept_loop(&listener, handle);
             });
+            // Clean-shutdown hygiene: unlink so the next start finds
+            // no stale file.
             let _ = std::fs::remove_file(path);
             Ok(())
         }
@@ -554,12 +658,24 @@ fn accept_loop(listener: &UnixListener, handle: &Handle) {
     });
 }
 
+/// Cap on one request line's bytes: past this the connection gets a
+/// structured error and the rest of the line is discarded instead of
+/// buffering without bound (a missing newline must not OOM the server).
+const MAX_REQUEST_LINE: usize = 1 << 20;
+
 /// One socket connection: manual newline framing (a read timeout can
-/// split a line across reads, so partial bytes stay buffered).
+/// split a line across reads, so partial bytes stay buffered). A line
+/// past [`MAX_REQUEST_LINE`] answers a structured error immediately and
+/// the connection resumes at the next newline; malformed lines get
+/// structured parse errors from [`Handle::submit`]. Either way the
+/// client always receives a response line — never a hung connection.
 fn conn_loop(mut stream: UnixStream, handle: &Handle) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
+    // True while skipping the remainder of an already-answered
+    // oversized line.
+    let mut discarding = false;
     loop {
         match stream.read(&mut chunk) {
             Ok(0) => break,
@@ -567,6 +683,12 @@ fn conn_loop(mut stream: UnixStream, handle: &Handle) {
                 buf.extend_from_slice(&chunk[..n]);
                 while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
                     let line: Vec<u8> = buf.drain(..=pos).collect();
+                    if discarding {
+                        // Tail of an oversized line: its error response
+                        // already went out.
+                        discarding = false;
+                        continue;
+                    }
                     let text = String::from_utf8_lossy(&line);
                     let text = text.trim();
                     if text.is_empty() {
@@ -580,6 +702,23 @@ fn conn_loop(mut stream: UnixStream, handle: &Handle) {
                     {
                         return;
                     }
+                }
+                if discarding {
+                    buf.clear();
+                } else if buf.len() > MAX_REQUEST_LINE {
+                    let reply = protocol::error_response(
+                        0,
+                        &format!("request line exceeds {MAX_REQUEST_LINE} bytes"),
+                    );
+                    if stream
+                        .write_all(reply.as_bytes())
+                        .and_then(|_| stream.write_all(b"\n"))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    buf.clear();
+                    discarding = true;
                 }
             }
             Err(e)

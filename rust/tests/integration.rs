@@ -1309,3 +1309,86 @@ fn maml_train_artifact_runs() {
     let out = e.run(name, &inputs).unwrap();
     assert!(out[0].item().unwrap().is_finite());
 }
+
+#[test]
+fn serve_heals_corrupted_resident_state_byte_identically() {
+    // Resident-state corruption (injected via the `serve.resident`
+    // failpoint) must be invisible at the wire: the worker drops the
+    // bad entry, re-adapts from the retained episode, and answers with
+    // the SAME bytes as a healthy cache hit — including `cached:true`,
+    // since the client never asked for a recompute.
+    let Some(e) = engine_opt() else { return };
+    let learner = MetaLearner::new(&e, "protonet", 32, None, Some(40), 64).unwrap();
+    let adapt = r#"{"op":"adapt","user":"alice","sim":{"seed":7,"users":2,"user":0}}"#;
+    let query = r#"{"op":"query","user":"alice","range":[0,2]}"#;
+    let clean_cfg = ServeConfig { width: 1, ..Default::default() };
+    let clean: Vec<String> = with_server(&[&e], &learner, &clean_cfg, |h| {
+        assert!(h.request(adapt).contains(r#""ok":true"#));
+        Ok((0..2).map(|_| h.request(query)).collect())
+    })
+    .unwrap();
+
+    // nth=2: the first query hits healthy resident state, the second
+    // query's consult corrupts it and the worker heals transparently.
+    let m0 = e.stats().resident_misses;
+    let chaos_cfg = ServeConfig {
+        width: 1,
+        faults: lite::fault::FaultPlane::parse("serve.resident@nth=2", 0).unwrap(),
+        ..Default::default()
+    };
+    let healed: Vec<String> = with_server(&[&e], &learner, &chaos_cfg, |h| {
+        assert!(h.request(adapt).contains(r#""ok":true"#));
+        Ok((0..2).map(|_| h.request(query)).collect())
+    })
+    .unwrap();
+    assert_eq!(clean, healed, "healed answers must be byte-identical to a healthy hit");
+    // The healing really recomputed: the initial adapt plus one
+    // transparent re-adapt each count a residency miss.
+    assert_eq!(e.stats().resident_misses - m0, 2, "adapt + one transparent re-adapt");
+}
+
+#[test]
+fn train_recovers_injected_worker_crash_bit_identically_composed() {
+    // The chaos half of the recovery contract, composed with every
+    // concurrency axis: a run with injected gradient-worker crashes, a
+    // transient episode-read failure, and a marshal-stage fault — under
+    // 2 workers x 2 shards x pipelined dispatch — must reproduce the
+    // clean SERIAL run bit for bit (loss log and final parameters),
+    // at two different seeds. Crashed episodes re-run from their
+    // (seed, step) derivation, so nothing about scheduling or recovery
+    // order can leak into the result.
+    let Some(e1) = engine_opt() else { return };
+    for seed in [3u64, 11] {
+        let mut learner = MetaLearner::new(&e1, "protonet", 32, None, Some(40), 64).unwrap();
+        let init = learner.params.clone();
+        let cfg = TrainConfig {
+            episodes: 4,
+            accum_period: 2,
+            lr: 1e-3,
+            seed,
+            log_every: 0,
+            episode_cfg: EpisodeConfig::train_default(),
+            ..Default::default()
+        };
+        let ref_logs = meta_train(&e1, &mut learner, &md_suite(), &cfg).unwrap();
+        let ref_params = learner.params.tensors().to_vec();
+
+        let faults = lite::fault::FaultPlane::parse(
+            "trainer.worker@step=0,trainer.worker@step=3,storage.read@step=1,dispatch.marshal@nth=2",
+            seed,
+        )
+        .unwrap();
+        let e2 = ShardedEngine::load(Engine::default_dir(), 2).unwrap();
+        e2.set_faults(&faults);
+        let faulted_cfg =
+            TrainConfig { workers: 2, shards: 2, dispatch: 1, faults, ..cfg.clone() };
+        learner.params = init.clone();
+        let logs = meta_train(&e2, &mut learner, &md_suite(), &faulted_cfg).unwrap();
+        assert_eq!(logs, ref_logs, "seed {seed}: loss log diverged after crash recovery");
+        assert_eq!(
+            learner.params.tensors(),
+            &ref_params[..],
+            "seed {seed}: final params diverged after crash recovery"
+        );
+    }
+}
